@@ -1,0 +1,58 @@
+//! FP8 number-format exploration (paper App. A.5 / Fig 10).
+//!
+//! Prints the e4m3/e5m2/bf16 format properties the µS design rests on and
+//! the activation-function underflow study, all on the software FP8
+//! substrate (bit-exact vs ml_dtypes — see artifacts/goldens.json tests).
+//!
+//! ```sh
+//! cargo run --release --example fp8_formats
+//! ```
+
+use munit::analysis::{activation_underflow, activations::Activation, InputDist};
+use munit::fp8::{BF16, E4M3, E5M2};
+use munit::util::rng::Rng;
+
+fn main() {
+    println!("format properties:");
+    println!(
+        "{:>6} {:>12} {:>14} {:>14} {:>10} {:>8}",
+        "fmt", "max", "min normal", "min subnormal", "eps@1", "values"
+    );
+    for fmt in [E4M3, E5M2, BF16] {
+        println!(
+            "{:>6} {:>12.4e} {:>14.4e} {:>14.4e} {:>10.4e} {:>8}",
+            fmt.name,
+            fmt.max_finite(),
+            fmt.min_normal(),
+            fmt.min_subnormal(),
+            fmt.epsilon(),
+            fmt.finite_value_count()
+        );
+    }
+
+    println!("\nwhy µS clips before casting (e4m3fn overflows to NaN):");
+    for v in [447.0f32, 448.0, 449.0, 465.0, 1000.0] {
+        println!("  raw cast({v:>7}) = {:>7}   quantize({v:>7}) = {:>7}",
+            E4M3.cast(v), E4M3.quantize(v));
+    }
+
+    println!("\nunit-variance tensors survive the static cast; badly scaled ones die:");
+    let mut rng = Rng::new(1);
+    for scale in [1.0f32, 1e-3, 1e-6] {
+        let mut xs = vec![0f32; 10_000];
+        rng.fill_normal(&mut xs, scale);
+        println!(
+            "  N(0, {scale:>5.0e}):  e4m3 underflow {:>8.4}%",
+            E4M3.underflow_fraction(&xs) * 100.0
+        );
+    }
+
+    println!("\nactivation-function output underflow (Fig 10), 400k samples:");
+    println!("{:>6} {:>16} {:>20}", "act", "N(0,1)", "Unif(-128,128)");
+    for act in Activation::all() {
+        let n = activation_underflow(act, InputDist::StdNormal, E4M3, 400_000, &mut rng);
+        let u = activation_underflow(act, InputDist::Uniform128, E4M3, 400_000, &mut rng);
+        println!("{:>6} {:>15.4}% {:>19.4}%", act.name(), n * 100.0, u * 100.0);
+    }
+    println!("\nReLU ≈ 0 underflow; SiLU worst over wide ranges (paper App. A.5).");
+}

@@ -1,0 +1,52 @@
+//! Zero-shot hyperparameter transfer demo (paper §2.3 / Fig 6, miniature).
+//!
+//! Sweeps the base-width learning rate η over powers of two at two widths
+//! (32 = d_base, and 128 = 4x wider) for µnit-Scaled FP8 models. Because
+//! the train artifacts bake the √(d_base/d) hidden-layer rule, the optimal
+//! *base* η should be (nearly) the same at both widths — that is zero-shot
+//! transfer. ~3-4 minutes on one CPU core.
+//!
+//! ```sh
+//! cargo run --release --example hp_transfer
+//! ```
+
+use munit::config::ModelConfig;
+use munit::coordinator::sweep;
+use munit::data::CorpusSpec;
+use munit::repro::proxy_tc;
+use munit::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::new("artifacts")?;
+    let corpus = CorpusSpec::default();
+    let lrs = sweep::pow2_axis(-8, -4);
+    let steps = 40;
+
+    for width in [32usize, 128] {
+        let cfg = ModelConfig { width, ..ModelConfig::default() };
+        println!("\nwidth {width} (mult on hidden LR: sqrt(32/{width}) = {:.3}):",
+            (32.0 / width as f64).sqrt());
+        let points = sweep::grid(&lrs, &[2.0 / 16384.0], &[0.4]);
+        let outcomes = sweep::run_sequential(
+            &engine,
+            &cfg,
+            &proxy_tc(steps, 0.0, 0.0, 0.4, 6),
+            &corpus,
+            &points,
+            false,
+        )?;
+        for o in &outcomes {
+            println!(
+                "  eta_base = 2^{:>3.0}  ->  loss {:.4}{}",
+                o.point.lr.log2(),
+                o.final_loss,
+                if o.diverged { "  DIVERGED" } else { "" }
+            );
+        }
+        let best = sweep::best(&outcomes).expect("all diverged");
+        println!("  η* (base units) = 2^{:.0}", best.point.lr.log2());
+    }
+    println!("\nExpect: the two η* rows agree (µS transfer), unlike SP where");
+    println!("the optimum would shift by ~the width ratio.");
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Quickstart: train a tiny µnit-Scaled FP8 model for a few steps.
+//!
+//! ```sh
+//! make artifacts          # once: AOT-compile the JAX/Pallas graphs
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Everything below runs in rust via the PJRT CPU client; Python was only
+//! used at build time to lower the model to HLO text.
+
+use munit::config::{ModelConfig, Schedule, TrainConfig};
+use munit::coordinator::trainer::Trainer;
+use munit::data::{Batcher, CorpusSpec};
+use munit::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    // 1. load the artifact manifest and start the PJRT CPU client
+    let engine = Engine::new("artifacts")?;
+    println!("platform: {}", engine.platform());
+
+    // 2. pick the default proxy config: µS, FP8, width 64, 4 layers
+    let cfg = ModelConfig::default();
+    println!("model: {} ({} params)", cfg.name(), cfg.n_params());
+
+    // 3. trainer + synthetic Zipf/Markov corpus
+    let trainer = Trainer::new(&engine, &cfg)?;
+    let mut batcher = Batcher::new(
+        CorpusSpec { vocab: cfg.vocab, ..Default::default() },
+        /*seed=*/ 0, /*shard=*/ 0, /*n_shards=*/ 1,
+        cfg.batch, cfg.seq_len,
+    );
+
+    // 4. train 40 steps with the µS base-width hyperparameters. The
+    //    artifact itself applies the sqrt(d_base/d) transfer rule.
+    let tc = TrainConfig {
+        steps: 40,
+        lr: 1.0 / 64.0,  // eta at d_base = 32
+        wd: 2.0 / 16384.0,
+        tau: 0.4,        // fixed residual coefficient for 4 layers
+        schedule: Schedule::Cosine { final_frac: 0.1, warmup: 4 },
+        ..Default::default()
+    };
+    let r = trainer.run_with(&tc, &mut batcher, |m, _| {
+        if m.step % 5 == 0 {
+            println!("step {:>3}  loss {:.4}  gnorm {:.3}  lr {:.5}", m.step, m.loss, m.gnorm, m.lr);
+        }
+    })?;
+
+    println!(
+        "\nfinal loss {:.4} (from ln|V| = {:.3}), {:.0} tokens/s, spikes={}",
+        r.final_loss(5),
+        (cfg.vocab as f64).ln(),
+        r.tokens_per_sec,
+        r.spikes
+    );
+    assert!(!r.diverged, "µS FP8 training should be stable out of the box");
+    Ok(())
+}

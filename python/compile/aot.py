@@ -1,0 +1,323 @@
+"""AOT lowering: JAX graphs -> HLO *text* artifacts + manifest.json.
+
+Interchange is HLO text, NOT `.serialize()`: jax >= 0.5 emits HloModuleProto
+with 64-bit instruction ids which xla_extension 0.5.1 (the version the
+published `xla` 0.1.6 rust crate links) rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifact kinds (uniform across configs; the L2<->L3 ABI):
+
+  init       (seed:i32[])                        -> params..., momentum...
+  train_step (params..., momentum..., tokens:i32[B,S],
+              lr:f32[], wd:f32[], tau:f32[])     -> params..., momentum...,
+                                                    loss:f32[], gnorm:f32[]
+  fwd        (params..., tokens, tau)            -> logits:f32[B,S,V]
+  probe      (params..., tokens, tau)            -> per-layer ProbeStats..., loss
+  kernels_demo                                   -> pallas kernel showcase
+
+Every artifact is described in artifacts/manifest.json (name, kind, config,
+ordered input/output specs) so the rust runtime can pack literals without
+any knowledge of the python side beyond this file's conventions.
+
+Run: `python -m compile.aot --out-dir ../artifacts [--set core|e2e|all] [--force]`
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .configs import HIST_NBINS, ModelConfig, param_specs
+from .kernels.attention import attention as pallas_attention
+from .kernels.cast_transpose import cast_transpose
+from .kernels.layernorm import layernorm as pallas_layernorm
+
+F32, I32 = "f32", "i32"
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(name, shape, dtype=F32):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def _state_specs(cfg, prefix=""):
+    return [_spec(prefix + n, s) for n, s in param_specs(cfg)]
+
+
+def _shape_structs(specs):
+    dt = {F32: jnp.float32, I32: jnp.int32}
+    return [jax.ShapeDtypeStruct(tuple(s["shape"]), dt[s["dtype"]]) for s in specs]
+
+
+class Builder:
+    def __init__(self, out_dir, force=False):
+        self.out_dir = out_dir
+        self.force = force
+        self.entries = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def add(self, name, kind, fn, in_specs, out_specs, cfg=None, extra=None):
+        """Lower `fn` (flat positional args per in_specs) and write HLO text."""
+        if any(e["name"] == name for e in self.entries):
+            return  # config appears in several experiment sets; build once
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(self.out_dir, fname)
+        entry = {
+            "name": name,
+            "kind": kind,
+            "file": fname,
+            "config": cfg.to_dict() if cfg else None,
+            "inputs": in_specs,
+            "outputs": out_specs,
+        }
+        if extra:
+            entry.update(extra)
+        self.entries.append(entry)
+        if os.path.exists(path) and not self.force:
+            print(f"  [skip] {name}")
+            return
+        t0 = time.time()
+        lowered = jax.jit(fn, keep_unused=True).lower(*_shape_structs(in_specs))
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  [ok]   {name}  ({len(text)//1024} KiB, {time.time()-t0:.1f}s)", flush=True)
+
+    def write_manifest(self):
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump({"version": 1, "artifacts": self.entries}, f, indent=1)
+        print(f"manifest: {path} ({len(self.entries)} artifacts)")
+
+
+def add_model_artifacts(b: Builder, cfg: ModelConfig, kinds=("init", "train_step")):
+    n = cfg.name()
+    pspecs = _state_specs(cfg)
+    mspecs = _state_specs(cfg, "m_")
+    tok = _spec("tokens", (cfg.batch, cfg.seq_len), I32)
+    scalars = [_spec("lr", ()), _spec("wd", ()), _spec("tau", ())]
+    nstate = len(pspecs)
+
+    if "init" in kinds:
+        def init_fn(seed):
+            p, m = model.init_state(seed, cfg)
+            return tuple(p) + tuple(m)
+
+        b.add(f"init_{n}", "init", init_fn, [_spec("seed", (), I32)],
+              pspecs + mspecs, cfg)
+
+    if "train_step" in kinds:
+        def step_fn(*args):
+            p = list(args[:nstate])
+            m = list(args[nstate : 2 * nstate])
+            tokens, lr, wd, tau = args[2 * nstate :]
+            p2, m2, loss, gnorm = model.train_step(p, m, tokens, lr, wd, tau, cfg)
+            return tuple(p2) + tuple(m2) + (loss, gnorm)
+
+        b.add(
+            f"train_{n}", "train_step", step_fn,
+            pspecs + mspecs + [tok] + scalars,
+            pspecs + mspecs + [_spec("loss", ()), _spec("gnorm", ())], cfg,
+        )
+
+    if "fwd" in kinds:
+        def fwd_fn(*args):
+            p = list(args[:nstate])
+            tokens, tau = args[nstate:]
+            return model.forward(p, tokens, tau, cfg)
+
+        b.add(
+            f"fwd_{n}", "fwd", fwd_fn,
+            pspecs + [tok, _spec("tau", ())],
+            [_spec("logits", (cfg.batch, cfg.seq_len, cfg.vocab))], cfg,
+        )
+
+    if "probe" in kinds:
+        def probe(*args):
+            p = list(args[:nstate])
+            tokens, tau = args[nstate:]
+            return model.probe_fn(p, tokens, tau, cfg)
+
+        L, S = cfg.depth, cfg.seq_len
+        out_specs = [
+            _spec("attn_std", (L, S)),
+            _spec("attn_sqrt_std", (L, S)),
+            _spec("vcos", (L, S)),
+            _spec("resid_std", (L, S)),
+            _spec("underflow", (L, 5)),
+            _spec("hist_in", (L, HIST_NBINS)),
+            _spec("hist_out", (L, HIST_NBINS)),
+            _spec("loss", ()),
+        ]
+        b.add(
+            f"probe_{n}", "probe", probe,
+            pspecs + [tok, _spec("tau", ())], out_specs, cfg,
+        )
+
+
+def add_kernels_demo(b: Builder):
+    """Showcase artifact: Pallas layernorm, cast_transpose, attention (std
+    and sqrt-softmax) crossing the rust bridge — used by examples and
+    integration tests to validate each L1 kernel end to end."""
+    R, D = 64, 32
+    BH, S, DH = 2, 64, 16
+
+    def demo(x, g, bb, q, k, v):
+        ln = pallas_layernorm(x, g, bb)
+        ct, ctt = cast_transpose(x, "e4m3", block=16)
+        q4 = q.reshape(1, BH, S, DH)
+        k4 = k.reshape(1, BH, S, DH)
+        v4 = v.reshape(1, BH, S, DH)
+        a_std = pallas_attention(q4, k4, v4, sqrt_softmax=False)
+        a_sqrt = pallas_attention(q4, k4, v4, sqrt_softmax=True)
+        return ln, ct, ctt, a_std.reshape(BH, S, DH), a_sqrt.reshape(BH, S, DH)
+
+    ins = [
+        _spec("x", (R, D)), _spec("g", (D,)), _spec("b", (D,)),
+        _spec("q", (BH, S, DH)), _spec("k", (BH, S, DH)), _spec("v", (BH, S, DH)),
+    ]
+    outs = [
+        _spec("ln", (R, D)), _spec("ct", (R, D)), _spec("ctT", (D, R)),
+        _spec("attn", (BH, S, DH)), _spec("attn_sqrt", (BH, S, DH)),
+    ]
+    b.add("kernels_demo", "kernels_demo", demo, ins, outs)
+
+
+def write_goldens(out_dir):
+    """Cross-layer golden vectors: ml_dtypes FP8/BF16 round-trips consumed
+    bit-exactly by rust/src/fp8 unit tests."""
+    vals = [
+        0.0, 1.0, -1.0, 0.5, 2.0, 3.14159265, -2.71828, 448.0, 449.0, 1000.0,
+        -448.0, -1000.0, 57344.0, 60000.0, 0.015625, 0.001953125, 1e-3, 1e-4,
+        1e-5, -1e-5, 1e-9, 2.4e-7, 4.8e-7, 1.9e-6, 0.0009765625, 0.00048828125,
+        0.000244140625, 6.1e-5, 65504.0, 3.3895e38, 1.17e-38, 7.0, 7.5, 8.5,
+        13.0, 17.0, 21.0, 100.0, 240.0, 352.0, 0.1, 0.2, 0.3, 0.7, 0.9,
+    ]
+    x = jnp.array(vals, jnp.float32)
+
+    def enc(v):
+        """NaN/inf are invalid JSON: encode specials as strings."""
+        v = float(v)
+        if v != v:
+            return "nan"
+        if v == float("inf"):
+            return "inf"
+        if v == float("-inf"):
+            return "-inf"
+        return v
+
+    out = {
+        "input": [enc(v) for v in vals],
+        "e4m3_static": [enc(v) for v in jnp.clip(x, -448, 448).astype(jnp.float8_e4m3fn).astype(jnp.float32)],
+        "e5m2_static": [enc(v) for v in jnp.clip(x, -57344, 57344).astype(jnp.float8_e5m2).astype(jnp.float32)],
+        "e4m3_raw": [enc(v) for v in x.astype(jnp.float8_e4m3fn).astype(jnp.float32)],
+        "e5m2_raw": [enc(v) for v in x.astype(jnp.float8_e5m2).astype(jnp.float32)],
+        "bf16": [enc(v) for v in x.astype(jnp.bfloat16).astype(jnp.float32)],
+    }
+    path = os.path.join(out_dir, "goldens.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"goldens: {path}")
+
+
+# ---------------------------------------------------------------------------
+# Artifact sets (see DESIGN.md §4 experiment index)
+
+HD = 16          # proxy head_dim
+V, S, B = 512, 128, 4
+DBASE = 32
+
+SWEEP_WIDTHS = [32, 64, 128, 256]           # Fig 6 (8x width transfer)
+QUAD_SIZES = [(64, 4), (128, 6), (256, 8)]  # Fig 7 proxy S/M/L
+DEEP = (64, 24)                              # Fig 4b / Fig 5 deep proxy
+E2E = dict(width=384, depth=6, head_dim=64, vocab=2048, seq_len=256, batch=8,
+           d_base=32)                        # headline driver (~12M params)
+
+
+def proxy(width, depth, **kw):
+    base = dict(width=width, depth=depth, head_dim=HD, vocab=V, seq_len=S,
+                batch=B, d_base=DBASE)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def build_core(b: Builder):
+    print("== sweep set (Fig 6) ==")
+    for w in SWEEP_WIDTHS:
+        add_model_artifacts(b, proxy(w, 4, variant="mus", precision="fp8"))
+        add_model_artifacts(b, proxy(w, 4, variant="sp", precision="bf16",
+                                     residual="standard"))
+    print("== quad set (Fig 7 / Table 5) ==")
+    for w, d in QUAD_SIZES:
+        for variant in ("mus", "sp"):
+            for precision in ("fp8", "bf16"):
+                res = "fixed" if variant == "mus" else "standard"
+                kinds = ("init", "train_step")
+                if (w, d) == QUAD_SIZES[-1]:
+                    kinds = ("init", "train_step", "fwd")  # Table 5 evals
+                add_model_artifacts(
+                    b, proxy(w, d, variant=variant, precision=precision,
+                             residual=res), kinds)
+    print("== probes (Fig 2/3/12) ==")
+    add_model_artifacts(b, proxy(128, 6, variant="mus", precision="fp8"),
+                        ("probe",))
+    add_model_artifacts(b, proxy(128, 6, variant="sp", precision="bf16",
+                                 residual="standard"), ("probe",))
+    print("== deep set (Fig 4b / Fig 5) ==")
+    w, d = DEEP
+    add_model_artifacts(b, proxy(w, d, variant="mus", precision="fp8"))
+    add_model_artifacts(b, proxy(w, d, variant="mus", precision="fp8",
+                                 residual="running_mean"))
+    add_model_artifacts(b, proxy(w, d, variant="sp", precision="bf16",
+                                 residual="standard"))
+    print("== activation set (Fig 11) ==")
+    for act in ("gelu", "silu", "relu"):
+        for precision in ("fp8", "bf16"):
+            add_model_artifacts(b, proxy(64, 4, activation=act,
+                                         precision=precision))
+        add_model_artifacts(b, proxy(64, 4, activation=act, precision="fp8"),
+                            ("probe",))
+    print("== tau sweep extra depths (Fig 9) ==")
+    for d in (8, 16):
+        add_model_artifacts(b, proxy(64, d))
+    add_kernels_demo(b)
+
+
+def build_e2e(b: Builder):
+    print("== e2e headline driver ==")
+    for precision in ("fp8", "bf16"):
+        kinds = ("init", "train_step", "fwd") if precision == "fp8" else ("init", "train_step")
+        add_model_artifacts(b, ModelConfig(variant="mus", precision=precision, **E2E), kinds)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--set", default="all", choices=["core", "e2e", "all"])
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    b = Builder(args.out_dir, force=args.force)
+    t0 = time.time()
+    if args.set in ("core", "all"):
+        build_core(b)
+    if args.set in ("e2e", "all"):
+        build_e2e(b)
+    write_goldens(args.out_dir)
+    b.write_manifest()
+    print(f"total {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,160 @@
+"""Model / artifact configuration shared by model.py and aot.py.
+
+A single `ModelConfig` describes one transformer variant at one shape. The
+same dataclass is serialized into artifacts/manifest.json so the rust
+coordinator (rust/src/config) can reason about shapes without re-deriving
+anything from HLO.
+
+Conventions
+-----------
+- `variant`   : "mus" (µnit Scaling, Res-Post-LayerNorm, unit init, static
+                1/sqrt(fan_in) multipliers) or "sp" (standard parametrization,
+                Pre-LayerNorm, sigma_init init, no multipliers).
+- `precision` : "bf16"  — hidden matmuls in bfloat16 (mixed precision),
+                "fp8"   — hidden matmuls on values round-tripped through
+                          float8_e4m3fn (fwd) / float8_e5m2 (grads).
+                For `sp` + `fp8`, TransformerEngine-style *dynamic* (just-in-
+                time amax) per-tensor scaling is used; for `mus` + `fp8`
+                scaling is *static* (the whole point of the paper).
+- Runtime scalars (NOT baked): learning rate (meaning: eta at d_base),
+  fully-decoupled weight decay lambda, residual coefficient tau.
+- Baked at trace time: shapes, variant, activation, residual scheme,
+  per-tensor LR multipliers implementing the transfer rule of paper §2.3.
+"""
+
+from dataclasses import dataclass, field, asdict
+from typing import List, Tuple
+
+FP8_E4M3_MAX = 448.0
+FP8_E5M2_MAX = 57344.0
+
+# Log10-spaced |x| histogram bin edges used by probe artifacts (Fig 12).
+HIST_LO_EXP = -10
+HIST_HI_EXP = 6
+HIST_NBINS = (HIST_HI_EXP - HIST_LO_EXP) * 2 + 2  # half-decade bins + under/over
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    width: int = 64
+    depth: int = 4
+    head_dim: int = 16
+    vocab: int = 512
+    seq_len: int = 128
+    batch: int = 4
+    ffn_ratio: int = 4
+    d_base: int = 32            # base width for hyperparameter transfer
+    variant: str = "mus"        # "mus" | "sp"
+    precision: str = "fp8"      # "fp8" | "bf16"
+    residual: str = "fixed"     # "fixed" | "running_mean" | "standard" (sp)
+    activation: str = "gelu"    # "gelu" | "silu" | "relu"
+    sigma_init: float = 0.02    # SP weight init stddev
+    rope_theta: float = 10000.0
+    # Attention score transform for the *training* graph. The paper's µS
+    # models use standard softmax + Res-Post-LN; "sqrt" (Eq. 9) exists for
+    # the Fig 2 analysis and is exposed for ablations.
+    attn_kind: str = "softmax"  # "softmax" | "sqrt_softmax"
+
+    @property
+    def n_heads(self) -> int:
+        assert self.width % self.head_dim == 0
+        return self.width // self.head_dim
+
+    @property
+    def ffn_width(self) -> int:
+        return self.width * self.ffn_ratio
+
+    @property
+    def ln_placement(self) -> str:
+        return "res_post" if self.variant == "mus" else "pre"
+
+    @property
+    def fp8_scaling(self) -> str:
+        if self.precision != "fp8":
+            return "none"
+        return "static" if self.variant == "mus" else "dynamic"
+
+    def n_params(self) -> int:
+        d, f, v, l = self.width, self.ffn_width, self.vocab, self.depth
+        per_layer = d * 3 * d + d * d + d * f + f * d + 4 * d
+        return v * d + l * per_layer + 2 * d + d * v
+
+    def name(self) -> str:
+        res = "" if self.residual == "fixed" else f"_{self.residual}"
+        act = "" if self.activation == "gelu" else f"_{self.activation}"
+        attn = "" if self.attn_kind == "softmax" else "_sqrtattn"
+        return (
+            f"{self.variant}_{self.precision}_w{self.width}_d{self.depth}"
+            f"_v{self.vocab}_s{self.seq_len}_b{self.batch}{res}{act}{attn}"
+        )
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d["n_heads"] = self.n_heads
+        d["ffn_width"] = self.ffn_width
+        d["ln_placement"] = self.ln_placement
+        d["fp8_scaling"] = self.fp8_scaling
+        d["n_params"] = self.n_params()
+        return d
+
+
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Canonical parameter ordering.
+
+    This ordering is the L2<->L3 ABI: rust/src/runtime packs and unpacks
+    literals strictly in this order. Per-layer tensors are stacked on a
+    leading depth axis and consumed with lax.scan.
+    """
+    d, f, v, l = cfg.width, cfg.ffn_width, cfg.vocab, cfg.depth
+    return [
+        ("embed", (v, d)),
+        ("w_qkv", (l, d, 3 * d)),
+        ("w_o", (l, d, d)),
+        ("w_up", (l, d, f)),
+        ("w_down", (l, f, d)),
+        ("ln1_g", (l, d)),
+        ("ln1_b", (l, d)),
+        ("ln2_g", (l, d)),
+        ("ln2_b", (l, d)),
+        ("lnf_g", (d,)),
+        ("lnf_b", (d,)),
+        ("head", (d, v)),
+    ]
+
+
+# Parameter groups for per-tensor transfer rules (paper §2.3 / Table 2).
+HIDDEN_PARAMS = ("w_qkv", "w_o", "w_up", "w_down")
+DECAY_PARAMS = ("embed", "w_qkv", "w_o", "w_up", "w_down", "head")
+
+
+def lr_mult(cfg: ModelConfig, pname: str) -> float:
+    """Per-tensor multiplier on the runtime lr input (which means eta at
+    d_base). Bakes the zero-shot transfer rule into the artifact."""
+    if cfg.variant == "mus":
+        if pname in HIDDEN_PARAMS:
+            return (cfg.d_base / cfg.width) ** 0.5
+        return 1.0
+    # SP: eta_new = eta_base * d_base / d_new for all layers (paper §3.2).
+    return cfg.d_base / cfg.width
+
+
+def wd_mult(cfg: ModelConfig, pname: str) -> float:
+    """Fully-decoupled weight-decay multiplier. µS: lambda transfers
+    unchanged (Table 1). SP's empirical 0.5x jump at transfer is a policy
+    decision applied by the rust scaling module, not baked here."""
+    if pname in DECAY_PARAMS:
+        return 1.0
+    return 0.0
+
+
+def output_mult(cfg: ModelConfig, pname: str) -> float:
+    """Static output multipliers (Table 2). fan_in of each matmul."""
+    if cfg.variant != "mus":
+        return 1.0
+    d, f = cfg.width, cfg.ffn_width
+    fan_in = {"w_qkv": d, "w_o": d, "w_up": d, "w_down": f}
+    if pname in fan_in:
+        return 1.0 / fan_in[pname] ** 0.5
+    if pname == "head":
+        return 1.0 / d  # LM head multiplier 1/fan_in, in line with µP
+    return 1.0

@@ -1,0 +1,61 @@
+"""Causal attention Pallas kernel with optional Square-Root Softmax (Eq. 9).
+
+    Attention(Q,K,V) = f(softmax(Q K^T / sqrt(dh))) V,
+    f = identity (standard) or sqrt (variance-preserving for iid values,
+    paper Prop. 2.1 / Eq. 8-9).
+
+Grid over (batch*heads); each cell holds one head's full [S, Dh] Q/K/V in
+VMEM — a FlashAttention-style S-blocked schedule is noted in DESIGN.md §7
+but the unblocked form is what interpret-mode CPU executes. Forward-only:
+the training graph uses the differentiable jnp composition (attention is
+BF16 in the paper; only *linear layers* are FP8), this kernel serves the
+inference/probe paths and the Fig 2 analysis.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, sqrt_softmax, causal):
+    q = q_ref[0]  # [S, Dh]
+    k = k_ref[0]
+    v = v_ref[0]
+    s = q.shape[0]
+    logits = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if causal:
+        ii = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+        jj = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+        logits = jnp.where(jj <= ii, logits, NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    if sqrt_softmax:
+        p = jnp.sqrt(p)
+    o_ref[0] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+
+def attention(q, k, v, sqrt_softmax=False, causal=True):
+    """q,k,v: [B, H, S, Dh] f32 -> [B, H, S, Dh]."""
+    b, h, s, dh = q.shape
+    scale = 1.0 / (dh**0.5)
+    qf = q.reshape(b * h, s, dh)
+    kf = k.reshape(b * h, s, dh)
+    vf = v.reshape(b * h, s, dh)
+    kern = functools.partial(
+        _attn_kernel, scale=scale, sqrt_softmax=sqrt_softmax, causal=causal
+    )
+    spec = pl.BlockSpec((1, s, dh), lambda i: (i, 0, 0))
+    out = pl.pallas_call(
+        kern,
+        grid=(b * h,),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((b * h, s, dh), jnp.float32),
+        interpret=True,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, dh)

@@ -1,0 +1,57 @@
+"""Fused clip -> FP8 cast -> transpose Pallas kernel (paper §3.3).
+
+H100 FP8 GEMMs only support the "TN" layout, so the forward pass needs W
+and the backward pass needs W^T (likewise for activations/gradients). The
+paper fuses clipping to the FP8 max, the cast, and the transpose into one
+Triton kernel to avoid three memory round-trips. This is the TPU/Pallas
+rendition: one grid pass over square tiles, each tile quantized once in
+VMEM and written to both layouts.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..configs import FP8_E4M3_MAX, FP8_E5M2_MAX
+
+_FMT = {
+    "e4m3": (jnp.float8_e4m3fn, FP8_E4M3_MAX),
+    "e5m2": (jnp.float8_e5m2, FP8_E5M2_MAX),
+}
+
+
+def _ct_kernel(x_ref, o_ref, ot_ref, *, fmt):
+    dtype, fmax = _FMT[fmt]
+    q = jnp.clip(x_ref[...], -fmax, fmax).astype(dtype).astype(jnp.float32)
+    o_ref[...] = q
+    ot_ref[...] = q.T
+
+
+def cast_transpose(x, fmt="e4m3", block=None):
+    """Returns (q, qT): the FP8 round-trip of x in both layouts.
+
+    x: [M, N] f32. block tiles both dims (square-ish tiles so the
+    transposed write stays VMEM-local); default one block.
+    """
+    m, n = x.shape
+    bm = m if block is None or block >= m else block
+    bn = n if block is None or block >= n else block
+    assert m % bm == 0 and n % bn == 0, (x.shape, block)
+    grid = (m // bm, n // bn)
+    kern = functools.partial(_ct_kernel, fmt=fmt)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bn, bm), lambda i, j: (j, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), jnp.float32),
+            jax.ShapeDtypeStruct((n, m), jnp.float32),
+        ],
+        interpret=True,
+    )(x)

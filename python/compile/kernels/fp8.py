@@ -1,0 +1,62 @@
+"""FP8 / BF16 quantization primitives (pure jnp, used inside kernels too).
+
+µS casts are *static*: clip to the format's max, then cast — no amax
+reduction (paper Table 1, "FP8 hidden layers"). The dynamic (TE-style)
+path computes a just-in-time per-tensor scale and is used only by the
+SP+FP8 baseline.
+"""
+
+import jax.numpy as jnp
+
+from ..configs import FP8_E4M3_MAX, FP8_E5M2_MAX
+
+_FMT_DTYPE = {
+    "e4m3": (jnp.float8_e4m3fn, FP8_E4M3_MAX),
+    "e5m2": (jnp.float8_e5m2, FP8_E5M2_MAX),
+}
+
+
+def quantize(x, fmt: str):
+    """Round-trip `x` through a compute format.
+
+    fmt: "e4m3" | "e5m2" — clip to dtype max then cast (static scaling)
+         "bf16"          — plain bfloat16 round-trip
+         "none"          — identity (f32)
+    Returns an f32 tensor holding values representable in `fmt`.
+    """
+    if fmt == "none":
+        return x
+    if fmt == "bf16":
+        return x.astype(jnp.bfloat16).astype(jnp.float32)
+    dtype, fmax = _FMT_DTYPE[fmt]
+    return jnp.clip(x, -fmax, fmax).astype(dtype).astype(jnp.float32)
+
+
+def dynamic_scale(x, fmt: str):
+    """TransformerEngine-style just-in-time per-tensor scale factor.
+
+    scale = fmt_max / amax(|x|), so x*scale fills the representable range.
+    This amax reduction is exactly the overhead µS eliminates (paper §3.3).
+    """
+    _, fmax = _FMT_DTYPE[fmt]
+    amax = jnp.max(jnp.abs(x))
+    return fmax / jnp.maximum(amax, 1e-12)
+
+
+def quantize_dynamic(x, fmt: str):
+    """Quantize with a dynamic scale; returns (q, scale) with q ≈ x*scale
+    representable in fmt. Caller divides the GEMM output by the scales."""
+    s = dynamic_scale(x, fmt)
+    return quantize(x * s, fmt), s
+
+
+def underflow_fraction(x, fmt: str = "e4m3"):
+    """Fraction of elements that are nonzero in bf16 but flush to zero when
+    cast to `fmt` (the paper's "FP8 underflow fraction", App. A.5)."""
+    xb = x.astype(jnp.bfloat16).astype(jnp.float32)
+    q = quantize(xb, fmt)
+    nz = xb != 0.0
+    under = jnp.logical_and(nz, q == 0.0)
+    return jnp.sum(under.astype(jnp.float32)) / jnp.maximum(
+        jnp.sum(nz.astype(jnp.float32)), 1.0
+    )

@@ -1,0 +1,157 @@
+"""L1 hot-spot: quantize-aware scaled GEMM as a Pallas kernel.
+
+The paper's hidden linear layers compute (Eq. 17):
+
+    C <- alpha * A B          with alpha = 1/sqrt(fan_in), A,B in FP8
+
+On H100 this is a cublasLt FP8 GEMM with the static alpha folded into the
+epilogue. Here the kernel round-trips both operands through the real FP8
+storage format (ml_dtypes bit-exact e4m3fn / e5m2) *inside* the kernel —
+the quantize+GEMM fusion the paper implements with Triton+cublasLt — and
+accumulates in f32.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper tiles for
+H100 SMEM/threadblocks; on TPU the same schedule is expressed with a
+BlockSpec grid over M tiles, full-K blocks resident in VMEM, MXU-aligned
+(128x128) tiles. interpret=True is mandatory on this CPU-only image, so
+the BlockSpec structure (not wallclock) is the optimization target.
+
+`us_linear` wraps the kernel in a custom VJP implementing the µS backward
+pass: the *same* static alpha in bwd (paper Table 1 — exact gradients),
+activations/weights quantized e4m3, incoming gradients e5m2.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..configs import FP8_E4M3_MAX, FP8_E5M2_MAX
+from .fp8 import dynamic_scale
+
+_FMT = {
+    "e4m3": (jnp.float8_e4m3fn, FP8_E4M3_MAX),
+    "e5m2": (jnp.float8_e5m2, FP8_E5M2_MAX),
+}
+
+
+def _q(x, fmt):
+    """In-kernel static quantization: clip to format max, round-trip."""
+    if fmt == "none":
+        return x
+    if fmt == "bf16":
+        return x.astype(jnp.bfloat16).astype(jnp.float32)
+    dtype, fmax = _FMT[fmt]
+    return jnp.clip(x, -fmax, fmax).astype(dtype).astype(jnp.float32)
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, alpha, x_fmt, w_fmt):
+    xq = _q(x_ref[...], x_fmt)
+    wq = _q(w_ref[...], w_fmt)
+    o_ref[...] = alpha * jnp.dot(xq, wq, preferred_element_type=jnp.float32)
+
+
+def scaled_matmul(x, w, alpha=1.0, x_fmt="none", w_fmt="none", block_m=None):
+    """alpha * q(x) @ q(w) for 2-D x [M,K], w [K,N].
+
+    block_m tiles the M dimension (grid over M); K and N are kept whole so
+    each grid cell is one MXU-shaped GEMM with a single VMEM-resident
+    weight block (weights are reused across the M grid — the schedule a
+    TPU double-buffers). Default: one block (CPU interpret path).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    if block_m is None or block_m >= m:
+        block_m = m
+    assert m % block_m == 0, (m, block_m)
+    grid = (m // block_m,)
+    kern = functools.partial(_matmul_kernel, alpha=alpha, x_fmt=x_fmt, w_fmt=w_fmt)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+def _fwd_fmts(precision):
+    if precision == "fp8":
+        return "e4m3", "e4m3", "e5m2"
+    if precision == "bf16":
+        return "bf16", "bf16", "bf16"
+    return "none", "none", "none"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def us_linear(x, w, alpha, precision="fp8", block_m=None):
+    """µnit-Scaled linear: y = alpha * q_fwd(x) @ q_fwd(w).
+
+    Backward (exact gradients, static scaling in *both* passes):
+        dx = alpha * q_bwd(g) @ q_fwd(w)^T
+        dw = alpha * q_fwd(x)^T @ q_bwd(g)
+    with q_fwd = e4m3 round-trip, q_bwd = e5m2 round-trip ("fp8"), or bf16
+    round-trips ("bf16"), or identity ("none"). alpha is a trace-time
+    constant (static scaling is the point).
+    """
+    xf, wf, _ = _fwd_fmts(precision)
+    return scaled_matmul(x, w, alpha, xf, wf, block_m)
+
+
+def _us_linear_fwd(x, w, alpha, precision, block_m):
+    xf, wf, _ = _fwd_fmts(precision)
+    y = scaled_matmul(x, w, alpha, xf, wf, block_m)
+    return y, (x, w)
+
+
+def _us_linear_bwd(alpha, precision, block_m, res, g):
+    x, w = res
+    xf, wf, gf = _fwd_fmts(precision)
+    # TN-layout story: the transposed quantized operands come from the
+    # fused cast_transpose kernel on real hardware; mathematically
+    # q(w)^T == q(w^T) elementwise, which is what we compute here.
+    dx = scaled_matmul(g, w.T, alpha, gf, wf, block_m)
+    dw = scaled_matmul(x.T, g, alpha, xf, gf, None)
+    return dx, dw
+
+
+us_linear.defvjp(_us_linear_fwd, _us_linear_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def te_linear(x, w, fmt="e4m3"):
+    """SP+FP8 baseline linear with TransformerEngine-style *dynamic*
+    (just-in-time amax) per-tensor scaling — the overhead µS removes.
+
+        sx = max/amax(|x|); sw likewise
+        y  = (q(x*sx) @ q(w*sw)) / (sx*sw)
+
+    Backward rescales the e5m2-quantized gradient the same way.
+    """
+    sx = dynamic_scale(x, fmt)
+    sw = dynamic_scale(w, fmt)
+    y = scaled_matmul(x * sx, w * sw, 1.0, fmt, fmt)
+    return y / (sx * sw)
+
+
+def _te_linear_fwd(x, w, fmt):
+    return te_linear(x, w, fmt), (x, w)
+
+
+def _te_linear_bwd(fmt, res, g):
+    x, w = res
+    sg = dynamic_scale(g, "e5m2")
+    sx = dynamic_scale(x, fmt)
+    sw = dynamic_scale(w, fmt)
+    dx = scaled_matmul(g * sg, w.T * sw, 1.0, "e5m2", fmt) / (sg * sw)
+    dw = scaled_matmul(x.T * sx, g * sg, 1.0, fmt, "e5m2") / (sx * sg)
+    return dx, dw
+
+
+te_linear.defvjp(_te_linear_fwd, _te_linear_bwd)

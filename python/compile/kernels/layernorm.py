@@ -1,0 +1,39 @@
+"""LayerNorm Pallas kernel (Res-Post-LayerNorm placement, paper §2.1).
+
+Row-parallel: grid over blocks of rows, one full feature row per cell
+(mean/var are feature-axis reductions, so the feature dim must be whole
+in VMEM — same constraint as a Triton row kernel).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ln_kernel(x_ref, g_ref, b_ref, o_ref, *, eps):
+    x = x_ref[...]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    o_ref[...] = (x - mu) * jax.lax.rsqrt(var + eps) * g_ref[...] + b_ref[...]
+
+
+def layernorm(x, g, b, eps=1e-5, block_rows=None):
+    """LayerNorm over the last axis of 2-D x [R, D]; g,b: [D]."""
+    r, d = x.shape
+    br = r if block_rows is None or block_rows >= r else block_rows
+    assert r % br == 0, (r, block_rows)
+    kern = functools.partial(_ln_kernel, eps=eps)
+    return pl.pallas_call(
+        kern,
+        grid=(r // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, d), jnp.float32),
+        interpret=True,
+    )(x, g, b)

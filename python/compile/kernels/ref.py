@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel and for the Lion optimizer.
+
+These are the correctness ground truth: pytest asserts each Pallas kernel
+(interpret=True) against the function of the same name here, and the rust
+integration tests consume goldens generated from these.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .fp8 import quantize, quantize_dynamic
+
+
+def scaled_matmul(x, w, alpha=1.0, x_fmt="none", w_fmt="none"):
+    """y = alpha * quantize(x) @ quantize(w), f32 accumulation."""
+    xq = quantize(x, x_fmt)
+    wq = quantize(w, w_fmt)
+    return alpha * jnp.dot(xq, wq, preferred_element_type=jnp.float32)
+
+
+def dynamic_scaled_matmul(x, w, fmt="e4m3"):
+    """TE-style: per-tensor JIT scales, GEMM on scaled values, rescale."""
+    xq, sx = quantize_dynamic(x, fmt)
+    wq, sw = quantize_dynamic(w, fmt)
+    return jnp.dot(xq, wq, preferred_element_type=jnp.float32) / (sx * sw)
+
+
+def cast_transpose(x, fmt="e4m3"):
+    """Fused clip -> cast -> (value, transpose) (paper §3.3 Triton kernel).
+
+    Returns (q, qT) where q is the format round-trip of x and qT == q.T —
+    the H100 "TN" layout constraint means both layouts of the same
+    quantized tensor are needed across fwd/bwd.
+    """
+    q = quantize(x, fmt)
+    return q, q.T
+
+
+def layernorm(x, g, b, eps=1e-5):
+    """LayerNorm over the last axis."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def attention(q, k, v, sqrt_softmax=False, causal=True):
+    """Causal multi-head attention. q,k,v: [B, H, S, Dh].
+
+    sqrt_softmax=True applies Eq. 9: scores = sqrt(softmax(logits)).
+    """
+    dh = q.shape[-1]
+    logits = jnp.einsum("bhsd,bhtd->bhst", q, k) / jnp.sqrt(jnp.float32(dh))
+    if causal:
+        s = q.shape[2]
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    if sqrt_softmax:
+        p = jnp.sqrt(p)
+    return jnp.einsum("bhst,bhtd->bhsd", p, v)
+
+
+def lion_update(p, m, g, lr, wd, beta1=0.9, beta2=0.99):
+    """Lion with *fully decoupled* weight decay (Wortsman et al. 2024):
+
+        c      = beta1*m + (1-beta1)*g
+        p_new  = p - lr*sign(c) - wd*p        (wd NOT multiplied by lr)
+        m_new  = beta2*m + (1-beta2)*g
+    """
+    c = beta1 * m + (1.0 - beta1) * g
+    p_new = p - lr * jnp.sign(c) - wd * p
+    m_new = beta2 * m + (1.0 - beta2) * g
+    return p_new, m_new

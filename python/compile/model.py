@@ -1,0 +1,333 @@
+"""L2: µnit-Scaled / Standard-Parametrized decoder-only transformer.
+
+Everything the paper's Table 1 lists is implemented here:
+
+  - static 1/sqrt(fan_in) output multipliers (1/fan_in on the LM head),
+    applied in fwd *and* bwd via the Pallas `us_linear` custom VJP;
+  - Res-Post-LayerNorm (µS) vs Pre-LayerNorm (SP);
+  - fixed(tau) / running-mean / standard residual combination (Eq. 10/11);
+  - unit-variance init (µS) vs sigma_init (SP);
+  - FP8 e4m3 fwd / e5m2 bwd hidden linears, embedding + LM head in BF16;
+  - per-tensor LR multipliers implementing zero-shot transfer (§2.3);
+  - Lion optimizer with fully decoupled weight decay (App. A.3).
+
+The training step is a single pure function lowered to one HLO artifact;
+the rust coordinator feeds (params, momentum, tokens, lr, wd, tau) and
+gets back the updated state — Python is never on the step path.
+"""
+
+from typing import List, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import (
+    HIDDEN_PARAMS,
+    HIST_LO_EXP,
+    HIST_NBINS,
+    ModelConfig,
+    lr_mult,
+    output_mult,
+    param_specs,
+    wd_mult,
+)
+from .kernels import ref
+from .kernels.fp8 import quantize
+from .kernels.fp8_matmul import te_linear, us_linear
+
+# ---------------------------------------------------------------------------
+# Initialization
+
+
+def init_params(seed, cfg: ModelConfig) -> List[jax.Array]:
+    """Initialize parameters in `param_specs` order from an i32 seed.
+
+    µS: every linear weight (and the embedding) has unit variance —
+    representability in FP8 from step 0 is the point. SP: N(0, sigma_init^2).
+    """
+    key = jax.random.PRNGKey(seed if isinstance(seed, int) else seed.astype(jnp.uint32))
+    sigma = 1.0 if cfg.variant == "mus" else cfg.sigma_init
+    params = []
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.startswith("ln") and name.endswith("_g"):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name.startswith("ln") and name.endswith("_b"):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            params.append(sigma * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+def init_state(seed, cfg: ModelConfig):
+    """(params, momentum) — momentum zero-initialized, matching shapes."""
+    params = init_params(seed, cfg)
+    momentum = [jnp.zeros_like(p) for p in params]
+    return params, momentum
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+
+
+def _activation(x, kind: str):
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=False)
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "relu":
+        return jnp.maximum(x, 0.0)
+    raise ValueError(kind)
+
+
+def _linear(x2d, w, pname: str, cfg: ModelConfig):
+    """Dispatch a 2-D matmul to the right L1 kernel for (variant, precision).
+
+    All matmuls in the model flow through the Pallas kernel; only the
+    quantization mode differs. Embedding table and LM head stay BF16 even
+    in FP8 mode (paper Table 1).
+    """
+    if cfg.variant == "mus":
+        alpha = output_mult(cfg, pname)
+        prec = cfg.precision if pname in HIDDEN_PARAMS else "bf16"
+        return us_linear(x2d, w, alpha, prec, None)
+    # SP baseline
+    if pname in HIDDEN_PARAMS and cfg.precision == "fp8":
+        return te_linear(x2d, w, "e4m3")  # dynamic (TE-style) scaling
+    return us_linear(x2d, w, 1.0, "bf16", None)
+
+
+def _rope(q, k, theta: float):
+    """Rotary position embedding over [B, H, S, Dh]."""
+    dh = q.shape[-1]
+    s = q.shape[2]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = jnp.arange(s, dtype=jnp.float32)[:, None] * freqs[None, :]
+    cos = jnp.cos(ang)[None, None]  # [1,1,S,half]
+    sin = jnp.sin(ang)[None, None]
+
+    def rot(x):
+        x1, x2 = x[..., :half], x[..., half:]
+        return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+
+    return rot(q), rot(k)
+
+
+class ProbeStats(NamedTuple):
+    """Per-layer numerics probes backing Figs 2, 3, 11, 12."""
+
+    attn_std: jax.Array       # [S]   std of softmax@V output per position
+    attn_sqrt_std: jax.Array  # [S]   same with sqrt-softmax (Eq. 9)
+    vcos: jax.Array           # [S]   mean cos-sim of value token i to j<i
+    resid_std: jax.Array      # [S]   residual-stream std after the block
+    underflow: jax.Array      # [5]   e4m3 underflow frac: block_in, qkv_out,
+                              #       attn_out, act_out, block_out
+    hist_in: jax.Array        # [NB]  log10 |x| histogram of block input
+    hist_out: jax.Array       # [NB]  log10 |x| histogram of block output
+
+
+PROBE_FIELDS = list(ProbeStats._fields)
+PROBE_UNDERFLOW_TENSORS = ["block_in", "qkv_out", "attn_out", "act_out", "block_out"]
+
+
+def _hist(x):
+    """Normalized histogram of |x| over half-decade log10 bins."""
+    edges = 10.0 ** (HIST_LO_EXP + 0.5 * jnp.arange(HIST_NBINS - 1, dtype=jnp.float32))
+    idx = jnp.searchsorted(edges, jnp.abs(x).reshape(-1))
+    counts = jnp.zeros((HIST_NBINS,), jnp.float32).at[idx].add(1.0)
+    return counts / x.size
+
+
+def _underflow(x):
+    """Fraction of bf16-nonzero elements flushed to 0 by the e4m3 cast."""
+    xb = x.astype(jnp.bfloat16).astype(jnp.float32)
+    q = quantize(xb, "e4m3")
+    nz = (xb != 0.0).astype(jnp.float32)
+    under = jnp.logical_and(xb != 0.0, q == 0.0).astype(jnp.float32)
+    return jnp.sum(under) / jnp.maximum(jnp.sum(nz), 1.0)
+
+
+def _vcos(v):
+    """Mean cosine similarity of each value token to its predecessors.
+
+    v: [B, H, S, Dh] -> [S]. Position 0 (no predecessor) gets 0.
+    """
+    vn = v / jnp.maximum(jnp.linalg.norm(v, axis=-1, keepdims=True), 1e-12)
+    c = jnp.einsum("bhsd,bhtd->bhst", vn, vn)  # [B,H,S,S]
+    s = v.shape[2]
+    ii = jnp.arange(s)[:, None]
+    jj = jnp.arange(s)[None, :]
+    mask = (jj < ii).astype(jnp.float32)  # strict predecessors
+    num = jnp.sum(c * mask[None, None], axis=(0, 1, 3))
+    den = jnp.maximum(jnp.sum(mask, axis=1) * v.shape[0] * v.shape[1], 1.0)
+    return num / den
+
+
+def _block(x, layer, coeffs, cfg: ModelConfig, probe: bool):
+    """One transformer block. x: [B,S,D]. layer: tuple of per-layer params.
+    coeffs: ((a1,c1),(a2,c2)) residual combination weights (Eq. 10/11)."""
+    w_qkv, w_o, w_up, w_down, g1, bb1, g2, bb2 = layer
+    (a1, c1), (a2, c2) = coeffs
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    stats = {}
+
+    def attn_f(inp):
+        qkv = _linear(inp.reshape(b * s, d), w_qkv, "w_qkv", cfg).reshape(b, s, 3 * d)
+        qkv = quantize(qkv, "bf16")  # attention itself runs in BF16
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = q.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+        k = k.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+        v = v.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+        q, k = _rope(q, k, cfg.rope_theta)
+        o = ref.attention(q, k, v, sqrt_softmax=(cfg.attn_kind == "sqrt_softmax"))
+        if probe:
+            stats["attn_std"] = jnp.std(o, axis=(0, 1, 3))
+            o_sqrt = ref.attention(q, k, v, sqrt_softmax=True)
+            stats["attn_sqrt_std"] = jnp.std(o_sqrt, axis=(0, 1, 3))
+            stats["vcos"] = _vcos(v)
+            stats["qkv_out"] = qkv
+        of = o.transpose(0, 2, 1, 3).reshape(b * s, d)
+        out = _linear(of, w_o, "w_o", cfg).reshape(b, s, d)
+        if probe:
+            stats["attn_out"] = out
+        return out
+
+    def ffn_f(inp):
+        u = _linear(inp.reshape(b * s, d), w_up, "w_up", cfg)
+        a = _activation(u, cfg.activation)
+        if probe:
+            stats["act_out"] = a
+        return _linear(a, w_down, "w_down", cfg).reshape(b, s, d)
+
+    x_in = x
+    if cfg.ln_placement == "pre":
+        x = a1 * x + c1 * attn_f(ref.layernorm(x, g1, bb1))
+        x = a2 * x + c2 * ffn_f(ref.layernorm(x, g2, bb2))
+    else:  # res_post: LN is the *last* op of each residual branch (Fig 4a)
+        x = a1 * x + c1 * ref.layernorm(attn_f(x), g1, bb1)
+        x = a2 * x + c2 * ref.layernorm(ffn_f(x), g2, bb2)
+
+    if not probe:
+        return x, None
+    ps = ProbeStats(
+        attn_std=stats["attn_std"],
+        attn_sqrt_std=stats["attn_sqrt_std"],
+        vcos=stats["vcos"],
+        resid_std=jnp.std(x, axis=(0, 2)),
+        underflow=jnp.stack(
+            [
+                _underflow(x_in),
+                _underflow(stats["qkv_out"]),
+                _underflow(stats["attn_out"]),
+                _underflow(stats["act_out"]),
+                _underflow(x),
+            ]
+        ),
+        hist_in=_hist(x_in),
+        hist_out=_hist(x),
+    )
+    return x, ps
+
+
+def _residual_coeffs(tau, cfg: ModelConfig):
+    """Residual combination weights per layer: [L, 2, 2] = (a, b) for the
+    attn and ffn branches of each block.
+
+    fixed (Eq. 10):        a = sqrt(1-tau), b = sqrt(tau)
+    running-mean (Eq. 11): branch i (1-based; the embedding is
+                           contribution 0): a = sqrt(i/(i+1)), b = sqrt(1/(i+1))
+    standard (SP):         a = b = 1
+    """
+    L = cfg.depth
+    if cfg.residual == "standard":
+        return jnp.ones((L, 2, 2), jnp.float32)
+    if cfg.residual == "fixed":
+        tau = jnp.asarray(tau, jnp.float32)
+        a = jnp.sqrt(1.0 - tau)
+        b = jnp.sqrt(tau)
+        pair = jnp.stack([a, b])
+        return jnp.broadcast_to(pair[None, None, :], (L, 2, 2))
+    # running-mean (Eq. 11)
+    i = jnp.arange(1, 2 * L + 1, dtype=jnp.float32).reshape(L, 2)
+    a = jnp.sqrt(i / (i + 1.0))
+    b = jnp.sqrt(1.0 / (i + 1.0))
+    return jnp.stack([a, b], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss
+
+
+def forward(params: List[jax.Array], tokens, tau, cfg: ModelConfig, probe: bool = False):
+    """Full forward pass. tokens: i32 [B,S]. Returns logits [B,S,V] f32
+    (and stacked per-layer ProbeStats when probe=True)."""
+    names = [n for n, _ in param_specs(cfg)]
+    p = dict(zip(names, params))
+    x = p["embed"][tokens]  # [B,S,D]; output multiplier 1 (Table 2)
+    x = quantize(x, "bf16")
+    coeffs = _residual_coeffs(tau, cfg)
+
+    layer_params = (
+        p["w_qkv"], p["w_o"], p["w_up"], p["w_down"],
+        p["ln1_g"], p["ln1_b"], p["ln2_g"], p["ln2_b"],
+    )
+
+    def body(carry, xs):
+        layer, cf = xs[:-1], xs[-1]
+        x_new, ps = _block(
+            carry, layer, ((cf[0, 0], cf[0, 1]), (cf[1, 0], cf[1, 1])), cfg, probe
+        )
+        return x_new, ps
+
+    x, stats = jax.lax.scan(body, x, layer_params + (coeffs,))
+    x = ref.layernorm(x, p["lnf_g"], p["lnf_b"])
+    b, s, d = x.shape
+    logits = _linear(x.reshape(b * s, d), p["head"], "head", cfg)
+    logits = logits.reshape(b, s, cfg.vocab).astype(jnp.float32)
+    if probe:
+        return logits, stats
+    return logits
+
+
+def loss_fn(params, tokens, tau, cfg: ModelConfig):
+    """Mean next-token cross-entropy (f32)."""
+    logits = forward(params, tokens, tau, cfg)
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer / train step
+
+
+def train_step(params, momentum, tokens, lr, wd, tau, cfg: ModelConfig):
+    """One Lion step with per-tensor transfer multipliers baked in.
+
+    lr / wd are *base-width* values (eta at d_base, lambda); the artifact
+    multiplies by the µS (or SP) transfer rule per tensor (paper §2.3).
+    Returns (params', momentum', loss, grad_norm).
+    """
+    loss, grads = jax.value_and_grad(loss_fn)(params, tokens, tau, cfg)
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads))
+    names = [n for n, _ in param_specs(cfg)]
+    new_p, new_m = [], []
+    for name, p, m, g in zip(names, params, momentum, grads):
+        p2, m2 = ref.lion_update(
+            p, m, g, lr * lr_mult(cfg, name), wd * wd_mult(cfg, name)
+        )
+        new_p.append(p2)
+        new_m.append(m2)
+    return new_p, new_m, loss, gnorm
+
+
+def probe_fn(params, tokens, tau, cfg: ModelConfig):
+    """Numerics probe: per-layer stats (Figs 2/3/11/12) + loss, no update."""
+    logits, stats = forward(params, tokens, tau, cfg, probe=True)
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    loss = jnp.mean(-jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0])
+    return tuple(stats) + (loss,)

@@ -1,0 +1,85 @@
+"""AOT export path: HLO text generation + manifest consistency."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+from compile.configs import ModelConfig, param_specs
+
+
+def test_to_hlo_text_contains_fp8_types(tmp_path):
+    cfg = ModelConfig(width=32, depth=2, head_dim=16, vocab=64, seq_len=32,
+                      batch=2, d_base=32, variant="mus", precision="fp8")
+    params, mom = model.init_state(0, cfg)
+    tokens = jnp.zeros((2, 32), jnp.int32)
+
+    def f(*args):
+        n = len(params)
+        p, m = list(args[:n]), list(args[n:2 * n])
+        t, lr, wd, tau = args[2 * n:]
+        p2, m2, loss, g = model.train_step(p, m, t, lr, wd, tau, cfg)
+        return tuple(p2) + tuple(m2) + (loss, g)
+
+    lowered = jax.jit(f, keep_unused=True).lower(
+        *params, *mom, tokens, 0.001, 0.0001, 0.3
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "f8e4m3" in text        # forward quantization present
+    assert "f8e5m2" in text        # gradient quantization present
+    assert "ENTRY" in text         # parseable HLO text module
+
+
+def test_builder_writes_manifest_and_skips_existing(tmp_path):
+    b = aot.Builder(str(tmp_path))
+    b.add("t1", "demo", lambda x: (x + 1.0,),
+          [aot._spec("x", (2, 2))], [aot._spec("y", (2, 2))])
+    assert os.path.exists(tmp_path / "t1.hlo.txt")
+    sz = os.path.getsize(tmp_path / "t1.hlo.txt")
+    # duplicate name: ignored entirely
+    b.add("t1", "demo", lambda x: (x + 2.0,),
+          [aot._spec("x", (2, 2))], [aot._spec("y", (2, 2))])
+    assert len(b.entries) == 1
+    b.write_manifest()
+    m = json.loads((tmp_path / "manifest.json").read_text())
+    assert m["artifacts"][0]["name"] == "t1"
+    assert m["artifacts"][0]["inputs"][0]["shape"] == [2, 2]
+    assert os.path.getsize(tmp_path / "t1.hlo.txt") == sz
+
+
+def test_repo_manifest_matches_param_specs():
+    """The shipped manifest's train artifacts agree with param_specs."""
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    m = json.loads(open(path).read())
+    trains = [a for a in m["artifacts"] if a["kind"] == "train_step"]
+    assert trains, "no train artifacts"
+    for a in trains[:6]:
+        c = a["config"]
+        cfg = ModelConfig(
+            width=c["width"], depth=c["depth"], head_dim=c["head_dim"],
+            vocab=c["vocab"], seq_len=c["seq_len"], batch=c["batch"],
+            d_base=c["d_base"], variant=c["variant"], precision=c["precision"],
+            residual=c["residual"], activation=c["activation"],
+        )
+        specs = param_specs(cfg)
+        n = len(specs)
+        assert len(a["inputs"]) == 2 * n + 4
+        assert len(a["outputs"]) == 2 * n + 2
+        for (name, shape), inp in zip(specs, a["inputs"][:n]):
+            assert inp["name"] == name
+            assert tuple(inp["shape"]) == tuple(shape)
+
+
+def test_goldens_roundtrip(tmp_path):
+    aot.write_goldens(str(tmp_path))
+    g = json.loads((tmp_path / "goldens.json").read_text())
+    assert len(g["input"]) == len(g["e4m3_static"]) == len(g["bf16"])
+    i = g["input"].index(449.0)
+    assert g["e4m3_static"][i] == 448.0   # clipped then exact
+    i = g["input"].index(1e-9)
+    assert g["e4m3_raw"][i] == 0.0        # deep underflow

@@ -1,0 +1,78 @@
+"""Quantization primitive semantics (static µS casts vs dynamic TE casts)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.configs import FP8_E4M3_MAX, FP8_E5M2_MAX
+from compile.kernels.fp8 import (
+    dynamic_scale,
+    quantize,
+    quantize_dynamic,
+    underflow_fraction,
+)
+
+
+@pytest.mark.parametrize("fmt,fmax", [("e4m3", FP8_E4M3_MAX), ("e5m2", FP8_E5M2_MAX)])
+class TestStaticQuantize:
+    def test_idempotent(self, fmt, fmax):
+        x = jnp.linspace(-500.0, 500.0, 257)
+        q = quantize(x, fmt)
+        np.testing.assert_array_equal(quantize(q, fmt), q)
+
+    def test_saturates_at_max(self, fmt, fmax):
+        x = jnp.array([fmax, fmax * 2, 1e30, -1e30])
+        q = quantize(x, fmt)
+        np.testing.assert_array_equal(q, jnp.array([fmax, fmax, fmax, -fmax]))
+
+    def test_odd_symmetry(self, fmt, fmax):
+        x = jnp.linspace(0.0, 2 * fmax, 101)
+        np.testing.assert_array_equal(quantize(-x, fmt), -quantize(x, fmt))
+
+    def test_monotone(self, fmt, fmax):
+        x = jnp.sort(jnp.linspace(-2 * fmax, 2 * fmax, 513))
+        q = quantize(x, fmt)
+        assert bool(jnp.all(jnp.diff(q) >= 0))
+
+    def test_exact_on_representable(self, fmt, fmax):
+        # powers of two well inside range are exactly representable
+        x = jnp.array([2.0**e for e in range(-6, 8)])
+        np.testing.assert_array_equal(quantize(x, fmt), x)
+
+
+def test_e4m3_resolution_coarser_than_e5m2_range():
+    # e4m3: more mantissa (finer around 1.0); e5m2: more range.
+    x = jnp.array([1.0 + 1.0 / 8.0])  # representable in e4m3 (3 mantissa bits), not e5m2
+    assert float(quantize(x, "e4m3")[0]) == float(x[0])
+    assert float(quantize(x, "e5m2")[0]) != float(x[0])
+    big = jnp.array([30000.0])
+    assert float(quantize(big, "e5m2")[0]) == pytest.approx(30000.0, rel=0.25)
+    assert float(quantize(big, "e4m3")[0]) == FP8_E4M3_MAX  # saturated
+
+
+def test_bf16_roundtrip():
+    x = jnp.array([1.0, 1.0 + 2**-8, 3.0e38])
+    q = quantize(x, "bf16")
+    assert float(q[0]) == 1.0
+    assert float(q[1]) in (1.0, float(1.0 + 2**-8))
+    assert np.isfinite(float(q[2]))
+
+
+def test_dynamic_scale_fills_range():
+    x = jnp.array([0.001, -0.002, 0.0005])
+    s = float(dynamic_scale(x, "e4m3"))
+    assert s == pytest.approx(FP8_E4M3_MAX / 0.002, rel=1e-5)
+    q, s2 = quantize_dynamic(x, "e4m3")
+    assert float(jnp.max(jnp.abs(q))) <= FP8_E4M3_MAX
+    # rescaled values recover the original within e4m3 relative error
+    np.testing.assert_allclose(np.asarray(q) / s2, np.asarray(x), rtol=0.07)
+
+
+def test_underflow_fraction_bounds():
+    # values far below e4m3 min subnormal (2^-9) all underflow
+    tiny = jnp.full((64,), 1e-6)
+    assert float(underflow_fraction(tiny, "e4m3")) == 1.0
+    ok = jnp.full((64,), 1.0)
+    assert float(underflow_fraction(ok, "e4m3")) == 0.0
+    zeros = jnp.zeros((64,))
+    assert float(underflow_fraction(zeros, "e4m3")) == 0.0  # 0s don't count

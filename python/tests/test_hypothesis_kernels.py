@@ -1,0 +1,88 @@
+"""Hypothesis sweeps over kernel shapes/formats: Pallas vs ref oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import attention as pallas_attention
+from compile.kernels.cast_transpose import cast_transpose as pallas_ct
+from compile.kernels.fp8_matmul import scaled_matmul
+from compile.kernels.layernorm import layernorm as pallas_ln
+
+FMTS = st.sampled_from(["none", "bf16", "e4m3", "e5m2"])
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def _arr(seed, shape, scale):
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.sampled_from([4, 8, 24]),
+    k=st.sampled_from([4, 16, 32]),
+    n=st.sampled_from([4, 8, 40]),
+    xf=FMTS,
+    wf=FMTS,
+    scale=st.sampled_from([0.01, 1.0, 300.0]),
+    seed=st.integers(0, 2**16),
+)
+def test_scaled_matmul_any_shape_fmt(m, k, n, xf, wf, scale, seed):
+    x = _arr(seed, (m, k), scale)
+    w = _arr(seed + 1, (k, n), 1.0)
+    got = scaled_matmul(x, w, 1.0 / k**0.5, xf, wf)
+    want = ref.scaled_matmul(x, w, 1.0 / k**0.5, xf, wf)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.sampled_from([8, 16, 64]),
+    n=st.sampled_from([8, 32]),
+    fmt=st.sampled_from(["e4m3", "e5m2"]),
+    block=st.sampled_from([None, 8]),
+    scale=st.sampled_from([0.001, 1.0, 5000.0]),
+    seed=st.integers(0, 2**16),
+)
+def test_cast_transpose_any(m, n, fmt, block, scale, seed):
+    x = _arr(seed, (m, n), scale)
+    q, qt = pallas_ct(x, fmt, block=block)
+    rq, rqt = ref.cast_transpose(x, fmt)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(rq))
+    np.testing.assert_array_equal(np.asarray(qt), np.asarray(rqt))
+
+
+@settings(**SETTINGS)
+@given(
+    r=st.sampled_from([4, 16, 32]),
+    d=st.sampled_from([8, 48]),
+    scale=st.sampled_from([0.1, 1.0, 100.0]),
+    seed=st.integers(0, 2**16),
+)
+def test_layernorm_any(r, d, scale, seed):
+    x = _arr(seed, (r, d), scale)
+    g = 1.0 + 0.1 * _arr(seed + 1, (d,), 1.0)
+    b = _arr(seed + 2, (d,), 0.5)
+    got = pallas_ln(x, g, b)
+    want = ref.layernorm(x, g, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.sampled_from([1, 2]),
+    h=st.sampled_from([1, 4]),
+    s=st.sampled_from([8, 32]),
+    dh=st.sampled_from([8, 16]),
+    sqrt_softmax=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_attention_any(b, h, s, dh, sqrt_softmax, seed):
+    q = _arr(seed, (b, h, s, dh), 1.0)
+    k = _arr(seed + 1, (b, h, s, dh), 1.0)
+    v = _arr(seed + 2, (b, h, s, dh), 1.0)
+    got = pallas_attention(q, k, v, sqrt_softmax=sqrt_softmax)
+    want = ref.attention(q, k, v, sqrt_softmax=sqrt_softmax)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)

@@ -1,0 +1,30 @@
+"""Structural L1 perf analysis (VMEM/MXU model) sanity checks."""
+
+from compile.kernels.analysis import GemmTile, VMEM_BYTES, paper_scale_tiles, report
+
+
+def test_paper_tiles_fit_vmem_after_auto_tiling():
+    text = report(paper_scale_tiles(), "t")
+    assert "NO" not in text  # every kernel's chosen block fits VMEM
+
+
+def test_mxu_alignment_of_chosen_blocks():
+    for t in paper_scale_tiles():
+        assert t.mxu_utilization() == 1.0, t.name  # multiples of 128
+
+
+def test_misaligned_block_penalized():
+    t = GemmTile("odd", 100, 4096, 4096, 100)
+    assert t.mxu_utilization() < 0.85
+
+
+def test_paper_gemms_compute_bound():
+    for t in paper_scale_tiles():
+        assert t.roofline_bound() == "compute", t.name
+
+
+def test_vmem_model_monotone_in_block():
+    small = GemmTile("s", 8192, 4096, 1024, 256)
+    large = GemmTile("l", 8192, 4096, 1024, 1024)
+    assert small.vmem_bytes() < large.vmem_bytes()
+    assert small.vmem_bytes() < VMEM_BYTES

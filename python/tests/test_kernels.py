@@ -1,0 +1,163 @@
+"""Pallas kernels (interpret=True) vs pure-jnp oracles in ref.py."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.attention import attention as pallas_attention
+from compile.kernels.cast_transpose import cast_transpose as pallas_ct
+from compile.kernels.fp8_matmul import scaled_matmul, te_linear, us_linear
+from compile.kernels.layernorm import layernorm as pallas_ln
+
+
+def _rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+@pytest.mark.parametrize("fmt", ["none", "bf16", "e4m3", "e5m2"])
+@pytest.mark.parametrize("shape", [(8, 16, 8), (32, 32, 32), (64, 16, 48)])
+def test_scaled_matmul_matches_ref(fmt, shape):
+    m, k, n = shape
+    x = _rand(0, (m, k))
+    w = _rand(1, (k, n))
+    alpha = 1.0 / np.sqrt(k)
+    got = scaled_matmul(x, w, alpha, fmt, fmt)
+    want = ref.scaled_matmul(x, w, alpha, fmt, fmt)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("block_m", [8, 16, 32])
+def test_scaled_matmul_tiling_invariant(block_m):
+    x = _rand(2, (32, 24))
+    w = _rand(3, (24, 40))
+    full = scaled_matmul(x, w, 0.5, "e4m3", "e4m3", block_m=None)
+    tiled = scaled_matmul(x, w, 0.5, "e4m3", "e4m3", block_m=block_m)
+    np.testing.assert_array_equal(np.asarray(full), np.asarray(tiled))
+
+
+def test_scaled_matmul_mixed_formats():
+    x = _rand(4, (16, 16), scale=3.0)
+    w = _rand(5, (16, 16))
+    got = scaled_matmul(x, w, 1.0, "e5m2", "e4m3")
+    want = ref.scaled_matmul(x, w, 1.0, "e5m2", "e4m3")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+@pytest.mark.parametrize("fmt", ["e4m3", "e5m2"])
+@pytest.mark.parametrize("block", [None, 8, 16])
+def test_cast_transpose_matches_ref(fmt, block):
+    x = _rand(6, (32, 16), scale=100.0)
+    q, qt = pallas_ct(x, fmt, block=block)
+    rq, rqt = ref.cast_transpose(x, fmt)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(rq))
+    np.testing.assert_array_equal(np.asarray(qt), np.asarray(rqt))
+    np.testing.assert_array_equal(np.asarray(qt), np.asarray(q).T)
+
+
+@pytest.mark.parametrize("rows,block_rows", [(8, None), (32, 8), (64, 16)])
+def test_layernorm_matches_ref(rows, block_rows):
+    x = _rand(7, (rows, 48), scale=5.0)
+    g = _rand(8, (48,)) + 1.0
+    b = _rand(9, (48,))
+    got = pallas_ln(x, g, b, block_rows=block_rows)
+    want = ref.layernorm(x, g, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("sqrt_softmax", [False, True])
+@pytest.mark.parametrize("bhsd", [(1, 2, 16, 8), (2, 4, 32, 16)])
+def test_attention_matches_ref(sqrt_softmax, bhsd):
+    b, h, s, dh = bhsd
+    q = _rand(10, bhsd)
+    k = _rand(11, bhsd)
+    v = _rand(12, bhsd)
+    got = pallas_attention(q, k, v, sqrt_softmax=sqrt_softmax)
+    want = ref.attention(q, k, v, sqrt_softmax=sqrt_softmax)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_attention_causality():
+    """Perturbing a future token never changes past outputs."""
+    b, h, s, dh = 1, 2, 16, 8
+    q, k, v = _rand(13, (b, h, s, dh)), _rand(14, (b, h, s, dh)), _rand(15, (b, h, s, dh))
+    base = pallas_attention(q, k, v)
+    v2 = v.at[:, :, s - 1].add(100.0)
+    k2 = k.at[:, :, s - 1].add(100.0)
+    pert = pallas_attention(q, k2, v2)
+    np.testing.assert_allclose(
+        np.asarray(base[:, :, : s - 1]), np.asarray(pert[:, :, : s - 1]), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_sqrt_softmax_variance_preserving_iid():
+    """Paper Eq. 8: with iid unit-variance values, sqrt-softmax attention
+    keeps per-position output std ~1 while standard attention decays."""
+    key = jax.random.PRNGKey(42)
+    s, dh = 256, 64
+    q = jax.random.normal(key, (8, 1, s, dh))
+    k = jax.random.normal(jax.random.PRNGKey(43), (8, 1, s, dh)) * (dh**-0.25)
+    q = q * (dh**-0.25)  # logits ~ N(0,1)
+    v = jax.random.normal(jax.random.PRNGKey(44), (8, 1, s, dh))
+    std_sq = np.asarray(jnp.std(ref.attention(q, k, v, sqrt_softmax=True), axis=(0, 1, 3)))
+    std_st = np.asarray(jnp.std(ref.attention(q, k, v, sqrt_softmax=False), axis=(0, 1, 3)))
+    # standard: sigma(k) ~ 1/sqrt(k) -> large decay from pos 4 to 255
+    assert std_st[255] < 0.35 * std_st[3]
+    # sqrt-softmax: flat within a loose band
+    assert 0.7 < std_sq[255] / std_sq[3] < 1.3
+    assert abs(std_sq[128] - 1.0) < 0.3
+
+
+def test_us_linear_exact_gradients_none_fmt():
+    """With fmt=none, us_linear's custom VJP must equal autodiff exactly."""
+    x = _rand(20, (8, 12))
+    w = _rand(21, (12, 8))
+    alpha = 0.37
+
+    def f(x, w):
+        return jnp.sum(us_linear(x, w, alpha, "none", None) ** 2)
+
+    def f_ref(x, w):
+        return jnp.sum((alpha * x @ w) ** 2)
+
+    gx, gw = jax.grad(f, argnums=(0, 1))(x, w)
+    rx, rw = jax.grad(f_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(rx), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(rw), rtol=1e-5, atol=1e-6)
+
+
+def test_us_linear_fp8_grad_formats():
+    """FP8 backward: dx/dw computed from e5m2 grads + e4m3 operands."""
+    x = _rand(22, (8, 8))
+    w = _rand(23, (8, 8))
+    alpha = 0.5
+    g = _rand(24, (8, 8))
+    _, vjp = jax.vjp(lambda x, w: us_linear(x, w, alpha, "fp8", None), x, w)
+    dx, dw = vjp(g)
+    rx = ref.scaled_matmul(g, w.T, alpha, "e5m2", "e4m3")
+    rw = ref.scaled_matmul(x.T, g, alpha, "e4m3", "e5m2")
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(rx), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(dw), np.asarray(rw), rtol=1e-6)
+
+
+def test_te_linear_matches_dynamic_ref():
+    x = _rand(25, (16, 16), scale=0.01)  # small values: dynamic scaling rescues them
+    w = _rand(26, (16, 16), scale=0.01)
+    got = te_linear(x, w, "e4m3")
+    want = ref.dynamic_scaled_matmul(x, w, "e4m3")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+    # and the result is close to the exact matmul (that's the point of TE);
+    # atol covers cancellation in near-zero dot products
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x @ w), rtol=0.2, atol=1e-4)
+
+
+def test_static_fp8_underflows_small_values_but_dynamic_does_not():
+    """The tradeoff the paper removes by *keeping tensors unit variance*:
+    static casting destroys badly-scaled tensors; µS keeps them well-scaled."""
+    x = jnp.full((8, 8), 1e-5)
+    w = jnp.full((8, 8), 1e-5)
+    static = scaled_matmul(x, w, 1.0, "e4m3", "e4m3")
+    dynamic = te_linear(x, w, "e4m3")
+    assert float(jnp.max(jnp.abs(static))) == 0.0
+    np.testing.assert_allclose(np.asarray(dynamic), np.asarray(x @ w), rtol=0.1)

@@ -1,0 +1,46 @@
+"""Lion optimizer reference semantics (paper App. A.3)."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels.ref import lion_update
+
+
+def test_lion_sign_update():
+    p = jnp.zeros((4,))
+    m = jnp.zeros((4,))
+    g = jnp.array([3.0, -0.5, 0.0, 100.0])
+    p2, m2 = lion_update(p, m, g, lr=0.1, wd=0.0)
+    np.testing.assert_allclose(np.asarray(p2), [-0.1, 0.1, 0.0, -0.1])
+    np.testing.assert_allclose(np.asarray(m2), 0.01 * np.asarray(g), rtol=1e-6)
+
+
+def test_lion_momentum_interpolation():
+    """Update direction uses beta1 (0.9) interpolation; momentum uses beta2."""
+    p = jnp.zeros((1,))
+    m = jnp.array([1.0])
+    g = jnp.array([-5.0])
+    # c = 0.9*1 + 0.1*(-5) = 0.4 > 0  -> step is -lr
+    p2, m2 = lion_update(p, m, g, lr=0.5, wd=0.0)
+    assert float(p2[0]) == -0.5
+    np.testing.assert_allclose(float(m2[0]), 0.99 * 1.0 + 0.01 * (-5.0), rtol=1e-6)
+
+
+def test_fully_decoupled_weight_decay():
+    """wd is NOT multiplied by lr (Wortsman et al. 2024 formulation)."""
+    p = jnp.array([2.0])
+    m = jnp.zeros((1,))
+    g = jnp.zeros((1,))
+    p2, _ = lion_update(p, m, g, lr=0.0, wd=0.25)
+    assert float(p2[0]) == 1.5  # 2.0 - 0.25*2.0, independent of lr=0
+
+
+def test_update_magnitude_independent_of_grad_scale():
+    """Sign-based update: scaling the gradient leaves the step unchanged —
+    why µP's Adam-like rules apply to Lion."""
+    p = jnp.zeros((8,))
+    m = jnp.zeros((8,))
+    g = jnp.linspace(-1, 1, 8)
+    p_a, _ = lion_update(p, m, g, lr=0.1, wd=0.0)
+    p_b, _ = lion_update(p, m, 1000.0 * g, lr=0.1, wd=0.0)
+    np.testing.assert_array_equal(np.asarray(p_a), np.asarray(p_b))

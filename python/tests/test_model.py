@@ -1,0 +1,213 @@
+"""L2 model invariants: init variance, residual-stream scale, loss sanity,
+training progress, transfer multipliers, residual schemes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.configs import ModelConfig, lr_mult, output_mult, param_specs, wd_mult
+
+TINY = dict(width=32, depth=2, head_dim=16, vocab=64, seq_len=32, batch=2, d_base=32)
+
+
+def cfg_of(**kw):
+    base = dict(TINY)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def tokens_for(cfg, seed=0):
+    return jax.random.randint(jax.random.PRNGKey(seed), (cfg.batch, cfg.seq_len), 0, cfg.vocab)
+
+
+class TestInit:
+    def test_mus_unit_variance(self):
+        cfg = cfg_of(width=64, variant="mus")
+        params = model.init_params(0, cfg)
+        names = [n for n, _ in param_specs(cfg)]
+        for n, p in zip(names, params):
+            if n.startswith("ln"):
+                continue
+            assert abs(float(jnp.std(p)) - 1.0) < 0.05, n
+
+    def test_sp_sigma_init(self):
+        cfg = cfg_of(width=64, variant="sp", residual="standard", sigma_init=0.02)
+        params = model.init_params(0, cfg)
+        names = [n for n, _ in param_specs(cfg)]
+        for n, p in zip(names, params):
+            if n.startswith("ln"):
+                continue
+            assert abs(float(jnp.std(p)) - 0.02) < 0.005, n
+
+    def test_ln_init(self):
+        cfg = cfg_of()
+        params = model.init_params(0, cfg)
+        d = dict(zip([n for n, _ in param_specs(cfg)], params))
+        assert float(jnp.min(d["ln1_g"])) == 1.0
+        assert float(jnp.max(jnp.abs(d["ln1_b"]))) == 0.0
+
+    def test_momentum_zero(self):
+        cfg = cfg_of()
+        _, mom = model.init_state(0, cfg)
+        assert all(float(jnp.max(jnp.abs(m))) == 0.0 for m in mom)
+
+    def test_seeds_differ(self):
+        cfg = cfg_of()
+        p0 = model.init_params(0, cfg)
+        p1 = model.init_params(1, cfg)
+        assert float(jnp.max(jnp.abs(p0[0] - p1[0]))) > 0.0
+
+
+class TestForward:
+    @pytest.mark.parametrize("variant,precision", [("mus", "fp8"), ("mus", "bf16"),
+                                                   ("sp", "fp8"), ("sp", "bf16")])
+    def test_shapes_and_finite(self, variant, precision):
+        res = "fixed" if variant == "mus" else "standard"
+        cfg = cfg_of(variant=variant, precision=precision, residual=res)
+        params = model.init_params(0, cfg)
+        logits = model.forward(params, tokens_for(cfg), 0.3, cfg)
+        assert logits.shape == (cfg.batch, cfg.seq_len, cfg.vocab)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_loss_near_uniform_at_init(self):
+        cfg = cfg_of()
+        params = model.init_params(0, cfg)
+        loss = model.loss_fn(params, tokens_for(cfg), 0.3, cfg)
+        assert abs(float(loss) - np.log(cfg.vocab)) < 0.5
+
+    def test_mus_residual_stream_unit_scale_in_depth(self):
+        """Res-Post-LN + fixed(tau) keeps the stream near unit std at every
+        depth (the property that makes static FP8 casting viable)."""
+        cfg = cfg_of(width=64, depth=8)
+        params = model.init_params(0, cfg)
+        _, stats = model.forward(params, tokens_for(cfg), 0.3, cfg, probe=True)
+        resid_std = np.asarray(stats.resid_std)  # [L, S]
+        per_layer = resid_std.mean(axis=1)
+        assert np.all(per_layer > 0.7) and np.all(per_layer < 1.3), per_layer
+
+    def test_causality_of_full_model(self):
+        cfg = cfg_of()
+        params = model.init_params(0, cfg)
+        t = tokens_for(cfg)
+        base = model.forward(params, t, 0.3, cfg)
+        t2 = t.at[:, -1].set((t[:, -1] + 7) % cfg.vocab)
+        pert = model.forward(params, t2, 0.3, cfg)
+        np.testing.assert_allclose(
+            np.asarray(base[:, :-1]), np.asarray(pert[:, :-1]), rtol=1e-4, atol=1e-5
+        )
+
+
+class TestResidualSchemes:
+    def test_fixed_coeffs(self):
+        cfg = cfg_of(residual="fixed", depth=3)
+        c = np.asarray(model._residual_coeffs(0.19, cfg))
+        assert c.shape == (3, 2, 2)
+        np.testing.assert_allclose(c[..., 0], np.sqrt(1 - 0.19), rtol=1e-6)
+        np.testing.assert_allclose(c[..., 1], np.sqrt(0.19), rtol=1e-6)
+
+    def test_fixed_variance_preserving(self):
+        c = np.asarray(model._residual_coeffs(0.4, cfg_of(residual="fixed")))
+        np.testing.assert_allclose(c[..., 0] ** 2 + c[..., 1] ** 2, 1.0, rtol=1e-6)
+
+    def test_running_mean_variance_preserving(self):
+        c = np.asarray(model._residual_coeffs(0.0, cfg_of(residual="running_mean", depth=5)))
+        np.testing.assert_allclose(c[..., 0] ** 2 + c[..., 1] ** 2, 1.0, rtol=1e-6)
+        # branch weights decay with depth (Eq. 11)
+        assert c[0, 0, 1] > c[4, 1, 1]
+
+    def test_standard_coeffs_all_ones(self):
+        c = np.asarray(model._residual_coeffs(0.3, cfg_of(residual="standard")))
+        np.testing.assert_array_equal(c, np.ones_like(c))
+
+
+class TestTrainStep:
+    @pytest.mark.parametrize("variant,precision", [("mus", "fp8"), ("sp", "bf16")])
+    def test_loss_decreases(self, variant, precision):
+        res = "fixed" if variant == "mus" else "standard"
+        cfg = cfg_of(variant=variant, precision=precision, residual=res)
+        params, mom = model.init_state(0, cfg)
+        step = jax.jit(lambda p, m, t: model.train_step(p, m, t, 2**-7, 1e-4, 0.4, cfg))
+        losses = []
+        t = tokens_for(cfg)  # overfit one batch
+        for _ in range(12):
+            params, mom, loss, gnorm = step(params, mom, t)
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] - 0.2, losses
+        assert np.isfinite(losses).all()
+
+    def test_gnorm_positive_finite(self):
+        cfg = cfg_of()
+        params, mom = model.init_state(0, cfg)
+        *_, gnorm = model.train_step(params, mom, tokens_for(cfg), 1e-3, 0.0, 0.3, cfg)
+        assert np.isfinite(float(gnorm)) and float(gnorm) > 0
+
+    def test_wd_shrinks_weights_not_ln(self):
+        cfg = cfg_of()
+        params, mom = model.init_state(0, cfg)
+        names = [n for n, _ in param_specs(cfg)]
+        p2, *_ = model.train_step(params, mom, tokens_for(cfg), 0.0, 0.1, 0.3, cfg)
+        d0 = dict(zip(names, params))
+        d1 = dict(zip(names, p2))
+        # lr=0: only fully-decoupled wd acts -> decayed params shrink by 0.9
+        np.testing.assert_allclose(np.asarray(d1["w_o"]), 0.9 * np.asarray(d0["w_o"]), rtol=1e-6)
+        np.testing.assert_array_equal(np.asarray(d1["ln1_g"]), np.asarray(d0["ln1_g"]))
+
+
+class TestTransferRules:
+    def test_mus_hidden_lr_sqrt_rule(self):
+        cfg = cfg_of(width=128, d_base=32)
+        assert lr_mult(cfg, "w_qkv") == pytest.approx(0.5)  # sqrt(32/128)
+        assert lr_mult(cfg, "embed") == 1.0
+        assert lr_mult(cfg, "head") == 1.0
+        assert lr_mult(cfg, "ln1_g") == 1.0
+
+    def test_sp_linear_lr_rule(self):
+        cfg = cfg_of(width=128, d_base=32, variant="sp", residual="standard")
+        assert lr_mult(cfg, "w_qkv") == pytest.approx(0.25)  # 32/128
+        assert lr_mult(cfg, "embed") == pytest.approx(0.25)
+
+    def test_output_multipliers_table2(self):
+        cfg = cfg_of(width=64)
+        assert output_mult(cfg, "w_qkv") == pytest.approx(64**-0.5)
+        assert output_mult(cfg, "w_down") == pytest.approx((64 * 4) ** -0.5)
+        assert output_mult(cfg, "head") == pytest.approx(1 / 64)
+        assert output_mult(cfg, "embed") == 1.0
+
+    def test_wd_applies_to_matrices_only(self):
+        cfg = cfg_of()
+        assert wd_mult(cfg, "w_up") == 1.0
+        assert wd_mult(cfg, "embed") == 1.0
+        assert wd_mult(cfg, "ln2_b") == 0.0
+        assert wd_mult(cfg, "lnf_g") == 0.0
+
+
+class TestMuPInvariance:
+    def test_abc_rescale_invariance_under_lion(self):
+        """Yang et al. Eq. 15 specialization the µS derivation rests on:
+        (a,b,c) -> (a*t, b/t, c/t) leaves the layer's training trajectory
+        outputs invariant under sign-based (Adam-like) optimizers."""
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(key, (16, 8))
+        w0 = jax.random.normal(jax.random.PRNGKey(1), (8, 8))
+        tgt = jax.random.normal(jax.random.PRNGKey(2), (16, 8))
+
+        def train(a, w, c, steps=5):
+            m = jnp.zeros_like(w)
+            outs = []
+            for _ in range(steps):
+                def loss(w):
+                    return jnp.mean((a * x @ w - tgt) ** 2)
+                g = jax.grad(loss)(w)
+                cmb = 0.9 * m + 0.1 * g
+                w = w - c * jnp.sign(cmb)
+                m = 0.99 * m + 0.01 * g
+                outs.append(a * x @ w)
+            return outs
+
+        t = 4.0
+        o1 = train(1.0, w0, 1e-2)
+        o2 = train(1.0 * t, w0 / t, 1e-2 / t)
+        for u, v in zip(o1, o2):
+            np.testing.assert_allclose(np.asarray(u), np.asarray(v), rtol=1e-5, atol=1e-6)

@@ -1,0 +1,113 @@
+"""Cross-precision behavior of the four (variant, precision) model
+families — the properties Figs 6/7 rely on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.configs import ModelConfig
+
+
+def cfg_of(**kw):
+    base = dict(width=32, depth=2, head_dim=16, vocab=64, seq_len=32, batch=2, d_base=32)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def tokens_for(cfg, seed=0):
+    return jax.random.randint(jax.random.PRNGKey(seed), (cfg.batch, cfg.seq_len), 0, cfg.vocab)
+
+
+def test_mus_fp8_close_to_bf16_at_init():
+    """Static FP8 casting on unit-variance tensors is a small perturbation:
+    the FP8 and BF16 µS models should produce nearby losses at init."""
+    c8 = cfg_of(precision="fp8")
+    c16 = cfg_of(precision="bf16")
+    params = model.init_params(0, c8)
+    t = tokens_for(c8)
+    l8 = float(model.loss_fn(params, t, 0.3, c8))
+    l16 = float(model.loss_fn(params, t, 0.3, c16))
+    assert abs(l8 - l16) < 0.05, (l8, l16)
+
+
+def test_sp_fp8_dynamic_close_to_bf16_at_init():
+    """TE-style dynamic scaling rescues SP's small-sigma tensors."""
+    c8 = cfg_of(variant="sp", precision="fp8", residual="standard")
+    c16 = cfg_of(variant="sp", precision="bf16", residual="standard")
+    params = model.init_params(0, c8)
+    t = tokens_for(c8)
+    l8 = float(model.loss_fn(params, t, 0.0, c8))
+    l16 = float(model.loss_fn(params, t, 0.0, c16))
+    assert abs(l8 - l16) < 0.05, (l8, l16)
+
+
+def test_sp_static_fp8_would_collapse():
+    """Why SP needs dynamic scaling: statically casting sigma=0.02 weights
+    to e4m3 flushes most mass (resolution near 0.02 is coarse relative to
+    the weights' scale... actually: 0.02-scale values survive e4m3, but the
+    *products* (0.02 * 0.02 * fan_in) vanish through layers). We check the
+    narrower, always-true statement: µS unit-variance tensors suffer ~0
+    quantization-induced loss shift while a 1e-5-scaled tensor is erased."""
+    from compile.kernels.fp8 import quantize
+
+    x = 1e-5 * jax.random.normal(jax.random.PRNGKey(0), (1024,))
+    assert float(jnp.sum(jnp.abs(quantize(x, "e4m3")))) == 0.0
+    u = jax.random.normal(jax.random.PRNGKey(1), (1024,))
+    q = quantize(u, "e4m3")
+    rel = float(jnp.linalg.norm(q - u) / jnp.linalg.norm(u))
+    assert rel < 0.06, rel  # ~2^-4 worst-case relative error, ~4% RMS
+
+
+@pytest.mark.parametrize("residual", ["fixed", "running_mean"])
+def test_residual_schemes_train(residual):
+    cfg = cfg_of(residual=residual, depth=4)
+    params, mom = model.init_state(0, cfg)
+    t = tokens_for(cfg)
+    step = jax.jit(lambda p, m: model.train_step(p, m, t, 2**-7, 0.0, 0.2, cfg))
+    for _ in range(8):
+        params, mom, loss, _ = step(params, mom)
+    assert np.isfinite(float(loss))
+
+
+def test_unit_variance_activations_across_widths():
+    """The enabler of static FP8: at init, µS keeps the residual stream at
+    unit scale regardless of width (so e4m3's range always fits)."""
+    for w in [32, 64, 128]:
+        cfg = cfg_of(width=w, depth=3)
+        params = model.init_params(0, cfg)
+        _, stats = model.forward(params, tokens_for(cfg), 0.3, cfg, probe=True)
+        per_layer = np.asarray(stats.resid_std).mean(axis=1)
+        assert np.all(per_layer > 0.7) and np.all(per_layer < 1.3), (w, per_layer)
+
+
+def test_sp_residual_stream_grows_with_depth():
+    """Contrast: SP's pre-LN summation grows the stream like sqrt(depth) —
+    the mechanism behind Fig 12's outliers."""
+    cfg = cfg_of(variant="sp", residual="standard", depth=6, sigma_init=0.08)
+    params = model.init_params(0, cfg)
+    _, stats = model.forward(params, tokens_for(cfg), 0.0, cfg, probe=True)
+    per_layer = np.asarray(stats.resid_std).mean(axis=1)
+    assert per_layer[-1] > per_layer[0], per_layer
+
+
+def test_width_changes_only_hidden_lr():
+    """Transfer rule sanity at the train_step level: with lr=0 nothing
+    moves; with wd=0,lr>0 hidden updates shrink by sqrt(d_base/width)."""
+    from compile.configs import param_specs
+
+    for w, expected in [(32, 1.0), (128, 0.5)]:
+        cfg = cfg_of(width=w, depth=2)
+        params, mom = model.init_state(0, cfg)
+        t = tokens_for(cfg)
+        p2, *_ = model.train_step(params, mom, t, 1e-2, 0.0, 0.3, cfg)
+        names = [n for n, _ in param_specs(cfg)]
+        d = dict(zip(names, params))
+        d2 = dict(zip(names, p2))
+        # Lion: |update| = lr * mult exactly (sign update, wd=0)
+        delta = np.abs(np.asarray(d2["w_o"]) - np.asarray(d["w_o"]))
+        np.testing.assert_allclose(delta.max(), 1e-2 * expected, rtol=1e-4)
+        delta_e = np.abs(np.asarray(d2["embed"]) - np.asarray(d["embed"]))
+        # embedding LR never scales; most rows untouched (gather), so max
+        np.testing.assert_allclose(delta_e.max(), 1e-2, rtol=1e-4)

@@ -1,0 +1,143 @@
+//! `cargo bench` entry (harness=false; criterion is unavailable offline —
+//! timing comes from munit::util::bench).
+//!
+//! Two groups:
+//!  - `hot:*`  — microbenches of the L3 hot path (fp8 casts, data
+//!    generation, literal packing, step latency per model size);
+//!  - `paper:*` — one bench per paper table/figure that regenerates the
+//!    figure's data series (training-backed figures are benchmarked via
+//!    their unit of work, a single train step, so `cargo bench` stays
+//!    minutes, not hours; `munit figure all` produces the full series).
+//!
+//! Filter with `cargo bench -- <substring>`.
+
+use std::time::Duration;
+
+use munit::analysis::{
+    activation_underflow, activations::Activation, attention_sigma_iid, AttentionKind,
+    InputDist,
+};
+use munit::config::ModelConfig;
+use munit::coordinator::trainer::Trainer;
+use munit::data::{Batcher, CorpusSpec};
+use munit::fp8::E4M3;
+use munit::perfmodel::{fig8, Hw};
+use munit::runtime::{lit_f32, Engine};
+use munit::scaling::comparison_matrix;
+use munit::util::bench::{bench, header, quick, BenchResult};
+use munit::util::json::Json;
+use munit::util::rng::Rng;
+
+fn main() {
+    // cargo bench invokes the harness with `--bench` (and possibly other
+    // libtest-ish flags); only a bare positional counts as a filter.
+    let filter = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with('-'))
+        .unwrap_or_default();
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut run = |name: &str, f: &mut dyn FnMut()| {
+        if !filter.is_empty() && !name.contains(&filter) {
+            return;
+        }
+        eprintln!("running {name}…");
+        results.push(quick(name, f));
+    };
+
+    // ---- hot path -------------------------------------------------------
+    let mut rng = Rng::new(0);
+    let mut buf = vec![0f32; 1 << 16];
+    rng.fill_normal(&mut buf, 1.0);
+    run("hot:fp8_quantize_64k_elems", &mut || {
+        let mut b = buf.clone();
+        std::hint::black_box(E4M3.quantize_slice(&mut b));
+    });
+    run("hot:fp8_underflow_fraction_64k", &mut || {
+        std::hint::black_box(E4M3.underflow_fraction(&buf));
+    });
+
+    let spec = CorpusSpec::default();
+    let mut batcher = Batcher::new(spec.clone(), 0, 0, 1, 4, 128);
+    run("hot:data_batch_4x128", &mut || {
+        std::hint::black_box(batcher.next_batch());
+    });
+
+    run("hot:literal_pack_512x64_f32", &mut || {
+        std::hint::black_box(lit_f32(&buf[..512 * 64], &[512, 64]).unwrap());
+    });
+
+    let manifest_text = std::fs::read_to_string("artifacts/manifest.json").ok();
+    if let Some(text) = &manifest_text {
+        run("hot:manifest_json_parse", &mut || {
+            std::hint::black_box(Json::parse(text).unwrap());
+        });
+    }
+
+    // ---- per-figure/table ------------------------------------------------
+    run("paper:fig1_table3_scheme_matrix", &mut || {
+        std::hint::black_box(comparison_matrix());
+    });
+    run("paper:fig8_throughput_model", &mut || {
+        std::hint::black_box(fig8(&Hw::default()));
+    });
+    let mut rng2 = Rng::new(2);
+    run("paper:fig2_attention_sigma_sim", &mut || {
+        std::hint::black_box(attention_sigma_iid(
+            &[4, 64, 256],
+            16,
+            50,
+            AttentionKind::Standard,
+            &mut rng2,
+        ));
+    });
+    let mut rng3 = Rng::new(3);
+    run("paper:fig10_underflow_mc", &mut || {
+        for act in Activation::all() {
+            std::hint::black_box(activation_underflow(
+                act,
+                InputDist::StdNormal,
+                E4M3,
+                20_000,
+                &mut rng3,
+            ));
+        }
+    });
+
+    // training-backed figures: benchmark the unit of work (one train step)
+    // at each proxy size the figures use
+    if let Ok(engine) = Engine::new("artifacts") {
+        for (w, d, tag) in [
+            (32usize, 4usize, "fig6_w32"),
+            (64, 4, "fig6_fig9_fig11_w64"),
+            (128, 6, "fig2_fig3_fig7_fig12_M"),
+            (256, 8, "fig7_table5_L"),
+            (64, 24, "fig4b_fig5_deep"),
+        ] {
+            let name = format!("paper:train_step_{tag}_w{w}d{d}");
+            if !filter.is_empty() && !name.contains(&filter) {
+                continue;
+            }
+            let cfg = ModelConfig { width: w, depth: d, ..ModelConfig::default() };
+            let Ok(trainer) = Trainer::new(&engine, &cfg) else { continue };
+            let mut state = trainer.init(0).unwrap();
+            let mut b = Batcher::new(spec.clone(), 0, 0, 1, cfg.batch, cfg.seq_len);
+            let tokens = b.next_batch();
+            // warmup includes the XLA compile
+            trainer.step(&mut state, &tokens, 1e-3, 1e-4, 0.4).unwrap();
+            eprintln!("running {name}…");
+            results.push(bench(&name, 1, 3, Duration::from_secs(3), || {
+                let tokens = b.next_batch();
+                std::hint::black_box(
+                    trainer.step(&mut state, &tokens, 1e-3, 1e-4, 0.4).unwrap(),
+                );
+            }));
+        }
+    } else {
+        eprintln!("artifacts not built; skipping train-step benches");
+    }
+
+    println!("\n{}", header());
+    for r in &results {
+        println!("{}", r.report());
+    }
+}

@@ -1,0 +1,99 @@
+//! Activation functions (f32), matching the jax definitions used in L2.
+//!
+//! GELU is the exact erf form (`jax.nn.gelu(approximate=False)`); erf is
+//! evaluated with the Abramowitz–Stegun 7.1.26 rational approximation
+//! (|err| < 1.5e-7, far below bf16 resolution — the comparisons in Fig 10
+//! are made after a bf16 round-trip anyway).
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activation {
+    Gelu,
+    Silu,
+    Relu,
+}
+
+impl Activation {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Activation::Gelu => "gelu",
+            Activation::Silu => "silu",
+            Activation::Relu => "relu",
+        }
+    }
+
+    pub fn apply(&self, x: f32) -> f32 {
+        match self {
+            Activation::Gelu => gelu(x),
+            Activation::Silu => silu(x),
+            Activation::Relu => x.max(0.0),
+        }
+    }
+
+    pub fn all() -> [Activation; 3] {
+        [Activation::Gelu, Activation::Silu, Activation::Relu]
+    }
+}
+
+/// erf via Abramowitz–Stegun 7.1.26.
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// Exact GELU: 0.5 x (1 + erf(x / sqrt(2))).
+pub fn gelu(x: f32) -> f32 {
+    let xf = x as f64;
+    (0.5 * xf * (1.0 + erf(xf / std::f64::consts::SQRT_2))) as f32
+}
+
+/// SiLU / swish: x * sigmoid(x).
+pub fn silu(x: f32) -> f32 {
+    let xf = x as f64;
+    (xf / (1.0 + (-xf).exp())) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erf_reference_points() {
+        assert!((erf(0.0)).abs() < 1e-9);
+        assert!((erf(1.0) - 0.8427007929).abs() < 1e-6);
+        assert!((erf(-1.0) + 0.8427007929).abs() < 1e-6);
+        assert!((erf(3.0) - 0.9999779095).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gelu_reference_points() {
+        // values from jax.nn.gelu(approximate=False)
+        assert!((gelu(0.0)).abs() < 1e-7);
+        assert!((gelu(1.0) - 0.841345).abs() < 1e-4);
+        assert!((gelu(-1.0) + 0.158655).abs() < 1e-4);
+        assert!((gelu(-4.0)).abs() < 2e-4); // deep negative tail ~ -1.3e-4
+    }
+
+    #[test]
+    fn silu_reference_points() {
+        assert!((silu(0.0)).abs() < 1e-9);
+        assert!((silu(1.0) - 0.731059).abs() < 1e-5);
+        assert!((silu(-1.0) + 0.268941).abs() < 1e-5);
+    }
+
+    #[test]
+    fn tails_order_silu_slowest() {
+        // |silu(x)| > |gelu(x)| for deep negative x (why SiLU underflows
+        // over a *wider* input range but GELU's outputs get smaller sooner)
+        for x in [-6.0f32, -8.0, -10.0] {
+            assert!(silu(x).abs() > gelu(x).abs(), "{x}");
+        }
+        assert_eq!(Activation::Relu.apply(-5.0), 0.0);
+    }
+}

@@ -1,0 +1,225 @@
+//! Numerics analysis: the paper's §2.1 attention-variance study (Fig 2),
+//! value-token correlation baseline (Fig 3), activation-function FP8
+//! underflow (Fig 10 / App. A.5), and activation-outlier metrics (Fig 12).
+//!
+//! The *simulated* curves here are pure rust Monte Carlo over the software
+//! FP8 substrate; the *observed-in-training* curves come from probe
+//! artifacts (see `python/compile/model.py::probe_fn`) and are only
+//! post-processed here.
+
+pub mod activations;
+
+/// log10 exponent of the first probe-histogram bin edge (must match
+/// `python/compile/configs.py::HIST_LO_EXP`).
+pub const HIST_LO_EXP: i32 = -10;
+
+use crate::fp8::Format;
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// Softmax transform used by the attention simulation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AttentionKind {
+    /// Standard softmax scores.
+    Standard,
+    /// Square-Root Softmax (paper Eq. 9): scores = sqrt(softmax(logits)).
+    SqrtSoftmax,
+}
+
+/// Monte-Carlo sigma of self-attention outputs at given sequence positions
+/// with iid N(0,1) logits and iid N(0,1) value entries (paper Prop. 2.1
+/// setting; the "simulated" curves of Fig 2).
+///
+/// Returns (position, sigma) pairs.
+pub fn attention_sigma_iid(
+    positions: &[usize],
+    dh: usize,
+    trials: usize,
+    kind: AttentionKind,
+    rng: &mut Rng,
+) -> Vec<(usize, f64)> {
+    positions
+        .iter()
+        .map(|&k| {
+            let k = k.max(1);
+            let mut samples = Vec::with_capacity(trials * dh);
+            let mut logits = vec![0f32; k];
+            let mut acc = vec![0f32; dh];
+            for _ in 0..trials {
+                for l in logits.iter_mut() {
+                    *l = rng.normal_f32();
+                }
+                stats::softmax_inplace(&mut logits);
+                if kind == AttentionKind::SqrtSoftmax {
+                    for l in logits.iter_mut() {
+                        *l = l.sqrt();
+                    }
+                }
+                acc.iter_mut().for_each(|a| *a = 0.0);
+                for &s in logits.iter() {
+                    // one iid value row per score
+                    for a in acc.iter_mut() {
+                        *a += s * rng.normal_f32();
+                    }
+                }
+                samples.extend_from_slice(&acc);
+            }
+            (k, stats::std(&samples))
+        })
+        .collect()
+}
+
+/// Theoretical sigma^2 of standard attention output under Prop. 2.1:
+/// e/k - (e-1)/k^2 (the paper's first-order result, Eq. 6).
+pub fn attention_sigma2_theory(k: usize) -> f64 {
+    let k = k.max(1) as f64;
+    let e = std::f64::consts::E;
+    e / k - (e - 1.0) / (k * k)
+}
+
+/// Expected |cosine| between two iid N(0,1) vectors in dimension d —
+/// the "random" baseline of Fig 3: E|cos| ~ sqrt(2/(pi*d)).
+pub fn iid_cosine_baseline(d: usize) -> f64 {
+    (2.0 / (std::f64::consts::PI * d as f64)).sqrt()
+}
+
+/// Monte-Carlo check of the same quantity.
+pub fn iid_cosine_mc(d: usize, trials: usize, rng: &mut Rng) -> f64 {
+    let mut acc = 0.0;
+    let mut a = vec![0f32; d];
+    let mut b = vec![0f32; d];
+    for _ in 0..trials {
+        rng.fill_normal(&mut a, 1.0);
+        rng.fill_normal(&mut b, 1.0);
+        acc += stats::cosine(&a, &b).abs();
+    }
+    acc / trials as f64
+}
+
+/// Input distributions for the Fig 10 underflow study.
+#[derive(Debug, Clone, Copy)]
+pub enum InputDist {
+    /// Standard normal (the unit-scaled regime µS maintains).
+    StdNormal,
+    /// Uniform(-128, 128) (the paper's wide-range control).
+    Uniform128,
+}
+
+/// FP8 underflow fraction of an activation function's outputs (Fig 10):
+/// sample x from `dist`, compute act(x), round-trip bf16 -> e4m3, count
+/// nonzero values flushed to zero.
+pub fn activation_underflow(
+    act: activations::Activation,
+    dist: InputDist,
+    fmt: Format,
+    n: usize,
+    rng: &mut Rng,
+) -> f64 {
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let x = match dist {
+            InputDist::StdNormal => rng.normal_f32(),
+            InputDist::Uniform128 => rng.range_f64(-128.0, 128.0) as f32,
+        };
+        let y = act.apply(x);
+        // paper metric counts "BF16 -> FP8" flushes
+        out.push(crate::fp8::BF16.quantize(y));
+    }
+    fmt.underflow_fraction(&out)
+}
+
+/// Outlier score from a probe histogram (Fig 12): fraction of probability
+/// mass at |x| >= `threshold`, given the probe's half-decade log10 bins
+/// starting at 10^lo_exp (bin 0 = below 10^lo_exp).
+pub fn hist_tail_mass(hist: &[f32], lo_exp: i32, threshold: f64) -> f64 {
+    let mut mass = 0.0;
+    for (i, &h) in hist.iter().enumerate() {
+        let lo_edge = if i == 0 {
+            0.0
+        } else {
+            10f64.powf(lo_exp as f64 + (i as f64 - 1.0) * 0.5)
+        };
+        if lo_edge >= threshold {
+            mass += h as f64;
+        }
+    }
+    mass
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp8::E4M3;
+
+    #[test]
+    fn fig2_standard_attention_sigma_decays_as_sqrt_k() {
+        let mut rng = Rng::new(1);
+        let r = attention_sigma_iid(&[4, 64, 256], 8, 200, AttentionKind::Standard, &mut rng);
+        // sigma ~ sqrt(e/k): ratio between k=4 and k=256 is ~8
+        let ratio = r[0].1 / r[2].1;
+        assert!(ratio > 4.0 && ratio < 14.0, "ratio {ratio}");
+        // matches first-order theory within 25%
+        for (k, s) in r {
+            let th = attention_sigma2_theory(k).sqrt();
+            assert!((s / th - 1.0).abs() < 0.25, "k={k} sim {s} theory {th}");
+        }
+    }
+
+    #[test]
+    fn fig2_sqrt_softmax_sigma_flat() {
+        let mut rng = Rng::new(2);
+        let r = attention_sigma_iid(&[4, 64, 256], 8, 200, AttentionKind::SqrtSoftmax, &mut rng);
+        for (k, s) in r {
+            assert!((s - 1.0).abs() < 0.15, "k={k} sigma {s}");
+        }
+    }
+
+    #[test]
+    fn fig3_iid_baseline_matches_mc() {
+        let mut rng = Rng::new(3);
+        let d = 16;
+        let mc = iid_cosine_mc(d, 4000, &mut rng);
+        let th = iid_cosine_baseline(d);
+        assert!((mc / th - 1.0).abs() < 0.1, "mc {mc} th {th}");
+    }
+
+    #[test]
+    fn fig10_normal_inputs_gelu_silu_exceed_relu() {
+        use activations::Activation::*;
+        let mut rng = Rng::new(4);
+        let n = 400_000;
+        let g = activation_underflow(Gelu, InputDist::StdNormal, E4M3, n, &mut rng);
+        let s = activation_underflow(Silu, InputDist::StdNormal, E4M3, n, &mut rng);
+        let r = activation_underflow(Relu, InputDist::StdNormal, E4M3, n, &mut rng);
+        // N(0,1): gelu/silu shrink small inputs (≈x/2), widening the
+        // underflow band relative to relu's identity-on-positives
+        assert!(g > 1.5 * r, "gelu {g} vs relu {r}");
+        assert!(s > 1.2 * r, "silu {s} vs relu {r}");
+        assert!(r < 2e-3, "relu {r}");
+    }
+
+    #[test]
+    fn fig10_uniform_inputs_silu_worst_relu_clean() {
+        use activations::Activation::*;
+        let mut rng = Rng::new(5);
+        let n = 200_000;
+        let g = activation_underflow(Gelu, InputDist::Uniform128, E4M3, n, &mut rng);
+        let s = activation_underflow(Silu, InputDist::Uniform128, E4M3, n, &mut rng);
+        let r = activation_underflow(Relu, InputDist::Uniform128, E4M3, n, &mut rng);
+        // paper Fig 10: SiLU approaches 0 slowest -> widest underflow range
+        assert!(s > 5.0 * g, "silu {s} vs gelu {g}");
+        assert!(g > 0.01, "gelu {g}");
+        assert!(r < 1e-4, "relu {r}");
+    }
+
+    #[test]
+    fn tail_mass_sums_correctly() {
+        // 34 bins starting at 10^-10, half-decade each; mass at both ends
+        let mut h = vec![0f32; 34];
+        h[33] = 0.5;
+        h[0] = 0.5;
+        let m = hist_tail_mass(&h, -10, 10.0);
+        assert!((m - 0.5).abs() < 1e-9);
+        assert_eq!(hist_tail_mass(&h, -10, 1e9), 0.0);
+    }
+}

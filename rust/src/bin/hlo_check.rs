@@ -1,0 +1,28 @@
+// Round-trip smoke: load an HLO text file, compile on PJRT CPU, run with
+// fixed 2x2 f32 inputs, print the outputs.
+//
+// Findings encoded here (see rust/src/runtime):
+//  - executables return ONE tuple buffer (PJRT 0.5.1 does not untuple);
+//  - a tuple Literal must be decompose_tuple()'d — to_vec on it aborts.
+use xla::{HloModuleProto, Literal, PjRtClient, Shape, XlaComputation};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let path = std::env::args().nth(1).expect("usage: hlo_check <hlo.txt>");
+    let client = PjRtClient::cpu()?;
+    let proto = HloModuleProto::from_text_file(&path)?;
+    let comp = XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp)?;
+    let x = Literal::vec1(&[1f32, 2., 3., 4.]).reshape(&[2, 2])?;
+    let w = Literal::vec1(&[1f32, 1., 1., 1.]).reshape(&[2, 2])?;
+    let res = exe.execute::<Literal>(&[x, w])?;
+    println!("n_replicas={} n_outputs={}", res.len(), res[0].len());
+    let mut lit = res[0][0].to_literal_sync()?;
+    let parts = match lit.shape()? {
+        Shape::Tuple(_) => lit.decompose_tuple()?,
+        _ => vec![lit],
+    };
+    for (j, p) in parts.iter().enumerate() {
+        println!("out[{j}] shape={:?} vals={:?}", p.shape()?, p.to_vec::<f32>()?);
+    }
+    Ok(())
+}

@@ -1,0 +1,360 @@
+//! Typed configuration system: model shapes, training runs, presets.
+//!
+//! `ModelConfig` mirrors `python/compile/configs.py` (the manifest carries
+//! the python-side dict; `ModelConfig::from_json` parses it back, and the
+//! integration tests check the two agree). `TrainConfig` adds the L3-side
+//! knobs: steps, schedule, hyperparameters, seeds, divergence policy.
+//! `presets` includes both the paper's Table 4 production shapes (used by
+//! the perf model and memory planner) and the CPU-scale proxies the repro
+//! experiments actually train.
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub width: usize,
+    pub depth: usize,
+    pub head_dim: usize,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub ffn_ratio: usize,
+    pub d_base: usize,
+    pub variant: String,    // "mus" | "sp"
+    pub precision: String,  // "fp8" | "bf16"
+    pub residual: String,   // "fixed" | "running_mean" | "standard"
+    pub activation: String, // "gelu" | "silu" | "relu"
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        ModelConfig {
+            width: 64,
+            depth: 4,
+            head_dim: 16,
+            vocab: 512,
+            seq_len: 128,
+            batch: 4,
+            ffn_ratio: 4,
+            d_base: 32,
+            variant: "mus".into(),
+            precision: "fp8".into(),
+            residual: "fixed".into(),
+            activation: "gelu".into(),
+        }
+    }
+}
+
+impl ModelConfig {
+    pub fn n_heads(&self) -> usize {
+        self.width / self.head_dim
+    }
+
+    pub fn ffn_width(&self) -> usize {
+        self.width * self.ffn_ratio
+    }
+
+    /// Total parameter count (matches python `ModelConfig.n_params`).
+    pub fn n_params(&self) -> usize {
+        let (d, f, v, l) = (self.width, self.ffn_width(), self.vocab, self.depth);
+        let per_layer = d * 3 * d + d * d + d * f + f * d + 4 * d;
+        v * d + l * per_layer + 2 * d + d * v
+    }
+
+    /// Hidden-linear FLOPs for one token, forward pass (2*M*N*K per GEMM).
+    pub fn hidden_flops_per_token_fwd(&self) -> u64 {
+        let d = self.width as u64;
+        let f = self.ffn_width() as u64;
+        2 * (d * 3 * d + d * d + d * f + f * d)
+    }
+
+    /// Canonical artifact-name fragment (matches python `name()`).
+    pub fn name(&self) -> String {
+        let res = if self.residual == "fixed" { String::new() } else { format!("_{}", self.residual) };
+        let act = if self.activation == "gelu" { String::new() } else { format!("_{}", self.activation) };
+        format!(
+            "{}_{}_w{}_d{}_v{}_s{}_b{}{}{}",
+            self.variant, self.precision, self.width, self.depth, self.vocab,
+            self.seq_len, self.batch, res, act
+        )
+    }
+
+    pub fn from_json(j: &Json) -> Option<ModelConfig> {
+        Some(ModelConfig {
+            width: j.get("width")?.as_usize()?,
+            depth: j.get("depth")?.as_usize()?,
+            head_dim: j.usize_or("head_dim", 16),
+            vocab: j.get("vocab")?.as_usize()?,
+            seq_len: j.get("seq_len")?.as_usize()?,
+            batch: j.get("batch")?.as_usize()?,
+            ffn_ratio: j.usize_or("ffn_ratio", 4),
+            d_base: j.usize_or("d_base", 32),
+            variant: j.str_or("variant", "mus").to_string(),
+            precision: j.str_or("precision", "fp8").to_string(),
+            residual: j.str_or("residual", "fixed").to_string(),
+            activation: j.str_or("activation", "gelu").to_string(),
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("width", Json::num(self.width as f64)),
+            ("depth", Json::num(self.depth as f64)),
+            ("head_dim", Json::num(self.head_dim as f64)),
+            ("vocab", Json::num(self.vocab as f64)),
+            ("seq_len", Json::num(self.seq_len as f64)),
+            ("batch", Json::num(self.batch as f64)),
+            ("ffn_ratio", Json::num(self.ffn_ratio as f64)),
+            ("d_base", Json::num(self.d_base as f64)),
+            ("variant", Json::str(&self.variant)),
+            ("precision", Json::str(&self.precision)),
+            ("residual", Json::str(&self.residual)),
+            ("activation", Json::str(&self.activation)),
+        ])
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.width % self.head_dim != 0 {
+            return Err(format!("width {} not divisible by head_dim {}", self.width, self.head_dim));
+        }
+        if self.head_dim % 2 != 0 {
+            return Err("head_dim must be even (RoPE halves it)".into());
+        }
+        if !matches!(self.variant.as_str(), "mus" | "sp") {
+            return Err(format!("unknown variant {}", self.variant));
+        }
+        if !matches!(self.precision.as_str(), "fp8" | "bf16") {
+            return Err(format!("unknown precision {}", self.precision));
+        }
+        if !matches!(self.residual.as_str(), "fixed" | "running_mean" | "standard") {
+            return Err(format!("unknown residual {}", self.residual));
+        }
+        if self.variant == "sp" && self.residual == "fixed" {
+            return Err("SP uses standard residuals".into());
+        }
+        Ok(())
+    }
+}
+
+/// Learning-rate schedule (paper: cosine decaying to 10% of max).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Schedule {
+    Constant,
+    /// Cosine from peak to `final_frac * peak` over the run, with linear
+    /// warmup for the first `warmup` steps.
+    Cosine { final_frac: f64, warmup: usize },
+}
+
+impl Schedule {
+    pub fn lr_at(&self, base: f64, step: usize, total: usize) -> f64 {
+        match *self {
+            Schedule::Constant => base,
+            Schedule::Cosine { final_frac, warmup } => {
+                if step < warmup {
+                    return base * (step + 1) as f64 / warmup as f64;
+                }
+                let t = (step - warmup) as f64 / (total.saturating_sub(warmup)).max(1) as f64;
+                let t = t.clamp(0.0, 1.0);
+                let cos = 0.5 * (1.0 + (std::f64::consts::PI * t).cos());
+                base * (final_frac + (1.0 - final_frac) * cos)
+            }
+        }
+    }
+}
+
+/// L3-side training-run description.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub steps: usize,
+    /// Base-width learning rate (the artifact applies transfer multipliers).
+    pub lr: f64,
+    /// Fully-decoupled weight decay.
+    pub wd: f64,
+    /// Fixed residual coefficient (µS only; ignored by SP artifacts).
+    pub tau: f64,
+    pub schedule: Schedule,
+    pub seed: u64,
+    pub init_seed: i32,
+    /// Abort when loss exceeds this (divergence guard).
+    pub max_loss: f64,
+    /// Count a "loss spike" when loss jumps by more than this over EMA.
+    pub spike_threshold: f64,
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 100,
+            lr: 1.0 / 128.0,
+            wd: 1e-4,
+            tau: 0.4,
+            schedule: Schedule::Cosine { final_frac: 0.1, warmup: 10 },
+            seed: 0,
+            init_seed: 0,
+            max_loss: 20.0,
+            spike_threshold: 1.0,
+            log_every: 10,
+        }
+    }
+}
+
+/// Named presets: the paper's production shapes (Table 4) and this repo's
+/// CPU proxies. Production shapes are exercised by the perf model, memory
+/// planner, and scaling-rule tests — not trained on CPU.
+pub mod presets {
+    use super::ModelConfig;
+    use crate::scaling::recommended_tau;
+
+    /// Paper Table 4 rows: (name, params, width, depth, heads, batch, seq, tau).
+    pub struct PaperConfig {
+        pub name: &'static str,
+        pub params_b: f64,
+        pub tokens_b: f64,
+        pub steps: usize,
+        pub batch: usize,
+        pub seq_len: usize,
+        pub width: usize,
+        pub depth: usize,
+        pub n_heads: usize,
+        pub tau: f64,
+    }
+
+    /// The four production configurations of paper Table 4.
+    pub fn paper_table4() -> Vec<PaperConfig> {
+        vec![
+            PaperConfig { name: "1b", params_b: 1.6, tokens_b: 31.5, steps: 7_500,
+                batch: 1024, seq_len: 4096, width: 2048, depth: 24, n_heads: 16, tau: 0.3 },
+            PaperConfig { name: "3b", params_b: 3.0, tokens_b: 62.9, steps: 15_000,
+                batch: 1024, seq_len: 4096, width: 2560, depth: 32, n_heads: 20, tau: 0.3 },
+            PaperConfig { name: "7b", params_b: 7.3, tokens_b: 140.0, steps: 16_700,
+                batch: 2048, seq_len: 4096, width: 4096, depth: 32, n_heads: 32, tau: 0.3 },
+            PaperConfig { name: "13b", params_b: 13.6, tokens_b: 260.1, steps: 31_000,
+                batch: 2048, seq_len: 4096, width: 5120, depth: 40, n_heads: 40, tau: 0.2 },
+        ]
+    }
+
+    /// ModelConfig for a paper shape (vocab from the paper's tokenizer era).
+    pub fn paper_model(p: &PaperConfig) -> ModelConfig {
+        ModelConfig {
+            width: p.width,
+            depth: p.depth,
+            head_dim: p.width / p.n_heads,
+            vocab: 32_768,
+            seq_len: p.seq_len,
+            batch: p.batch,
+            ffn_ratio: 4,
+            d_base: 256,
+            variant: "mus".into(),
+            precision: "fp8".into(),
+            residual: "fixed".into(),
+            activation: "gelu".into(),
+        }
+    }
+
+    /// CPU proxy shapes used by the repro experiments (must match aot.py).
+    pub fn proxy(width: usize, depth: usize) -> ModelConfig {
+        ModelConfig { width, depth, ..ModelConfig::default() }
+    }
+
+    pub fn tau_for(cfg: &ModelConfig) -> f64 {
+        recommended_tau(cfg.depth)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn n_params_matches_python_formula() {
+        // mus_fp8 w384 d6 v2048 (the e2e config): ~12.2M
+        let c = ModelConfig {
+            width: 384, depth: 6, head_dim: 64, vocab: 2048, seq_len: 256,
+            batch: 8, ..Default::default()
+        };
+        let d = 384usize;
+        let f = 4 * d;
+        let per = d * 3 * d + d * d + d * f + f * d + 4 * d;
+        assert_eq!(c.n_params(), 2048 * d + 6 * per + 2 * d + d * 2048);
+        assert!(c.n_params() > 10_000_000 && c.n_params() < 14_000_000);
+    }
+
+    #[test]
+    fn name_matches_python_convention() {
+        let c = ModelConfig::default();
+        assert_eq!(c.name(), "mus_fp8_w64_d4_v512_s128_b4");
+        let mut c2 = ModelConfig::default();
+        c2.variant = "sp".into();
+        c2.precision = "bf16".into();
+        c2.residual = "standard".into();
+        assert_eq!(c2.name(), "sp_bf16_w64_d4_v512_s128_b4_standard");
+        let mut c3 = ModelConfig::default();
+        c3.activation = "relu".into();
+        assert_eq!(c3.name(), "mus_fp8_w64_d4_v512_s128_b4_relu");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = ModelConfig { width: 128, depth: 6, ..Default::default() };
+        let j = c.to_json();
+        let c2 = ModelConfig::from_json(&j).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn validation_rejects_bad_configs() {
+        let mut c = ModelConfig::default();
+        c.width = 65;
+        assert!(c.validate().is_err());
+        let mut c = ModelConfig::default();
+        c.variant = "frob".into();
+        assert!(c.validate().is_err());
+        let mut c = ModelConfig::default();
+        c.variant = "sp".into(); // still residual=fixed
+        assert!(c.validate().is_err());
+        assert!(ModelConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn cosine_schedule_shape() {
+        let s = Schedule::Cosine { final_frac: 0.1, warmup: 10 };
+        let base = 1.0;
+        assert!(s.lr_at(base, 0, 100) < 0.2); // warming up
+        assert!((s.lr_at(base, 9, 100) - 1.0).abs() < 1e-9); // peak at end of warmup
+        assert!((s.lr_at(base, 100, 100) - 0.1).abs() < 1e-9); // decays to 10%
+        // monotone decreasing after warmup
+        let mut prev = f64::INFINITY;
+        for step in 10..100 {
+            let lr = s.lr_at(base, step, 100);
+            assert!(lr <= prev + 1e-12);
+            prev = lr;
+        }
+    }
+
+    #[test]
+    fn paper_table4_consistency() {
+        let t4 = presets::paper_table4();
+        assert_eq!(t4.len(), 4);
+        for p in &t4 {
+            let m = presets::paper_model(p);
+            assert!(m.validate().is_ok(), "{}", p.name);
+            // parameter count within 25% of the paper's reported size
+            let ratio = m.n_params() as f64 / (p.params_b * 1e9);
+            assert!(ratio > 0.75 && ratio < 1.35, "{}: {ratio}", p.name);
+            // tokens-per-parameter ratio ~20x (compute-optimal)
+            let tpr = p.tokens_b / p.params_b;
+            assert!(tpr > 18.0 && tpr < 22.0, "{}: {tpr}", p.name);
+        }
+    }
+
+    #[test]
+    fn flops_accounting() {
+        let c = ModelConfig::default(); // d=64, f=256
+        let d = 64u64;
+        assert_eq!(
+            c.hidden_flops_per_token_fwd(),
+            2 * (d * 3 * d + d * d + d * 256 + 256 * d)
+        );
+    }
+}

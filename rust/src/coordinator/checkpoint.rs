@@ -1,0 +1,100 @@
+//! Binary checkpointing for `TrainState`.
+//!
+//! Own format (no serde offline): little-endian, versioned, with tensor
+//! names + shapes so loads are validated against the manifest ABI.
+//!
+//! ```text
+//! magic "MUSCKPT1" | u32 n_tensors | n_tensors x {
+//!     u32 name_len | name bytes | u32 ndim | u64 dims... | f32 data... }
+//! ```
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::trainer::TrainState;
+use crate::runtime::{lit_f32, TensorSpec};
+
+const MAGIC: &[u8; 8] = b"MUSCKPT1";
+
+/// Serialize a state. `specs` supplies names/shapes (params then momentum,
+/// as in the train artifact's input list).
+pub fn save(path: &Path, state: &TrainState, specs: &[TensorSpec]) -> Result<()> {
+    if specs.len() != state.literals.len() {
+        bail!("{} specs for {} tensors", specs.len(), state.literals.len());
+    }
+    let f = File::create(path).with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&(specs.len() as u32).to_le_bytes())?;
+    for (spec, lit) in specs.iter().zip(&state.literals) {
+        let data = lit.to_vec::<f32>()?;
+        if data.len() != spec.elements() {
+            bail!("tensor {}: {} elements, spec says {}", spec.name, data.len(), spec.elements());
+        }
+        w.write_all(&(spec.name.len() as u32).to_le_bytes())?;
+        w.write_all(spec.name.as_bytes())?;
+        w.write_all(&(spec.shape.len() as u32).to_le_bytes())?;
+        for &d in &spec.shape {
+            w.write_all(&(d as u64).to_le_bytes())?;
+        }
+        // bulk f32 write
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+        };
+        w.write_all(bytes)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a checkpoint, validating names/shapes against `specs`.
+pub fn load(path: &Path, specs: &[TensorSpec]) -> Result<TrainState> {
+    let f = File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{} is not a µS checkpoint", path.display());
+    }
+    let n = read_u32(&mut r)? as usize;
+    if n != specs.len() {
+        bail!("checkpoint has {n} tensors, expected {}", specs.len());
+    }
+    let mut literals = Vec::with_capacity(n);
+    for spec in specs {
+        let name_len = read_u32(&mut r)? as usize;
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let name = String::from_utf8(name)?;
+        if name != spec.name {
+            bail!("tensor order mismatch: got {name}, expected {}", spec.name);
+        }
+        let ndim = read_u32(&mut r)? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            let mut b = [0u8; 8];
+            r.read_exact(&mut b)?;
+            shape.push(u64::from_le_bytes(b) as usize);
+        }
+        if shape != spec.shape {
+            bail!("tensor {name}: shape {shape:?}, expected {:?}", spec.shape);
+        }
+        let count: usize = shape.iter().product();
+        let mut data = vec![0f32; count];
+        let bytes: &mut [u8] = unsafe {
+            std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, count * 4)
+        };
+        r.read_exact(bytes)?;
+        literals.push(lit_f32(&data, &shape)?);
+    }
+    Ok(TrainState { n_params: n / 2, literals })
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}

@@ -1,0 +1,113 @@
+//! Simulated multi-worker data parallelism.
+//!
+//! What it models: `k` workers with replicated state, each consuming a
+//! disjoint corpus shard, synchronizing every step. Because the train_step
+//! artifact fuses fwd/bwd/update, synchronization here averages *parameters
+//! and momenta* after each local step (one-step LocalSGD). For Lion's
+//! sign-based update this coincides with gradient averaging whenever the
+//! workers' update signs agree, and is a standard approximation otherwise
+//! — the point of the exercise is the *coordination* path: sharded loaders,
+//! lockstep stepping, and an allreduce that (unlike TE-style FP8) needs NO
+//! per-tensor amax exchange. See DESIGN.md substitution table.
+//!
+//! The allreduce itself is a host-side mean over each parameter buffer —
+//! the exact collective a single-host multi-worker run performs.
+
+use anyhow::Result;
+use xla::Literal;
+
+use crate::config::{ModelConfig, TrainConfig};
+use crate::coordinator::trainer::{RunResult, TrainState, Trainer};
+use crate::data::{Batcher, CorpusSpec};
+use crate::runtime::{lit_f32, to_f32_vec, Engine};
+
+/// Average the i-th tensor across worker states, writing the mean back to
+/// every worker (the "allreduce").
+fn allreduce_mean(states: &mut [TrainState]) -> Result<()> {
+    let n_workers = states.len();
+    if n_workers <= 1 {
+        return Ok(());
+    }
+    let n_tensors = states[0].literals.len();
+    for t in 0..n_tensors {
+        let mut acc: Vec<f32> = to_f32_vec(&states[0].literals[t])?;
+        let shape: Vec<usize> = match states[0].literals[t].array_shape() {
+            Ok(s) => s.dims().iter().map(|&d| d as usize).collect(),
+            Err(_) => vec![acc.len()],
+        };
+        for s in states.iter().skip(1) {
+            let v = to_f32_vec(&s.literals[t])?;
+            for (a, b) in acc.iter_mut().zip(&v) {
+                *a += *b;
+            }
+        }
+        let inv = 1.0 / n_workers as f32;
+        for a in acc.iter_mut() {
+            *a *= inv;
+        }
+        let lit = lit_f32(&acc, &shape)?;
+        for s in states.iter_mut() {
+            // each worker gets its own copy of the reduced tensor
+            s.literals[t] = clone_literal(&lit, &acc, &shape)?;
+        }
+        let _ = lit;
+    }
+    Ok(())
+}
+
+fn clone_literal(_template: &Literal, data: &[f32], shape: &[usize]) -> Result<Literal> {
+    lit_f32(data, shape)
+}
+
+/// Train with `k` simulated workers for `tc.steps` synchronized steps.
+/// Returns the leader's run metrics (losses averaged across workers).
+pub fn train_ddp(
+    engine: &Engine,
+    cfg: &ModelConfig,
+    tc: &TrainConfig,
+    corpus: &CorpusSpec,
+    n_workers: usize,
+) -> Result<RunResult> {
+    let trainer = Trainer::new(engine, cfg)?;
+    let mut states: Vec<TrainState> =
+        (0..n_workers).map(|_| trainer.init(tc.init_seed)).collect::<Result<_>>()?;
+    let mut batchers: Vec<Batcher> = (0..n_workers)
+        .map(|w| Batcher::new(corpus.clone(), tc.seed, w, n_workers, cfg.batch, cfg.seq_len))
+        .collect();
+    let mut losses = Vec::with_capacity(tc.steps);
+    let mut gnorms = Vec::with_capacity(tc.steps);
+    let t0 = std::time::Instant::now();
+    let mut diverged = false;
+    for step in 0..tc.steps {
+        let lr = tc.schedule.lr_at(tc.lr, step, tc.steps);
+        let mut loss_sum = 0f32;
+        let mut gnorm_sum = 0f32;
+        for (w, state) in states.iter_mut().enumerate() {
+            let tokens = batchers[w].next_batch();
+            let (loss, gnorm) = trainer.step(state, &tokens, lr, tc.wd, tc.tau)?;
+            loss_sum += loss;
+            gnorm_sum += gnorm;
+        }
+        allreduce_mean(&mut states)?;
+        let loss = loss_sum / n_workers as f32;
+        losses.push(loss);
+        gnorms.push(gnorm_sum / n_workers as f32);
+        if !loss.is_finite() || loss as f64 > tc.max_loss {
+            diverged = true;
+            break;
+        }
+    }
+    let wall = t0.elapsed();
+    let steps_done = losses.len();
+    let tokens_per_sec = (steps_done * n_workers * cfg.batch * cfg.seq_len) as f64
+        / wall.as_secs_f64().max(1e-9);
+    Ok(RunResult {
+        losses,
+        gnorms,
+        steps_done,
+        diverged,
+        spikes: 0,
+        wall,
+        tokens_per_sec,
+    })
+}

@@ -1,0 +1,107 @@
+//! JSONL run logging: one line per step / per run summary, consumed by the
+//! figure-reproduction binaries and EXPERIMENTS.md tables.
+
+use std::fs::{create_dir_all, File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::coordinator::trainer::{RunResult, StepMetrics};
+use crate::util::json::Json;
+
+pub struct MetricsLogger {
+    writer: BufWriter<File>,
+    pub path: PathBuf,
+}
+
+impl MetricsLogger {
+    pub fn create(dir: &Path, run_name: &str) -> Result<MetricsLogger> {
+        create_dir_all(dir)?;
+        let path = dir.join(format!("{run_name}.jsonl"));
+        let f = OpenOptions::new().create(true).write(true).truncate(true).open(&path)?;
+        Ok(MetricsLogger { writer: BufWriter::new(f), path })
+    }
+
+    pub fn log_step(&mut self, m: &StepMetrics) -> Result<()> {
+        let j = Json::obj(vec![
+            ("kind", Json::str("step")),
+            ("step", Json::num(m.step as f64)),
+            ("loss", Json::num(m.loss as f64)),
+            ("gnorm", Json::num(m.gnorm as f64)),
+            ("lr", Json::num(m.lr)),
+            ("step_ms", Json::num(m.step_time.as_secs_f64() * 1e3)),
+        ]);
+        writeln!(self.writer, "{j}")?;
+        Ok(())
+    }
+
+    pub fn log_summary(&mut self, run_name: &str, r: &RunResult) -> Result<()> {
+        let j = summary_json(run_name, r);
+        writeln!(self.writer, "{j}")?;
+        self.writer.flush()?;
+        Ok(())
+    }
+}
+
+pub fn summary_json(run_name: &str, r: &RunResult) -> Json {
+    Json::obj(vec![
+        ("kind", Json::str("summary")),
+        ("run", Json::str(run_name)),
+        ("steps", Json::num(r.steps_done as f64)),
+        ("final_loss", Json::num(r.final_loss(10) as f64)),
+        ("diverged", Json::Bool(r.diverged)),
+        ("spikes", Json::num(r.spikes as f64)),
+        ("wall_s", Json::num(r.wall.as_secs_f64())),
+        ("tokens_per_sec", Json::num(r.tokens_per_sec)),
+        ("losses", Json::arr_f32(&r.losses)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn dummy_result() -> RunResult {
+        RunResult {
+            losses: vec![3.0, 2.0, 1.0],
+            gnorms: vec![1.0; 3],
+            steps_done: 3,
+            diverged: false,
+            spikes: 1,
+            wall: Duration::from_secs(1),
+            tokens_per_sec: 42.0,
+        }
+    }
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let dir = std::env::temp_dir().join("munit_metrics_test");
+        let mut log = MetricsLogger::create(&dir, "r1").unwrap();
+        log.log_step(&StepMetrics {
+            step: 0,
+            loss: 3.0,
+            gnorm: 1.0,
+            lr: 0.01,
+            step_time: Duration::from_millis(5),
+        })
+        .unwrap();
+        log.log_summary("r1", &dummy_result()).unwrap();
+        let text = std::fs::read_to_string(&log.path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let step = Json::parse(lines[0]).unwrap();
+        assert_eq!(step.str_or("kind", ""), "step");
+        let sum = Json::parse(lines[1]).unwrap();
+        assert_eq!(sum.f64_or("final_loss", 0.0), 2.0);
+        assert_eq!(sum.get("losses").unwrap().as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn final_loss_tail_mean() {
+        let r = dummy_result();
+        assert!((r.final_loss(2) - 1.5).abs() < 1e-6);
+        assert!((r.final_loss(100) - 2.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,22 @@
+//! L3 coordinator: the training framework around the AOT artifacts.
+//!
+//! - [`trainer`]: single-model training loop (cosine LR, divergence guard,
+//!   loss-spike tracking, probe hooks).
+//! - [`sweep`]: hyperparameter grid engine with optimal-subset extraction
+//!   (paper App. A.2 methodology) and multi-process fan-out.
+//! - [`checkpoint`]: binary checkpoint save/load for `TrainState`.
+//! - [`pipeline`]: background data generation with bounded-channel
+//!   backpressure, keeping batch synthesis off the step critical path.
+//! - [`ddp`]: simulated multi-worker data parallelism (sharded streams +
+//!   periodic parameter averaging), exercising the distributed code path
+//!   µS claims compatibility with (no per-tensor amax collectives needed).
+//! - [`metrics`]: JSONL run logging.
+
+pub mod checkpoint;
+pub mod ddp;
+pub mod metrics;
+pub mod pipeline;
+pub mod sweep;
+pub mod trainer;
+
+pub use trainer::{RunResult, TrainState, Trainer};

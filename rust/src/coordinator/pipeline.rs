@@ -1,0 +1,114 @@
+//! Background data pipeline: batch synthesis off the step critical path.
+//!
+//! A producer thread runs the deterministic `Batcher` and pushes batches
+//! into a bounded channel (`sync_channel`), giving natural backpressure:
+//! the producer stalls when `depth` batches are queued. The trainer then
+//! overlaps token generation with artifact execution — the same structure
+//! a real ingestion pipeline (paper: MosaicML Streaming) has.
+
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::thread::JoinHandle;
+
+use crate::data::{Batcher, CorpusSpec};
+
+pub struct DataPipeline {
+    rx: Receiver<Vec<i32>>,
+    handle: Option<JoinHandle<()>>,
+    tokens_per_batch: usize,
+}
+
+impl DataPipeline {
+    /// Spawn a producer for `total` batches (None = unbounded) with a
+    /// queue depth of `depth`.
+    pub fn spawn(
+        spec: CorpusSpec,
+        seed: u64,
+        shard: usize,
+        n_shards: usize,
+        batch: usize,
+        seq_len: usize,
+        depth: usize,
+        total: Option<usize>,
+    ) -> DataPipeline {
+        let (tx, rx) = sync_channel(depth.max(1));
+        let tokens_per_batch = batch * seq_len;
+        let handle = std::thread::spawn(move || {
+            let mut b = Batcher::new(spec, seed, shard, n_shards, batch, seq_len);
+            let mut produced = 0usize;
+            loop {
+                if let Some(t) = total {
+                    if produced >= t {
+                        break;
+                    }
+                }
+                let batch = b.next_batch();
+                if tx.send(batch).is_err() {
+                    break; // consumer dropped
+                }
+                produced += 1;
+            }
+        });
+        DataPipeline { rx, handle: Some(handle), tokens_per_batch }
+    }
+
+    /// Blocking fetch of the next batch (None when the producer finished).
+    pub fn next(&self) -> Option<Vec<i32>> {
+        self.rx.recv().ok()
+    }
+
+    pub fn tokens_per_batch(&self) -> usize {
+        self.tokens_per_batch
+    }
+}
+
+impl Drop for DataPipeline {
+    fn drop(&mut self) {
+        // closing rx unblocks the producer's send; then join
+        if let Some(h) = self.handle.take() {
+            // drain quickly so a blocked producer can observe the hangup
+            while self.rx.try_recv().is_ok() {}
+            drop(std::mem::replace(&mut self.rx, {
+                let (_tx, rx) = sync_channel(1);
+                rx
+            }));
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn produces_identical_batches_to_direct_batcher() {
+        let spec = CorpusSpec::default();
+        let pipe = DataPipeline::spawn(spec.clone(), 9, 0, 1, 2, 32, 4, Some(5));
+        let mut direct = Batcher::new(spec, 9, 0, 1, 2, 32);
+        for _ in 0..5 {
+            assert_eq!(pipe.next().unwrap(), direct.next_batch());
+        }
+        assert!(pipe.next().is_none());
+    }
+
+    #[test]
+    fn bounded_queue_applies_backpressure() {
+        // with depth 2 and a slow consumer, the producer can be at most
+        // depth+1 batches ahead; after consuming everything we still get
+        // exactly `total` batches.
+        let pipe = DataPipeline::spawn(CorpusSpec::default(), 1, 0, 1, 1, 16, 2, Some(10));
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let mut n = 0;
+        while pipe.next().is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 10);
+    }
+
+    #[test]
+    fn drop_mid_stream_terminates_producer() {
+        let pipe = DataPipeline::spawn(CorpusSpec::default(), 2, 0, 1, 1, 16, 1, None);
+        let _ = pipe.next();
+        drop(pipe); // must not hang
+    }
+}

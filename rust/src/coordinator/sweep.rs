@@ -1,0 +1,313 @@
+//! Hyperparameter sweep engine (paper Fig 6 / Fig 9 methodology).
+//!
+//! Grids are swept over powers of two for η and λ (as in §3.1) plus a
+//! coarse τ axis. Results are reduced with the paper's App. A.2 rule: the
+//! *optimal subset* is every run whose final loss is within `tol` of the
+//! sweep optimum. Supports in-process sequential execution and
+//! multi-process fan-out (one `munit train-one` child per grid point —
+//! the PJRT client is single-process, so parallelism is process-level).
+
+use anyhow::{Context, Result};
+
+use crate::config::{ModelConfig, TrainConfig};
+use crate::data::CorpusSpec;
+use crate::runtime::Engine;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SweepPoint {
+    pub lr: f64,
+    pub wd: f64,
+    pub tau: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct SweepOutcome {
+    pub point: SweepPoint,
+    pub final_loss: f64,
+    pub diverged: bool,
+    pub spikes: usize,
+}
+
+/// Cartesian grid.
+pub fn grid(lrs: &[f64], wds: &[f64], taus: &[f64]) -> Vec<SweepPoint> {
+    let mut out = Vec::with_capacity(lrs.len() * wds.len() * taus.len());
+    for &lr in lrs {
+        for &wd in wds {
+            for &tau in taus {
+                out.push(SweepPoint { lr, wd, tau });
+            }
+        }
+    }
+    out
+}
+
+/// Powers-of-two axis: 2^lo ..= 2^hi (paper §3.1 sweeps η, λ this way).
+pub fn pow2_axis(lo: i32, hi: i32) -> Vec<f64> {
+    (lo..=hi).map(|e| 2f64.powi(e)).collect()
+}
+
+/// Best (non-diverged) outcome.
+pub fn best(outcomes: &[SweepOutcome]) -> Option<&SweepOutcome> {
+    outcomes
+        .iter()
+        .filter(|o| !o.diverged && o.final_loss.is_finite())
+        .min_by(|a, b| a.final_loss.partial_cmp(&b.final_loss).unwrap())
+}
+
+/// Paper App. A.2: all runs within `tol` (relative) of the optimum.
+pub fn optimal_subset(outcomes: &[SweepOutcome], tol: f64) -> Vec<&SweepOutcome> {
+    match best(outcomes) {
+        None => vec![],
+        Some(b) => outcomes
+            .iter()
+            .filter(|o| {
+                !o.diverged
+                    && o.final_loss.is_finite()
+                    && o.final_loss <= b.final_loss * (1.0 + tol)
+            })
+            .collect(),
+    }
+}
+
+/// For Fig 6: the optimal η holding other axes at their overall-best value.
+pub fn optimum_along<'a, F>(outcomes: &'a [SweepOutcome], axis: F) -> Option<&'a SweepOutcome>
+where
+    F: Fn(&SweepPoint) -> f64,
+{
+    let b = best(outcomes)?;
+    outcomes
+        .iter()
+        .filter(|o| !o.diverged && o.final_loss.is_finite())
+        .filter(|o| {
+            // same coordinates as the best except along `axis`
+            let (p, q) = (o.point, b.point);
+            let mut same = 0;
+            let mut diff_axis = true;
+            for (x, y) in [(p.lr, q.lr), (p.wd, q.wd), (p.tau, q.tau)] {
+                if (x - y).abs() < 1e-15 {
+                    same += 1;
+                } else if (axis(&p) - x).abs() > 1e-15 {
+                    diff_axis = false;
+                }
+            }
+            same >= 2 && diff_axis
+        })
+        .min_by(|a, b| a.final_loss.partial_cmp(&b.final_loss).unwrap())
+}
+
+/// Run a grid sequentially in-process.
+pub fn run_sequential(
+    engine: &Engine,
+    cfg: &ModelConfig,
+    base: &TrainConfig,
+    corpus: &CorpusSpec,
+    points: &[SweepPoint],
+    verbose: bool,
+) -> Result<Vec<SweepOutcome>> {
+    use crate::coordinator::trainer::Trainer;
+    use crate::data::Batcher;
+    let trainer = Trainer::new(engine, cfg)?;
+    let mut out = Vec::with_capacity(points.len());
+    for (i, p) in points.iter().enumerate() {
+        let tc = TrainConfig { lr: p.lr, wd: p.wd, tau: p.tau, ..base.clone() };
+        let mut batcher =
+            Batcher::new(corpus.clone(), base.seed, 0, 1, cfg.batch, cfg.seq_len);
+        let r = trainer.run(&tc, &mut batcher)?;
+        let o = SweepOutcome {
+            point: *p,
+            final_loss: r.final_loss(10) as f64,
+            diverged: r.diverged,
+            spikes: r.spikes,
+        };
+        if verbose {
+            eprintln!(
+                "  [{}/{}] lr=2^{:.0} wd={:.4} tau={:.2} -> loss {:.4}{}",
+                i + 1,
+                points.len(),
+                p.lr.log2(),
+                p.wd,
+                p.tau,
+                o.final_loss,
+                if o.diverged { " DIVERGED" } else { "" }
+            );
+        }
+        out.push(o);
+    }
+    Ok(out)
+}
+
+/// Run a grid with `n_procs` child processes (`munit train-one ...`).
+/// Each child prints a single JSON summary line on stdout.
+pub fn run_parallel(
+    cfg: &ModelConfig,
+    base: &TrainConfig,
+    points: &[SweepPoint],
+    n_procs: usize,
+    verbose: bool,
+) -> Result<Vec<SweepOutcome>> {
+    let bin = std::env::current_exe().context("locating own binary")?;
+    let mut outcomes: Vec<Option<SweepOutcome>> = vec![None; points.len()];
+    let mut next = 0usize;
+    let mut running: Vec<(usize, std::process::Child)> = Vec::new();
+    while next < points.len() || !running.is_empty() {
+        while next < points.len() && running.len() < n_procs.max(1) {
+            let p = points[next];
+            let child = std::process::Command::new(&bin)
+                .args([
+                    "train-one",
+                    "--config",
+                    &cfg.name(),
+                    "--steps",
+                    &base.steps.to_string(),
+                    "--lr",
+                    &p.lr.to_string(),
+                    "--wd",
+                    &p.wd.to_string(),
+                    "--tau",
+                    &p.tau.to_string(),
+                    "--seed",
+                    &base.seed.to_string(),
+                ])
+                .stdout(std::process::Stdio::piped())
+                .stderr(std::process::Stdio::null())
+                .spawn()
+                .context("spawning sweep worker")?;
+            running.push((next, child));
+            next += 1;
+        }
+        // reap the first finished child (simple polling loop)
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        let mut i = 0;
+        while i < running.len() {
+            if running[i].1.try_wait()?.is_some() {
+                let (idx, child) = running.remove(i);
+                let out = child.wait_with_output()?;
+                let text = String::from_utf8_lossy(&out.stdout);
+                let line = text.lines().last().unwrap_or("");
+                let j = Json::parse(line)
+                    .map_err(|e| anyhow::anyhow!("worker {idx} bad output: {e}: {line}"))?;
+                let o = SweepOutcome {
+                    point: points[idx],
+                    final_loss: j.f64_or("final_loss", f64::NAN),
+                    diverged: j.get("diverged").and_then(|v| v.as_bool()).unwrap_or(true),
+                    spikes: j.usize_or("spikes", 0),
+                };
+                if verbose {
+                    eprintln!(
+                        "  [worker done] lr={:.5} wd={:.4} tau={:.2} -> {:.4}{}",
+                        o.point.lr, o.point.wd, o.point.tau, o.final_loss,
+                        if o.diverged { " DIVERGED" } else { "" }
+                    );
+                }
+                outcomes[idx] = Some(o);
+            } else {
+                i += 1;
+            }
+        }
+    }
+    outcomes
+        .into_iter()
+        .enumerate()
+        .map(|(i, o)| o.ok_or_else(|| anyhow::anyhow!("sweep point {i} produced no result")))
+        .collect()
+}
+
+/// Verify a point set covers a full cartesian grid (used by tests and the
+/// sweep CLI to catch axis typos before burning compute).
+pub fn is_full_grid(points: &[SweepPoint]) -> bool {
+    let mut lrs: Vec<f64> = points.iter().map(|p| p.lr).collect();
+    let mut wds: Vec<f64> = points.iter().map(|p| p.wd).collect();
+    let mut taus: Vec<f64> = points.iter().map(|p| p.tau).collect();
+    for v in [&mut lrs, &mut wds, &mut taus] {
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.dedup();
+    }
+    points.len() == lrs.len() * wds.len() * taus.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest::check;
+
+    fn o(lr: f64, loss: f64, diverged: bool) -> SweepOutcome {
+        SweepOutcome {
+            point: SweepPoint { lr, wd: 1e-4, tau: 0.3 },
+            final_loss: loss,
+            diverged,
+            spikes: 0,
+        }
+    }
+
+    #[test]
+    fn grid_is_cartesian() {
+        let g = grid(&[1.0, 2.0], &[0.1], &[0.3, 0.4, 0.5]);
+        assert_eq!(g.len(), 6);
+        assert!(is_full_grid(&g));
+    }
+
+    #[test]
+    fn pow2_axis_values() {
+        assert_eq!(pow2_axis(-3, -1), vec![0.125, 0.25, 0.5]);
+    }
+
+    #[test]
+    fn best_ignores_diverged() {
+        let outs = vec![o(1.0, 1.0, true), o(0.5, 2.0, false), o(0.25, 3.0, false)];
+        assert_eq!(best(&outs).unwrap().final_loss, 2.0);
+    }
+
+    #[test]
+    fn best_handles_all_diverged() {
+        let outs = vec![o(1.0, f64::NAN, true)];
+        assert!(best(&outs).is_none());
+        assert!(optimal_subset(&outs, 0.01).is_empty());
+    }
+
+    #[test]
+    fn optimal_subset_tolerance() {
+        let outs = vec![o(1.0, 2.000, false), o(0.5, 2.004, false), o(0.25, 2.2, false)];
+        let sub = optimal_subset(&outs, 0.0025);
+        assert_eq!(sub.len(), 2);
+    }
+
+    #[test]
+    fn prop_grid_size_and_membership() {
+        check("grid covers cartesian product", 25, |rng, _| {
+            let nl = 1 + rng.below(4);
+            let nw = 1 + rng.below(3);
+            let nt = 1 + rng.below(3);
+            let lrs: Vec<f64> = (0..nl).map(|i| 2f64.powi(-(i as i32) - 1)).collect();
+            let wds: Vec<f64> = (0..nw).map(|i| 1e-4 * (i + 1) as f64).collect();
+            let taus: Vec<f64> = (0..nt).map(|i| 0.1 * (i + 1) as f64).collect();
+            let g = grid(&lrs, &wds, &taus);
+            prop_assert!(g.len() == nl * nw * nt, "size mismatch");
+            prop_assert!(is_full_grid(&g), "not a full grid");
+            let probe = SweepPoint { lr: lrs[nl - 1], wd: wds[0], tau: taus[nt - 1] };
+            prop_assert!(g.contains(&probe), "missing corner point");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_optimal_subset_always_contains_best() {
+        check("optimal subset contains the optimum", 25, |rng, _| {
+            let outs: Vec<SweepOutcome> = (0..8)
+                .map(|i| o(2f64.powi(-(i as i32)), 2.0 + rng.f64(), rng.f64() < 0.2))
+                .collect();
+            if let Some(b) = best(&outs) {
+                let sub = optimal_subset(&outs, 0.01);
+                prop_assert!(
+                    sub.iter().any(|s| s.final_loss == b.final_loss),
+                    "best excluded"
+                );
+                for s in sub {
+                    prop_assert!(!s.diverged, "diverged run in optimal subset");
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,190 @@
+//! Training loop over a `train_step` artifact.
+//!
+//! The artifact owns the math (fwd/bwd, Lion, transfer multipliers); this
+//! loop owns policy: schedules, divergence detection, spike counting,
+//! metrics, probes. State lives as host literals between steps (CPU PJRT
+//! "device" memory is host memory; `execute` copies in/out — see
+//! DESIGN.md §7 for the measured overhead).
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+use xla::Literal;
+
+use crate::config::{ModelConfig, TrainConfig};
+use crate::data::Batcher;
+use crate::runtime::{lit_i32, scalar_f32, scalar_i32, to_f32_scalar, Engine};
+use crate::util::stats::Ema;
+
+/// Model + optimizer state: `2 * n_params` literals in manifest order
+/// (params then momentum), all f32 master copies.
+pub struct TrainState {
+    pub literals: Vec<Literal>,
+    pub n_params: usize,
+}
+
+impl TrainState {
+    pub fn params(&self) -> &[Literal] {
+        &self.literals[..self.n_params]
+    }
+}
+
+/// Per-step record.
+#[derive(Debug, Clone)]
+pub struct StepMetrics {
+    pub step: usize,
+    pub loss: f32,
+    pub gnorm: f32,
+    pub lr: f64,
+    pub step_time: Duration,
+}
+
+/// Outcome of a training run.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub losses: Vec<f32>,
+    pub gnorms: Vec<f32>,
+    pub steps_done: usize,
+    pub diverged: bool,
+    pub spikes: usize,
+    pub wall: Duration,
+    pub tokens_per_sec: f64,
+}
+
+impl RunResult {
+    /// Final train loss averaged over the last `k` steps (the paper's
+    /// convergence metric, §3.2 "avg over last ~40M tokens").
+    pub fn final_loss(&self, k: usize) -> f32 {
+        if self.losses.is_empty() {
+            return f32::NAN;
+        }
+        let k = k.min(self.losses.len());
+        let tail = &self.losses[self.losses.len() - k..];
+        tail.iter().sum::<f32>() / k as f32
+    }
+}
+
+/// Drives one (config, artifact) pair.
+pub struct Trainer<'e> {
+    pub engine: &'e Engine,
+    pub cfg: ModelConfig,
+    train_name: String,
+    init_name: String,
+    n_params: usize,
+}
+
+impl<'e> Trainer<'e> {
+    pub fn new(engine: &'e Engine, cfg: &ModelConfig) -> Result<Trainer<'e>> {
+        let train = engine
+            .manifest
+            .find_for("train_step", cfg)
+            .with_context(|| format!("no train artifact for config {}", cfg.name()))?;
+        let init = engine
+            .manifest
+            .find_for("init", cfg)
+            .with_context(|| format!("no init artifact for config {}", cfg.name()))?;
+        let n_params = (train.inputs.len() - 4) / 2;
+        if train.inputs.len() != 2 * n_params + 4 || train.outputs.len() != 2 * n_params + 2 {
+            bail!("unexpected train_step ABI for {}", cfg.name());
+        }
+        Ok(Trainer {
+            engine,
+            cfg: cfg.clone(),
+            train_name: train.name.clone(),
+            init_name: init.name.clone(),
+            n_params,
+        })
+    }
+
+    pub fn n_params_tensors(&self) -> usize {
+        self.n_params
+    }
+
+    pub fn train_artifact(&self) -> &str {
+        &self.train_name
+    }
+
+    /// Initialize state by running the `init` artifact (unit-variance or
+    /// sigma_init inits happen in-graph — L3 never hand-rolls init math).
+    pub fn init(&self, seed: i32) -> Result<TrainState> {
+        let outs = self.engine.run(&self.init_name, &[scalar_i32(seed)])?;
+        if outs.len() != 2 * self.n_params {
+            bail!("init produced {} tensors, expected {}", outs.len(), 2 * self.n_params);
+        }
+        Ok(TrainState { literals: outs, n_params: self.n_params })
+    }
+
+    /// One optimizer step. `lr` is the base-width learning rate for this
+    /// step (scheduling already applied); tokens length must be batch*seq.
+    pub fn step(
+        &self,
+        state: &mut TrainState,
+        tokens: &[i32],
+        lr: f64,
+        wd: f64,
+        tau: f64,
+    ) -> Result<(f32, f32)> {
+        let tok = lit_i32(tokens, &[self.cfg.batch, self.cfg.seq_len])?;
+        let scalars = [scalar_f32(lr as f32), scalar_f32(wd as f32), scalar_f32(tau as f32)];
+        let mut inputs: Vec<&Literal> = Vec::with_capacity(state.literals.len() + 4);
+        inputs.extend(state.literals.iter());
+        inputs.push(&tok);
+        inputs.extend(scalars.iter());
+        let mut outs = self.engine.run(&self.train_name, &inputs)?;
+        let gnorm = to_f32_scalar(&outs.pop().unwrap())?;
+        let loss = to_f32_scalar(&outs.pop().unwrap())?;
+        state.literals = outs;
+        Ok((loss, gnorm))
+    }
+
+    /// Full training run: schedule, divergence guard, spike counter.
+    /// `on_step` fires after every step (metrics/probes/checkpoints).
+    pub fn run_with<F>(
+        &self,
+        tc: &TrainConfig,
+        batcher: &mut Batcher,
+        mut on_step: F,
+    ) -> Result<RunResult>
+    where
+        F: FnMut(&StepMetrics, &TrainState),
+    {
+        let mut state = self.init(tc.init_seed)?;
+        let mut losses = Vec::with_capacity(tc.steps);
+        let mut gnorms = Vec::with_capacity(tc.steps);
+        let mut ema = Ema::new(0.1);
+        let mut spikes = 0usize;
+        let mut diverged = false;
+        let t0 = Instant::now();
+        for step in 0..tc.steps {
+            let lr = tc.schedule.lr_at(tc.lr, step, tc.steps);
+            let tokens = batcher.next_batch();
+            let ts = Instant::now();
+            let (loss, gnorm) = self.step(&mut state, &tokens, lr, tc.wd, tc.tau)?;
+            let m = StepMetrics { step, loss, gnorm, lr, step_time: ts.elapsed() };
+            losses.push(loss);
+            gnorms.push(gnorm);
+            if let Some(prev) = ema.get() {
+                if (loss as f64) > prev + tc.spike_threshold {
+                    spikes += 1;
+                }
+            }
+            ema.update(loss as f64);
+            on_step(&m, &state);
+            if !loss.is_finite() || loss as f64 > tc.max_loss {
+                diverged = true;
+                break;
+            }
+        }
+        let wall = t0.elapsed();
+        let steps_done = losses.len();
+        let tokens_per_sec =
+            (steps_done * batcher.tokens_per_batch()) as f64 / wall.as_secs_f64().max(1e-9);
+        Ok(RunResult { losses, gnorms, steps_done, diverged, spikes, wall, tokens_per_sec })
+    }
+
+    /// Convenience: run without a step hook.
+    pub fn run(&self, tc: &TrainConfig, batcher: &mut Batcher) -> Result<RunResult> {
+        self.run_with(tc, batcher, |_, _| {})
+    }
+}
+

@@ -1,0 +1,310 @@
+//! Synthetic text-corpus substrate.
+//!
+//! The paper's experiments need *natural-language-like* token statistics —
+//! in particular the repeated/correlated value tokens that drive Fig 3 (and
+//! through it the attention-variance behavior of Fig 2). We do not have the
+//! authors' corpus, so we build a generator with the two properties that
+//! matter (DESIGN.md substitution table):
+//!
+//!   1. **Zipfian unigram frequencies** (token rank-frequency ~ 1/k^s), the
+//!      root cause of repeated tokens in any real corpus;
+//!   2. **Markov (bigram) structure** so sequences are predictable enough
+//!      for a language model to learn (loss decreases) and carry non-trivial
+//!      in-context statistics for the eval tasks;
+//!   3. an explicit **repetition mixture**: with probability `repeat_p`, the
+//!      next token is copied from a recent window, mimicking the burstiness
+//!      of real text (Church-style adaptation).
+//!
+//! Everything is deterministic in (seed, shard): worker `i` of `n` sees a
+//! disjoint, reproducible stream — the property DDP data loading needs.
+
+use crate::util::rng::{Rng, Zipf};
+
+/// Corpus generation parameters.
+#[derive(Debug, Clone)]
+pub struct CorpusSpec {
+    pub vocab: usize,
+    /// Zipf exponent for rank-frequency (1.0-1.2 is text-like).
+    pub zipf_s: f64,
+    /// Probability of copying a token from the recent window.
+    pub repeat_p: f64,
+    /// Recent-window size for repetition.
+    pub window: usize,
+    /// Probability that a freshly sampled token comes from the *global*
+    /// Zipf distribution (function words) rather than the bigram table
+    /// (content structure). Keeps the unigram marginal Zipf-headed while
+    /// per-state continuations stay strongly predictable.
+    pub global_p: f64,
+    /// Corpus identity: different seeds give different bigram tables.
+    pub corpus_seed: u64,
+}
+
+impl Default for CorpusSpec {
+    fn default() -> Self {
+        CorpusSpec {
+            vocab: 512,
+            zipf_s: 1.1,
+            repeat_p: 0.15,
+            window: 32,
+            global_p: 0.3,
+            corpus_seed: 0xC0DE,
+        }
+    }
+}
+
+impl CorpusSpec {
+    /// Per-state affine bijection rank -> token. The multiplier is odd
+    /// (vocab is a power of two in all presets), making the map invertible
+    /// so each state's conditional distribution is a permuted Zipf.
+    fn rank_to_token(&self, prev: usize, rank: usize) -> usize {
+        let h = prev
+            .wrapping_mul(0x9E37_79B9)
+            .wrapping_add(self.corpus_seed as usize)
+            .wrapping_mul(0x85EB_CA6B);
+        (rank.wrapping_mul(0x0001_0DCD) ^ h) % self.vocab
+    }
+
+    /// Global (state-independent) Zipf rank -> token bijection: the
+    /// "function word" component that gives the corpus its Zipfian
+    /// unigram head.
+    fn global_token(&self, rank: usize) -> usize {
+        (rank.wrapping_mul(0x0002_4F0B) ^ (self.corpus_seed as usize).wrapping_mul(3)) % self.vocab
+    }
+
+    /// Most likely continuation of `prev` under the pure-bigram component
+    /// (rank 0). Ground truth for the bigram-cloze eval task.
+    pub fn most_likely_next(&self, prev: usize) -> usize {
+        self.rank_to_token(prev, 0)
+    }
+
+    /// Entropy (nats) of the Zipf rank distribution — a lower bound on the
+    /// achievable next-token loss for the bigram component.
+    pub fn zipf_entropy_nats(&self) -> f64 {
+        let z = Zipf::new(self.vocab, self.zipf_s);
+        -(0..self.vocab)
+            .map(|k| {
+                let p = z.pmf(k);
+                if p > 0.0 {
+                    p * p.ln()
+                } else {
+                    0.0
+                }
+            })
+            .sum::<f64>()
+    }
+}
+
+/// Infinite deterministic token stream for one shard.
+pub struct TokenStream {
+    spec: CorpusSpec,
+    zipf: Zipf,
+    rng: Rng,
+    recent: Vec<u32>,
+    prev: usize,
+}
+
+impl TokenStream {
+    pub fn new(spec: CorpusSpec, seed: u64, shard: usize, n_shards: usize) -> Self {
+        assert!(shard < n_shards.max(1));
+        let rng = Rng::new(seed).fork(0x5AD0 + shard as u64);
+        let zipf = Zipf::new(spec.vocab, spec.zipf_s);
+        TokenStream { spec, zipf, rng, recent: Vec::new(), prev: 0 }
+    }
+
+    pub fn next_token(&mut self) -> u32 {
+        let tok = if !self.recent.is_empty() && self.rng.f64() < self.spec.repeat_p {
+            // burst repetition: copy from the recent window
+            let i = self.rng.below(self.recent.len());
+            self.recent[i]
+        } else {
+            let rank = self.zipf.sample(&mut self.rng);
+            if self.rng.f64() < self.spec.global_p {
+                self.spec.global_token(rank) as u32 // global Zipf head
+            } else {
+                self.spec.rank_to_token(self.prev, rank) as u32
+            }
+        };
+        self.prev = tok as usize;
+        self.recent.push(tok);
+        if self.recent.len() > self.spec.window {
+            self.recent.remove(0);
+        }
+        tok
+    }
+
+    pub fn fill(&mut self, out: &mut [i32]) {
+        for v in out.iter_mut() {
+            *v = self.next_token() as i32;
+        }
+    }
+}
+
+/// Deterministic batch producer: yields `[batch * seq_len]` i32 buffers.
+pub struct Batcher {
+    stream: TokenStream,
+    pub batch: usize,
+    pub seq_len: usize,
+    produced: usize,
+}
+
+impl Batcher {
+    pub fn new(spec: CorpusSpec, seed: u64, shard: usize, n_shards: usize,
+               batch: usize, seq_len: usize) -> Self {
+        Batcher {
+            stream: TokenStream::new(spec, seed, shard, n_shards),
+            batch,
+            seq_len,
+            produced: 0,
+        }
+    }
+
+    pub fn next_batch(&mut self) -> Vec<i32> {
+        let mut out = vec![0i32; self.batch * self.seq_len];
+        self.stream.fill(&mut out);
+        self.produced += 1;
+        out
+    }
+
+    pub fn batches_produced(&self) -> usize {
+        self.produced
+    }
+
+    pub fn tokens_per_batch(&self) -> usize {
+        self.batch * self.seq_len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn deterministic_per_seed_and_shard() {
+        let spec = CorpusSpec::default();
+        let mut a = TokenStream::new(spec.clone(), 7, 0, 2);
+        let mut b = TokenStream::new(spec.clone(), 7, 0, 2);
+        for _ in 0..500 {
+            assert_eq!(a.next_token(), b.next_token());
+        }
+        let mut c = TokenStream::new(spec, 7, 1, 2);
+        let same = (0..500).filter(|_| a.next_token() == c.next_token()).count();
+        assert!(same < 250, "shards should differ ({same}/500 equal)");
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        let spec = CorpusSpec { vocab: 128, ..Default::default() };
+        let mut s = TokenStream::new(spec, 1, 0, 1);
+        for _ in 0..2000 {
+            assert!((s.next_token() as usize) < 128);
+        }
+    }
+
+    #[test]
+    fn zipfian_head_dominates() {
+        let spec = CorpusSpec { repeat_p: 0.0, ..Default::default() };
+        let mut s = TokenStream::new(spec.clone(), 2, 0, 1);
+        let mut counts = vec![0usize; spec.vocab];
+        for _ in 0..50_000 {
+            counts[s.next_token() as usize] += 1;
+        }
+        let mut sorted = counts.clone();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        // top-16 tokens hold far more than the uniform 16/512 = 3.1% share
+        // (global Zipf head + the bigram tables' own rank-0 concentration)
+        let top: usize = sorted[..16].iter().sum();
+        assert!(top as f64 > 0.10 * 50_000.0, "top16 share {top}");
+    }
+
+    #[test]
+    fn repetition_raises_adjacent_duplicate_rate() {
+        let base = CorpusSpec { repeat_p: 0.0, ..Default::default() };
+        let bursty = CorpusSpec { repeat_p: 0.5, ..Default::default() };
+        let dup_rate = |spec: CorpusSpec| {
+            let mut s = TokenStream::new(spec, 3, 0, 1);
+            let mut prev = s.next_token();
+            let mut dups = 0;
+            for _ in 0..20_000 {
+                let t = s.next_token();
+                if t == prev {
+                    dups += 1;
+                }
+                prev = t;
+            }
+            dups as f64 / 20_000.0
+        };
+        assert!(dup_rate(bursty) > 2.0 * dup_rate(base).max(1e-4));
+    }
+
+    #[test]
+    fn bigram_structure_learnable() {
+        // conditioned on prev, the rank-0 token must be the modal next token
+        let spec = CorpusSpec { repeat_p: 0.0, ..Default::default() };
+        let mut s = TokenStream::new(spec.clone(), 4, 0, 1);
+        let prev_target = 5usize;
+        let want = spec.most_likely_next(prev_target);
+        let mut counts = std::collections::HashMap::new();
+        let mut prev = s.next_token() as usize;
+        for _ in 0..200_000 {
+            let t = s.next_token() as usize;
+            if prev == prev_target {
+                *counts.entry(t).or_insert(0usize) += 1;
+            }
+            prev = t;
+        }
+        let modal = counts.iter().max_by_key(|(_, c)| **c).map(|(t, _)| *t).unwrap();
+        assert_eq!(modal, want);
+    }
+
+    #[test]
+    fn batcher_shapes_and_counter() {
+        let mut b = Batcher::new(CorpusSpec::default(), 0, 0, 1, 4, 128);
+        let batch = b.next_batch();
+        assert_eq!(batch.len(), 4 * 128);
+        assert!(batch.iter().all(|&t| t >= 0 && (t as usize) < 512));
+        b.next_batch();
+        assert_eq!(b.batches_produced(), 2);
+    }
+
+    #[test]
+    fn prop_rank_map_is_bijective() {
+        check("rank_to_token bijective per state", 20, |rng, _| {
+            let spec = CorpusSpec {
+                vocab: 256,
+                corpus_seed: rng.next_u64(),
+                ..Default::default()
+            };
+            let prev = rng.below(256);
+            let mut seen = vec![false; 256];
+            for rank in 0..256 {
+                let t = spec.rank_to_token(prev, rank);
+                prop_assert!(!seen[t], "collision at rank {rank} state {prev}");
+                seen[t] = true;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_streams_reproducible_after_batching() {
+        check("batcher determinism", 10, |rng, _| {
+            let seed = rng.next_u64();
+            let mut a = Batcher::new(CorpusSpec::default(), seed, 0, 4, 2, 64);
+            let mut b = Batcher::new(CorpusSpec::default(), seed, 0, 4, 2, 64);
+            for _ in 0..3 {
+                prop_assert!(a.next_batch() == b.next_batch(), "batches diverged");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn entropy_bound_sane() {
+        let spec = CorpusSpec::default();
+        let h = spec.zipf_entropy_nats();
+        // between 0 and ln(vocab)
+        assert!(h > 1.0 && h < (spec.vocab as f64).ln(), "{h}");
+    }
+}

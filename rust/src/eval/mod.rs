@@ -1,0 +1,209 @@
+//! In-context evaluation harness (Table 5 substitute).
+//!
+//! The paper evaluates on the Databricks Gauntlet; offline we build
+//! synthetic tasks with known ground truth over the same corpus generator
+//! the models were trained on, all computed from a `fwd` artifact's logits
+//! (so FP8 inference numerics — the "training-inference match" claim —
+//! are exercised end to end):
+//!
+//!  - **next-token accuracy / NLL** on held-out corpus shards (the
+//!    language-modeling analog of the Gauntlet's aggregate score);
+//!  - **bigram cloze**: accuracy on positions whose generator-modal
+//!    continuation is well-defined (`CorpusSpec::most_likely_next`);
+//!  - **repetition**: accuracy on positions whose target already appeared
+//!    in the recent window (tests the induction-y behavior real text
+//!    rewards, cf. Fig 3);
+//!  - **copy/induction**: synthetic `prefix ++ prefix` prompts, scored on
+//!    the repeated half (pure in-context recall).
+
+use anyhow::{bail, Context, Result};
+use xla::Literal;
+
+use crate::config::ModelConfig;
+use crate::data::{Batcher, CorpusSpec};
+use crate::runtime::{lit_i32, scalar_f32, to_f32_vec, Engine};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Default)]
+pub struct EvalReport {
+    pub next_token_acc: f64,
+    pub avg_nll: f64,
+    pub bigram_cloze_acc: f64,
+    pub repeat_acc: f64,
+    pub induction_acc: f64,
+    pub positions_scored: usize,
+}
+
+/// Run the full suite. `params` are the model's parameter literals (from a
+/// `TrainState`), `tau` the residual coefficient it was trained with.
+pub fn evaluate(
+    engine: &Engine,
+    cfg: &ModelConfig,
+    params: &[Literal],
+    tau: f64,
+    corpus: &CorpusSpec,
+    n_batches: usize,
+    seed: u64,
+) -> Result<EvalReport> {
+    let meta = engine
+        .manifest
+        .find_for("fwd", cfg)
+        .with_context(|| format!("no fwd artifact for {}", cfg.name()))?;
+    let fwd_name = meta.name.clone();
+    if params.len() != meta.inputs.len() - 2 {
+        bail!("expected {} param tensors, got {}", meta.inputs.len() - 2, params.len());
+    }
+
+    let mut report = EvalReport::default();
+    let mut nll_sum = 0f64;
+    let mut nt_hits = 0usize;
+    let mut nt_total = 0usize;
+    let mut cloze_hits = 0usize;
+    let mut cloze_total = 0usize;
+    let mut rep_hits = 0usize;
+    let mut rep_total = 0usize;
+
+    // held-out shard: use a shard id outside the training range
+    let mut batcher = Batcher::new(corpus.clone(), seed, 7, 8, cfg.batch, cfg.seq_len);
+    for _ in 0..n_batches {
+        let tokens = batcher.next_batch();
+        let logits = run_fwd(engine, &fwd_name, params, &tokens, cfg, tau)?;
+        score_lm(cfg, corpus, &tokens, &logits, &mut nll_sum, &mut nt_hits, &mut nt_total,
+                 &mut cloze_hits, &mut cloze_total, &mut rep_hits, &mut rep_total);
+    }
+
+    // induction prompts: [prefix, prefix] with uniform-random prefix
+    let mut rng = Rng::new(seed ^ 0xABCD);
+    let mut ind_hits = 0usize;
+    let mut ind_total = 0usize;
+    {
+        let half = cfg.seq_len / 2;
+        let mut tokens = vec![0i32; cfg.batch * cfg.seq_len];
+        for b in 0..cfg.batch {
+            for t in 0..half {
+                let v = rng.below(cfg.vocab) as i32;
+                tokens[b * cfg.seq_len + t] = v;
+                tokens[b * cfg.seq_len + half + t] = v;
+            }
+        }
+        let logits = run_fwd(engine, &fwd_name, params, &tokens, cfg, tau)?;
+        let v = cfg.vocab;
+        for b in 0..cfg.batch {
+            // score predictions inside the repeated half
+            for t in half..cfg.seq_len - 1 {
+                let row = &logits[(b * cfg.seq_len + t) * v..(b * cfg.seq_len + t + 1) * v];
+                let pred = argmax(row);
+                if pred == tokens[b * cfg.seq_len + t + 1] as usize {
+                    ind_hits += 1;
+                }
+                ind_total += 1;
+            }
+        }
+    }
+
+    report.next_token_acc = nt_hits as f64 / nt_total.max(1) as f64;
+    report.avg_nll = nll_sum / nt_total.max(1) as f64;
+    report.bigram_cloze_acc = cloze_hits as f64 / cloze_total.max(1) as f64;
+    report.repeat_acc = rep_hits as f64 / rep_total.max(1) as f64;
+    report.induction_acc = ind_hits as f64 / ind_total.max(1) as f64;
+    report.positions_scored = nt_total;
+    Ok(report)
+}
+
+fn run_fwd(
+    engine: &Engine,
+    fwd_name: &str,
+    params: &[Literal],
+    tokens: &[i32],
+    cfg: &ModelConfig,
+    tau: f64,
+) -> Result<Vec<f32>> {
+    let tok = lit_i32(tokens, &[cfg.batch, cfg.seq_len])?;
+    let tau_l = scalar_f32(tau as f32);
+    let mut inputs: Vec<&Literal> = params.iter().collect();
+    inputs.push(&tok);
+    inputs.push(&tau_l);
+    let outs = engine.run(fwd_name, &inputs)?;
+    to_f32_vec(&outs[0])
+}
+
+#[allow(clippy::too_many_arguments)]
+fn score_lm(
+    cfg: &ModelConfig,
+    corpus: &CorpusSpec,
+    tokens: &[i32],
+    logits: &[f32],
+    nll_sum: &mut f64,
+    nt_hits: &mut usize,
+    nt_total: &mut usize,
+    cloze_hits: &mut usize,
+    cloze_total: &mut usize,
+    rep_hits: &mut usize,
+    rep_total: &mut usize,
+) {
+    let v = cfg.vocab;
+    for b in 0..cfg.batch {
+        for t in 0..cfg.seq_len - 1 {
+            let base = (b * cfg.seq_len + t) * v;
+            let row = &logits[base..base + v];
+            let target = tokens[b * cfg.seq_len + t + 1] as usize;
+            let pred = argmax(row);
+            *nll_sum += nll_of(row, target);
+            if pred == target {
+                *nt_hits += 1;
+            }
+            *nt_total += 1;
+            // bigram cloze: score positions where the target IS the modal
+            // continuation (the model should recover the bigram table)
+            let prev = tokens[b * cfg.seq_len + t] as usize;
+            if corpus.most_likely_next(prev) == target {
+                if pred == target {
+                    *cloze_hits += 1;
+                }
+                *cloze_total += 1;
+            }
+            // repetition: target already appeared in the recent window
+            let w0 = t.saturating_sub(corpus.window);
+            let seen = (w0..=t).any(|i| tokens[b * cfg.seq_len + i] as usize == target);
+            if seen {
+                if pred == target {
+                    *rep_hits += 1;
+                }
+                *rep_total += 1;
+            }
+        }
+    }
+}
+
+fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in row.iter().enumerate() {
+        if x > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+fn nll_of(row: &[f32], target: usize) -> f64 {
+    let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let z: f64 = row.iter().map(|&x| ((x as f64) - m).exp()).sum();
+    -((row[target] as f64 - m) - z.ln())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_and_nll() {
+        let row = [0.0f32, 2.0, -1.0];
+        assert_eq!(argmax(&row), 1);
+        let p1 = nll_of(&row, 1);
+        let p0 = nll_of(&row, 0);
+        assert!(p1 < p0);
+        // probabilities sum to 1 => exp(-nll) over all targets sums to 1
+        let total: f64 = (0..3).map(|t| (-nll_of(&row, t)).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+}

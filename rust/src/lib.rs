@@ -1,0 +1,27 @@
+//! # µnit Scaling (µS) — FP8 LLM training, reproduced
+//!
+//! Rust + JAX + Pallas three-layer reproduction of *"µnit Scaling: Simple
+//! and Scalable FP8 LLM Training"* (Narayan et al., 2025).
+//!
+//! Layer map (see DESIGN.md):
+//! - **L3 (this crate)**: training coordinator — config, data pipeline,
+//!   PJRT runtime, trainer/sweep engine, analysis, perf model, eval.
+//! - **L2** (`python/compile/model.py`): µS/SP transformer fwd/bwd + Lion,
+//!   AOT-lowered to HLO text artifacts.
+//! - **L1** (`python/compile/kernels/`): Pallas FP8 GEMM / cast-transpose /
+//!   attention / layernorm kernels (interpret=True).
+//!
+//! Python never runs on the step path: the binary executes AOT artifacts
+//! via the PJRT CPU client (`xla` crate).
+
+pub mod analysis;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod fp8;
+pub mod perfmodel;
+pub mod repro;
+pub mod runtime;
+pub mod scaling;
+pub mod util;

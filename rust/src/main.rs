@@ -1,0 +1,385 @@
+//! `munit` — µnit Scaling training framework CLI (L3 leader entrypoint).
+//!
+//! Subcommands:
+//!   info                       list artifacts, platform, presets
+//!   train      --config NAME   train one model, JSONL metrics to results/
+//!   train-one  --config NAME   sweep worker: one run, JSON summary on stdout
+//!   sweep      --config NAME   η/λ/τ grid (optionally multi-process)
+//!   ddp        --config NAME   simulated multi-worker data-parallel run
+//!   figure     fig2..fig12     reproduce a paper figure (see DESIGN.md §4)
+//!   table      table2..table5  reproduce a paper table
+//!   e2e                        headline end-to-end driver (≈12M-param µS FP8)
+//!   bench-step --config NAME   per-step latency breakdown
+//!
+//! Flags: --artifacts DIR (default ./artifacts), --results DIR (default
+//! ./results), --fast (shrink steps/grids).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use munit::config::{ModelConfig, TrainConfig};
+use munit::coordinator::{ddp, metrics::MetricsLogger, sweep, trainer::Trainer};
+use munit::data::Batcher;
+use munit::repro::{self, corpus_for, proxy_tc, Ctx};
+use munit::runtime::Engine;
+use munit::scaling::recommended_tau;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Tiny argv parser: positionals + `--key value` pairs + `--flag`.
+struct Args {
+    positional: Vec<String>,
+    named: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    fn parse() -> Args {
+        let mut positional = Vec::new();
+        let mut named = HashMap::new();
+        let mut flags = Vec::new();
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    named.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.push(key.to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Args { positional, named, flags }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.named.get(key).map(|s| s.as_str())
+    }
+    fn f64_or(&self, key: &str, d: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(d)
+    }
+    fn usize_or(&self, key: &str, d: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(d)
+    }
+    fn has(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+}
+
+/// Resolve a config by canonical name from the manifest.
+fn config_by_name(engine: &Engine, name: &str) -> Result<ModelConfig> {
+    engine
+        .manifest
+        .artifacts
+        .iter()
+        .filter_map(|a| a.config.as_ref())
+        .find(|c| c.name() == name)
+        .cloned()
+        .with_context(|| {
+            format!("no artifact config named '{name}' (see `munit info` for the list)")
+        })
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse();
+    let artifacts = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+    let results = PathBuf::from(args.get("results").unwrap_or("results"));
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("info");
+
+    match cmd {
+        "info" => {
+            let engine = Engine::new(&artifacts)?;
+            println!("platform: {}", engine.platform());
+            println!("artifacts ({}):", engine.manifest.artifacts.len());
+            let mut names: Vec<String> = engine
+                .manifest
+                .artifacts
+                .iter()
+                .filter_map(|a| a.config.as_ref())
+                .map(|c| c.name())
+                .collect();
+            names.sort();
+            names.dedup();
+            for n in names {
+                println!("  {n}");
+            }
+            Ok(())
+        }
+        "train" => {
+            let engine = Engine::new(&artifacts)?;
+            let name = args.get("config").context("--config required")?;
+            let cfg = config_by_name(&engine, name)?;
+            let tc = tc_from_args(&args, &cfg);
+            let trainer = Trainer::new(&engine, &cfg)?;
+            let mut batcher =
+                Batcher::new(corpus_for(&cfg), tc.seed, 0, 1, cfg.batch, cfg.seq_len);
+            let mut log = MetricsLogger::create(&results, &format!("train_{name}"))?;
+            let log_every = tc.log_every;
+            let r = trainer.run_with(&tc, &mut batcher, |m, _| {
+                let _ = log.log_step(m);
+                if m.step % log_every == 0 {
+                    println!(
+                        "step {:>5} loss {:.4} gnorm {:.3} lr {:.5}",
+                        m.step, m.loss, m.gnorm, m.lr
+                    );
+                }
+            })?;
+            log.log_summary(name, &r)?;
+            println!(
+                "done: {} steps, final loss {:.4}, {:.0} tok/s{}",
+                r.steps_done,
+                r.final_loss(10),
+                r.tokens_per_sec,
+                if r.diverged { " [DIVERGED]" } else { "" }
+            );
+            Ok(())
+        }
+        "train-one" => {
+            let engine = Engine::new(&artifacts)?;
+            let name = args.get("config").context("--config required")?;
+            let cfg = config_by_name(&engine, name)?;
+            let tc = tc_from_args(&args, &cfg);
+            let trainer = Trainer::new(&engine, &cfg)?;
+            let mut batcher =
+                Batcher::new(corpus_for(&cfg), tc.seed, 0, 1, cfg.batch, cfg.seq_len);
+            let r = trainer.run(&tc, &mut batcher)?;
+            println!("{}", munit::coordinator::metrics::summary_json(name, &r));
+            Ok(())
+        }
+        "sweep" => {
+            let engine = Engine::new(&artifacts)?;
+            let name = args.get("config").context("--config required")?;
+            let cfg = config_by_name(&engine, name)?;
+            let tc = tc_from_args(&args, &cfg);
+            let (lo, hi) = parse_range(args.get("lr-exp").unwrap_or("-9:-5"))?;
+            let lrs = sweep::pow2_axis(lo, hi);
+            let wds: Vec<f64> = [0.5, 1.0, 4.0].iter().map(|m| m * tc.wd).collect();
+            let taus = vec![tc.tau];
+            let points = sweep::grid(&lrs, &wds, &taus);
+            println!("sweep: {} points over {}", points.len(), name);
+            let procs = args.usize_or("procs", 1);
+            let outcomes = if procs > 1 {
+                sweep::run_parallel(&cfg, &tc, &points, procs, true)?
+            } else {
+                sweep::run_sequential(&engine, &cfg, &tc, &corpus_for(&cfg), &points, true)?
+            };
+            if let Some(b) = sweep::best(&outcomes) {
+                println!(
+                    "best: lr=2^{:.0} wd={:.5} tau={:.2} loss={:.4}",
+                    b.point.lr.log2(),
+                    b.point.wd,
+                    b.point.tau,
+                    b.final_loss
+                );
+                for o in sweep::optimal_subset(&outcomes, 0.0025) {
+                    println!(
+                        "  within 0.25%: lr=2^{:.0} wd={:.5} tau={:.2} loss={:.4}",
+                        o.point.lr.log2(),
+                        o.point.wd,
+                        o.point.tau,
+                        o.final_loss
+                    );
+                }
+            } else {
+                println!("all runs diverged");
+            }
+            Ok(())
+        }
+        "ddp" => {
+            let engine = Engine::new(&artifacts)?;
+            let name = args.get("config").context("--config required")?;
+            let cfg = config_by_name(&engine, name)?;
+            let tc = tc_from_args(&args, &cfg);
+            let workers = args.usize_or("workers", 2);
+            let r = ddp::train_ddp(&engine, &cfg, &tc, &corpus_for(&cfg), workers)?;
+            println!(
+                "ddp x{}: {} steps, final loss {:.4}, {:.0} tok/s (aggregate)",
+                workers,
+                r.steps_done,
+                r.final_loss(10),
+                r.tokens_per_sec
+            );
+            Ok(())
+        }
+        "figure" | "table" => {
+            let which = args.positional.get(1).context("which figure/table?")?.clone();
+            let ctx = Ctx::new(&artifacts, &results, args.has("fast"))?;
+            let report = dispatch_repro(&ctx, &which)?;
+            println!("{report}");
+            std::fs::create_dir_all(results.join("reports"))?;
+            std::fs::write(results.join("reports").join(format!("{which}.txt")), &report)?;
+            Ok(())
+        }
+        "e2e" => {
+            let ctx = Ctx::new(&artifacts, &results, args.has("fast"))?;
+            let steps = args.usize_or("steps", if args.has("fast") { 60 } else { 300 });
+            let report = e2e(&ctx, steps)?;
+            println!("{report}");
+            std::fs::create_dir_all(results.join("reports"))?;
+            std::fs::write(results.join("reports").join("e2e.txt"), &report)?;
+            Ok(())
+        }
+        "bench-step" => {
+            let engine = Engine::new(&artifacts)?;
+            let name = args.get("config").context("--config required")?;
+            let cfg = config_by_name(&engine, name)?;
+            bench_step(&engine, &cfg, args.usize_or("steps", 20))
+        }
+        other => bail!(
+            "unknown command '{other}' (try: info train sweep ddp figure table e2e bench-step)"
+        ),
+    }
+}
+
+fn parse_range(s: &str) -> Result<(i32, i32)> {
+    let (a, b) = s.split_once(':').context("expected lo:hi")?;
+    Ok((a.parse()?, b.parse()?))
+}
+
+fn tc_from_args(args: &Args, cfg: &ModelConfig) -> TrainConfig {
+    let default_lr = if cfg.variant == "mus" { 1.0 / 64.0 } else { 1.0 / 256.0 };
+    let mut tc = proxy_tc(
+        args.usize_or("steps", 100),
+        args.f64_or("lr", default_lr),
+        args.f64_or("wd", 2.0 / 16384.0),
+        args.f64_or("tau", recommended_tau(cfg.depth)),
+        args.usize_or("seed", 0) as u64,
+    );
+    tc.init_seed = args.usize_or("init-seed", 0) as i32;
+    tc
+}
+
+fn dispatch_repro(ctx: &Ctx, which: &str) -> Result<String> {
+    use munit::repro::{figures as f, tables as t};
+    match which {
+        "fig2" => f::fig2(ctx),
+        "fig3" => f::fig3(ctx),
+        "fig4b" => f::fig4b(ctx),
+        "fig5" => f::fig5(ctx),
+        "fig6" => f::fig6(ctx),
+        "fig7" => f::fig7(ctx),
+        "fig8" => f::fig8(ctx),
+        "fig9" => f::fig9(ctx),
+        "fig10" => f::fig10(ctx),
+        "fig11" => f::fig11(ctx),
+        "fig12" => f::fig12(ctx),
+        "table2" => t::table2(ctx),
+        "table3" | "fig1" => t::table3(ctx),
+        "table4" => t::table4(ctx),
+        "table5" => t::table5(ctx),
+        "all" => {
+            let mut out = String::new();
+            for w in [
+                "table3", "table2", "table4", "fig2", "fig3", "fig4b", "fig5", "fig6",
+                "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "table5",
+            ] {
+                eprintln!("== {w} ==");
+                out.push_str(&dispatch_repro(ctx, w)?);
+                out.push('\n');
+            }
+            Ok(out)
+        }
+        other => bail!("unknown figure/table '{other}'"),
+    }
+}
+
+/// Headline end-to-end driver: µS FP8 vs µS BF16 on the e2e model
+/// (w384 d6, ~12M params — the CPU-feasible stand-in for the paper's 1B+;
+/// see DESIGN.md substitution table).
+fn e2e(ctx: &Ctx, steps: usize) -> Result<String> {
+    let cfg8 = ModelConfig {
+        width: 384,
+        depth: 6,
+        head_dim: 64,
+        vocab: 2048,
+        seq_len: 256,
+        batch: 8,
+        ..ModelConfig::default()
+    };
+    let cfg16 = ModelConfig { precision: "bf16".into(), ..cfg8.clone() };
+    let tau = recommended_tau(cfg8.depth);
+    let tc = proxy_tc(steps, 1.0 / 64.0, 2.0 / 16384.0, tau, 42);
+    eprintln!("e2e: training µS FP8 ({} params) for {steps} steps…", cfg8.n_params());
+    let (r8, state8) = repro::train_with_state(ctx, &cfg8, &tc)?;
+    eprintln!("e2e: training µS BF16 baseline…");
+    let r16 = repro::train_cached(ctx, &cfg16, &tc)?;
+    let corpus = corpus_for(&cfg8);
+    let ev = munit::eval::evaluate(&ctx.engine, &cfg8, state8.params(), tau, &corpus, 3, 7)?;
+    let bucket = (steps / 12).max(1);
+    let mut curve = String::new();
+    for (i, chunk) in r8.losses.chunks(bucket).enumerate() {
+        let mean: f32 = chunk.iter().sum::<f32>() / chunk.len() as f32;
+        curve.push_str(&format!("  step {:>5}  fp8 {:.4}\n", i * bucket, mean));
+    }
+    Ok(format!(
+        "E2E — µS FP8 end-to-end training ({} params, {} tokens)\n\
+         loss curve (mean per bucket):\n{curve}\
+         final loss: FP8 {:.4} vs BF16 {:.4} (rel. conv. error {:+.3}%)\n\
+         spikes: fp8 {}, bf16 {} | diverged: {} / {}\n\
+         throughput (this CPU): {:.0} tok/s\n\
+         eval (FP8 weights+activations, W8A8-analog inference):\n\
+         \u{20}\u{20}next-token acc {:.1}% | NLL {:.3} | cloze {:.1}% | repeat {:.1}% | induction {:.1}%\n",
+        cfg8.n_params(),
+        steps * cfg8.batch * cfg8.seq_len,
+        r8.final_loss,
+        r16.final_loss,
+        (r8.final_loss - r16.final_loss) / r16.final_loss * 100.0,
+        r8.spikes,
+        r16.spikes,
+        r8.diverged,
+        r16.diverged,
+        r8.tokens_per_sec,
+        ev.next_token_acc * 100.0,
+        ev.avg_nll,
+        ev.bigram_cloze_acc * 100.0,
+        ev.repeat_acc * 100.0,
+        ev.induction_acc * 100.0,
+    ))
+}
+
+/// Per-step latency breakdown for a config (L3 perf tooling).
+fn bench_step(engine: &Engine, cfg: &ModelConfig, steps: usize) -> Result<()> {
+    let trainer = Trainer::new(engine, cfg)?;
+    let mut state = trainer.init(0)?;
+    let mut batcher = Batcher::new(corpus_for(cfg), 0, 0, 1, cfg.batch, cfg.seq_len);
+    // warmup (includes XLA compile)
+    let tokens = batcher.next_batch();
+    trainer.step(&mut state, &tokens, 1e-3, 1e-4, 0.3)?;
+    let t0 = std::time::Instant::now();
+    let mut gen_time = std::time::Duration::ZERO;
+    for _ in 0..steps {
+        let tg = std::time::Instant::now();
+        let tokens = batcher.next_batch();
+        gen_time += tg.elapsed();
+        trainer.step(&mut state, &tokens, 1e-3, 1e-4, 0.3)?;
+    }
+    let total = t0.elapsed();
+    let stats = engine.stats(trainer.train_artifact()).unwrap();
+    println!("config: {} ({} params)", cfg.name(), cfg.n_params());
+    println!("steps: {steps}  total {:?}  per-step {:?}", total, total / steps as u32);
+    println!(
+        "  execute  {:?}/step\n  transfer {:?}/step\n  data-gen {:?}/step\n  compile  {:?} (once)",
+        stats.execute_time / stats.calls as u32,
+        stats.transfer_time / stats.calls as u32,
+        gen_time / steps as u32,
+        stats.compile_time
+    );
+    println!(
+        "  tokens/s: {:.0}",
+        (steps * cfg.batch * cfg.seq_len) as f64 / total.as_secs_f64()
+    );
+    Ok(())
+}

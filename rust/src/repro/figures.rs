@@ -1,0 +1,439 @@
+//! One driver per paper figure. Every driver prints the same rows/series
+//! the paper plots and returns them as a report string (recorded in
+//! EXPERIMENTS.md). Proxy shapes per DESIGN.md §2 hardware-adaptation.
+
+use anyhow::{Context, Result};
+
+use super::{corpus_for, proxy_tc, run_probe, train_cached, train_with_state, Ctx};
+use crate::config::TrainConfig;
+
+/// Cache-aware sweep: one `train_cached` run per grid point (so figure
+/// reruns are incremental, unlike `sweep::run_sequential`).
+fn sweep_cached(
+    ctx: &Ctx,
+    cfg: &ModelConfig,
+    base: &TrainConfig,
+    points: &[sweep::SweepPoint],
+) -> Result<Vec<sweep::SweepOutcome>> {
+    let mut out = Vec::with_capacity(points.len());
+    for (i, p) in points.iter().enumerate() {
+        let tc = TrainConfig { lr: p.lr, wd: p.wd, tau: p.tau, ..base.clone() };
+        let r = train_cached(ctx, cfg, &tc)?;
+        eprintln!(
+            "  [{}/{}] lr=2^{:.0} wd={:.4} tau={:.2} -> loss {:.4}{}",
+            i + 1, points.len(), p.lr.log2(), p.wd, p.tau, r.final_loss,
+            if r.diverged { " DIVERGED" } else { "" }
+        );
+        out.push(sweep::SweepOutcome {
+            point: *p,
+            final_loss: r.final_loss,
+            diverged: r.diverged,
+            spikes: r.spikes,
+        });
+    }
+    Ok(out)
+}
+use crate::analysis::{
+    activation_underflow, activations::Activation, attention_sigma2_theory,
+    attention_sigma_iid, hist_tail_mass, iid_cosine_baseline, AttentionKind, InputDist,
+};
+use crate::config::ModelConfig;
+use crate::coordinator::sweep;
+use crate::fp8::E4M3;
+use crate::perfmodel::{fig8 as perf_fig8, Hw};
+use crate::scaling::recommended_tau;
+use crate::util::rng::Rng;
+use crate::util::table;
+
+fn proxy(width: usize, depth: usize) -> ModelConfig {
+    ModelConfig { width, depth, ..ModelConfig::default() }
+}
+
+fn sp_proxy(width: usize, depth: usize) -> ModelConfig {
+    ModelConfig {
+        width,
+        depth,
+        variant: "sp".into(),
+        precision: "bf16".into(),
+        residual: "standard".into(),
+        ..ModelConfig::default()
+    }
+}
+
+/// Default per-run hyperparameters for proxy training (found by the fig6
+/// sweep; stable for µS by construction).
+pub const MUS_LR: f64 = 1.0 / 64.0;
+pub const SP_LR: f64 = 1.0 / 256.0;
+pub const WD: f64 = 2f64 / 16384.0;
+
+/// Fig 2: attention output sigma vs sequence position — iid simulation
+/// (rust Monte Carlo) + observed in a trained µS model (probe artifact).
+pub fn fig2(ctx: &Ctx) -> Result<String> {
+    let positions = [2usize, 4, 8, 16, 32, 64, 96, 127];
+    let mut rng = Rng::new(2);
+    let sim_std = attention_sigma_iid(&positions, 16, 400, AttentionKind::Standard, &mut rng);
+    let sim_sqrt =
+        attention_sigma_iid(&positions, 16, 400, AttentionKind::SqrtSoftmax, &mut rng);
+
+    // observed: probe a briefly-trained µS model (w128 d6)
+    let cfg = proxy(128, 6);
+    let tau = recommended_tau(cfg.depth);
+    let tc = proxy_tc(ctx.steps(150), MUS_LR, WD, tau, 1);
+    let (_sum, state) = train_with_state(ctx, &cfg, &tc)?;
+    let probe = run_probe(ctx, &cfg, state.params(), tau, 99)?;
+    let get = |k: &str| probe.iter().find(|(n, _)| n == k).map(|(_, v)| v.clone()).unwrap();
+    let attn_std = get("attn_std"); // [L, S] flattened
+    let attn_sqrt_std = get("attn_sqrt_std");
+    let s = cfg.seq_len;
+    let mid_layer = cfg.depth / 2;
+    let mut rows = Vec::new();
+    for (i, &k) in positions.iter().enumerate() {
+        rows.push(vec![
+            k.to_string(),
+            table::f(sim_std[i].1, 3),
+            table::f(attention_sigma2_theory(k).sqrt(), 3),
+            table::f(sim_sqrt[i].1, 3),
+            table::f(attn_std[mid_layer * s + k] as f64, 3),
+            table::f(attn_sqrt_std[mid_layer * s + k] as f64, 3),
+        ]);
+    }
+    let t = table::render(
+        &["pos k", "sim std", "theory(√(e/k))", "sim sqrt", "trained std", "trained sqrt"],
+        &rows,
+    );
+    Ok(format!(
+        "Fig 2 — attention output σ vs position (iid sim, Prop 2.1 theory, trained probe layer {mid_layer})\n\
+         Expect: sim/trained standard σ decay with k; sqrt-softmax flat (sim) and\n\
+         rising for trained (correlated real values, Fig 3 mechanism).\n{t}"
+    ))
+}
+
+/// Fig 3: value-token cosine similarity, trained model vs iid baseline.
+pub fn fig3(ctx: &Ctx) -> Result<String> {
+    let cfg = proxy(128, 6);
+    let tau = recommended_tau(cfg.depth);
+    let tc = proxy_tc(ctx.steps(150), MUS_LR, WD, tau, 1);
+    let (_s, state) = train_with_state(ctx, &cfg, &tc)?;
+    let probe = run_probe(ctx, &cfg, state.params(), tau, 99)?;
+    let vcos = &probe.iter().find(|(n, _)| n == "vcos").unwrap().1;
+    let s = cfg.seq_len;
+    let baseline = iid_cosine_baseline(cfg.head_dim);
+    let mut rows = Vec::new();
+    for &k in &[4usize, 16, 48, 96, 127] {
+        let mean_layers: f64 = (0..cfg.depth).map(|l| vcos[l * s + k] as f64).sum::<f64>()
+            / cfg.depth as f64;
+        rows.push(vec![
+            k.to_string(),
+            table::f(mean_layers, 4),
+            table::f(baseline, 4),
+            table::f(mean_layers / baseline, 2),
+        ]);
+    }
+    let t = table::render(&["pos k", "observed cos", "iid baseline", "ratio"], &rows);
+    Ok(format!(
+        "Fig 3 — value-token cosine similarity (trained µS probe vs iid N(0,1))\n\
+         Expect: observed ≫ iid baseline (repeated tokens in text-like data).\n{t}"
+    ))
+}
+
+/// Fig 4b: deep-model convergence, µS Res-Post-LN (fp8) vs SP Pre-LN (bf16).
+pub fn fig4b(ctx: &Ctx) -> Result<String> {
+    let steps = ctx.steps(300);
+    let mus = proxy(64, 24);
+    let sp = sp_proxy(64, 24);
+    let tau = recommended_tau(24);
+    let r_mus = train_cached(ctx, &mus, &proxy_tc(steps, MUS_LR, WD, tau, 3))?;
+    let r_sp = train_cached(ctx, &sp, &proxy_tc(steps, SP_LR, WD, 0.0, 3))?;
+    let mut rows = Vec::new();
+    for frac in [0.1, 0.25, 0.5, 0.75, 1.0] {
+        let i = ((steps as f64 * frac) as usize).min(r_mus.losses.len() - 1).min(r_sp.losses.len() - 1);
+        rows.push(vec![
+            format!("{}", i),
+            table::f(r_mus.losses[i] as f64, 4),
+            table::f(r_sp.losses[i] as f64, 4),
+        ]);
+    }
+    let t = table::render(&["step", "µS res-post-LN (FP8)", "SP pre-LN (BF16)"], &rows);
+    Ok(format!(
+        "Fig 4b — deep ({}L proxy for 100L) convergence: µS vs SP\n\
+         Expect: nearly identical convergence (final Δ small).\n{t}\n\
+         final: µS {:.4} vs SP {:.4} (Δ {:+.4})\n",
+        24, r_mus.final_loss, r_sp.final_loss, r_mus.final_loss - r_sp.final_loss
+    ))
+}
+
+/// Fig 5: fixed vs running-mean residual scheme on the deep proxy.
+pub fn fig5(ctx: &Ctx) -> Result<String> {
+    let steps = ctx.steps(300);
+    let tau = 0.1; // the paper's Fig 5 uses tau = 0.1 on 100 layers
+    let fixed = proxy(64, 24);
+    let running = ModelConfig { residual: "running_mean".into(), ..proxy(64, 24) };
+    let r_fix = train_cached(ctx, &fixed, &proxy_tc(steps, MUS_LR, WD, tau, 4))?;
+    let r_run = train_cached(ctx, &running, &proxy_tc(steps, MUS_LR, WD, tau, 4))?;
+    let mut rows = Vec::new();
+    for frac in [0.25, 0.5, 0.75, 1.0] {
+        let i = ((steps as f64 * frac) as usize).min(r_fix.losses.len() - 1).min(r_run.losses.len() - 1);
+        rows.push(vec![
+            format!("{i}"),
+            table::f(r_fix.losses[i] as f64, 4),
+            table::f(r_run.losses[i] as f64, 4),
+        ]);
+    }
+    let t = table::render(&["step", "fixed(τ=0.1)", "running-mean"], &rows);
+    Ok(format!(
+        "Fig 5 — residual modification schemes (deep µS proxy)\n\
+         Expect: fixed converges at least as well as running-mean.\n{t}\n\
+         final: fixed {:.4} vs running-mean {:.4}\n",
+        r_fix.final_loss, r_run.final_loss
+    ))
+}
+
+/// Fig 6: η* and λ* vs width for µS (stable) and SP (η* ~ 1/width).
+///
+/// Two-stage sweep per (width, variant), matching the paper's panels (each
+/// curve holds the other hyperparameter at its optimum): stage 1 sweeps η
+/// over powers of two at λ = WD; stage 2 sweeps λ at η*.
+pub fn fig6(ctx: &Ctx) -> Result<String> {
+    let widths = [32usize, 64, 128, 256];
+    let steps = ctx.steps(120);
+    let lr_axis = sweep::pow2_axis(-9, -5);
+    let wd_axis = [WD / 8.0, WD, WD * 8.0];
+    let mut report = String::from(
+        "Fig 6 — optimal η* and λ* across widths (base width 32; lr axis means η at d_base)\n\
+         Expect: µS η*/λ* flat; SP's effective per-layer LR shifts ~1/width\n\
+         (the artifact bakes the transfer rule, so a FLAT η* column here means\n\
+         the rule is correct — for SP we also report the implied raw LR).\n",
+    );
+    for (variant, lr_mul_note) in [("mus", "√(32/w)"), ("sp", "32/w")] {
+        let mut rows = Vec::new();
+        for &w in &widths {
+            let cfg = if variant == "mus" { proxy(w, 4) } else { sp_proxy(w, 4) };
+            let tau = 0.4;
+            let base_tc = proxy_tc(steps, 0.0, 0.0, tau, 6);
+            // stage 1: eta sweep at fixed lambda
+            let pts1 = sweep::grid(&lr_axis, &[WD], &[tau]);
+            let out1 = sweep_cached(ctx, &cfg, &base_tc, &pts1)?;
+            let best1 = sweep::best(&out1).context("all eta runs diverged")?;
+            let eta_star = best1.point.lr;
+            // stage 2: lambda sweep at eta*
+            let pts2 = sweep::grid(&[eta_star], &wd_axis, &[tau]);
+            let out2 = sweep_cached(ctx, &cfg, &base_tc, &pts2)?;
+            let best2 = sweep::best(&out2).context("all lambda runs diverged")?;
+            rows.push(vec![
+                w.to_string(),
+                format!("2^{:.0}", eta_star.log2()),
+                format!("2^{:.0}", (eta_star * (cfg.d_base as f64 / w as f64)).log2()),
+                format!("{:.5}", best2.point.wd),
+                table::f(best2.final_loss, 4),
+                format!("{}", out1.iter().chain(&out2).filter(|o| o.diverged).count()),
+            ]);
+        }
+        report.push_str(&format!(
+            "\n{} (per-layer mult {}):\n{}",
+            if variant == "mus" { "µnit Scaling (FP8)" } else { "SP (BF16)" },
+            lr_mul_note,
+            table::render(
+                &["width", "η* (base)", "η*·d_base/w (raw SP)", "λ*", "loss", "diverged"],
+                &rows
+            )
+        ));
+    }
+    Ok(report)
+}
+
+/// Fig 7: loss curves for SP/µS x BF16/FP8 across proxy sizes.
+pub fn fig7(ctx: &Ctx) -> Result<String> {
+    let sizes = [(64usize, 4usize, "S"), (128, 6, "M"), (256, 8, "L")];
+    let steps = ctx.steps(240);
+    let mut report = String::from(
+        "Fig 7 — convergence of SP/µS in BF16/FP8 (proxy sizes; final train loss)\n\
+         Expect: µS-FP8 ≈ µS-BF16 ≈ SP-BF16; SP-FP8 (dynamic scaling) close but\n\
+         with more spikes at scale.\n",
+    );
+    let mut rows = Vec::new();
+    for (w, d, label) in sizes {
+        let tau = recommended_tau(d);
+        let mut cells = vec![label.to_string()];
+        for (variant, precision) in
+            [("sp", "bf16"), ("sp", "fp8"), ("mus", "bf16"), ("mus", "fp8")]
+        {
+            let cfg = ModelConfig {
+                width: w,
+                depth: d,
+                variant: variant.into(),
+                precision: precision.into(),
+                residual: if variant == "mus" { "fixed".into() } else { "standard".into() },
+                ..ModelConfig::default()
+            };
+            let lr = if variant == "mus" { MUS_LR } else { SP_LR };
+            let r = train_cached(ctx, &cfg, &proxy_tc(steps, lr, WD, tau, 5))?;
+            cells.push(format!(
+                "{:.4}{}{}",
+                r.final_loss,
+                if r.spikes > 0 { format!(" ({}sp)", r.spikes) } else { String::new() },
+                if r.diverged { " DIV" } else { "" },
+            ));
+        }
+        rows.push(cells);
+    }
+    report.push_str(&table::render(
+        &["size", "SP BF16", "SP FP8(TE)", "µS BF16", "µS FP8"],
+        &rows,
+    ));
+    Ok(report)
+}
+
+/// Fig 8: throughput model over the paper's Table 4 shapes.
+pub fn fig8(_ctx: &Ctx) -> Result<String> {
+    let hw = Hw::default();
+    let rows: Vec<Vec<String>> = perf_fig8(&hw)
+        .iter()
+        .map(|r| {
+            vec![
+                r.size.to_string(),
+                format!("{:.2}M", r.bf16 / 1e6),
+                format!("{:.2}M", r.te / 1e6),
+                format!("{:.2}M", r.mus / 1e6),
+                format!("{:+.1}%", (r.mus_over_bf16() - 1.0) * 100.0),
+                format!("{:+.1}%", (r.mus_over_te() - 1.0) * 100.0),
+            ]
+        })
+        .collect();
+    let t = table::render(
+        &["model", "BF16 tok/s", "FP8 TE tok/s", "FP8 µS tok/s", "µS vs BF16", "µS vs TE"],
+        &rows,
+    );
+    Ok(format!(
+        "Fig 8 — training throughput, 64xH100 analytic model (DESIGN.md §2)\n\
+         Paper: µS 25-33% over BF16, 1-6% over TE.\n{t}"
+    ))
+}
+
+/// Fig 9: optimal τ vs depth (optimal-subset mean, App. A.2 method).
+pub fn fig9(ctx: &Ctx) -> Result<String> {
+    let depths = [4usize, 8, 16, 24];
+    let steps = ctx.steps(120);
+    let taus = [0.05, 0.1, 0.2, 0.3, 0.5, 0.7];
+    let mut rows = Vec::new();
+    for &d in &depths {
+        let cfg = proxy(64, d);
+        let points = sweep::grid(&[MUS_LR], &[WD], &taus);
+        let outcomes = sweep_cached(ctx, &cfg, &proxy_tc(steps, 0.0, 0.0, 0.0, 8), &points)?;
+        let subset = sweep::optimal_subset(&outcomes, 0.0025);
+        let tau_star: f64 =
+            subset.iter().map(|o| o.point.tau).sum::<f64>() / subset.len().max(1) as f64;
+        let best = sweep::best(&outcomes).context("diverged")?;
+        rows.push(vec![
+            d.to_string(),
+            table::f(tau_star, 3),
+            table::f(best.point.tau, 2),
+            table::f(best.final_loss, 4),
+            table::f(recommended_tau(d), 2),
+        ]);
+    }
+    let t = table::render(
+        &["depth", "τ* (subset mean)", "τ best", "loss", "recommended"],
+        &rows,
+    );
+    Ok(format!(
+        "Fig 9 — optimal residual coefficient τ* vs depth\n\
+         Expect: τ* decreases as depth increases.\n{t}"
+    ))
+}
+
+/// Fig 10: FP8 underflow of GELU/SiLU/ReLU outputs (pure rust MC over the
+/// software fp8 substrate).
+pub fn fig10(_ctx: &Ctx) -> Result<String> {
+    let mut rng = Rng::new(10);
+    let n = 400_000;
+    let mut rows = Vec::new();
+    for act in Activation::all() {
+        let un = activation_underflow(act, InputDist::StdNormal, E4M3, n, &mut rng);
+        let uu = activation_underflow(act, InputDist::Uniform128, E4M3, n, &mut rng);
+        rows.push(vec![
+            act.name().to_string(),
+            format!("{:.4}%", un * 100.0),
+            format!("{:.4}%", uu * 100.0),
+        ]);
+    }
+    let t = table::render(&["activation", "N(0,1) underflow", "Unif(-128,128) underflow"], &rows);
+    Ok(format!(
+        "Fig 10 — BF16→FP8(e4m3) underflow of activation outputs\n\
+         Expect: SiLU > GELU ≫ ReLU (≈0).\n{t}"
+    ))
+}
+
+/// Fig 11: underflow during training + low-precision convergence error per
+/// activation function.
+pub fn fig11(ctx: &Ctx) -> Result<String> {
+    let steps = ctx.steps(150);
+    let mut rows = Vec::new();
+    for act in ["gelu", "silu", "relu"] {
+        let mk = |precision: &str| ModelConfig {
+            activation: act.into(),
+            precision: precision.into(),
+            ..proxy(64, 4)
+        };
+        let tau = 0.4;
+        let (r8, state8) = train_with_state(ctx, &mk("fp8"), &proxy_tc(steps, MUS_LR, WD, tau, 11))?;
+        let r16 = train_cached(ctx, &mk("bf16"), &proxy_tc(steps, MUS_LR, WD, tau, 11))?;
+        // probe the trained fp8 model's act-output underflow (col 3 of the
+        // probe's underflow block)
+        let probe = run_probe(ctx, &mk("fp8"), state8.params(), tau, 99)?;
+        let u = &probe.iter().find(|(n, _)| n == "underflow").unwrap().1;
+        let act_under: f64 =
+            (0..4).map(|l| u[l * 5 + 3] as f64).sum::<f64>() / 4.0;
+        let conv_err = (r8.final_loss - r16.final_loss) / r16.final_loss * 100.0;
+        rows.push(vec![
+            act.to_string(),
+            format!("{:.4}%", act_under * 100.0),
+            table::f(r8.final_loss, 4),
+            table::f(r16.final_loss, 4),
+            format!("{:+.3}%", conv_err),
+        ]);
+    }
+    let t = table::render(
+        &["activation", "act-out underflow", "FP8 loss", "BF16 loss", "conv. error"],
+        &rows,
+    );
+    Ok(format!(
+        "Fig 11 — training-time FP8 underflow & low-precision convergence error\n\
+         Expect: relu ≈ 0 underflow and smallest |conv. error|; gelu/silu higher.\n{t}"
+    ))
+}
+
+/// Fig 12: activation outliers — µS vs SP block input/output tail mass.
+pub fn fig12(ctx: &Ctx) -> Result<String> {
+    let steps = ctx.steps(150);
+    let mus = proxy(128, 6);
+    let sp = sp_proxy(128, 6);
+    let tau = recommended_tau(6);
+    let (_rm, sm) = train_with_state(ctx, &mus, &proxy_tc(steps, MUS_LR, WD, tau, 12))?;
+    let (_rs, ss) = train_with_state(ctx, &sp, &proxy_tc(steps, SP_LR, WD, 0.0, 12))?;
+    let pm = run_probe(ctx, &mus, sm.params(), tau, 99)?;
+    let ps = run_probe(ctx, &sp, ss.params(), 0.0, 99)?;
+    let lo = crate::analysis::HIST_LO_EXP;
+    let tail = |probe: &[(String, Vec<f32>)], key: &str, layer: usize| -> f64 {
+        let h = &probe.iter().find(|(n, _)| n == key).unwrap().1;
+        let nb = h.len() / 6;
+        hist_tail_mass(&h[layer * nb..(layer + 1) * nb], lo, 16.0)
+    };
+    let mut rows = Vec::new();
+    for l in 0..6 {
+        rows.push(vec![
+            l.to_string(),
+            format!("{:.2e}", tail(&ps, "hist_in", l)),
+            format!("{:.2e}", tail(&pm, "hist_in", l)),
+            format!("{:.2e}", tail(&ps, "hist_out", l)),
+            format!("{:.2e}", tail(&pm, "hist_out", l)),
+        ]);
+    }
+    let t = table::render(
+        &["layer", "SP in>16", "µS in>16", "SP out>16", "µS out>16"],
+        &rows,
+    );
+    Ok(format!(
+        "Fig 12 — activation outlier tail mass (fraction of |x| ≥ 16)\n\
+         Expect: SP block inputs grow heavy right tails; µS stays clean.\n{t}"
+    ))
+}

@@ -1,0 +1,210 @@
+//! Experiment reproduction drivers: one entry point per paper table/figure
+//! (DESIGN.md §4 index). Each driver trains/loads what it needs, prints an
+//! aligned table mirroring the paper's rows/series, and persists raw data
+//! under `results/` (JSON) so reruns are incremental.
+
+pub mod figures;
+pub mod tables;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+use xla::Literal;
+
+use crate::config::{ModelConfig, Schedule, TrainConfig};
+use crate::coordinator::checkpoint;
+use crate::coordinator::trainer::Trainer;
+use crate::data::{Batcher, CorpusSpec};
+use crate::runtime::{scalar_f32, to_f32_vec, Engine};
+use crate::util::json::Json;
+
+/// Shared driver context.
+pub struct Ctx {
+    pub engine: Engine,
+    pub results: PathBuf,
+    /// Fast mode: fewer steps / smaller grids (CI-sized).
+    pub fast: bool,
+}
+
+impl Ctx {
+    pub fn new(artifact_dir: &Path, results: &Path, fast: bool) -> Result<Ctx> {
+        std::fs::create_dir_all(results.join("runs"))?;
+        Ok(Ctx { engine: Engine::new(artifact_dir)?, results: results.to_path_buf(), fast })
+    }
+
+    pub fn steps(&self, full: usize) -> usize {
+        if self.fast {
+            (full / 3).max(30)
+        } else {
+            full
+        }
+    }
+}
+
+/// Summary of one cached training run.
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    pub losses: Vec<f32>,
+    pub final_loss: f64,
+    pub diverged: bool,
+    pub spikes: usize,
+    pub tokens_per_sec: f64,
+}
+
+impl RunSummary {
+    fn from_json(j: &Json) -> Option<RunSummary> {
+        let losses = j
+            .get("losses")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_f64().unwrap_or(f64::NAN) as f32)
+            .collect();
+        Some(RunSummary {
+            losses,
+            final_loss: j.f64_or("final_loss", f64::NAN),
+            diverged: j.get("diverged")?.as_bool()?,
+            spikes: j.usize_or("spikes", 0),
+            tokens_per_sec: j.f64_or("tokens_per_sec", 0.0),
+        })
+    }
+}
+
+/// Stable cache key for a (config, hyperparameters) training run.
+pub fn run_key(cfg: &ModelConfig, tc: &TrainConfig) -> String {
+    format!(
+        "{}_s{}_lr{:.6}_wd{:.6}_tau{:.3}_seed{}",
+        cfg.name(),
+        tc.steps,
+        tc.lr,
+        tc.wd,
+        tc.tau,
+        tc.seed
+    )
+}
+
+/// Train (or load from cache) one run. The trained state is checkpointed
+/// alongside the summary so probes/evals can reuse the weights.
+pub fn train_cached(ctx: &Ctx, cfg: &ModelConfig, tc: &TrainConfig) -> Result<RunSummary> {
+    let key = run_key(cfg, tc);
+    let json_path = ctx.results.join("runs").join(format!("{key}.json"));
+    if let Ok(text) = std::fs::read_to_string(&json_path) {
+        if let Ok(j) = Json::parse(&text) {
+            if let Some(s) = RunSummary::from_json(&j) {
+                return Ok(s);
+            }
+        }
+    }
+    train_with_state(ctx, cfg, tc).map(|(s, _)| s)
+}
+
+/// Like train_cached but also returns the trained state (checkpointed as
+/// `<key>.ckpt` for cache hits).
+pub fn train_with_state(
+    ctx: &Ctx,
+    cfg: &ModelConfig,
+    tc: &TrainConfig,
+) -> Result<(RunSummary, crate::coordinator::trainer::TrainState)> {
+    let key = run_key(cfg, tc);
+    let ckpt_path = ctx.results.join("runs").join(format!("{key}.ckpt"));
+    let meta = ctx
+        .engine
+        .manifest
+        .find_for("train_step", cfg)
+        .with_context(|| format!("no train artifact for {}", cfg.name()))?;
+    let specs = meta.inputs[..meta.inputs.len() - 4].to_vec();
+    if ckpt_path.exists() {
+        if let Ok(summary) = train_cached(ctx, cfg, tc) {
+            if let Ok(state) = checkpoint::load(&ckpt_path, &specs) {
+                return Ok((summary, state));
+            }
+        }
+    }
+    let trainer = Trainer::new(&ctx.engine, cfg)?;
+    let mut batcher = corpus_batcher(cfg, tc.seed);
+    let mut state = trainer.init(tc.init_seed)?;
+    let mut losses = Vec::with_capacity(tc.steps);
+    let t0 = std::time::Instant::now();
+    let mut diverged = false;
+    for step in 0..tc.steps {
+        let lr = tc.schedule.lr_at(tc.lr, step, tc.steps);
+        let tokens = batcher.next_batch();
+        let (loss, _g) = trainer.step(&mut state, &tokens, lr, tc.wd, tc.tau)?;
+        losses.push(loss);
+        if step % 50 == 0 {
+            eprintln!("    [{key}] step {step} loss {loss:.4}");
+        }
+        if !loss.is_finite() || loss as f64 > tc.max_loss {
+            diverged = true;
+            break;
+        }
+    }
+    let wall = t0.elapsed();
+    let result = crate::coordinator::trainer::RunResult {
+        steps_done: losses.len(),
+        tokens_per_sec: (losses.len() * cfg.batch * cfg.seq_len) as f64
+            / wall.as_secs_f64().max(1e-9),
+        losses,
+        gnorms: vec![],
+        diverged,
+        spikes: 0,
+        wall,
+    };
+    checkpoint::save(&ckpt_path, &state, &specs)?;
+    let summary = crate::coordinator::metrics::summary_json(&key, &result);
+    std::fs::write(ctx.results.join("runs").join(format!("{key}.json")), summary.to_string())?;
+    Ok((RunSummary::from_json(&summary).unwrap(), state))
+}
+
+pub fn corpus_batcher(cfg: &ModelConfig, seed: u64) -> Batcher {
+    let spec = CorpusSpec { vocab: cfg.vocab, ..CorpusSpec::default() };
+    Batcher::new(spec, seed, 0, 1, cfg.batch, cfg.seq_len)
+}
+
+pub fn corpus_for(cfg: &ModelConfig) -> CorpusSpec {
+    CorpusSpec { vocab: cfg.vocab, ..CorpusSpec::default() }
+}
+
+/// Run a probe artifact on a trained state; returns the named outputs.
+pub fn run_probe(
+    ctx: &Ctx,
+    cfg: &ModelConfig,
+    params: &[Literal],
+    tau: f64,
+    seed: u64,
+) -> Result<Vec<(String, Vec<f32>)>> {
+    let meta = ctx
+        .engine
+        .manifest
+        .find_for("probe", cfg)
+        .with_context(|| format!("no probe artifact for {}", cfg.name()))?;
+    let name = meta.name.clone();
+    let out_names: Vec<String> = meta.outputs.iter().map(|o| o.name.clone()).collect();
+    let mut batcher = corpus_batcher(cfg, seed);
+    let tokens = batcher.next_batch();
+    let tok = crate::runtime::lit_i32(&tokens, &[cfg.batch, cfg.seq_len])?;
+    let tau_l = scalar_f32(tau as f32);
+    let mut inputs: Vec<&Literal> = params.iter().collect();
+    inputs.push(&tok);
+    inputs.push(&tau_l);
+    let outs = ctx.engine.run(&name, &inputs)?;
+    Ok(out_names
+        .into_iter()
+        .zip(outs.iter().map(|l| to_f32_vec(l).unwrap_or_default()))
+        .collect())
+}
+
+/// Standard quick TrainConfig for proxy experiments.
+pub fn proxy_tc(steps: usize, lr: f64, wd: f64, tau: f64, seed: u64) -> TrainConfig {
+    TrainConfig {
+        steps,
+        lr,
+        wd,
+        tau,
+        schedule: Schedule::Cosine { final_frac: 0.1, warmup: steps / 20 + 1 },
+        seed,
+        init_seed: 0,
+        max_loss: 20.0,
+        spike_threshold: 1.0,
+        log_every: 50,
+    }
+}

@@ -1,0 +1,211 @@
+//! artifacts/manifest.json parsing — the L2<->L3 ABI description.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::ModelConfig;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unsupported manifest dtype {other}"),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let name = j
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("tensor spec missing name"))?
+            .to_string();
+        let shape = j
+            .get("shape")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("tensor spec missing shape"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = Dtype::parse(j.str_or("dtype", "f32"))?;
+        Ok(TensorSpec { name, shape, dtype })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: String,
+    pub file: String,
+    pub config: Option<ModelConfig>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let arts = j
+            .get("artifacts")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            let inputs = a
+                .get("inputs")
+                .and_then(|v| v.as_arr())
+                .unwrap_or(&[])
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = a
+                .get("outputs")
+                .and_then(|v| v.as_arr())
+                .unwrap_or(&[])
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let config = a.get("config").and_then(ModelConfig::from_json);
+            artifacts.push(ArtifactMeta {
+                name: a.str_or("name", "").to_string(),
+                kind: a.str_or("kind", "").to_string(),
+                file: a.str_or("file", "").to_string(),
+                config,
+                inputs,
+                outputs,
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Artifact of `kind` for a model config (by canonical config name).
+    pub fn find_for(&self, kind: &str, cfg: &ModelConfig) -> Option<&ArtifactMeta> {
+        let want = format!("{}_{}", prefix_of(kind), cfg.name());
+        self.artifacts.iter().find(|a| a.name == want)
+    }
+
+    pub fn of_kind<'a>(&'a self, kind: &'a str) -> impl Iterator<Item = &'a ArtifactMeta> + 'a {
+        self.artifacts.iter().filter(move |a| a.kind == kind)
+    }
+}
+
+fn prefix_of(kind: &str) -> &str {
+    match kind {
+        "train_step" => "train",
+        "init" => "init",
+        "fwd" => "fwd",
+        "probe" => "probe",
+        other => other,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"name": "train_mus_fp8_w64_d4_v512_s128_b4", "kind": "train_step",
+         "file": "t.hlo.txt",
+         "config": {"width": 64, "depth": 4, "head_dim": 16, "vocab": 512,
+                    "seq_len": 128, "batch": 4, "ffn_ratio": 4, "d_base": 32,
+                    "variant": "mus", "precision": "fp8",
+                    "residual": "fixed", "activation": "gelu"},
+         "inputs": [{"name": "embed", "shape": [512, 64], "dtype": "f32"},
+                    {"name": "tokens", "shape": [4, 128], "dtype": "i32"}],
+         "outputs": [{"name": "loss", "shape": [], "dtype": "f32"}]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = &m.artifacts[0];
+        assert_eq!(a.kind, "train_step");
+        assert_eq!(a.inputs[0].shape, vec![512, 64]);
+        assert_eq!(a.inputs[1].dtype, Dtype::I32);
+        assert_eq!(a.outputs[0].elements(), 1);
+        let cfg = a.config.as_ref().unwrap();
+        assert_eq!(cfg.width, 64);
+        assert_eq!(cfg.name(), "mus_fp8_w64_d4_v512_s128_b4");
+    }
+
+    #[test]
+    fn find_for_matches_config() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        let cfg = m.artifacts[0].config.clone().unwrap();
+        assert!(m.find_for("train_step", &cfg).is_some());
+        assert!(m.find_for("init", &cfg).is_none());
+    }
+
+    #[test]
+    fn rejects_bad_manifest() {
+        assert!(Manifest::parse(Path::new("/tmp"), "{}").is_err());
+        assert!(Manifest::parse(Path::new("/tmp"), "not json").is_err());
+    }
+
+    /// The real shipped manifest parses and is self-consistent.
+    #[test]
+    fn shipped_manifest_parses() {
+        let dir = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(dir).unwrap();
+        assert!(m.artifacts.len() > 10);
+        for a in &m.artifacts {
+            assert!(!a.name.is_empty());
+            assert!(dir.join(&a.file).exists(), "{} missing", a.file);
+            if a.kind == "train_step" {
+                let cfg = a.config.as_ref().expect("train artifact without config");
+                // ABI: inputs = 2*nparams + tokens + lr + wd + tau
+                assert_eq!(a.inputs.len(), a.outputs.len() + 2);
+                let tok = &a.inputs[a.inputs.len() - 4];
+                assert_eq!(tok.name, "tokens");
+                assert_eq!(tok.shape, vec![cfg.batch, cfg.seq_len]);
+                assert_eq!(a.name, format!("train_{}", cfg.name()));
+            }
+        }
+    }
+}

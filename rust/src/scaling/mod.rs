@@ -1,0 +1,283 @@
+//! Parametrization & hyperparameter-transfer rule library.
+//!
+//! Encodes the comparison in the paper's Fig 1 / Tables 1-3: for each
+//! scheme (SP, µP, Unit Scaling / u-µP, TE-style dynamic FP8, and µS), the
+//! per-tensor init variance, output multiplier, learning-rate and
+//! weight-decay transfer rules, and the hyperparameter set a practitioner
+//! must sweep. The trainer and sweep engine consult this module; it is the
+//! single source of truth mirrored by `python/compile/configs.py` (tested
+//! for agreement via the manifest).
+
+/// Which parametrization scheme a model is trained under.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scheme {
+    /// Standard parametrization, BF16 mixed precision (baseline).
+    Sp,
+    /// Maximal Update Parametrization (Yang et al. 2021).
+    Mup,
+    /// Unit Scaling / u-µP (Blake et al. 2023/2024).
+    Ump,
+    /// SP with TransformerEngine-style dynamically scaled FP8.
+    SpTe,
+    /// µnit Scaling (this paper).
+    Mus,
+}
+
+/// Role of a tensor for scaling purposes (paper Table 2 columns).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParamKind {
+    /// Embedding table (input layer).
+    Input,
+    /// Hidden linear layers: qkv / attn-out / ffn-up / ffn-down.
+    Hidden,
+    /// LM head (output layer).
+    Output,
+    /// LayerNorm gains/biases.
+    Norm,
+}
+
+impl Scheme {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::Sp => "SP (BF16)",
+            Scheme::Mup => "µP",
+            Scheme::Ump => "Unit Scaling / u-µP",
+            Scheme::SpTe => "Dynamically scaled FP8 (TE)",
+            Scheme::Mus => "µnit Scaling (ours)",
+        }
+    }
+
+    /// Hyperparameters one sweeps in practice (paper Table 3).
+    pub fn hyperparameters(&self) -> &'static [&'static str] {
+        match self {
+            Scheme::Sp | Scheme::SpTe => &["eta", "lambda", "sigma_init"],
+            Scheme::Mus => &["eta", "lambda", "tau"],
+            Scheme::Mup => &[
+                "eta", "lambda", "sigma_init", "alpha_res", "alpha_attn", "alpha_out",
+            ],
+            Scheme::Ump => &[
+                "eta", "lambda", "alpha_ffn_act", "alpha_attn_softmax", "alpha_res",
+                "alpha_res_attn_ratio", "alpha_loss_softmax",
+            ],
+        }
+    }
+
+    /// Does the scheme use FP8 compute for hidden linears? (Fig 1 col 1)
+    /// Returns fraction of hidden matmul FLOPs in FP8.
+    pub fn fp8_hidden_fraction(&self) -> f64 {
+        match self {
+            Scheme::Sp | Scheme::Mup => 0.0,
+            // u-µP keeps "critical matmuls" (attn-out, ffn-down) in BF16:
+            // with MHA + 4x FFN that is 41.7% of hidden FLOPs (paper §1)
+            Scheme::Ump => 1.0 - 0.417,
+            Scheme::SpTe | Scheme::Mus => 1.0,
+        }
+    }
+
+    pub fn supports_hp_transfer(&self) -> bool {
+        matches!(self, Scheme::Mup | Scheme::Ump | Scheme::Mus)
+    }
+
+    pub fn uses_dynamic_scaling(&self) -> bool {
+        matches!(self, Scheme::SpTe)
+    }
+
+    /// Init std for a tensor. `fan_in` is the matmul contraction dim,
+    /// `sigma_init` the SP tuning knob.
+    pub fn init_std(&self, kind: ParamKind, fan_in: usize, sigma_init: f64) -> f64 {
+        match (self, kind) {
+            (_, ParamKind::Norm) => 0.0, // gain=1/bias=0, not random
+            (Scheme::Sp | Scheme::SpTe, _) => sigma_init,
+            (Scheme::Mup, ParamKind::Hidden | ParamKind::Output) => {
+                1.0 / (fan_in as f64).sqrt()
+            }
+            (Scheme::Mup, ParamKind::Input) => sigma_init,
+            (Scheme::Ump | Scheme::Mus, _) => 1.0, // unit variance everywhere
+        }
+    }
+
+    /// Static output multiplier for a tensor (paper Table 2 for µS).
+    pub fn output_mult(&self, kind: ParamKind, fan_in: usize) -> f64 {
+        match (self, kind) {
+            (Scheme::Mus | Scheme::Ump, ParamKind::Hidden) => 1.0 / (fan_in as f64).sqrt(),
+            (Scheme::Mus | Scheme::Ump, ParamKind::Output) => 1.0 / fan_in as f64,
+            (Scheme::Mup, ParamKind::Output) => 1.0 / fan_in as f64,
+            _ => 1.0,
+        }
+    }
+
+    /// Zero-shot LR transfer: multiplier on the base learning rate when
+    /// growing width from `d_base` to `d_new` (Adam-like optimizers).
+    pub fn lr_transfer(&self, kind: ParamKind, d_base: usize, d_new: usize) -> f64 {
+        let ratio = d_base as f64 / d_new as f64;
+        match (self, kind) {
+            // µS §2.3: hidden layers scale as sqrt(d_base/d_new); embedding,
+            // norms and head keep eta constant.
+            (Scheme::Mus, ParamKind::Hidden) => ratio.sqrt(),
+            (Scheme::Mus, _) => 1.0,
+            // µP (Adam): hidden LR ~ 1/width; input/output constant.
+            (Scheme::Mup | Scheme::Ump, ParamKind::Hidden) => ratio,
+            (Scheme::Mup | Scheme::Ump, _) => 1.0,
+            // SP has no principled rule; the paper's empirical recipe is
+            // eta_new = eta_base * d_base/d_new for ALL layers (§3.2).
+            (Scheme::Sp | Scheme::SpTe, _) => ratio,
+        }
+    }
+
+    /// Fully-decoupled weight decay transfer (paper §3.2).
+    pub fn wd_transfer(&self, d_base: usize, d_new: usize) -> f64 {
+        match self {
+            // µS: lambda* stays constant across widths.
+            Scheme::Mus | Scheme::Mup | Scheme::Ump => 1.0,
+            // SP: the paper's large-model recipe halves lambda at transfer.
+            Scheme::Sp | Scheme::SpTe => {
+                if d_new > d_base {
+                    0.5
+                } else {
+                    1.0
+                }
+            }
+        }
+    }
+}
+
+/// One row of the paper's Fig 1 comparison matrix.
+#[derive(Debug, Clone)]
+pub struct SchemeRow {
+    pub scheme: Scheme,
+    pub uses_fp8: bool,
+    pub hp_transfer: bool,
+    pub n_hparams: usize,
+    pub no_dynamic_scaling: bool,
+    pub train_infer_match: bool,
+}
+
+/// The Fig 1 matrix, one row per scheme.
+pub fn comparison_matrix() -> Vec<SchemeRow> {
+    [Scheme::Sp, Scheme::Mup, Scheme::Ump, Scheme::SpTe, Scheme::Mus]
+        .into_iter()
+        .map(|s| SchemeRow {
+            scheme: s,
+            uses_fp8: s.fp8_hidden_fraction() > 0.0,
+            hp_transfer: s.supports_hp_transfer(),
+            n_hparams: s.hyperparameters().len(),
+            no_dynamic_scaling: !s.uses_dynamic_scaling(),
+            train_infer_match: s.fp8_hidden_fraction() >= 1.0,
+        })
+        .collect()
+}
+
+/// Residual-coefficient recommendation: τ* decreases with depth (paper
+/// Fig 9 / App. A.2). Piecewise fit of the published sweep results, used
+/// by presets (Table 4 uses 0.3 for 24-32 layers, 0.2 for 40).
+pub fn recommended_tau(depth: usize) -> f64 {
+    match depth {
+        0..=4 => 0.4,
+        5..=11 => 0.35,
+        12..=23 => 0.3,
+        24..=35 => 0.3,
+        36..=59 => 0.2,
+        _ => 0.1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_hparam_counts() {
+        assert_eq!(Scheme::Mus.hyperparameters().len(), 3);
+        assert_eq!(Scheme::Sp.hyperparameters().len(), 3);
+        assert_eq!(Scheme::Mup.hyperparameters().len(), 6);
+        assert_eq!(Scheme::Ump.hyperparameters().len(), 7);
+    }
+
+    #[test]
+    fn fig1_matrix_mus_has_all_properties() {
+        let rows = comparison_matrix();
+        let mus = rows.iter().find(|r| r.scheme == Scheme::Mus).unwrap();
+        assert!(mus.uses_fp8 && mus.hp_transfer && mus.no_dynamic_scaling);
+        assert!(mus.train_infer_match);
+        assert_eq!(mus.n_hparams, 3);
+        // no other scheme has every property
+        for r in &rows {
+            if r.scheme != Scheme::Mus {
+                let all = r.uses_fp8 && r.hp_transfer && r.no_dynamic_scaling
+                    && r.train_infer_match && r.n_hparams <= 3;
+                assert!(!all, "{:?}", r.scheme);
+            }
+        }
+    }
+
+    #[test]
+    fn mus_lr_transfer_sqrt_rule() {
+        // 20x width transfer of the paper: 256 -> 5120
+        let m = Scheme::Mus.lr_transfer(ParamKind::Hidden, 256, 5120);
+        assert!((m - (256.0f64 / 5120.0).sqrt()).abs() < 1e-12);
+        assert_eq!(Scheme::Mus.lr_transfer(ParamKind::Input, 256, 5120), 1.0);
+        assert_eq!(Scheme::Mus.lr_transfer(ParamKind::Output, 256, 5120), 1.0);
+        assert_eq!(Scheme::Mus.lr_transfer(ParamKind::Norm, 256, 5120), 1.0);
+    }
+
+    #[test]
+    fn sp_lr_transfer_linear_rule() {
+        assert!((Scheme::Sp.lr_transfer(ParamKind::Hidden, 256, 2048) - 0.125).abs() < 1e-12);
+        assert!((Scheme::Sp.lr_transfer(ParamKind::Input, 256, 2048) - 0.125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wd_transfer_rules() {
+        assert_eq!(Scheme::Mus.wd_transfer(256, 5120), 1.0);
+        assert_eq!(Scheme::Sp.wd_transfer(256, 5120), 0.5);
+        assert_eq!(Scheme::Sp.wd_transfer(256, 256), 1.0);
+    }
+
+    #[test]
+    fn mus_output_mults_match_table2() {
+        assert!((Scheme::Mus.output_mult(ParamKind::Hidden, 1024) - 1.0 / 32.0).abs() < 1e-12);
+        assert!((Scheme::Mus.output_mult(ParamKind::Output, 1024) - 1.0 / 1024.0).abs() < 1e-12);
+        assert_eq!(Scheme::Mus.output_mult(ParamKind::Input, 1024), 1.0);
+    }
+
+    #[test]
+    fn mus_unit_init() {
+        assert_eq!(Scheme::Mus.init_std(ParamKind::Hidden, 4096, 0.02), 1.0);
+        assert_eq!(Scheme::Mus.init_std(ParamKind::Input, 4096, 0.02), 1.0);
+        assert_eq!(Scheme::Sp.init_std(ParamKind::Hidden, 4096, 0.02), 0.02);
+    }
+
+    #[test]
+    fn ump_partial_fp8() {
+        let f = Scheme::Ump.fp8_hidden_fraction();
+        assert!(f > 0.5 && f < 1.0);
+    }
+
+    #[test]
+    fn tau_decreases_with_depth() {
+        // paper Table 4: tau 0.3 at depth 24-32, 0.2 at depth 40
+        assert!((recommended_tau(24) - 0.3).abs() < 1e-12);
+        assert!((recommended_tau(32) - 0.3).abs() < 1e-12);
+        assert!((recommended_tau(40) - 0.2).abs() < 1e-12);
+        let mut prev = f64::INFINITY;
+        for d in [4, 8, 16, 24, 40, 100] {
+            let t = recommended_tau(d);
+            assert!(t <= prev);
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn mup_abc_equivalence_to_mus() {
+        // Eq. 15-16: theta = 1/sqrt(fan_in) maps µP's (a=1, b=1/sqrt(f),
+        // c=1/f) to µS's (a=1/sqrt(f), b=1, c=1/sqrt(f)).
+        let f = 4096usize;
+        let theta = 1.0 / (f as f64).sqrt();
+        let (a, b, c) = (1.0, 1.0 / (f as f64).sqrt(), 1.0 / f as f64);
+        let (a2, b2, c2) = (a * theta, b / theta, c / theta);
+        assert!((a2 - Scheme::Mus.output_mult(ParamKind::Hidden, f)).abs() < 1e-15);
+        assert!((b2 - Scheme::Mus.init_std(ParamKind::Hidden, f, 0.0)).abs() < 1e-15);
+        // c2 = 1/sqrt(f): the sqrt LR rule µS uses
+        assert!((c2 - theta).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,101 @@
+//! Tiny benchmark harness (criterion is unavailable offline).
+//!
+//! Used by `cargo bench` targets declared with `harness = false`: warmup,
+//! timed iterations, robust stats, aligned report lines.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub min: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10} {:>12} {:>12} {:>12}  ({} iters)",
+            self.name,
+            fmt_dur(self.min),
+            fmt_dur(self.p50),
+            fmt_dur(self.mean),
+            fmt_dur(self.p95),
+            self.iters
+        )
+    }
+}
+
+pub fn header() -> String {
+    format!(
+        "{:<44} {:>10} {:>12} {:>12} {:>12}",
+        "benchmark", "min", "p50", "mean", "p95"
+    )
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2}s", ns as f64 / 1e9)
+    }
+}
+
+/// Run `f` repeatedly: `warmup` unmeasured calls, then measured calls until
+/// `budget` elapses (at least `min_iters`). Returns timing stats.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, min_iters: usize, budget: Duration, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<Duration> = Vec::new();
+    let start = Instant::now();
+    while samples.len() < min_iters || (start.elapsed() < budget && samples.len() < 10_000) {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    samples.sort();
+    let total: Duration = samples.iter().sum();
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean: total / samples.len() as u32,
+        min: samples[0],
+        p50: samples[samples.len() / 2],
+        p95: samples[(samples.len() as f64 * 0.95) as usize - if samples.len() > 1 { 1 } else { 0 }],
+    }
+}
+
+/// Convenience wrapper with sane defaults for sub-ms benches.
+pub fn quick<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    bench(name, 3, 10, Duration::from_millis(500), f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_samples_and_orders_percentiles() {
+        let r = bench("t", 1, 5, Duration::from_millis(5), || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(r.iters >= 5);
+        assert!(r.min <= r.p50 && r.p50 <= r.p95);
+    }
+
+    #[test]
+    fn fmt_is_human() {
+        assert!(fmt_dur(Duration::from_nanos(12)).ends_with("ns"));
+        assert!(fmt_dur(Duration::from_micros(12)).ends_with("µs"));
+        assert!(fmt_dur(Duration::from_millis(12)).ends_with("ms"));
+    }
+}

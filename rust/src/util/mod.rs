@@ -1,0 +1,10 @@
+//! Shared substrates: JSON, deterministic RNG, numeric helpers, tables,
+//! bench harness, property-testing helper. Everything here is hand-rolled
+//! because the build is fully offline (see DESIGN.md).
+
+pub mod bench;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,56 @@
+//! Property-testing helper (the `proptest` crate is unavailable offline).
+//!
+//! `check` runs a property over `n` seeded random cases; on failure it
+//! reports the failing case index and seed so the case can be replayed
+//! deterministically. No shrinking — cases are kept small instead.
+
+use super::rng::Rng;
+
+/// Run `prop(rng, case)` for `n` cases. Panics with a replayable seed on the
+/// first failure (a returned Err(msg)).
+pub fn check<F>(name: &str, n: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    let base_seed = 0xC0FFEE_u64;
+    for case in 0..n {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng, case) {
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("u64 parity", 50, |rng, _| {
+            let x = rng.next_u64();
+            if x % 2 == (x & 1) {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn reports_failure() {
+        check("always fails", 3, |_, _| Err("nope".into()));
+    }
+}

@@ -1,0 +1,130 @@
+//! Small numeric helpers shared by analysis / eval / benches.
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std(xs: &[f32]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+pub fn min(xs: &[f32]) -> f32 {
+    xs.iter().copied().fold(f32::INFINITY, f32::min)
+}
+
+pub fn max(xs: &[f32]) -> f32 {
+    xs.iter().copied().fold(f32::NEG_INFINITY, f32::max)
+}
+
+/// In-place numerically-stable softmax.
+pub fn softmax_inplace(xs: &mut [f32]) {
+    let m = max(xs);
+    let mut sum = 0.0f64;
+    for x in xs.iter_mut() {
+        *x = (*x - m).exp();
+        sum += *x as f64;
+    }
+    for x in xs.iter_mut() {
+        *x = (*x as f64 / sum) as f32;
+    }
+}
+
+/// Percentile (nearest-rank) of an unsorted slice.
+pub fn percentile(xs: &[f32], p: f64) -> f32 {
+    assert!(!xs.is_empty());
+    let mut v: Vec<f32> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+    v[idx.min(v.len() - 1)]
+}
+
+/// Cosine similarity of two equal-length vectors.
+pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    let dot: f64 = a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum();
+    let na: f64 = a.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+    let nb: f64 = b.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+    if na == 0.0 || nb == 0.0 {
+        0.0
+    } else {
+        dot / (na * nb)
+    }
+}
+
+/// Exponential moving average tracker.
+#[derive(Debug, Clone)]
+pub struct Ema {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ema {
+    pub fn new(alpha: f64) -> Self {
+        Ema { alpha, value: None }
+    }
+    pub fn update(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(v) => v + self.alpha * (x - v),
+        };
+        self.value = Some(v);
+        v
+    }
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basic() {
+        let xs = [1.0f32, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-9);
+        assert!((std(&xs) - 1.118_033_988).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_sums_to_one_and_is_stable() {
+        let mut xs = [1000.0f32, 1001.0, 999.0];
+        softmax_inplace(&mut xs);
+        let s: f32 = xs.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+        assert!(xs[1] > xs[0] && xs[0] > xs[2]);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs = [5.0f32, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+    }
+
+    #[test]
+    fn cosine_bounds() {
+        let a = [1.0f32, 0.0];
+        assert!((cosine(&a, &[2.0, 0.0]) - 1.0).abs() < 1e-9);
+        assert!((cosine(&a, &[0.0, 1.0])).abs() < 1e-9);
+        assert!((cosine(&a, &[-1.0, 0.0]) + 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ema_converges() {
+        let mut e = Ema::new(0.5);
+        for _ in 0..20 {
+            e.update(10.0);
+        }
+        assert!((e.get().unwrap() - 10.0).abs() < 1e-3);
+    }
+}
