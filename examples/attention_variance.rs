@@ -8,11 +8,12 @@
 use munit::analysis::{
     attention_sigma2_theory, attention_sigma_iid, iid_cosine_baseline, AttentionKind,
 };
-use munit::runtime::{lit_f32, to_f32_vec, Engine};
+use munit::runtime::{open_backend, tensor_f32, to_f32_vec, Backend};
+use munit::util::error::Result;
 use munit::util::rng::Rng;
 use munit::util::stats;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let mut rng = Rng::new(7);
     let positions = [2usize, 4, 8, 16, 32, 64, 128, 256, 512, 1024];
 
@@ -33,25 +34,26 @@ fn main() -> anyhow::Result<()> {
     println!("\nstandard attention σ ~ sqrt(e/k) (Prop. 2.1); sqrt-softmax σ ≈ 1 (Eq. 8).");
     println!("iid |cos| baseline at d=16 (Fig 3): {:.4}", iid_cosine_baseline(16));
 
-    // Cross-check through the Pallas kernel artifact, if built: run the
-    // kernels_demo attention on iid inputs and compare early/late stds.
-    if let Ok(engine) = Engine::new("artifacts") {
+    // Cross-check through the Pallas kernel artifact, if available: the
+    // kernels_demo artifact only exists in the AOT catalogue (pjrt build).
+    let backend = open_backend("artifacts")?;
+    if backend.manifest().find("kernels_demo").is_some() {
         let (bh, s, dh) = (2usize, 64usize, 16usize);
         let mut fill = |n: usize| {
             let mut v = vec![0f32; n];
             rng.fill_normal(&mut v, 1.0);
             v
         };
-        let x = lit_f32(&fill(64 * 32), &[64, 32])?;
-        let g = lit_f32(&vec![1.0; 32], &[32])?;
-        let b = lit_f32(&vec![0.0; 32], &[32])?;
-        let mk = |v: &[f32]| lit_f32(v, &[bh, s, dh]);
+        let x = tensor_f32(&fill(64 * 32), &[64, 32])?;
+        let g = tensor_f32(&vec![1.0; 32], &[32])?;
+        let b = tensor_f32(&vec![0.0; 32], &[32])?;
+        let mk = |v: &[f32]| tensor_f32(v, &[bh, s, dh]);
         // scale q,k so logits are ~N(0,1) like the simulation
         let scale = (dh as f32).powf(-0.25);
         let q: Vec<f32> = fill(bh * s * dh).iter().map(|v| v * scale).collect();
         let k: Vec<f32> = fill(bh * s * dh).iter().map(|v| v * scale).collect();
         let v = fill(bh * s * dh);
-        let outs = engine.run("kernels_demo", &[x, g, b, mk(&q)?, mk(&k)?, mk(&v)?])?;
+        let outs = backend.run("kernels_demo", &[x, g, b, mk(&q)?, mk(&k)?, mk(&v)?])?;
         let a_std = to_f32_vec(&outs[3])?;
         let a_sqrt = to_f32_vec(&outs[4])?;
         let pos_std = |out: &[f32], pos: usize| {
@@ -72,7 +74,7 @@ fn main() -> anyhow::Result<()> {
             );
         }
     } else {
-        println!("\n(artifacts not built; skipping the Pallas kernel cross-check)");
+        println!("\n(no kernels_demo artifact on this backend; skipping the Pallas cross-check)");
     }
     Ok(())
 }

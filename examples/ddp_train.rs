@@ -3,6 +3,9 @@
 //! lockstep steps, parameter-mean allreduce — with NO per-tensor amax
 //! exchange, the distributed-training simplification µS buys (§3.3).
 //!
+//! Each worker owns a device-resident Session; the allreduce is the only
+//! full-state host transfer per step (the collective boundary).
+//!
 //! ```sh
 //! cargo run --release --example ddp_train -- [workers] [steps]
 //! ```
@@ -11,17 +14,18 @@ use munit::config::ModelConfig;
 use munit::coordinator::ddp::train_ddp;
 use munit::data::CorpusSpec;
 use munit::repro::proxy_tc;
-use munit::runtime::Engine;
+use munit::runtime::open_backend;
+use munit::util::error::Result;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let workers: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(2);
     let steps: usize = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(20);
-    let engine = Engine::new("artifacts")?;
+    let backend = open_backend("artifacts")?;
     let cfg = ModelConfig::default();
     let tc = proxy_tc(steps, 1.0 / 64.0, 2.0 / 16384.0, 0.4, 0);
 
     println!("simulated DDP: {workers} workers x {} tokens/step", cfg.batch * cfg.seq_len);
-    let r = train_ddp(&engine, &cfg, &tc, &CorpusSpec::default(), workers)?;
+    let r = train_ddp(backend.as_ref(), &cfg, &tc, &CorpusSpec::default(), workers)?;
     for (i, loss) in r.losses.iter().enumerate() {
         if i % 5 == 0 {
             println!("  step {i:>3}  mean worker loss {loss:.4}");

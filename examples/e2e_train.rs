@@ -14,8 +14,9 @@ use munit::config::ModelConfig;
 use munit::eval::evaluate;
 use munit::repro::{self, corpus_for, proxy_tc, Ctx};
 use munit::scaling::recommended_tau;
+use munit::util::error::Result;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let steps: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(200);
     let ctx = Ctx::new("artifacts".as_ref(), "results".as_ref(), false)?;
 
@@ -53,7 +54,7 @@ fn main() -> anyhow::Result<()> {
 
     // the trained FP8 weights are immediately servable in FP8 (paper §1:
     // training-inference precision match) — run the eval suite
-    let ev = evaluate(&ctx.engine, &cfg8, state8.params(), tau, &corpus_for(&cfg8), 3, 7)?;
+    let ev = evaluate(ctx.backend(), &cfg8, state8.params(), tau, &corpus_for(&cfg8), 3, 7)?;
     println!(
         "\neval (FP8 W8A8-analog): next-tok {:.1}% | NLL {:.3} | cloze {:.1}% | repeat {:.1}% | induction {:.1}%",
         ev.next_token_acc * 100.0,

@@ -2,9 +2,10 @@
 //!
 //! Sweeps the base-width learning rate η over powers of two at two widths
 //! (32 = d_base, and 128 = 4x wider) for µnit-Scaled FP8 models. Because
-//! the train artifacts bake the √(d_base/d) hidden-layer rule, the optimal
+//! the backends bake the √(d_base/d) hidden-layer rule, the optimal
 //! *base* η should be (nearly) the same at both widths — that is zero-shot
-//! transfer. ~3-4 minutes on one CPU core.
+//! transfer. The sweep runs as in-process worker threads over the shared
+//! thread-safe backend.
 //!
 //! ```sh
 //! cargo run --release --example hp_transfer
@@ -14,10 +15,11 @@ use munit::config::ModelConfig;
 use munit::coordinator::sweep;
 use munit::data::CorpusSpec;
 use munit::repro::proxy_tc;
-use munit::runtime::Engine;
+use munit::runtime::open_backend;
+use munit::util::error::Result;
 
-fn main() -> anyhow::Result<()> {
-    let engine = Engine::new("artifacts")?;
+fn main() -> Result<()> {
+    let backend = open_backend("artifacts")?;
     let corpus = CorpusSpec::default();
     let lrs = sweep::pow2_axis(-8, -4);
     let steps = 40;
@@ -27,12 +29,14 @@ fn main() -> anyhow::Result<()> {
         println!("\nwidth {width} (mult on hidden LR: sqrt(32/{width}) = {:.3}):",
             (32.0 / width as f64).sqrt());
         let points = sweep::grid(&lrs, &[2.0 / 16384.0], &[0.4]);
-        let outcomes = sweep::run_sequential(
-            &engine,
+        // 2 worker threads over the shared backend
+        let outcomes = sweep::run_parallel(
+            backend.as_ref(),
             &cfg,
             &proxy_tc(steps, 0.0, 0.0, 0.4, 6),
             &corpus,
             &points,
+            2,
             false,
         )?;
         for o in &outcomes {

@@ -1,29 +1,30 @@
 //! Quickstart: train a tiny µnit-Scaled FP8 model for a few steps.
 //!
 //! ```sh
-//! make artifacts          # once: AOT-compile the JAX/Pallas graphs
 //! cargo run --release --example quickstart
 //! ```
 //!
-//! Everything below runs in rust via the PJRT CPU client; Python was only
-//! used at build time to lower the model to HLO text.
+//! Runs out of the box on the pure-Rust reference backend (software FP8
+//! emulation). With `make artifacts` + `--features pjrt` the same code
+//! executes the AOT-lowered JAX/Pallas graphs on the PJRT CPU client.
 
 use munit::config::{ModelConfig, Schedule, TrainConfig};
 use munit::coordinator::trainer::Trainer;
 use munit::data::{Batcher, CorpusSpec};
-use munit::runtime::Engine;
+use munit::runtime::{open_backend, Backend};
+use munit::util::error::Result;
 
-fn main() -> anyhow::Result<()> {
-    // 1. load the artifact manifest and start the PJRT CPU client
-    let engine = Engine::new("artifacts")?;
-    println!("platform: {}", engine.platform());
+fn main() -> Result<()> {
+    // 1. open the best available backend (PJRT artifacts or reference)
+    let backend = open_backend("artifacts")?;
+    println!("platform: {}", backend.platform());
 
     // 2. pick the default proxy config: µS, FP8, width 64, 4 layers
     let cfg = ModelConfig::default();
     println!("model: {} ({} params)", cfg.name(), cfg.n_params());
 
     // 3. trainer + synthetic Zipf/Markov corpus
-    let trainer = Trainer::new(&engine, &cfg)?;
+    let trainer = Trainer::new(backend.as_ref(), &cfg)?;
     let mut batcher = Batcher::new(
         CorpusSpec { vocab: cfg.vocab, ..Default::default() },
         /*seed=*/ 0, /*shard=*/ 0, /*n_shards=*/ 1,
@@ -31,7 +32,8 @@ fn main() -> anyhow::Result<()> {
     );
 
     // 4. train 40 steps with the µS base-width hyperparameters. The
-    //    artifact itself applies the sqrt(d_base/d) transfer rule.
+    //    artifact itself applies the sqrt(d_base/d) transfer rule. State
+    //    stays device-resident: each step moves only tokens + scalars.
     let tc = TrainConfig {
         steps: 40,
         lr: 1.0 / 64.0,  // eta at d_base = 32

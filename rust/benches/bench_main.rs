@@ -3,11 +3,17 @@
 //!
 //! Two groups:
 //!  - `hot:*`  — microbenches of the L3 hot path (fp8 casts, data
-//!    generation, literal packing, step latency per model size);
+//!    generation, tensor packing, step latency per model size);
 //!  - `paper:*` — one bench per paper table/figure that regenerates the
 //!    figure's data series (training-backed figures are benchmarked via
 //!    their unit of work, a single train step, so `cargo bench` stays
 //!    minutes, not hours; `munit figure all` produces the full series).
+//!
+//! The train-step group runs on whatever backend `open_backend` finds
+//! (PJRT artifacts or the pure-Rust reference) and emits
+//! `BENCH_step.json` — steps/sec, tokens/sec, and the Session's per-step
+//! host-transfer accounting — so the perf trajectory of the
+//! state-residency design is tracked across PRs.
 //!
 //! Filter with `cargo bench -- <substring>`.
 
@@ -22,7 +28,7 @@ use munit::coordinator::trainer::Trainer;
 use munit::data::{Batcher, CorpusSpec};
 use munit::fp8::E4M3;
 use munit::perfmodel::{fig8, Hw};
-use munit::runtime::{lit_f32, Engine};
+use munit::runtime::{open_backend, tensor_f32, Backend};
 use munit::scaling::comparison_matrix;
 use munit::util::bench::{bench, header, quick, BenchResult};
 use munit::util::json::Json;
@@ -62,8 +68,8 @@ fn main() {
         std::hint::black_box(batcher.next_batch());
     });
 
-    run("hot:literal_pack_512x64_f32", &mut || {
-        std::hint::black_box(lit_f32(&buf[..512 * 64], &[512, 64]).unwrap());
+    run("hot:tensor_pack_512x64_f32", &mut || {
+        std::hint::black_box(tensor_f32(&buf[..512 * 64], &[512, 64]).unwrap());
     });
 
     let manifest_text = std::fs::read_to_string("artifacts/manifest.json").ok();
@@ -104,40 +110,88 @@ fn main() {
     });
 
     // training-backed figures: benchmark the unit of work (one train step)
-    // at each proxy size the figures use
-    if let Ok(engine) = Engine::new("artifacts") {
-        for (w, d, tag) in [
-            (32usize, 4usize, "fig6_w32"),
-            (64, 4, "fig6_fig9_fig11_w64"),
-            (128, 6, "fig2_fig3_fig7_fig12_M"),
-            (256, 8, "fig7_table5_L"),
-            (64, 24, "fig4b_fig5_deep"),
-        ] {
-            let name = format!("paper:train_step_{tag}_w{w}d{d}");
-            if !filter.is_empty() && !name.contains(&filter) {
-                continue;
-            }
-            let cfg = ModelConfig { width: w, depth: d, ..ModelConfig::default() };
-            let Ok(trainer) = Trainer::new(&engine, &cfg) else { continue };
-            let mut state = trainer.init(0).unwrap();
-            let mut b = Batcher::new(spec.clone(), 0, 0, 1, cfg.batch, cfg.seq_len);
-            let tokens = b.next_batch();
-            // warmup includes the XLA compile
-            trainer.step(&mut state, &tokens, 1e-3, 1e-4, 0.4).unwrap();
-            eprintln!("running {name}…");
-            results.push(bench(&name, 1, 3, Duration::from_secs(3), || {
-                let tokens = b.next_batch();
-                std::hint::black_box(
-                    trainer.step(&mut state, &tokens, 1e-3, 1e-4, 0.4).unwrap(),
-                );
-            }));
+    // at each proxy size the figures use; also feeds BENCH_step.json
+    let mut step_rows: Vec<Json> = Vec::new();
+    let backend = match open_backend("artifacts") {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("no backend available ({e:#}); skipping train-step benches");
+            print_report(&results);
+            return;
         }
-    } else {
-        eprintln!("artifacts not built; skipping train-step benches");
+    };
+    eprintln!("train-step benches on backend: {}", backend.platform());
+    for (w, d, tag) in [
+        (32usize, 4usize, "fig6_w32"),
+        (64, 4, "fig6_fig9_fig11_w64"),
+        (128, 6, "fig2_fig3_fig7_fig12_M"),
+        (256, 8, "fig7_table5_L"),
+        (64, 24, "fig4b_fig5_deep"),
+    ] {
+        let name = format!("paper:train_step_{tag}_w{w}d{d}");
+        if !filter.is_empty() && !name.contains(&filter) {
+            continue;
+        }
+        let cfg = ModelConfig { width: w, depth: d, ..ModelConfig::default() };
+        let Ok(trainer) = Trainer::new(backend.as_ref(), &cfg) else { continue };
+        let Ok(mut session) = trainer.init(0) else { continue };
+        let mut b = Batcher::new(spec.clone(), 0, 0, 1, cfg.batch, cfg.seq_len);
+        let tokens = b.next_batch();
+        // warmup includes any artifact compile
+        session.step(&tokens, 1e-3, 1e-4, 0.4).unwrap();
+        eprintln!("running {name}…");
+        let r = bench(&name, 1, 3, Duration::from_secs(3), || {
+            let tokens = b.next_batch();
+            std::hint::black_box(session.step(&tokens, 1e-3, 1e-4, 0.4).unwrap());
+        });
+        // per-step accounting from the Session (covers warmup + bench)
+        let s = session.stats();
+        let calls = s.calls.max(1);
+        let per_step_s = r.mean.as_secs_f64();
+        step_rows.push(Json::obj(vec![
+            ("config", Json::str(&cfg.name())),
+            ("bench", Json::str(&name)),
+            ("width", Json::num(w as f64)),
+            ("depth", Json::num(d as f64)),
+            ("n_params", Json::num(cfg.n_params() as f64)),
+            ("steps_per_sec", Json::num(1.0 / per_step_s.max(1e-12))),
+            (
+                "tokens_per_sec",
+                Json::num((cfg.batch * cfg.seq_len) as f64 / per_step_s.max(1e-12)),
+            ),
+            (
+                "execute_ms_per_step",
+                Json::num(s.execute_time.as_secs_f64() * 1e3 / calls as f64),
+            ),
+            (
+                "host_transfer_ms_per_step",
+                Json::num(s.transfer_time.as_secs_f64() * 1e3 / calls as f64),
+            ),
+            (
+                "host_transfer_bytes_per_step",
+                Json::num((s.transfer_bytes / calls as u64) as f64),
+            ),
+        ]));
+        results.push(r);
     }
 
+    if !step_rows.is_empty() {
+        let doc = Json::obj(vec![
+            ("backend", Json::str(&backend.platform())),
+            ("configs", Json::Arr(step_rows)),
+        ]);
+        match std::fs::write("BENCH_step.json", format!("{doc}\n")) {
+            Ok(()) => eprintln!("wrote BENCH_step.json"),
+            Err(e) => eprintln!("could not write BENCH_step.json: {e}"),
+        }
+    }
+
+    print_report(&results);
+}
+
+fn print_report(results: &[BenchResult]) {
     println!("\n{}", header());
-    for r in &results {
+    for r in results {
         println!("{}", r.report());
     }
 }

@@ -12,25 +12,25 @@ use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
-
+use crate::bail;
 use crate::coordinator::trainer::TrainState;
-use crate::runtime::{lit_f32, TensorSpec};
+use crate::runtime::{Tensor, TensorSpec};
+use crate::util::error::{Context, Result};
 
 const MAGIC: &[u8; 8] = b"MUSCKPT1";
 
 /// Serialize a state. `specs` supplies names/shapes (params then momentum,
 /// as in the train artifact's input list).
 pub fn save(path: &Path, state: &TrainState, specs: &[TensorSpec]) -> Result<()> {
-    if specs.len() != state.literals.len() {
-        bail!("{} specs for {} tensors", specs.len(), state.literals.len());
+    if specs.len() != state.tensors.len() {
+        bail!("{} specs for {} tensors", specs.len(), state.tensors.len());
     }
     let f = File::create(path).with_context(|| format!("creating {}", path.display()))?;
     let mut w = BufWriter::new(f);
     w.write_all(MAGIC)?;
     w.write_all(&(specs.len() as u32).to_le_bytes())?;
-    for (spec, lit) in specs.iter().zip(&state.literals) {
-        let data = lit.to_vec::<f32>()?;
+    for (spec, tensor) in specs.iter().zip(&state.tensors) {
+        let data = tensor.as_f32().with_context(|| format!("tensor {}", spec.name))?;
         if data.len() != spec.elements() {
             bail!("tensor {}: {} elements, spec says {}", spec.name, data.len(), spec.elements());
         }
@@ -63,7 +63,7 @@ pub fn load(path: &Path, specs: &[TensorSpec]) -> Result<TrainState> {
     if n != specs.len() {
         bail!("checkpoint has {n} tensors, expected {}", specs.len());
     }
-    let mut literals = Vec::with_capacity(n);
+    let mut tensors = Vec::with_capacity(n);
     for spec in specs {
         let name_len = read_u32(&mut r)? as usize;
         let mut name = vec![0u8; name_len];
@@ -88,9 +88,9 @@ pub fn load(path: &Path, specs: &[TensorSpec]) -> Result<TrainState> {
             std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, count * 4)
         };
         r.read_exact(bytes)?;
-        literals.push(lit_f32(&data, &shape)?);
+        tensors.push(Tensor::f32(data, &shape)?);
     }
-    Ok(TrainState { n_params: n / 2, literals })
+    Ok(TrainState { n_params: n / 2, tensors })
 }
 
 fn read_u32(r: &mut impl Read) -> Result<u32> {

@@ -10,16 +10,16 @@
 //! lockstep stepping, and an allreduce that (unlike TE-style FP8) needs NO
 //! per-tensor amax exchange. See DESIGN.md substitution table.
 //!
-//! The allreduce itself is a host-side mean over each parameter buffer —
-//! the exact collective a single-host multi-worker run performs.
-
-use anyhow::Result;
-use xla::Literal;
+//! Each worker owns a device-resident [`Session`]; the allreduce is the
+//! one deliberate full-state host transfer per step (`read_back` -> mean
+//! -> `load_state`), i.e. exactly the collective boundary a single-host
+//! multi-worker run has.
 
 use crate::config::{ModelConfig, TrainConfig};
 use crate::coordinator::trainer::{RunResult, TrainState, Trainer};
 use crate::data::{Batcher, CorpusSpec};
-use crate::runtime::{lit_f32, to_f32_vec, Engine};
+use crate::runtime::{Backend, Tensor};
+use crate::util::error::Result;
 
 /// Average the i-th tensor across worker states, writing the mean back to
 /// every worker (the "allreduce").
@@ -28,16 +28,13 @@ fn allreduce_mean(states: &mut [TrainState]) -> Result<()> {
     if n_workers <= 1 {
         return Ok(());
     }
-    let n_tensors = states[0].literals.len();
+    let n_tensors = states[0].tensors.len();
     for t in 0..n_tensors {
-        let mut acc: Vec<f32> = to_f32_vec(&states[0].literals[t])?;
-        let shape: Vec<usize> = match states[0].literals[t].array_shape() {
-            Ok(s) => s.dims().iter().map(|&d| d as usize).collect(),
-            Err(_) => vec![acc.len()],
-        };
+        let shape = states[0].tensors[t].shape().to_vec();
+        let mut acc: Vec<f32> = states[0].tensors[t].to_f32_vec()?;
         for s in states.iter().skip(1) {
-            let v = to_f32_vec(&s.literals[t])?;
-            for (a, b) in acc.iter_mut().zip(&v) {
+            let v = s.tensors[t].as_f32()?;
+            for (a, b) in acc.iter_mut().zip(v) {
                 *a += *b;
             }
         }
@@ -45,32 +42,29 @@ fn allreduce_mean(states: &mut [TrainState]) -> Result<()> {
         for a in acc.iter_mut() {
             *a *= inv;
         }
-        let lit = lit_f32(&acc, &shape)?;
+        let reduced = Tensor::f32(acc, &shape)?;
         for s in states.iter_mut() {
             // each worker gets its own copy of the reduced tensor
-            s.literals[t] = clone_literal(&lit, &acc, &shape)?;
+            s.tensors[t] = reduced.clone();
         }
-        let _ = lit;
     }
     Ok(())
-}
-
-fn clone_literal(_template: &Literal, data: &[f32], shape: &[usize]) -> Result<Literal> {
-    lit_f32(data, shape)
 }
 
 /// Train with `k` simulated workers for `tc.steps` synchronized steps.
 /// Returns the leader's run metrics (losses averaged across workers).
 pub fn train_ddp(
-    engine: &Engine,
+    backend: &dyn Backend,
     cfg: &ModelConfig,
     tc: &TrainConfig,
     corpus: &CorpusSpec,
     n_workers: usize,
 ) -> Result<RunResult> {
-    let trainer = Trainer::new(engine, cfg)?;
-    let mut states: Vec<TrainState> =
-        (0..n_workers).map(|_| trainer.init(tc.init_seed)).collect::<Result<_>>()?;
+    let trainer = Trainer::new(backend, cfg)?;
+    let mut sessions = Vec::with_capacity(n_workers);
+    for _ in 0..n_workers {
+        sessions.push(trainer.init(tc.init_seed)?);
+    }
     let mut batchers: Vec<Batcher> = (0..n_workers)
         .map(|w| Batcher::new(corpus.clone(), tc.seed, w, n_workers, cfg.batch, cfg.seq_len))
         .collect();
@@ -82,13 +76,23 @@ pub fn train_ddp(
         let lr = tc.schedule.lr_at(tc.lr, step, tc.steps);
         let mut loss_sum = 0f32;
         let mut gnorm_sum = 0f32;
-        for (w, state) in states.iter_mut().enumerate() {
+        for (w, session) in sessions.iter_mut().enumerate() {
             let tokens = batchers[w].next_batch();
-            let (loss, gnorm) = trainer.step(state, &tokens, lr, tc.wd, tc.tau)?;
+            let (loss, gnorm) = session.step(&tokens, lr, tc.wd, tc.tau)?;
             loss_sum += loss;
             gnorm_sum += gnorm;
         }
-        allreduce_mean(&mut states)?;
+        if n_workers > 1 {
+            // collective boundary: one full-state transfer per worker
+            let mut states = Vec::with_capacity(n_workers);
+            for session in sessions.iter() {
+                states.push(session.read_back()?);
+            }
+            allreduce_mean(&mut states)?;
+            for (session, state) in sessions.iter_mut().zip(&states) {
+                session.load_state(state)?;
+            }
+        }
         let loss = loss_sum / n_workers as f32;
         losses.push(loss);
         gnorms.push(gnorm_sum / n_workers as f32);

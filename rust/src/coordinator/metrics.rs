@@ -5,9 +5,8 @@ use std::fs::{create_dir_all, File, OpenOptions};
 use std::io::{BufWriter, Write};
 use std::path::{Path, PathBuf};
 
-use anyhow::Result;
-
 use crate::coordinator::trainer::{RunResult, StepMetrics};
+use crate::util::error::Result;
 use crate::util::json::Json;
 
 pub struct MetricsLogger {

@@ -1,9 +1,11 @@
-//! L3 coordinator: the training framework around the AOT artifacts.
+//! L3 coordinator: the training framework over the runtime `Backend` API.
 //!
-//! - [`trainer`]: single-model training loop (cosine LR, divergence guard,
-//!   loss-spike tracking, probe hooks).
+//! - [`trainer`]: single-model training loop over device-resident
+//!   `Session`s (cosine LR, divergence guard, loss-spike tracking, probe
+//!   hooks at read-back boundaries).
 //! - [`sweep`]: hyperparameter grid engine with optimal-subset extraction
-//!   (paper App. A.2 methodology) and multi-process fan-out.
+//!   (paper App. A.2 methodology); parallel workers are in-process
+//!   *threads* over one shared thread-safe backend.
 //! - [`checkpoint`]: binary checkpoint save/load for `TrainState`.
 //! - [`pipeline`]: background data generation with bounded-channel
 //!   backpressure, keeping batch synthesis off the step critical path.

@@ -3,16 +3,22 @@
 //! Grids are swept over powers of two for η and λ (as in §3.1) plus a
 //! coarse τ axis. Results are reduced with the paper's App. A.2 rule: the
 //! *optimal subset* is every run whose final loss is within `tol` of the
-//! sweep optimum. Supports in-process sequential execution and
-//! multi-process fan-out (one `munit train-one` child per grid point —
-//! the PJRT client is single-process, so parallelism is process-level).
+//! sweep optimum.
+//!
+//! Execution: sequential in-process, or parallel with `n_workers`
+//! *threads* sharing one `Backend` (backends are `Send + Sync`; each
+//! worker drives its own `Session`, so no process forking is needed).
+//! Both paths run each grid point through the same deterministic
+//! `run_point`, so parallel results are identical to sequential ones.
 
-use anyhow::{Context, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use crate::config::{ModelConfig, TrainConfig};
-use crate::data::CorpusSpec;
-use crate::runtime::Engine;
-use crate::util::json::Json;
+use crate::data::{Batcher, CorpusSpec};
+use crate::err;
+use crate::runtime::Backend;
+use crate::util::error::Result;
 
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SweepPoint {
@@ -96,120 +102,100 @@ where
         .min_by(|a, b| a.final_loss.partial_cmp(&b.final_loss).unwrap())
 }
 
+/// Train one grid point. Shared by the sequential and threaded paths so
+/// their results are bit-identical (deterministic batcher + backend).
+fn run_point(
+    backend: &dyn Backend,
+    cfg: &ModelConfig,
+    base: &TrainConfig,
+    corpus: &CorpusSpec,
+    p: &SweepPoint,
+) -> Result<SweepOutcome> {
+    use crate::coordinator::trainer::Trainer;
+    let trainer = Trainer::new(backend, cfg)?;
+    let tc = TrainConfig { lr: p.lr, wd: p.wd, tau: p.tau, ..base.clone() };
+    let mut batcher = Batcher::new(corpus.clone(), base.seed, 0, 1, cfg.batch, cfg.seq_len);
+    let r = trainer.run(&tc, &mut batcher)?;
+    Ok(SweepOutcome {
+        point: *p,
+        final_loss: r.final_loss(10) as f64,
+        diverged: r.diverged,
+        spikes: r.spikes,
+    })
+}
+
+fn report(i: usize, total: usize, o: &SweepOutcome) {
+    eprintln!(
+        "  [{}/{}] lr=2^{:.0} wd={:.4} tau={:.2} -> loss {:.4}{}",
+        i + 1,
+        total,
+        o.point.lr.log2(),
+        o.point.wd,
+        o.point.tau,
+        o.final_loss,
+        if o.diverged { " DIVERGED" } else { "" }
+    );
+}
+
 /// Run a grid sequentially in-process.
 pub fn run_sequential(
-    engine: &Engine,
+    backend: &dyn Backend,
     cfg: &ModelConfig,
     base: &TrainConfig,
     corpus: &CorpusSpec,
     points: &[SweepPoint],
     verbose: bool,
 ) -> Result<Vec<SweepOutcome>> {
-    use crate::coordinator::trainer::Trainer;
-    use crate::data::Batcher;
-    let trainer = Trainer::new(engine, cfg)?;
     let mut out = Vec::with_capacity(points.len());
     for (i, p) in points.iter().enumerate() {
-        let tc = TrainConfig { lr: p.lr, wd: p.wd, tau: p.tau, ..base.clone() };
-        let mut batcher =
-            Batcher::new(corpus.clone(), base.seed, 0, 1, cfg.batch, cfg.seq_len);
-        let r = trainer.run(&tc, &mut batcher)?;
-        let o = SweepOutcome {
-            point: *p,
-            final_loss: r.final_loss(10) as f64,
-            diverged: r.diverged,
-            spikes: r.spikes,
-        };
+        let o = run_point(backend, cfg, base, corpus, p)?;
         if verbose {
-            eprintln!(
-                "  [{}/{}] lr=2^{:.0} wd={:.4} tau={:.2} -> loss {:.4}{}",
-                i + 1,
-                points.len(),
-                p.lr.log2(),
-                p.wd,
-                p.tau,
-                o.final_loss,
-                if o.diverged { " DIVERGED" } else { "" }
-            );
+            report(i, points.len(), &o);
         }
         out.push(o);
     }
     Ok(out)
 }
 
-/// Run a grid with `n_procs` child processes (`munit train-one ...`).
-/// Each child prints a single JSON summary line on stdout.
+/// Run a grid with `n_workers` in-process threads over a shared backend.
+/// Workers pull points from a shared queue; outcomes land in grid order
+/// and are identical to `run_sequential`'s (deterministic runs).
 pub fn run_parallel(
+    backend: &dyn Backend,
     cfg: &ModelConfig,
     base: &TrainConfig,
+    corpus: &CorpusSpec,
     points: &[SweepPoint],
-    n_procs: usize,
+    n_workers: usize,
     verbose: bool,
 ) -> Result<Vec<SweepOutcome>> {
-    let bin = std::env::current_exe().context("locating own binary")?;
-    let mut outcomes: Vec<Option<SweepOutcome>> = vec![None; points.len()];
-    let mut next = 0usize;
-    let mut running: Vec<(usize, std::process::Child)> = Vec::new();
-    while next < points.len() || !running.is_empty() {
-        while next < points.len() && running.len() < n_procs.max(1) {
-            let p = points[next];
-            let child = std::process::Command::new(&bin)
-                .args([
-                    "train-one",
-                    "--config",
-                    &cfg.name(),
-                    "--steps",
-                    &base.steps.to_string(),
-                    "--lr",
-                    &p.lr.to_string(),
-                    "--wd",
-                    &p.wd.to_string(),
-                    "--tau",
-                    &p.tau.to_string(),
-                    "--seed",
-                    &base.seed.to_string(),
-                ])
-                .stdout(std::process::Stdio::piped())
-                .stderr(std::process::Stdio::null())
-                .spawn()
-                .context("spawning sweep worker")?;
-            running.push((next, child));
-            next += 1;
-        }
-        // reap the first finished child (simple polling loop)
-        std::thread::sleep(std::time::Duration::from_millis(30));
-        let mut i = 0;
-        while i < running.len() {
-            if running[i].1.try_wait()?.is_some() {
-                let (idx, child) = running.remove(i);
-                let out = child.wait_with_output()?;
-                let text = String::from_utf8_lossy(&out.stdout);
-                let line = text.lines().last().unwrap_or("");
-                let j = Json::parse(line)
-                    .map_err(|e| anyhow::anyhow!("worker {idx} bad output: {e}: {line}"))?;
-                let o = SweepOutcome {
-                    point: points[idx],
-                    final_loss: j.f64_or("final_loss", f64::NAN),
-                    diverged: j.get("diverged").and_then(|v| v.as_bool()).unwrap_or(true),
-                    spikes: j.usize_or("spikes", 0),
-                };
-                if verbose {
-                    eprintln!(
-                        "  [worker done] lr={:.5} wd={:.4} tau={:.2} -> {:.4}{}",
-                        o.point.lr, o.point.wd, o.point.tau, o.final_loss,
-                        if o.diverged { " DIVERGED" } else { "" }
-                    );
+    let n_workers = n_workers.max(1).min(points.len().max(1));
+    let next = AtomicUsize::new(0);
+    let results: Mutex<Vec<Option<Result<SweepOutcome>>>> =
+        Mutex::new((0..points.len()).map(|_| None).collect());
+    std::thread::scope(|scope| {
+        for _ in 0..n_workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= points.len() {
+                    break;
                 }
-                outcomes[idx] = Some(o);
-            } else {
-                i += 1;
-            }
+                let r = run_point(backend, cfg, base, corpus, &points[i]);
+                if verbose {
+                    if let Ok(o) = &r {
+                        report(i, points.len(), o);
+                    }
+                }
+                results.lock().expect("results lock")[i] = Some(r);
+            });
         }
-    }
-    outcomes
+    });
+    results
+        .into_inner()
+        .expect("results lock")
         .into_iter()
         .enumerate()
-        .map(|(i, o)| o.ok_or_else(|| anyhow::anyhow!("sweep point {i} produced no result")))
+        .map(|(i, o)| o.unwrap_or_else(|| Err(err!("sweep point {i} produced no result"))))
         .collect()
 }
 

@@ -1,33 +1,21 @@
-//! Training loop over a `train_step` artifact.
+//! Training loop over a `train_step` artifact, via the runtime [`Session`].
 //!
 //! The artifact owns the math (fwd/bwd, Lion, transfer multipliers); this
 //! loop owns policy: schedules, divergence detection, spike counting,
-//! metrics, probes. State lives as host literals between steps (CPU PJRT
-//! "device" memory is host memory; `execute` copies in/out — see
-//! DESIGN.md §7 for the measured overhead).
+//! metrics, probes. State stays *device-resident* between steps — the
+//! per-step host traffic is the token batch + 3 scalars in and two scalars out; use
+//! [`Session::read_back`] (available to the `on_step` hook) only at
+//! checkpoint/probe boundaries.
 
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
-use xla::Literal;
-
 use crate::config::{ModelConfig, TrainConfig};
 use crate::data::Batcher;
-use crate::runtime::{lit_i32, scalar_f32, scalar_i32, to_f32_scalar, Engine};
+use crate::runtime::{Backend, Session};
+use crate::util::error::Result;
 use crate::util::stats::Ema;
 
-/// Model + optimizer state: `2 * n_params` literals in manifest order
-/// (params then momentum), all f32 master copies.
-pub struct TrainState {
-    pub literals: Vec<Literal>,
-    pub n_params: usize,
-}
-
-impl TrainState {
-    pub fn params(&self) -> &[Literal] {
-        &self.literals[..self.n_params]
-    }
-}
+pub use crate::runtime::TrainState;
 
 /// Per-step record.
 #[derive(Debug, Clone)]
@@ -64,36 +52,29 @@ impl RunResult {
     }
 }
 
-/// Drives one (config, artifact) pair.
-pub struct Trainer<'e> {
-    pub engine: &'e Engine,
+/// Drives one (config, backend) pair. Thin policy layer: sessions carry
+/// the device-resident state, the trainer carries schedule/guard logic.
+pub struct Trainer<'b> {
+    backend: &'b dyn Backend,
     pub cfg: ModelConfig,
     train_name: String,
-    init_name: String,
     n_params: usize,
 }
 
-impl<'e> Trainer<'e> {
-    pub fn new(engine: &'e Engine, cfg: &ModelConfig) -> Result<Trainer<'e>> {
-        let train = engine
-            .manifest
-            .find_for("train_step", cfg)
-            .with_context(|| format!("no train artifact for config {}", cfg.name()))?;
-        let init = engine
-            .manifest
-            .find_for("init", cfg)
-            .with_context(|| format!("no init artifact for config {}", cfg.name()))?;
-        let n_params = (train.inputs.len() - 4) / 2;
-        if train.inputs.len() != 2 * n_params + 4 || train.outputs.len() != 2 * n_params + 2 {
-            bail!("unexpected train_step ABI for {}", cfg.name());
-        }
+impl<'b> Trainer<'b> {
+    pub fn new(backend: &'b dyn Backend, cfg: &ModelConfig) -> Result<Trainer<'b>> {
+        // Session::new performs artifact resolution + ABI validation.
+        let probe = Session::new(backend, cfg)?;
         Ok(Trainer {
-            engine,
+            backend,
             cfg: cfg.clone(),
-            train_name: train.name.clone(),
-            init_name: init.name.clone(),
-            n_params,
+            train_name: probe.train_artifact().to_string(),
+            n_params: probe.n_params_tensors(),
         })
+    }
+
+    pub fn backend(&self) -> &'b dyn Backend {
+        self.backend
     }
 
     pub fn n_params_tensors(&self) -> usize {
@@ -104,51 +85,32 @@ impl<'e> Trainer<'e> {
         &self.train_name
     }
 
-    /// Initialize state by running the `init` artifact (unit-variance or
-    /// sigma_init inits happen in-graph — L3 never hand-rolls init math).
-    pub fn init(&self, seed: i32) -> Result<TrainState> {
-        let outs = self.engine.run(&self.init_name, &[scalar_i32(seed)])?;
-        if outs.len() != 2 * self.n_params {
-            bail!("init produced {} tensors, expected {}", outs.len(), 2 * self.n_params);
-        }
-        Ok(TrainState { literals: outs, n_params: self.n_params })
+    /// Fresh session with state initialized on-device from `seed`.
+    pub fn init(&self, seed: i32) -> Result<Session<'b>> {
+        let mut s = Session::new(self.backend, &self.cfg)?;
+        s.init(seed)?;
+        Ok(s)
     }
 
-    /// One optimizer step. `lr` is the base-width learning rate for this
-    /// step (scheduling already applied); tokens length must be batch*seq.
-    pub fn step(
-        &self,
-        state: &mut TrainState,
-        tokens: &[i32],
-        lr: f64,
-        wd: f64,
-        tau: f64,
-    ) -> Result<(f32, f32)> {
-        let tok = lit_i32(tokens, &[self.cfg.batch, self.cfg.seq_len])?;
-        let scalars = [scalar_f32(lr as f32), scalar_f32(wd as f32), scalar_f32(tau as f32)];
-        let mut inputs: Vec<&Literal> = Vec::with_capacity(state.literals.len() + 4);
-        inputs.extend(state.literals.iter());
-        inputs.push(&tok);
-        inputs.extend(scalars.iter());
-        let mut outs = self.engine.run(&self.train_name, &inputs)?;
-        let gnorm = to_f32_scalar(&outs.pop().unwrap())?;
-        let loss = to_f32_scalar(&outs.pop().unwrap())?;
-        state.literals = outs;
-        Ok((loss, gnorm))
+    /// Fresh session loaded from a host snapshot (checkpoint resume).
+    pub fn session_from(&self, state: &TrainState) -> Result<Session<'b>> {
+        let mut s = Session::new(self.backend, &self.cfg)?;
+        s.load_state(state)?;
+        Ok(s)
     }
 
-    /// Full training run: schedule, divergence guard, spike counter.
-    /// `on_step` fires after every step (metrics/probes/checkpoints).
-    pub fn run_with<F>(
+    /// Core loop: returns the metrics and the live session (still holding
+    /// the final device-resident state).
+    fn run_loop<F>(
         &self,
         tc: &TrainConfig,
         batcher: &mut Batcher,
         mut on_step: F,
-    ) -> Result<RunResult>
+    ) -> Result<(RunResult, Session<'b>)>
     where
-        F: FnMut(&StepMetrics, &TrainState),
+        F: FnMut(&StepMetrics, &Session<'b>),
     {
-        let mut state = self.init(tc.init_seed)?;
+        let mut session = self.init(tc.init_seed)?;
         let mut losses = Vec::with_capacity(tc.steps);
         let mut gnorms = Vec::with_capacity(tc.steps);
         let mut ema = Ema::new(0.1);
@@ -159,7 +121,7 @@ impl<'e> Trainer<'e> {
             let lr = tc.schedule.lr_at(tc.lr, step, tc.steps);
             let tokens = batcher.next_batch();
             let ts = Instant::now();
-            let (loss, gnorm) = self.step(&mut state, &tokens, lr, tc.wd, tc.tau)?;
+            let (loss, gnorm) = session.step(&tokens, lr, tc.wd, tc.tau)?;
             let m = StepMetrics { step, loss, gnorm, lr, step_time: ts.elapsed() };
             losses.push(loss);
             gnorms.push(gnorm);
@@ -169,7 +131,7 @@ impl<'e> Trainer<'e> {
                 }
             }
             ema.update(loss as f64);
-            on_step(&m, &state);
+            on_step(&m, &session);
             if !loss.is_finite() || loss as f64 > tc.max_loss {
                 diverged = true;
                 break;
@@ -179,12 +141,45 @@ impl<'e> Trainer<'e> {
         let steps_done = losses.len();
         let tokens_per_sec =
             (steps_done * batcher.tokens_per_batch()) as f64 / wall.as_secs_f64().max(1e-9);
-        Ok(RunResult { losses, gnorms, steps_done, diverged, spikes, wall, tokens_per_sec })
+        let result =
+            RunResult { losses, gnorms, steps_done, diverged, spikes, wall, tokens_per_sec };
+        Ok((result, session))
+    }
+
+    /// Full training run: schedule, divergence guard, spike counter.
+    /// `on_step` fires after every step; it receives the live session and
+    /// may `read_back()` state at probe/checkpoint boundaries.
+    pub fn run_with<F>(
+        &self,
+        tc: &TrainConfig,
+        batcher: &mut Batcher,
+        on_step: F,
+    ) -> Result<RunResult>
+    where
+        F: FnMut(&StepMetrics, &Session<'b>),
+    {
+        self.run_loop(tc, batcher, on_step).map(|(r, _)| r)
     }
 
     /// Convenience: run without a step hook.
     pub fn run(&self, tc: &TrainConfig, batcher: &mut Batcher) -> Result<RunResult> {
         self.run_with(tc, batcher, |_, _| {})
     }
-}
 
+    /// Run and also return the trained state as a host snapshot — exactly
+    /// one full-state transfer, at the end of the run. `on_step` fires
+    /// after every step, like [`Trainer::run_with`].
+    pub fn run_capture<F>(
+        &self,
+        tc: &TrainConfig,
+        batcher: &mut Batcher,
+        on_step: F,
+    ) -> Result<(RunResult, TrainState)>
+    where
+        F: FnMut(&StepMetrics, &Session<'b>),
+    {
+        let (r, session) = self.run_loop(tc, batcher, on_step)?;
+        let state = session.read_back()?;
+        Ok((r, state))
+    }
+}

@@ -16,12 +16,11 @@
 //!  - **copy/induction**: synthetic `prefix ++ prefix` prompts, scored on
 //!    the repeated half (pure in-context recall).
 
-use anyhow::{bail, Context, Result};
-use xla::Literal;
-
+use crate::bail;
 use crate::config::ModelConfig;
 use crate::data::{Batcher, CorpusSpec};
-use crate::runtime::{lit_i32, scalar_f32, to_f32_vec, Engine};
+use crate::runtime::{scalar_f32, tensor_i32, Backend, Tensor, TensorHandle};
+use crate::util::error::{Context, Result};
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone, Default)]
@@ -34,25 +33,29 @@ pub struct EvalReport {
     pub positions_scored: usize,
 }
 
-/// Run the full suite. `params` are the model's parameter literals (from a
-/// `TrainState`), `tau` the residual coefficient it was trained with.
+/// Run the full suite. `params` are the model's parameter tensors (from a
+/// `TrainState` / `Session::params_host`), `tau` the residual coefficient
+/// it was trained with.
 pub fn evaluate(
-    engine: &Engine,
+    backend: &dyn Backend,
     cfg: &ModelConfig,
-    params: &[Literal],
+    params: &[Tensor],
     tau: f64,
     corpus: &CorpusSpec,
     n_batches: usize,
     seed: u64,
 ) -> Result<EvalReport> {
-    let meta = engine
-        .manifest
-        .find_for("fwd", cfg)
+    let meta = backend
+        .resolve("fwd", cfg)
         .with_context(|| format!("no fwd artifact for {}", cfg.name()))?;
     let fwd_name = meta.name.clone();
     if params.len() != meta.inputs.len() - 2 {
         bail!("expected {} param tensors, got {}", meta.inputs.len() - 2, params.len());
     }
+
+    // upload the parameters once; every forward batch reuses the
+    // device-resident handles (the whole point of the handle API)
+    let mut fwd = FwdRunner::upload(backend, &fwd_name, params, tau)?;
 
     let mut report = EvalReport::default();
     let mut nll_sum = 0f64;
@@ -67,7 +70,7 @@ pub fn evaluate(
     let mut batcher = Batcher::new(corpus.clone(), seed, 7, 8, cfg.batch, cfg.seq_len);
     for _ in 0..n_batches {
         let tokens = batcher.next_batch();
-        let logits = run_fwd(engine, &fwd_name, params, &tokens, cfg, tau)?;
+        let logits = fwd.logits(cfg, &tokens)?;
         score_lm(cfg, corpus, &tokens, &logits, &mut nll_sum, &mut nt_hits, &mut nt_total,
                  &mut cloze_hits, &mut cloze_total, &mut rep_hits, &mut rep_total);
     }
@@ -86,7 +89,7 @@ pub fn evaluate(
                 tokens[b * cfg.seq_len + half + t] = v;
             }
         }
-        let logits = run_fwd(engine, &fwd_name, params, &tokens, cfg, tau)?;
+        let logits = fwd.logits(cfg, &tokens)?;
         let v = cfg.vocab;
         for b in 0..cfg.batch {
             // score predictions inside the repeated half
@@ -110,21 +113,75 @@ pub fn evaluate(
     Ok(report)
 }
 
-fn run_fwd(
-    engine: &Engine,
-    fwd_name: &str,
-    params: &[Literal],
-    tokens: &[i32],
-    cfg: &ModelConfig,
-    tau: f64,
-) -> Result<Vec<f32>> {
-    let tok = lit_i32(tokens, &[cfg.batch, cfg.seq_len])?;
-    let tau_l = scalar_f32(tau as f32);
-    let mut inputs: Vec<&Literal> = params.iter().collect();
-    inputs.push(&tok);
-    inputs.push(&tau_l);
-    let outs = engine.run(fwd_name, &inputs)?;
-    to_f32_vec(&outs[0])
+/// Device-resident forward runner: parameters (and the tau scalar) are
+/// uploaded once; each `logits` call only moves a token batch in and the
+/// logits out. Handles are freed on drop.
+struct FwdRunner<'b> {
+    backend: &'b dyn Backend,
+    fwd_name: String,
+    param_handles: Vec<TensorHandle>,
+    tau_handle: TensorHandle,
+}
+
+impl<'b> FwdRunner<'b> {
+    fn upload(
+        backend: &'b dyn Backend,
+        fwd_name: &str,
+        params: &[Tensor],
+        tau: f64,
+    ) -> Result<FwdRunner<'b>> {
+        let mut param_handles = Vec::with_capacity(params.len());
+        for t in params {
+            match backend.upload(t) {
+                Ok(h) => param_handles.push(h),
+                Err(e) => {
+                    for h in &param_handles {
+                        backend.free(h);
+                    }
+                    return Err(e.context("uploading eval params"));
+                }
+            }
+        }
+        let tau_handle = match backend.upload(&scalar_f32(tau as f32)) {
+            Ok(h) => h,
+            Err(e) => {
+                for h in &param_handles {
+                    backend.free(h);
+                }
+                return Err(e.context("uploading eval tau scalar"));
+            }
+        };
+        Ok(FwdRunner { backend, fwd_name: fwd_name.to_string(), param_handles, tau_handle })
+    }
+
+    fn logits(&mut self, cfg: &ModelConfig, tokens: &[i32]) -> Result<Vec<f32>> {
+        let tok = tensor_i32(tokens, &[cfg.batch, cfg.seq_len])?;
+        let tok_h = self.backend.upload(&tok)?;
+        let mut inputs = self.param_handles.clone();
+        inputs.push(tok_h.clone());
+        inputs.push(self.tau_handle.clone());
+        let result = self.backend.execute(&self.fwd_name, &inputs);
+        self.backend.free(&tok_h);
+        let outs = result?;
+        let logits = outs
+            .first()
+            .map(|h| self.backend.download(h))
+            .unwrap_or_else(|| Err(crate::err!("fwd '{}' produced no outputs", self.fwd_name)))
+            .and_then(|t| t.to_f32_vec());
+        for h in &outs {
+            self.backend.free(h);
+        }
+        logits
+    }
+}
+
+impl Drop for FwdRunner<'_> {
+    fn drop(&mut self) {
+        for h in &self.param_handles {
+            self.backend.free(h);
+        }
+        self.backend.free(&self.tau_handle);
+    }
 }
 
 #[allow(clippy::too_many_arguments)]

@@ -3,16 +3,47 @@
 //! Rust + JAX + Pallas three-layer reproduction of *"µnit Scaling: Simple
 //! and Scalable FP8 LLM Training"* (Narayan et al., 2025).
 //!
-//! Layer map (see DESIGN.md):
-//! - **L3 (this crate)**: training coordinator — config, data pipeline,
-//!   PJRT runtime, trainer/sweep engine, analysis, perf model, eval.
+//! Layer map (see DESIGN.md and README.md §Runtime):
+//!
+//! - **L3 (this crate)** — the training framework, split at the runtime
+//!   boundary:
+//!   - [`runtime`]: the execution API. A [`runtime::Backend`] trait
+//!     (`upload`/`execute`/`download` over opaque tensor handles) with two
+//!     implementations — the pure-Rust [`runtime::ReferenceBackend`]
+//!     (interprets µS/SP configs through [`fp8`] emulation; no artifacts
+//!     needed) and the PJRT CPU path over AOT HLO-text artifacts (feature
+//!     `pjrt`, `xla` crate). [`runtime::Session`] owns the
+//!     *device-resident* `2·n_params` train state between steps: per-step
+//!     host traffic is tokens in, loss/gnorm out; full-state transfers
+//!     happen only at checkpoint/probe boundaries (`read_back`).
+//!   - [`coordinator`]: trainer (schedules, divergence guard, probes),
+//!     thread-parallel sweep engine (workers share one `Send + Sync`
+//!     backend), simulated DDP, checkpoints, metrics, data pipeline.
+//!   - [`config`], [`data`], [`scaling`], [`analysis`], [`perfmodel`],
+//!     [`eval`], [`repro`], [`util`]: configs/presets, synthetic corpus,
+//!     parametrization rules, numerics analyses, throughput model, eval
+//!     suite, figure/table drivers, offline substrates (JSON / RNG /
+//!     error / bench / proptest).
 //! - **L2** (`python/compile/model.py`): µS/SP transformer fwd/bwd + Lion,
-//!   AOT-lowered to HLO text artifacts.
+//!   AOT-lowered to HLO text artifacts (the `pjrt` catalogue).
 //! - **L1** (`python/compile/kernels/`): Pallas FP8 GEMM / cast-transpose /
 //!   attention / layernorm kernels (interpret=True).
 //!
-//! Python never runs on the step path: the binary executes AOT artifacts
-//! via the PJRT CPU client (`xla` crate).
+//! Python never runs on the step path: the binary executes either the AOT
+//! artifacts via PJRT or the reference interpreter, both behind the same
+//! `Backend` API.
+
+// Style/complexity lints are relaxed crate-wide: the numeric kernels are
+// written as explicit index loops on purpose (they mirror the math), and
+// CI runs clippy with -D warnings.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::manual_memcpy,
+    clippy::field_reassign_with_default,
+    clippy::new_without_default,
+    clippy::uninlined_format_args
+)]
 
 pub mod analysis;
 pub mod config;

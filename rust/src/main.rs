@@ -3,28 +3,31 @@
 //! Subcommands:
 //!   info                       list artifacts, platform, presets
 //!   train      --config NAME   train one model, JSONL metrics to results/
-//!   train-one  --config NAME   sweep worker: one run, JSON summary on stdout
-//!   sweep      --config NAME   η/λ/τ grid (optionally multi-process)
+//!   train-one  --config NAME   one run, JSON summary on stdout (scripting)
+//!   sweep      --config NAME   η/λ/τ grid (--workers N = in-process threads)
 //!   ddp        --config NAME   simulated multi-worker data-parallel run
 //!   figure     fig2..fig12     reproduce a paper figure (see DESIGN.md §4)
 //!   table      table2..table5  reproduce a paper table
 //!   e2e                        headline end-to-end driver (≈12M-param µS FP8)
-//!   bench-step --config NAME   per-step latency breakdown
+//!   bench-step --config NAME   per-step latency + host-transfer breakdown
 //!
 //! Flags: --artifacts DIR (default ./artifacts), --results DIR (default
-//! ./results), --fast (shrink steps/grids).
+//! ./results), --backend auto|reference|pjrt (default auto), --fast
+//! (shrink steps/grids). Without AOT artifacts (or without the `pjrt`
+//! feature) everything runs on the pure-Rust reference backend.
+
+#![allow(clippy::uninlined_format_args)]
 
 use std::collections::HashMap;
-use std::path::PathBuf;
-
-use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
 
 use munit::config::{ModelConfig, TrainConfig};
 use munit::coordinator::{ddp, metrics::MetricsLogger, sweep, trainer::Trainer};
 use munit::data::Batcher;
 use munit::repro::{self, corpus_for, proxy_tc, Ctx};
-use munit::runtime::Engine;
+use munit::runtime::{open_backend, Backend, ReferenceBackend};
 use munit::scaling::recommended_tau;
+use munit::util::error::{Context, Result};
 
 fn main() {
     if let Err(e) = run() {
@@ -79,10 +82,32 @@ impl Args {
     }
 }
 
-/// Resolve a config by canonical name from the manifest.
-fn config_by_name(engine: &Engine, name: &str) -> Result<ModelConfig> {
-    engine
-        .manifest
+/// Open the execution backend per --backend (auto|reference|pjrt).
+fn backend_for(args: &Args, artifacts: &Path) -> Result<Box<dyn Backend>> {
+    match args.get("backend").unwrap_or("auto") {
+        "auto" => open_backend(artifacts),
+        "reference" => Ok(Box::new(ReferenceBackend::with_standard_roster())),
+        "pjrt" => {
+            #[cfg(feature = "pjrt")]
+            {
+                Ok(Box::new(munit::runtime::PjrtBackend::new(artifacts)?))
+            }
+            #[cfg(not(feature = "pjrt"))]
+            {
+                let _ = artifacts;
+                Err(munit::err!(
+                    "this build has no PJRT support (rebuild with --features pjrt)"
+                ))
+            }
+        }
+        other => Err(munit::err!("unknown backend '{other}' (auto|reference|pjrt)")),
+    }
+}
+
+/// Resolve a config by canonical name from the backend's catalogue.
+fn config_by_name(backend: &dyn Backend, name: &str) -> Result<ModelConfig> {
+    backend
+        .manifest()
         .artifacts
         .iter()
         .filter_map(|a| a.config.as_ref())
@@ -101,11 +126,11 @@ fn run() -> Result<()> {
 
     match cmd {
         "info" => {
-            let engine = Engine::new(&artifacts)?;
-            println!("platform: {}", engine.platform());
-            println!("artifacts ({}):", engine.manifest.artifacts.len());
-            let mut names: Vec<String> = engine
-                .manifest
+            let backend = backend_for(&args, &artifacts)?;
+            println!("platform: {}", backend.platform());
+            println!("artifacts ({}):", backend.manifest().artifacts.len());
+            let mut names: Vec<String> = backend
+                .manifest()
                 .artifacts
                 .iter()
                 .filter_map(|a| a.config.as_ref())
@@ -119,11 +144,11 @@ fn run() -> Result<()> {
             Ok(())
         }
         "train" => {
-            let engine = Engine::new(&artifacts)?;
+            let backend = backend_for(&args, &artifacts)?;
             let name = args.get("config").context("--config required")?;
-            let cfg = config_by_name(&engine, name)?;
+            let cfg = config_by_name(backend.as_ref(), name)?;
             let tc = tc_from_args(&args, &cfg);
-            let trainer = Trainer::new(&engine, &cfg)?;
+            let trainer = Trainer::new(backend.as_ref(), &cfg)?;
             let mut batcher =
                 Batcher::new(corpus_for(&cfg), tc.seed, 0, 1, cfg.batch, cfg.seq_len);
             let mut log = MetricsLogger::create(&results, &format!("train_{name}"))?;
@@ -148,11 +173,11 @@ fn run() -> Result<()> {
             Ok(())
         }
         "train-one" => {
-            let engine = Engine::new(&artifacts)?;
+            let backend = backend_for(&args, &artifacts)?;
             let name = args.get("config").context("--config required")?;
-            let cfg = config_by_name(&engine, name)?;
+            let cfg = config_by_name(backend.as_ref(), name)?;
             let tc = tc_from_args(&args, &cfg);
-            let trainer = Trainer::new(&engine, &cfg)?;
+            let trainer = Trainer::new(backend.as_ref(), &cfg)?;
             let mut batcher =
                 Batcher::new(corpus_for(&cfg), tc.seed, 0, 1, cfg.batch, cfg.seq_len);
             let r = trainer.run(&tc, &mut batcher)?;
@@ -160,9 +185,9 @@ fn run() -> Result<()> {
             Ok(())
         }
         "sweep" => {
-            let engine = Engine::new(&artifacts)?;
+            let backend = backend_for(&args, &artifacts)?;
             let name = args.get("config").context("--config required")?;
-            let cfg = config_by_name(&engine, name)?;
+            let cfg = config_by_name(backend.as_ref(), name)?;
             let tc = tc_from_args(&args, &cfg);
             let (lo, hi) = parse_range(args.get("lr-exp").unwrap_or("-9:-5"))?;
             let lrs = sweep::pow2_axis(lo, hi);
@@ -170,11 +195,14 @@ fn run() -> Result<()> {
             let taus = vec![tc.tau];
             let points = sweep::grid(&lrs, &wds, &taus);
             println!("sweep: {} points over {}", points.len(), name);
-            let procs = args.usize_or("procs", 1);
-            let outcomes = if procs > 1 {
-                sweep::run_parallel(&cfg, &tc, &points, procs, true)?
+            // --workers N runs N in-process threads over the shared
+            // backend (--procs kept as a legacy alias)
+            let workers = args.usize_or("workers", args.usize_or("procs", 1));
+            let corpus = corpus_for(&cfg);
+            let outcomes = if workers > 1 {
+                sweep::run_parallel(backend.as_ref(), &cfg, &tc, &corpus, &points, workers, true)?
             } else {
-                sweep::run_sequential(&engine, &cfg, &tc, &corpus_for(&cfg), &points, true)?
+                sweep::run_sequential(backend.as_ref(), &cfg, &tc, &corpus, &points, true)?
             };
             if let Some(b) = sweep::best(&outcomes) {
                 println!(
@@ -199,12 +227,12 @@ fn run() -> Result<()> {
             Ok(())
         }
         "ddp" => {
-            let engine = Engine::new(&artifacts)?;
+            let backend = backend_for(&args, &artifacts)?;
             let name = args.get("config").context("--config required")?;
-            let cfg = config_by_name(&engine, name)?;
+            let cfg = config_by_name(backend.as_ref(), name)?;
             let tc = tc_from_args(&args, &cfg);
             let workers = args.usize_or("workers", 2);
-            let r = ddp::train_ddp(&engine, &cfg, &tc, &corpus_for(&cfg), workers)?;
+            let r = ddp::train_ddp(backend.as_ref(), &cfg, &tc, &corpus_for(&cfg), workers)?;
             println!(
                 "ddp x{}: {} steps, final loss {:.4}, {:.0} tok/s (aggregate)",
                 workers,
@@ -233,14 +261,14 @@ fn run() -> Result<()> {
             Ok(())
         }
         "bench-step" => {
-            let engine = Engine::new(&artifacts)?;
+            let backend = backend_for(&args, &artifacts)?;
             let name = args.get("config").context("--config required")?;
-            let cfg = config_by_name(&engine, name)?;
-            bench_step(&engine, &cfg, args.usize_or("steps", 20))
+            let cfg = config_by_name(backend.as_ref(), name)?;
+            bench_step(backend.as_ref(), &cfg, args.usize_or("steps", 20))
         }
-        other => bail!(
+        other => Err(munit::err!(
             "unknown command '{other}' (try: info train sweep ddp figure table e2e bench-step)"
-        ),
+        )),
     }
 }
 
@@ -292,7 +320,7 @@ fn dispatch_repro(ctx: &Ctx, which: &str) -> Result<String> {
             }
             Ok(out)
         }
-        other => bail!("unknown figure/table '{other}'"),
+        other => Err(munit::err!("unknown figure/table '{other}'")),
     }
 }
 
@@ -317,7 +345,7 @@ fn e2e(ctx: &Ctx, steps: usize) -> Result<String> {
     eprintln!("e2e: training µS BF16 baseline…");
     let r16 = repro::train_cached(ctx, &cfg16, &tc)?;
     let corpus = corpus_for(&cfg8);
-    let ev = munit::eval::evaluate(&ctx.engine, &cfg8, state8.params(), tau, &corpus, 3, 7)?;
+    let ev = munit::eval::evaluate(ctx.backend(), &cfg8, state8.params(), tau, &corpus, 3, 7)?;
     let bucket = (steps / 12).max(1);
     let mut curve = String::new();
     for (i, chunk) in r8.losses.chunks(bucket).enumerate() {
@@ -350,32 +378,39 @@ fn e2e(ctx: &Ctx, steps: usize) -> Result<String> {
     ))
 }
 
-/// Per-step latency breakdown for a config (L3 perf tooling).
-fn bench_step(engine: &Engine, cfg: &ModelConfig, steps: usize) -> Result<()> {
-    let trainer = Trainer::new(engine, cfg)?;
-    let mut state = trainer.init(0)?;
+/// Per-step latency + host-transfer breakdown (L3 perf tooling). The
+/// transfer column is the Session's per-step accounting: tokens in,
+/// loss/gnorm out — full state never crosses the host boundary.
+fn bench_step(backend: &dyn Backend, cfg: &ModelConfig, steps: usize) -> Result<()> {
+    let trainer = Trainer::new(backend, cfg)?;
+    let mut session = trainer.init(0)?;
     let mut batcher = Batcher::new(corpus_for(cfg), 0, 0, 1, cfg.batch, cfg.seq_len);
-    // warmup (includes XLA compile)
+    // warmup (includes any artifact compile)
     let tokens = batcher.next_batch();
-    trainer.step(&mut state, &tokens, 1e-3, 1e-4, 0.3)?;
+    session.step(&tokens, 1e-3, 1e-4, 0.3)?;
     let t0 = std::time::Instant::now();
     let mut gen_time = std::time::Duration::ZERO;
     for _ in 0..steps {
         let tg = std::time::Instant::now();
         let tokens = batcher.next_batch();
         gen_time += tg.elapsed();
-        trainer.step(&mut state, &tokens, 1e-3, 1e-4, 0.3)?;
+        session.step(&tokens, 1e-3, 1e-4, 0.3)?;
     }
     let total = t0.elapsed();
-    let stats = engine.stats(trainer.train_artifact()).unwrap();
+    let s = session.stats().clone();
+    let compile = backend
+        .stats(trainer.train_artifact())
+        .map(|a| a.compile_time)
+        .unwrap_or_default();
     println!("config: {} ({} params)", cfg.name(), cfg.n_params());
     println!("steps: {steps}  total {:?}  per-step {:?}", total, total / steps as u32);
     println!(
-        "  execute  {:?}/step\n  transfer {:?}/step\n  data-gen {:?}/step\n  compile  {:?} (once)",
-        stats.execute_time / stats.calls as u32,
-        stats.transfer_time / stats.calls as u32,
+        "  execute       {:?}/step\n  host-transfer {:?}/step ({} bytes/step)\n  data-gen      {:?}/step\n  compile       {:?} (once)",
+        s.per_call_execute(),
+        s.per_call_transfer(),
+        s.transfer_bytes / s.calls.max(1) as u64,
         gen_time / steps as u32,
-        stats.compile_time
+        compile
     );
     println!(
         "  tokens/s: {:.0}",

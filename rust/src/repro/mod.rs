@@ -8,19 +8,17 @@ pub mod tables;
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{Context, Result};
-use xla::Literal;
-
 use crate::config::{ModelConfig, Schedule, TrainConfig};
 use crate::coordinator::checkpoint;
-use crate::coordinator::trainer::Trainer;
+use crate::coordinator::trainer::{TrainState, Trainer};
 use crate::data::{Batcher, CorpusSpec};
-use crate::runtime::{scalar_f32, to_f32_vec, Engine};
+use crate::runtime::{open_backend, scalar_f32, tensor_i32, to_f32_vec, Backend, Tensor};
+use crate::util::error::{Context, Result};
 use crate::util::json::Json;
 
 /// Shared driver context.
 pub struct Ctx {
-    pub engine: Engine,
+    pub backend: Box<dyn Backend>,
     pub results: PathBuf,
     /// Fast mode: fewer steps / smaller grids (CI-sized).
     pub fast: bool,
@@ -29,7 +27,11 @@ pub struct Ctx {
 impl Ctx {
     pub fn new(artifact_dir: &Path, results: &Path, fast: bool) -> Result<Ctx> {
         std::fs::create_dir_all(results.join("runs"))?;
-        Ok(Ctx { engine: Engine::new(artifact_dir)?, results: results.to_path_buf(), fast })
+        Ok(Ctx { backend: open_backend(artifact_dir)?, results: results.to_path_buf(), fast })
+    }
+
+    pub fn backend(&self) -> &dyn Backend {
+        self.backend.as_ref()
     }
 
     pub fn steps(&self, full: usize) -> usize {
@@ -98,18 +100,18 @@ pub fn train_cached(ctx: &Ctx, cfg: &ModelConfig, tc: &TrainConfig) -> Result<Ru
 }
 
 /// Like train_cached but also returns the trained state (checkpointed as
-/// `<key>.ckpt` for cache hits).
+/// `<key>.ckpt` for cache hits). The state is read back from the device
+/// exactly once, at the end of the run.
 pub fn train_with_state(
     ctx: &Ctx,
     cfg: &ModelConfig,
     tc: &TrainConfig,
-) -> Result<(RunSummary, crate::coordinator::trainer::TrainState)> {
+) -> Result<(RunSummary, TrainState)> {
     let key = run_key(cfg, tc);
     let ckpt_path = ctx.results.join("runs").join(format!("{key}.ckpt"));
     let meta = ctx
-        .engine
-        .manifest
-        .find_for("train_step", cfg)
+        .backend()
+        .resolve("train_step", cfg)
         .with_context(|| format!("no train artifact for {}", cfg.name()))?;
     let specs = meta.inputs[..meta.inputs.len() - 4].to_vec();
     if ckpt_path.exists() {
@@ -119,40 +121,17 @@ pub fn train_with_state(
             }
         }
     }
-    let trainer = Trainer::new(&ctx.engine, cfg)?;
+    let trainer = Trainer::new(ctx.backend(), cfg)?;
     let mut batcher = corpus_batcher(cfg, tc.seed);
-    let mut state = trainer.init(tc.init_seed)?;
-    let mut losses = Vec::with_capacity(tc.steps);
-    let t0 = std::time::Instant::now();
-    let mut diverged = false;
-    for step in 0..tc.steps {
-        let lr = tc.schedule.lr_at(tc.lr, step, tc.steps);
-        let tokens = batcher.next_batch();
-        let (loss, _g) = trainer.step(&mut state, &tokens, lr, tc.wd, tc.tau)?;
-        losses.push(loss);
-        if step % 50 == 0 {
-            eprintln!("    [{key}] step {step} loss {loss:.4}");
+    let (result, state) = trainer.run_capture(tc, &mut batcher, |m, _| {
+        if m.step % 50 == 0 {
+            eprintln!("    [{key}] step {} loss {:.4}", m.step, m.loss);
         }
-        if !loss.is_finite() || loss as f64 > tc.max_loss {
-            diverged = true;
-            break;
-        }
-    }
-    let wall = t0.elapsed();
-    let result = crate::coordinator::trainer::RunResult {
-        steps_done: losses.len(),
-        tokens_per_sec: (losses.len() * cfg.batch * cfg.seq_len) as f64
-            / wall.as_secs_f64().max(1e-9),
-        losses,
-        gnorms: vec![],
-        diverged,
-        spikes: 0,
-        wall,
-    };
+    })?;
     checkpoint::save(&ckpt_path, &state, &specs)?;
     let summary = crate::coordinator::metrics::summary_json(&key, &result);
     std::fs::write(ctx.results.join("runs").join(format!("{key}.json")), summary.to_string())?;
-    Ok((RunSummary::from_json(&summary).unwrap(), state))
+    Ok((RunSummary::from_json(&summary).context("summary json roundtrip")?, state))
 }
 
 pub fn corpus_batcher(cfg: &ModelConfig, seed: u64) -> Batcher {
@@ -165,31 +144,29 @@ pub fn corpus_for(cfg: &ModelConfig) -> CorpusSpec {
 }
 
 /// Run a probe artifact on a trained state; returns the named outputs.
+/// Probe artifacts exist only in the AOT catalogue (feature `pjrt`).
 pub fn run_probe(
     ctx: &Ctx,
     cfg: &ModelConfig,
-    params: &[Literal],
+    params: &[Tensor],
     tau: f64,
     seed: u64,
 ) -> Result<Vec<(String, Vec<f32>)>> {
     let meta = ctx
-        .engine
-        .manifest
-        .find_for("probe", cfg)
+        .backend()
+        .resolve("probe", cfg)
         .with_context(|| format!("no probe artifact for {}", cfg.name()))?;
     let name = meta.name.clone();
     let out_names: Vec<String> = meta.outputs.iter().map(|o| o.name.clone()).collect();
     let mut batcher = corpus_batcher(cfg, seed);
     let tokens = batcher.next_batch();
-    let tok = crate::runtime::lit_i32(&tokens, &[cfg.batch, cfg.seq_len])?;
-    let tau_l = scalar_f32(tau as f32);
-    let mut inputs: Vec<&Literal> = params.iter().collect();
-    inputs.push(&tok);
-    inputs.push(&tau_l);
-    let outs = ctx.engine.run(&name, &inputs)?;
+    let mut inputs: Vec<Tensor> = params.to_vec();
+    inputs.push(tensor_i32(&tokens, &[cfg.batch, cfg.seq_len])?);
+    inputs.push(scalar_f32(tau as f32));
+    let outs = ctx.backend().run(&name, &inputs)?;
     Ok(out_names
         .into_iter()
-        .zip(outs.iter().map(|l| to_f32_vec(l).unwrap_or_default()))
+        .zip(outs.iter().map(|t| to_f32_vec(t).unwrap_or_default()))
         .collect())
 }
 

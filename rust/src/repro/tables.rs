@@ -1,9 +1,9 @@
 //! Table reproductions: Fig 1 / Table 3 (scheme comparison), Table 2
 //! (scaling rules), Table 4 (configs + memory plan), Table 5 (evals).
 
-use anyhow::Result;
-
 use super::{corpus_for, proxy_tc, train_with_state, Ctx};
+use crate::runtime::Backend;
+use crate::util::error::Result;
 use crate::config::presets::{paper_model, paper_table4};
 use crate::config::ModelConfig;
 use crate::eval::evaluate;
@@ -112,12 +112,12 @@ pub fn table5(ctx: &Ctx) -> Result<String> {
         };
         let lr = if variant == "mus" { super::figures::MUS_LR } else { super::figures::SP_LR };
         let (sum, state) = train_with_state(ctx, &cfg, &proxy_tc(steps, lr, super::figures::WD, tau, 5))?;
-        // only fp8 variants have fwd artifacts for *their own* graph; eval
-        // uses the mus_fp8-configured fwd when available, else skip evals
-        let has_fwd = ctx.engine.manifest.find_for("fwd", &cfg).is_some();
+        // eval needs a fwd artifact for this exact graph; skip the eval
+        // columns when the backend has none
+        let has_fwd = ctx.backend().resolve("fwd", &cfg).is_ok();
         let (nt, nll, cloze, rep, ind) = if has_fwd {
             let corpus = corpus_for(&cfg);
-            let e = evaluate(&ctx.engine, &cfg, state.params(), tau, &corpus, 4, 77)?;
+            let e = evaluate(ctx.backend(), &cfg, state.params(), tau, &corpus, 4, 77)?;
             (
                 format!("{:.1}%", e.next_token_acc * 100.0),
                 format!("{:.3}", e.avg_nll),

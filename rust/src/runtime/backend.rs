@@ -1,0 +1,200 @@
+//! Backend: the execution API every runtime implementation satisfies.
+//!
+//! The contract is built around *device residency*: `upload`/`execute`/
+//! `download` move opaque [`TensorHandle`]s, so a training loop can keep
+//! the full `2 * n_params` master state on the device and only pay host
+//! transfers for the tokens it feeds in and the scalars (loss, grad-norm)
+//! it reads out. Full-state transfers happen solely at checkpoint / probe
+//! boundaries ([`crate::runtime::Session::read_back`]).
+//!
+//! Implementations must be `Send + Sync`: the sweep engine runs workers as
+//! in-process threads over one shared backend handle.
+//!
+//! Implementations in-tree:
+//!  - [`crate::runtime::ReferenceBackend`] — pure-Rust interpreter of small
+//!    configs through `fp8::Format` emulation; no AOT artifacts needed.
+//!  - `PjrtBackend` (feature `pjrt`) — the AOT HLO-text / PJRT CPU path.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use super::manifest::{ArtifactMeta, Dtype, Manifest};
+use super::tensor::Tensor;
+use crate::config::ModelConfig;
+use crate::err;
+use crate::util::error::Result;
+
+/// Cumulative execution statistics for one artifact (or one session).
+#[derive(Debug, Clone, Default)]
+pub struct ExecStats {
+    pub calls: usize,
+    pub execute_time: Duration,
+    /// Host<->device transfer time attributable to this artifact/session.
+    pub transfer_time: Duration,
+    pub compile_time: Duration,
+    /// Bytes moved across the host<->device boundary.
+    pub transfer_bytes: u64,
+}
+
+impl ExecStats {
+    pub fn per_call_execute(&self) -> Duration {
+        if self.calls == 0 {
+            Duration::ZERO
+        } else {
+            self.execute_time / self.calls as u32
+        }
+    }
+
+    pub fn per_call_transfer(&self) -> Duration {
+        if self.calls == 0 {
+            Duration::ZERO
+        } else {
+            self.transfer_time / self.calls as u32
+        }
+    }
+}
+
+/// Opaque reference to a device-resident tensor. Cheap to clone; freeing
+/// is explicit via [`Backend::free`] (handles are plain ids, not RAII —
+/// they must stay movable across the C-ABI-ish trait boundary).
+#[derive(Debug, Clone)]
+pub struct TensorHandle {
+    pub id: u64,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorHandle {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.elements() * 4
+    }
+}
+
+/// Shared handle-store implementation for backends whose "device" memory
+/// is a host-side map (reference, PJRT-CPU). Payloads are `Arc`ed so
+/// handle lookups clone the Arc, not the tensor data — a step's
+/// full-state input fetch is O(n_tensors) under the lock.
+pub(crate) struct HandleStore {
+    store: Mutex<HashMap<u64, Arc<Tensor>>>,
+    next_id: AtomicU64,
+}
+
+impl HandleStore {
+    pub fn new() -> HandleStore {
+        HandleStore { store: Mutex::new(HashMap::new()), next_id: AtomicU64::new(1) }
+    }
+
+    pub fn insert(&self, t: Tensor) -> TensorHandle {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let h = TensorHandle { id, shape: t.shape().to_vec(), dtype: t.dtype() };
+        self.store.lock().expect("store lock").insert(id, Arc::new(t));
+        h
+    }
+
+    /// Clone the Arcs (not payloads) for a batch of handles under one
+    /// lock acquisition; errors name the artifact for context.
+    pub fn fetch(&self, handles: &[TensorHandle], artifact: &str) -> Result<Vec<Arc<Tensor>>> {
+        let store = self.store.lock().expect("store lock");
+        let mut v = Vec::with_capacity(handles.len());
+        for h in handles {
+            v.push(
+                store
+                    .get(&h.id)
+                    .cloned()
+                    .ok_or_else(|| err!("dangling tensor handle {} for '{artifact}'", h.id))?,
+            );
+        }
+        Ok(v)
+    }
+
+    /// Deep-copy a tensor out (the host-transfer boundary).
+    pub fn get(&self, h: &TensorHandle) -> Result<Tensor> {
+        self.store
+            .lock()
+            .expect("store lock")
+            .get(&h.id)
+            .map(|t| t.as_ref().clone())
+            .ok_or_else(|| err!("dangling tensor handle {}", h.id))
+    }
+
+    pub fn remove(&self, h: &TensorHandle) {
+        self.store.lock().expect("store lock").remove(&h.id);
+    }
+}
+
+/// Backend-agnostic execution API. Object-safe; call sites hold
+/// `&dyn Backend`.
+pub trait Backend: Send + Sync {
+    /// Human-readable platform name ("reference", "cpu", ...).
+    fn platform(&self) -> String;
+
+    /// The artifact catalogue this backend can execute.
+    fn manifest(&self) -> &Manifest;
+
+    /// Resolve the artifact of `kind` for a model config. The default uses
+    /// the static manifest; the reference backend synthesizes metadata on
+    /// demand for any valid config.
+    fn resolve(&self, kind: &str, cfg: &ModelConfig) -> Result<ArtifactMeta> {
+        self.manifest()
+            .find_for(kind, cfg)
+            .cloned()
+            .ok_or_else(|| err!("no {kind} artifact for config {}", cfg.name()))
+    }
+
+    /// Copy a host tensor to the device; returns a device-resident handle.
+    fn upload(&self, t: &Tensor) -> Result<TensorHandle>;
+
+    /// Execute an artifact over device-resident inputs. Outputs stay on
+    /// the device. Implementations check input arity against the manifest.
+    fn execute(&self, name: &str, inputs: &[TensorHandle]) -> Result<Vec<TensorHandle>>;
+
+    /// Transfer one device tensor back to the host.
+    fn download(&self, h: &TensorHandle) -> Result<Tensor>;
+
+    /// Release a device tensor. Freeing an unknown handle is a no-op.
+    fn free(&self, h: &TensorHandle);
+
+    /// Warm the compile cache (e.g. before timing).
+    fn precompile(&self, _name: &str) -> Result<()> {
+        Ok(())
+    }
+
+    /// Per-artifact execution statistics, if the artifact has run.
+    fn stats(&self, name: &str) -> Option<ExecStats>;
+
+    /// Host-level convenience: upload inputs, execute, download every
+    /// output, free all intermediates. This is the *full-transfer* path —
+    /// step loops should use [`crate::runtime::Session`] instead.
+    fn run(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let mut handles = Vec::with_capacity(inputs.len());
+        for t in inputs {
+            handles.push(self.upload(t)?);
+        }
+        let result = self.execute(name, &handles);
+        for h in &handles {
+            self.free(h);
+        }
+        let outs = result?;
+        let mut host = Vec::with_capacity(outs.len());
+        let mut first_err = None;
+        for h in &outs {
+            match self.download(h) {
+                Ok(t) => host.push(t),
+                Err(e) => {
+                    first_err.get_or_insert(e);
+                }
+            }
+            self.free(h);
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(host),
+        }
+    }
+}

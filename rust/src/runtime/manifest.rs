@@ -2,10 +2,10 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
-
 use crate::config::ModelConfig;
+use crate::util::error::{Context, Result};
 use crate::util::json::Json;
+use crate::{bail, err};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Dtype {
@@ -39,14 +39,14 @@ impl TensorSpec {
         let name = j
             .get("name")
             .and_then(|v| v.as_str())
-            .ok_or_else(|| anyhow!("tensor spec missing name"))?
+            .ok_or_else(|| err!("tensor spec missing name"))?
             .to_string();
         let shape = j
             .get("shape")
             .and_then(|v| v.as_arr())
-            .ok_or_else(|| anyhow!("tensor spec missing shape"))?
+            .ok_or_else(|| err!("tensor spec missing shape"))?
             .iter()
-            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .map(|v| v.as_usize().ok_or_else(|| err!("bad dim")))
             .collect::<Result<Vec<_>>>()?;
         let dtype = Dtype::parse(j.str_or("dtype", "f32"))?;
         Ok(TensorSpec { name, shape, dtype })
@@ -78,11 +78,11 @@ impl Manifest {
     }
 
     pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
-        let j = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let j = Json::parse(text).map_err(|e| err!("manifest: {e}"))?;
         let arts = j
             .get("artifacts")
             .and_then(|v| v.as_arr())
-            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?;
+            .ok_or_else(|| err!("manifest missing 'artifacts'"))?;
         let mut artifacts = Vec::with_capacity(arts.len());
         for a in arts {
             let inputs = a

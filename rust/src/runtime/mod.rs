@@ -1,202 +1,96 @@
-//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute.
+//! Runtime: backend-agnostic artifact execution + device-resident state.
 //!
-//! This is the only module that touches the `xla` crate. Facts this wrapper
-//! encodes (verified by `rust/src/bin/hlo_check.rs` and the round-trip
-//! integration tests):
+//! Layering (see the crate docs in `lib.rs`):
 //!
-//!  - artifacts are HLO *text*; `HloModuleProto::from_text_file` reassigns
-//!    instruction ids (jax >= 0.5 emits 64-bit ids that XLA 0.5.1 rejects
-//!    in proto form);
-//!  - executables built with `return_tuple=True` give back ONE tuple
-//!    buffer per replica — PJRT 0.5.1 does not untuple;
-//!  - calling `to_vec` on a tuple literal CHECK-fails (aborts), so the
-//!    tuple must be `decompose_tuple`d after a single host transfer.
+//!  - [`Backend`] — the execution trait: `upload`/`execute`/`download`
+//!    over opaque [`TensorHandle`]s, plus the host-level [`Backend::run`]
+//!    convenience. All implementations are `Send + Sync`, so sweep
+//!    workers run as in-process threads over one backend.
+//!  - [`Session`] — owns the device-resident `TrainState` between steps;
+//!    per-step host traffic is tokens + 3 scalars in and 2 scalars out,
+//!    accounted in [`ExecStats`].
+//!  - [`ReferenceBackend`] — pure-Rust interpreter (fp8 emulation); runs
+//!    everywhere, no artifacts required.
+//!  - `PjrtBackend` (feature `pjrt`) — AOT HLO-text artifacts on the PJRT
+//!    CPU client (`xla` crate; vendored separately).
+//!
+//! [`open_backend`] picks the best available implementation for a given
+//! artifact directory.
 
+mod backend;
 mod manifest;
+#[cfg(feature = "pjrt")]
+mod pjrt;
+mod reference;
+mod session;
+mod tensor;
 
+pub use backend::{Backend, ExecStats, TensorHandle};
 pub use manifest::{ArtifactMeta, Dtype, Manifest, TensorSpec};
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtBackend;
+pub use reference::{micro_config, standard_roster, ReferenceBackend};
+pub use session::{Session, TrainState};
+pub use tensor::{Tensor, TensorData};
 
-use std::cell::RefCell;
-use std::collections::HashMap;
 use std::path::Path;
-use std::rc::Rc;
-use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
-use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, Shape, XlaComputation};
+use crate::util::error::Result;
 
-/// Literal constructors for the artifact ABI (f32 / i32 only, by design —
-/// FP8/BF16 live *inside* the graphs; master state crosses in f32).
-pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<Literal> {
-    let n: usize = shape.iter().product();
-    if n != data.len() {
-        bail!("lit_f32: {} elements for shape {:?}", data.len(), shape);
-    }
-    if shape.is_empty() {
-        return Ok(Literal::scalar(data[0]));
-    }
-    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-    Ok(Literal::vec1(data).reshape(&dims)?)
+/// Host-tensor constructors/accessors, kept as free functions for
+/// call-site brevity (the artifact ABI is f32/i32 only by design).
+pub fn tensor_f32(data: &[f32], shape: &[usize]) -> Result<Tensor> {
+    Tensor::f32(data.to_vec(), shape)
 }
 
-pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<Literal> {
-    let n: usize = shape.iter().product();
-    if n != data.len() {
-        bail!("lit_i32: {} elements for shape {:?}", data.len(), shape);
-    }
-    if shape.is_empty() {
-        return Ok(Literal::scalar(data[0]));
-    }
-    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-    Ok(Literal::vec1(data).reshape(&dims)?)
+pub fn tensor_i32(data: &[i32], shape: &[usize]) -> Result<Tensor> {
+    Tensor::i32(data.to_vec(), shape)
 }
 
-pub fn scalar_f32(v: f32) -> Literal {
-    Literal::scalar(v)
+pub fn scalar_f32(v: f32) -> Tensor {
+    Tensor::scalar_f32(v)
 }
 
-pub fn scalar_i32(v: i32) -> Literal {
-    Literal::scalar(v)
+pub fn scalar_i32(v: i32) -> Tensor {
+    Tensor::scalar_i32(v)
 }
 
-/// Copy a literal's f32 payload out.
-pub fn to_f32_vec(lit: &Literal) -> Result<Vec<f32>> {
-    Ok(lit.to_vec::<f32>()?)
+pub fn to_f32_vec(t: &Tensor) -> Result<Vec<f32>> {
+    t.to_f32_vec()
 }
 
-/// Scalar f32 accessor.
-pub fn to_f32_scalar(lit: &Literal) -> Result<f32> {
-    let v = lit.to_vec::<f32>()?;
-    if v.len() != 1 {
-        bail!("expected scalar, got {} elements", v.len());
-    }
-    Ok(v[0])
+pub fn to_f32_scalar(t: &Tensor) -> Result<f32> {
+    t.scalar()
 }
 
-/// Cumulative execution statistics for one executable.
-#[derive(Debug, Clone, Default)]
-pub struct ExecStats {
-    pub calls: usize,
-    pub execute_time: Duration,
-    pub transfer_time: Duration,
-    pub compile_time: Duration,
-}
-
-struct CachedExe {
-    exe: PjRtLoadedExecutable,
-    stats: ExecStats,
-}
-
-/// Artifact execution engine: one PJRT CPU client + a compile cache.
+/// Open the best available backend for `artifact_dir`:
 ///
-/// Not `Send` (the `xla` crate's client is `Rc`-based); parallel sweeps use
-/// one `Engine` per worker process (`coordinator::sweep`).
-pub struct Engine {
-    client: PjRtClient,
-    pub manifest: Manifest,
-    cache: RefCell<HashMap<String, Rc<RefCell<CachedExe>>>>,
-}
-
-impl Engine {
-    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Engine> {
-        let manifest = Manifest::load(artifact_dir.as_ref())
-            .context("loading artifacts/manifest.json (run `make artifacts`)")?;
-        let client = PjRtClient::cpu()?;
-        Ok(Engine { client, manifest, cache: RefCell::new(HashMap::new()) })
-    }
-
-    /// Compile (or fetch from cache) an artifact by manifest name.
-    fn cached(&self, name: &str) -> Result<Rc<RefCell<CachedExe>>> {
-        if let Some(e) = self.cache.borrow().get(name) {
-            return Ok(e.clone());
+///  - with feature `pjrt` and a built artifact directory, the PJRT CPU
+///    backend over the AOT artifacts;
+///  - otherwise the pure-Rust [`ReferenceBackend`] (standard roster),
+///    which needs no artifacts at all.
+pub fn open_backend(artifact_dir: impl AsRef<Path>) -> Result<Box<dyn Backend>> {
+    let dir = artifact_dir.as_ref();
+    let have_artifacts = dir.join("manifest.json").exists();
+    #[cfg(feature = "pjrt")]
+    {
+        if have_artifacts {
+            return Ok(Box::new(PjrtBackend::new(dir)?));
         }
-        let meta = self
-            .manifest
-            .find(name)
-            .with_context(|| format!("artifact '{name}' not in manifest"))?;
-        let path = self.manifest.dir.join(&meta.file);
-        let t0 = Instant::now();
-        let proto = HloModuleProto::from_text_file(path.to_str().unwrap())
-            .with_context(|| format!("parsing {}", path.display()))?;
-        let comp = XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        let compile_time = t0.elapsed();
-        let cached = Rc::new(RefCell::new(CachedExe {
-            exe,
-            stats: ExecStats { compile_time, ..Default::default() },
-        }));
-        self.cache.borrow_mut().insert(name.to_string(), cached.clone());
-        Ok(cached)
+        eprintln!(
+            "note: {} has no manifest.json; using the pure-Rust reference backend",
+            dir.display()
+        );
     }
-
-    /// Warm the compile cache (e.g. before timing).
-    pub fn precompile(&self, name: &str) -> Result<()> {
-        self.cached(name).map(|_| ())
-    }
-
-    /// Execute an artifact: checks input arity against the manifest, runs,
-    /// transfers the result tuple to host once, and splits it into one
-    /// literal per declared output. Accepts owned or borrowed literals.
-    pub fn run<L: std::borrow::Borrow<Literal>>(
-        &self,
-        name: &str,
-        inputs: &[L],
-    ) -> Result<Vec<Literal>> {
-        let meta = self
-            .manifest
-            .find(name)
-            .with_context(|| format!("artifact '{name}' not in manifest"))?
-            .clone();
-        if inputs.len() != meta.inputs.len() {
-            bail!(
-                "artifact '{name}' expects {} inputs, got {}",
-                meta.inputs.len(),
-                inputs.len()
+    #[cfg(not(feature = "pjrt"))]
+    {
+        if have_artifacts {
+            eprintln!(
+                "note: artifacts present in {} but the pjrt feature is disabled; \
+                 using the pure-Rust reference backend",
+                dir.display()
             );
         }
-        let cached = self.cached(name)?;
-        let t0 = Instant::now();
-        // NOTE: we deliberately avoid `PjRtLoadedExecutable::execute`
-        // (literal inputs): its C++ shim `release()`s the device buffers it
-        // creates for the inputs and never frees them — a ~full-state leak
-        // per training step (measured: 36 GB RSS in an hour-long figure
-        // run; see EXPERIMENTS.md §Perf). Instead we create owned buffers
-        // and use `execute_b`, which borrows them; they drop right after.
-        let bufs = inputs
-            .iter()
-            .map(|l| self.client.buffer_from_host_literal(None, l.borrow()))
-            .collect::<std::result::Result<Vec<_>, _>>()?;
-        let result = cached.borrow().exe.execute_b(&bufs)?;
-        drop(bufs);
-        let t1 = Instant::now();
-        let buf = &result[0][0];
-        let mut lit = buf.to_literal_sync()?;
-        let outs = match lit.shape()? {
-            Shape::Tuple(_) => lit.decompose_tuple()?,
-            _ => vec![lit],
-        };
-        let t2 = Instant::now();
-        {
-            let mut c = cached.borrow_mut();
-            c.stats.calls += 1;
-            c.stats.execute_time += t1 - t0;
-            c.stats.transfer_time += t2 - t1;
-        }
-        if outs.len() != meta.outputs.len() {
-            bail!(
-                "artifact '{name}' declared {} outputs, produced {}",
-                meta.outputs.len(),
-                outs.len()
-            );
-        }
-        Ok(outs)
     }
-
-    pub fn stats(&self, name: &str) -> Option<ExecStats> {
-        self.cache.borrow().get(name).map(|c| c.borrow().stats.clone())
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
+    Ok(Box::new(ReferenceBackend::with_standard_roster()))
 }

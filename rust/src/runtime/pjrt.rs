@@ -1,0 +1,258 @@
+//! PJRT backend (feature `pjrt`): AOT HLO-text artifacts on the PJRT CPU
+//! client via the `xla` crate.
+//!
+//! Facts this wrapper encodes (verified by `rust/src/bin/hlo_check.rs` and
+//! the artifact-gated integration tests):
+//!
+//!  - artifacts are HLO *text*; `HloModuleProto::from_text_file` reassigns
+//!    instruction ids (jax >= 0.5 emits 64-bit ids that XLA 0.5.1 rejects
+//!    in proto form);
+//!  - executables built with `return_tuple=True` give back ONE tuple
+//!    buffer per replica — PJRT 0.5.1 does not untuple;
+//!  - calling `to_vec` on a tuple literal CHECK-fails (aborts), so the
+//!    tuple must be `decompose_tuple`d after a single host transfer.
+//!
+//! Thread-safety model: the `xla` crate's client/executable/buffer types
+//! are `Rc`-based and thread-affine, so this backend keeps a *per-thread*
+//! client and compile cache (`thread_local!`) behind a shared manifest and
+//! mutex-guarded stats — each sweep worker thread compiles once and runs
+//! independently. Tensor handles live in a host-side store: PJRT-CPU
+//! "device" memory is host memory (`execute` copies in/out regardless), so
+//! residency here buys API uniformity rather than copies; on a real
+//! accelerator backend the same handles would wrap device buffers.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, Shape, XlaComputation};
+
+use super::backend::{Backend, ExecStats, HandleStore, TensorHandle};
+use super::manifest::Manifest;
+use super::tensor::Tensor;
+use crate::bail;
+use crate::util::error::{Context, Result};
+
+thread_local! {
+    static CLIENT: RefCell<Option<Rc<PjRtClient>>> = const { RefCell::new(None) };
+    // Keyed by (backend instance id, artifact name): two PjrtBackends over
+    // different artifact directories must not share compiled programs.
+    static EXES: RefCell<HashMap<(u64, String), Rc<PjRtLoadedExecutable>>> =
+        RefCell::new(HashMap::new());
+}
+
+/// Unique id per PjrtBackend instance (scopes the thread-local exe cache).
+static INSTANCE_IDS: AtomicU64 = AtomicU64::new(1);
+
+fn thread_client() -> Result<Rc<PjRtClient>> {
+    CLIENT.with(|c| {
+        let mut slot = c.borrow_mut();
+        if let Some(cl) = slot.as_ref() {
+            return Ok(cl.clone());
+        }
+        let cl = Rc::new(PjRtClient::cpu().context("starting PJRT CPU client")?);
+        *slot = Some(cl.clone());
+        Ok(cl)
+    })
+}
+
+fn tensor_to_literal(t: &Tensor) -> Result<Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    match t.dtype() {
+        super::manifest::Dtype::F32 => {
+            let data = t.as_f32()?;
+            if t.shape().is_empty() {
+                return Ok(Literal::scalar(data[0]));
+            }
+            Ok(Literal::vec1(data).reshape(&dims).context("reshaping f32 literal")?)
+        }
+        super::manifest::Dtype::I32 => {
+            let data = t.as_i32()?;
+            if t.shape().is_empty() {
+                return Ok(Literal::scalar(data[0]));
+            }
+            Ok(Literal::vec1(data).reshape(&dims).context("reshaping i32 literal")?)
+        }
+    }
+}
+
+fn literal_to_tensor(lit: &Literal) -> Result<Tensor> {
+    let shape: Vec<usize> = match lit.array_shape() {
+        Ok(s) => s.dims().iter().map(|&d| d as usize).collect(),
+        Err(_) => vec![],
+    };
+    if let Ok(v) = lit.to_vec::<f32>() {
+        return Tensor::f32(v, &shape);
+    }
+    let v = lit.to_vec::<i32>().context("literal is neither f32 nor i32")?;
+    Tensor::i32(v, &shape)
+}
+
+/// PJRT CPU execution backend over a compiled-artifact directory.
+pub struct PjrtBackend {
+    instance: u64,
+    manifest: Manifest,
+    store: HandleStore,
+    stats: Mutex<HashMap<String, ExecStats>>,
+}
+
+impl PjrtBackend {
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<PjrtBackend> {
+        let manifest = Manifest::load(artifact_dir.as_ref())
+            .context("loading artifacts/manifest.json (run `make artifacts`)")?;
+        Ok(PjrtBackend {
+            instance: INSTANCE_IDS.fetch_add(1, Ordering::Relaxed),
+            manifest,
+            store: HandleStore::new(),
+            stats: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Compile (or fetch from this thread's cache) an artifact.
+    fn cached(&self, name: &str) -> Result<Rc<PjRtLoadedExecutable>> {
+        let key = (self.instance, name.to_string());
+        if let Some(e) = EXES.with(|m| m.borrow().get(&key).cloned()) {
+            return Ok(e);
+        }
+        let meta = self
+            .manifest
+            .find(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))?;
+        let path = self.manifest.dir.join(&meta.file);
+        let path_str = path
+            .to_str()
+            .with_context(|| format!("non-UTF-8 artifact path {}", path.display()))?;
+        let t0 = Instant::now();
+        let proto = HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = Rc::new(thread_client()?.compile(&comp).with_context(|| format!("compiling {name}"))?);
+        let compile_time = t0.elapsed();
+        EXES.with(|m| m.borrow_mut().insert(key, exe.clone()));
+        self.stats
+            .lock()
+            .expect("stats lock")
+            .entry(name.to_string())
+            .or_default()
+            .compile_time += compile_time;
+        Ok(exe)
+    }
+}
+
+impl Drop for PjrtBackend {
+    fn drop(&mut self) {
+        // purge this instance's compiled executables from the dropping
+        // thread's cache. Entries compiled on *other* worker threads are
+        // reclaimed when those threads exit (thread_local teardown) — the
+        // instance-id key guarantees they can never be reused either way.
+        let instance = self.instance;
+        EXES.with(|m| m.borrow_mut().retain(|(id, _), _| *id != instance));
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn platform(&self) -> String {
+        thread_client().map(|c| c.platform_name()).unwrap_or_else(|_| "pjrt".into())
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn upload(&self, t: &Tensor) -> Result<TensorHandle> {
+        Ok(self.store.insert(t.clone()))
+    }
+
+    fn execute(&self, name: &str, inputs: &[TensorHandle]) -> Result<Vec<TensorHandle>> {
+        let meta = self
+            .manifest
+            .find(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))?
+            .clone();
+        if inputs.len() != meta.inputs.len() {
+            bail!("artifact '{name}' expects {} inputs, got {}", meta.inputs.len(), inputs.len());
+        }
+        let host: Vec<Arc<Tensor>> = self.store.fetch(inputs, name)?;
+        let exe = self.cached(name)?;
+        let client = thread_client()?;
+        // t0..t1: host->device staging (on PJRT-CPU this includes the full
+        // input literal conversion — the honest per-step transfer cost);
+        // t1..t2: execution; t2..t3: device->host result transfer.
+        let t0 = Instant::now();
+        // NOTE: we deliberately avoid `PjRtLoadedExecutable::execute`
+        // (literal inputs): its C++ shim `release()`s the device buffers it
+        // creates for the inputs and never frees them — a ~full-state leak
+        // per training step (measured: 36 GB RSS in an hour-long figure
+        // run; see EXPERIMENTS.md §Perf). Instead we create owned buffers
+        // and use `execute_b`, which borrows them; they drop right after.
+        let mut lits = Vec::with_capacity(host.len());
+        for t in &host {
+            lits.push(tensor_to_literal(t)?);
+        }
+        let mut bufs = Vec::with_capacity(lits.len());
+        for l in &lits {
+            bufs.push(
+                client
+                    .buffer_from_host_literal(None, l)
+                    .with_context(|| format!("staging input for '{name}'"))?,
+            );
+        }
+        let t1 = Instant::now();
+        let result = exe.execute_b(&bufs).with_context(|| format!("executing '{name}'"))?;
+        drop(bufs);
+        let t2 = Instant::now();
+        let buf = &result[0][0];
+        let mut lit = buf.to_literal_sync().context("transferring result tuple")?;
+        let outs = match lit.shape().context("result shape")? {
+            Shape::Tuple(_) => lit.decompose_tuple().context("decomposing result tuple")?,
+            _ => vec![lit],
+        };
+        let t3 = Instant::now();
+        if outs.len() != meta.outputs.len() {
+            bail!(
+                "artifact '{name}' declared {} outputs, produced {}",
+                meta.outputs.len(),
+                outs.len()
+            );
+        }
+        let mut tensors = Vec::with_capacity(outs.len());
+        for l in &outs {
+            tensors.push(literal_to_tensor(l)?);
+        }
+        let mut bytes: u64 = host.iter().map(|t| t.byte_len() as u64).sum();
+        let mut handles = Vec::with_capacity(tensors.len());
+        for t in tensors {
+            bytes += t.byte_len() as u64;
+            handles.push(self.store.insert(t));
+        }
+        {
+            let mut stats = self.stats.lock().expect("stats lock");
+            let s = stats.entry(name.to_string()).or_default();
+            s.calls += 1;
+            s.execute_time += t2 - t1;
+            s.transfer_time += (t1 - t0) + (t3 - t2);
+            s.transfer_bytes += bytes;
+        }
+        Ok(handles)
+    }
+
+    fn download(&self, h: &TensorHandle) -> Result<Tensor> {
+        self.store.get(h)
+    }
+
+    fn free(&self, h: &TensorHandle) {
+        self.store.remove(h);
+    }
+
+    fn precompile(&self, name: &str) -> Result<()> {
+        self.cached(name).map(|_| ())
+    }
+
+    fn stats(&self, name: &str) -> Option<ExecStats> {
+        self.stats.lock().expect("stats lock").get(name).cloned()
+    }
+}

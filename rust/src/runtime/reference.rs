@@ -1,0 +1,972 @@
+//! Reference backend: a pure-Rust interpreter for small µS/SP configs.
+//!
+//! Exists so the full L3 stack — trainer, session, sweeps, DDP, eval,
+//! checkpoints, benches, examples — runs *without AOT artifacts* (fresh
+//! clone, offline, no Python). It is not the AOT transformer: attention is
+//! omitted and the model is a µS-parametrized residual MLP over token
+//! embeddings (the synthetic corpus is Markovian, so the bigram structure
+//! is genuinely learnable). What it shares with the AOT path, faithfully:
+//!
+//!  - the artifact ABI (`init` / `train_step` / `fwd` tensor lists, state
+//!    layout `params ++ momenta`, trailing `loss, gnorm` outputs);
+//!  - µS numerics via [`crate::fp8`]: static clip-then-cast E4M3 on hidden
+//!    forward operands, E5M2 on activation gradients, BF16 elsewhere; the
+//!    SP+FP8 variant uses TE-style dynamic per-tensor scaling;
+//!  - scaling rules: unit-variance init, 1/√fan_in and 1/fan_in output
+//!    multipliers, √(d_base/d) (µS) vs d_base/d (SP) LR transfer;
+//!  - the fixed(τ) / running-mean / standard residual schemes (Eq. 10/11);
+//!  - Lion with fully decoupled weight decay (App. A.3).
+//!
+//! Determinism: everything is sequential f32/f64 arithmetic seeded from
+//! the init seed, so thread-parallel sweep workers produce bit-identical
+//! results to the sequential path.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::backend::{Backend, ExecStats, HandleStore, TensorHandle};
+use super::manifest::{ArtifactMeta, Dtype, Manifest, TensorSpec};
+use super::tensor::Tensor;
+use crate::config::ModelConfig;
+use crate::fp8::{Format, BF16, E4M3, E5M2};
+use crate::util::error::{Error, Result};
+use crate::util::rng::Rng;
+use crate::{bail, err};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    Init,
+    TrainStep,
+    Fwd,
+}
+
+impl Kind {
+    fn parse(kind: &str) -> Result<Kind> {
+        match kind {
+            "init" => Ok(Kind::Init),
+            "train_step" => Ok(Kind::TrainStep),
+            "fwd" => Ok(Kind::Fwd),
+            other => Err(err!("reference backend has no '{other}' artifacts")),
+        }
+    }
+
+    fn as_str(self) -> &'static str {
+        match self {
+            Kind::Init => "init",
+            Kind::TrainStep => "train_step",
+            Kind::Fwd => "fwd",
+        }
+    }
+
+    fn name_for(self, cfg: &ModelConfig) -> String {
+        let prefix = match self {
+            Kind::Init => "init",
+            Kind::TrainStep => "train",
+            Kind::Fwd => "fwd",
+        };
+        format!("{}_{}", prefix, cfg.name())
+    }
+}
+
+/// Pure-Rust execution backend. Thread-safe: the tensor store and stats
+/// are mutex-guarded; the interpreter itself runs outside any lock so
+/// sweep workers execute concurrently.
+pub struct ReferenceBackend {
+    manifest: Manifest,
+    registry: Mutex<HashMap<String, (Kind, ModelConfig)>>,
+    store: HandleStore,
+    stats: Mutex<HashMap<String, ExecStats>>,
+}
+
+impl ReferenceBackend {
+    /// Backend pre-registered for the given configs (any further valid
+    /// config still resolves dynamically via [`Backend::resolve`]).
+    pub fn new(configs: &[ModelConfig]) -> Result<ReferenceBackend> {
+        let mut artifacts = Vec::new();
+        let mut registry = HashMap::new();
+        for cfg in configs {
+            cfg.validate().map_err(Error::msg)?;
+            for kind in [Kind::Init, Kind::TrainStep, Kind::Fwd] {
+                let meta = meta_for(kind, cfg);
+                registry.insert(meta.name.clone(), (kind, cfg.clone()));
+                artifacts.push(meta);
+            }
+        }
+        Ok(ReferenceBackend {
+            manifest: Manifest { dir: PathBuf::from("(reference)"), artifacts },
+            registry: Mutex::new(registry),
+            store: HandleStore::new(),
+            stats: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Backend covering the repo's standard proxy roster (CLI / examples).
+    pub fn with_standard_roster() -> ReferenceBackend {
+        ReferenceBackend::new(&standard_roster()).expect("roster configs are valid")
+    }
+
+    fn lookup(&self, name: &str) -> Result<(Kind, ModelConfig)> {
+        self.registry
+            .lock()
+            .expect("registry lock")
+            .get(name)
+            .cloned()
+            .ok_or_else(|| err!("artifact '{name}' not registered with the reference backend"))
+    }
+}
+
+impl Backend for ReferenceBackend {
+    fn platform(&self) -> String {
+        "reference".to_string()
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn resolve(&self, kind: &str, cfg: &ModelConfig) -> Result<ArtifactMeta> {
+        let k = Kind::parse(kind)?;
+        cfg.validate().map_err(Error::msg)?;
+        let meta = meta_for(k, cfg);
+        self.registry
+            .lock()
+            .expect("registry lock")
+            .insert(meta.name.clone(), (k, cfg.clone()));
+        Ok(meta)
+    }
+
+    fn upload(&self, t: &Tensor) -> Result<TensorHandle> {
+        Ok(self.store.insert(t.clone()))
+    }
+
+    fn execute(&self, name: &str, inputs: &[TensorHandle]) -> Result<Vec<TensorHandle>> {
+        let (kind, cfg) = self.lookup(name)?;
+        let expected = input_arity(kind, &cfg);
+        if inputs.len() != expected {
+            bail!("artifact '{name}' expects {expected} inputs, got {}", inputs.len());
+        }
+        // clone Arcs (not payloads) under the lock; interpret outside it
+        let host: Vec<Arc<Tensor>> = self.store.fetch(inputs, name)?;
+        let t0 = Instant::now();
+        let outs = match kind {
+            Kind::Init => run_init(&cfg, &host)?,
+            Kind::TrainStep => run_train_step(&cfg, &host)?,
+            Kind::Fwd => run_fwd(&cfg, &host)?,
+        };
+        let dt = t0.elapsed();
+        let handles: Vec<TensorHandle> = outs.into_iter().map(|t| self.store.insert(t)).collect();
+        {
+            let mut stats = self.stats.lock().expect("stats lock");
+            let s = stats.entry(name.to_string()).or_default();
+            s.calls += 1;
+            s.execute_time += dt;
+        }
+        Ok(handles)
+    }
+
+    fn download(&self, h: &TensorHandle) -> Result<Tensor> {
+        self.store.get(h)
+    }
+
+    fn free(&self, h: &TensorHandle) {
+        self.store.remove(h);
+    }
+
+    fn stats(&self, name: &str) -> Option<ExecStats> {
+        self.stats.lock().expect("stats lock").get(name).cloned()
+    }
+}
+
+/// Configs pre-registered by [`ReferenceBackend::with_standard_roster`]:
+/// the repro proxy family, the e2e shape, and the micro test config.
+pub fn standard_roster() -> Vec<ModelConfig> {
+    let mut out = Vec::new();
+    for (w, d) in [(32usize, 4usize), (64, 4), (128, 6), (256, 8), (64, 24)] {
+        for (variant, precision) in [("mus", "fp8"), ("mus", "bf16"), ("sp", "bf16"), ("sp", "fp8")]
+        {
+            let residual = if variant == "mus" { "fixed" } else { "standard" };
+            out.push(ModelConfig {
+                width: w,
+                depth: d,
+                variant: variant.into(),
+                precision: precision.into(),
+                residual: residual.into(),
+                ..ModelConfig::default()
+            });
+        }
+    }
+    for precision in ["fp8", "bf16"] {
+        out.push(ModelConfig {
+            width: 384,
+            depth: 6,
+            head_dim: 64,
+            vocab: 2048,
+            seq_len: 256,
+            batch: 8,
+            precision: precision.into(),
+            ..ModelConfig::default()
+        });
+    }
+    out.push(micro_config());
+    out
+}
+
+/// Tiny config for fast CPU tests (fits a debug-build test budget).
+pub fn micro_config() -> ModelConfig {
+    ModelConfig {
+        width: 16,
+        depth: 2,
+        head_dim: 8,
+        vocab: 64,
+        seq_len: 16,
+        batch: 2,
+        ..ModelConfig::default()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ABI metadata
+
+/// Reference-model parameter tensors, in state order:
+/// `embed [V,D]`, `w0..w{L-1} [D,D]`, `head [D,V]`.
+fn param_specs(cfg: &ModelConfig) -> Vec<TensorSpec> {
+    let (d, v) = (cfg.width, cfg.vocab);
+    let mut specs = vec![TensorSpec { name: "embed".into(), shape: vec![v, d], dtype: Dtype::F32 }];
+    for l in 0..cfg.depth {
+        specs.push(TensorSpec { name: format!("w{l}"), shape: vec![d, d], dtype: Dtype::F32 });
+    }
+    specs.push(TensorSpec { name: "head".into(), shape: vec![d, v], dtype: Dtype::F32 });
+    specs
+}
+
+fn n_param_tensors(cfg: &ModelConfig) -> usize {
+    cfg.depth + 2
+}
+
+fn input_arity(kind: Kind, cfg: &ModelConfig) -> usize {
+    let n = n_param_tensors(cfg);
+    match kind {
+        Kind::Init => 1,
+        Kind::TrainStep => 2 * n + 4,
+        Kind::Fwd => n + 2,
+    }
+}
+
+fn meta_for(kind: Kind, cfg: &ModelConfig) -> ArtifactMeta {
+    let params = param_specs(cfg);
+    let momenta: Vec<TensorSpec> = params
+        .iter()
+        .map(|s| TensorSpec { name: format!("m_{}", s.name), shape: s.shape.clone(), dtype: s.dtype })
+        .collect();
+    let tokens = TensorSpec {
+        name: "tokens".into(),
+        shape: vec![cfg.batch, cfg.seq_len],
+        dtype: Dtype::I32,
+    };
+    let scalar = |name: &str| TensorSpec { name: name.into(), shape: vec![], dtype: Dtype::F32 };
+    let (inputs, outputs) = match kind {
+        Kind::Init => {
+            let seed = TensorSpec { name: "seed".into(), shape: vec![], dtype: Dtype::I32 };
+            let mut outs = params.clone();
+            outs.extend(momenta);
+            (vec![seed], outs)
+        }
+        Kind::TrainStep => {
+            let mut ins = params.clone();
+            ins.extend(momenta.clone());
+            ins.push(tokens);
+            ins.extend([scalar("lr"), scalar("wd"), scalar("tau")]);
+            let mut outs = params.clone();
+            outs.extend(momenta);
+            outs.extend([scalar("loss"), scalar("gnorm")]);
+            (ins, outs)
+        }
+        Kind::Fwd => {
+            let mut ins = params.clone();
+            ins.push(tokens);
+            ins.push(scalar("tau"));
+            let logits = TensorSpec {
+                name: "logits".into(),
+                shape: vec![cfg.batch, cfg.seq_len, cfg.vocab],
+                dtype: Dtype::F32,
+            };
+            (ins, vec![logits])
+        }
+    };
+    ArtifactMeta {
+        name: kind.name_for(cfg),
+        kind: kind.as_str().to_string(),
+        file: String::new(),
+        config: Some(cfg.clone()),
+        inputs,
+        outputs,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Numerics: quantization modes, activations, residual coefficients
+
+#[derive(Debug, Clone, Copy)]
+enum QuantMode {
+    /// BF16 round-trip (the "high precision" lane of the artifact graphs).
+    Bf16,
+    /// µS static scaling: clip to max_finite, then cast.
+    StaticFp8(Format),
+    /// TE-style dynamic scaling: rescale to the format's range by the
+    /// tensor's amax, cast, rescale back (the overhead µS deletes).
+    DynamicFp8(Format),
+}
+
+fn quantize_slice(xs: &mut [f32], mode: QuantMode) {
+    match mode {
+        QuantMode::Bf16 => {
+            for x in xs.iter_mut() {
+                *x = BF16.quantize(*x);
+            }
+        }
+        QuantMode::StaticFp8(f) => {
+            for x in xs.iter_mut() {
+                *x = f.quantize(*x);
+            }
+        }
+        QuantMode::DynamicFp8(f) => {
+            let amax = xs.iter().fold(0f32, |m, x| m.max(x.abs()));
+            if amax == 0.0 || !amax.is_finite() {
+                return;
+            }
+            let scale = f.max_finite() as f32 / amax;
+            for x in xs.iter_mut() {
+                *x = f.quantize(*x * scale) / scale;
+            }
+        }
+    }
+}
+
+/// Quantization plan for a (variant, precision) pair.
+struct Plan {
+    /// Hidden-layer weights & activations (forward).
+    hidden: QuantMode,
+    /// Activation gradients (backward).
+    grad: QuantMode,
+}
+
+fn plan_for(cfg: &ModelConfig) -> Plan {
+    match (cfg.variant.as_str(), cfg.precision.as_str()) {
+        ("mus", "fp8") => Plan { hidden: QuantMode::StaticFp8(E4M3), grad: QuantMode::StaticFp8(E5M2) },
+        ("sp", "fp8") => Plan { hidden: QuantMode::DynamicFp8(E4M3), grad: QuantMode::DynamicFp8(E5M2) },
+        _ => Plan { hidden: QuantMode::Bf16, grad: QuantMode::Bf16 },
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Act {
+    Gelu,
+    Silu,
+    Relu,
+}
+
+impl Act {
+    fn parse(name: &str) -> Result<Act> {
+        match name {
+            "gelu" => Ok(Act::Gelu),
+            "silu" => Ok(Act::Silu),
+            "relu" => Ok(Act::Relu),
+            other => Err(err!("unknown activation '{other}'")),
+        }
+    }
+
+    #[inline]
+    fn apply(self, z: f32) -> f32 {
+        match self {
+            Act::Gelu => {
+                const K: f32 = 0.797_884_56; // sqrt(2/pi)
+                let u = K * (z + 0.044715 * z * z * z);
+                0.5 * z * (1.0 + u.tanh())
+            }
+            Act::Silu => z / (1.0 + (-z).exp()),
+            Act::Relu => z.max(0.0),
+        }
+    }
+
+    #[inline]
+    fn deriv(self, z: f32) -> f32 {
+        match self {
+            Act::Gelu => {
+                const K: f32 = 0.797_884_56;
+                let u = K * (z + 0.044715 * z * z * z);
+                let t = u.tanh();
+                0.5 * (1.0 + t) + 0.5 * z * (1.0 - t * t) * K * (1.0 + 3.0 * 0.044715 * z * z)
+            }
+            Act::Silu => {
+                let s = 1.0 / (1.0 + (-z).exp());
+                s * (1.0 + z * (1.0 - s))
+            }
+            Act::Relu => {
+                if z > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+}
+
+/// Residual combination weights (a, b): `x' = a*x + b*branch`.
+/// fixed (Eq. 10): a = √(1-τ), b = √τ. running-mean (Eq. 11), branch
+/// i (1-based): a = √(i/(i+1)), b = √(1/(i+1)). standard (SP): a = b = 1.
+fn residual_coeffs(cfg: &ModelConfig, tau: f32, layer: usize) -> (f32, f32) {
+    match cfg.residual.as_str() {
+        "standard" => (1.0, 1.0),
+        "running_mean" => {
+            let i = (layer + 1) as f32;
+            ((i / (i + 1.0)).sqrt(), (1.0 / (i + 1.0)).sqrt())
+        }
+        _ => {
+            let t = tau.clamp(0.0, 1.0);
+            ((1.0 - t).sqrt(), t.sqrt())
+        }
+    }
+}
+
+fn sign(x: f32) -> f32 {
+    if x > 0.0 {
+        1.0
+    } else if x < 0.0 {
+        -1.0
+    } else {
+        0.0
+    }
+}
+
+/// Per-tensor LR transfer multiplier (mirrors configs.py lr_mult): µS
+/// scales hidden layers by √(d_base/d); SP scales every layer by d_base/d.
+fn lr_mult(cfg: &ModelConfig, tensor_idx: usize) -> f32 {
+    let n = n_param_tensors(cfg);
+    let hidden = tensor_idx > 0 && tensor_idx < n - 1;
+    if cfg.variant == "mus" {
+        if hidden {
+            (cfg.d_base as f32 / cfg.width as f32).sqrt()
+        } else {
+            1.0
+        }
+    } else {
+        cfg.d_base as f32 / cfg.width as f32
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Interpreter entry points
+
+fn run_init(cfg: &ModelConfig, inputs: &[Arc<Tensor>]) -> Result<Vec<Tensor>> {
+    let seed = inputs[0].scalar_i32_value()?;
+    let sigma = if cfg.variant == "mus" { 1.0f32 } else { 0.02 };
+    let rng = Rng::new(0x5EED_0000_u64 ^ (seed as i64 as u64));
+    let specs = param_specs(cfg);
+    let mut outs = Vec::with_capacity(2 * specs.len());
+    for (i, spec) in specs.iter().enumerate() {
+        let mut r = rng.fork(0x9A17 + i as u64);
+        let mut data = vec![0f32; spec.elements()];
+        r.fill_normal(&mut data, sigma);
+        outs.push(Tensor::f32(data, &spec.shape)?);
+    }
+    for spec in &specs {
+        outs.push(Tensor::zeros_f32(&spec.shape));
+    }
+    Ok(outs)
+}
+
+struct StateView {
+    params: Vec<Vec<f32>>,
+    momenta: Vec<Vec<f32>>,
+    tokens: Vec<i32>,
+}
+
+fn unpack_state(cfg: &ModelConfig, inputs: &[Arc<Tensor>], with_momenta: bool) -> Result<StateView> {
+    let n = n_param_tensors(cfg);
+    let specs = param_specs(cfg);
+    let mut params = Vec::with_capacity(n);
+    for (i, spec) in specs.iter().enumerate() {
+        let t = &inputs[i];
+        if t.elements() != spec.elements() {
+            bail!("param tensor {} ({}) has {} elements, expected {}",
+                i, spec.name, t.elements(), spec.elements());
+        }
+        params.push(t.to_f32_vec()?);
+    }
+    let mut momenta = Vec::new();
+    let tok_idx = if with_momenta {
+        for (i, spec) in specs.iter().enumerate() {
+            let t = &inputs[n + i];
+            if t.elements() != spec.elements() {
+                bail!("momentum tensor {} (m_{}) has {} elements, expected {}",
+                    i, spec.name, t.elements(), spec.elements());
+            }
+            momenta.push(t.to_f32_vec()?);
+        }
+        2 * n
+    } else {
+        n
+    };
+    let tokens = inputs[tok_idx].as_i32()?.to_vec();
+    if tokens.len() != cfg.batch * cfg.seq_len {
+        bail!("tokens length {} != batch*seq = {}", tokens.len(), cfg.batch * cfg.seq_len);
+    }
+    for &t in &tokens {
+        if t < 0 || t as usize >= cfg.vocab {
+            bail!("token id {t} out of vocab range 0..{}", cfg.vocab);
+        }
+    }
+    Ok(StateView { params, momenta, tokens })
+}
+
+fn run_train_step(cfg: &ModelConfig, inputs: &[Arc<Tensor>]) -> Result<Vec<Tensor>> {
+    let n = n_param_tensors(cfg);
+    let mut sv = unpack_state(cfg, inputs, true)?;
+    let lr = inputs[2 * n + 1].scalar()?;
+    let wd = inputs[2 * n + 2].scalar()?;
+    let tau = inputs[2 * n + 3].scalar()?;
+
+    let (grads, loss, gnorm) = backprop(cfg, &sv.params, &sv.tokens, tau)?;
+
+    // Lion with fully decoupled weight decay (ref.py lion_update):
+    //   c = β1·m + (1-β1)·g;  p' = p - lr·sign(c) - wd·p;  m' = β2·m + (1-β2)·g
+    const B1: f32 = 0.9;
+    const B2: f32 = 0.99;
+    for i in 0..n {
+        let lr_eff = lr * lr_mult(cfg, i);
+        let (p, m, g) = (&mut sv.params[i], &mut sv.momenta[i], &grads[i]);
+        for j in 0..p.len() {
+            let c = B1 * m[j] + (1.0 - B1) * g[j];
+            p[j] = p[j] - lr_eff * sign(c) - wd * p[j];
+            m[j] = B2 * m[j] + (1.0 - B2) * g[j];
+        }
+    }
+
+    let specs = param_specs(cfg);
+    let mut outs = Vec::with_capacity(2 * n + 2);
+    for (i, spec) in specs.iter().enumerate() {
+        outs.push(Tensor::f32(std::mem::take(&mut sv.params[i]), &spec.shape)?);
+    }
+    for (i, spec) in specs.iter().enumerate() {
+        outs.push(Tensor::f32(std::mem::take(&mut sv.momenta[i]), &spec.shape)?);
+    }
+    outs.push(Tensor::scalar_f32(loss));
+    outs.push(Tensor::scalar_f32(gnorm));
+    Ok(outs)
+}
+
+fn run_fwd(cfg: &ModelConfig, inputs: &[Arc<Tensor>]) -> Result<Vec<Tensor>> {
+    let n = n_param_tensors(cfg);
+    let sv = unpack_state(cfg, inputs, false)?;
+    let tau = inputs[n + 1].scalar()?;
+    let logits = forward_logits(cfg, &sv.params, &sv.tokens, tau)?;
+    Ok(vec![Tensor::f32(logits, &[cfg.batch, cfg.seq_len, cfg.vocab])?])
+}
+
+// ---------------------------------------------------------------------------
+// Model math
+
+/// Quantized copies of the weights for one step's compute.
+struct QuantWeights {
+    hidden: Vec<Vec<f32>>,
+    head: Vec<f32>,
+}
+
+fn quantize_weights(cfg: &ModelConfig, params: &[Vec<f32>], plan: &Plan) -> QuantWeights {
+    let n = n_param_tensors(cfg);
+    let mut hidden = Vec::with_capacity(cfg.depth);
+    for w in params.iter().take(n - 1).skip(1) {
+        let mut q = w.clone();
+        quantize_slice(&mut q, plan.hidden);
+        hidden.push(q);
+    }
+    // Embedding and LM head stay BF16 even in FP8 mode (paper Table 1).
+    let mut head = params[n - 1].clone();
+    quantize_slice(&mut head, QuantMode::Bf16);
+    QuantWeights { hidden, head }
+}
+
+/// Hidden-linear output multiplier: µS unit-scaled matmul (1/√fan_in).
+fn hidden_mult(cfg: &ModelConfig) -> f32 {
+    if cfg.variant == "mus" {
+        1.0 / (cfg.width as f32).sqrt()
+    } else {
+        1.0
+    }
+}
+
+/// LM-head output multiplier: µS uses 1/fan_in (µP-style).
+fn head_mult(cfg: &ModelConfig) -> f32 {
+    if cfg.variant == "mus" {
+        1.0 / cfg.width as f32
+    } else {
+        1.0
+    }
+}
+
+/// Forward one position's residual tower. `x` must hold L+1 buffers of
+/// width D; `xq`/`z` hold L buffers (saved operands for backward).
+#[allow(clippy::too_many_arguments)]
+fn forward_tower(
+    cfg: &ModelConfig,
+    qw: &QuantWeights,
+    act: Act,
+    plan: &Plan,
+    tau: f32,
+    x: &mut [Vec<f32>],
+    xq: &mut [Vec<f32>],
+    z: &mut [Vec<f32>],
+) {
+    let d = cfg.width;
+    let alpha = hidden_mult(cfg);
+    for l in 0..cfg.depth {
+        xq[l].copy_from_slice(&x[l]);
+        quantize_slice(&mut xq[l], plan.hidden);
+        let w = &qw.hidden[l];
+        for i in 0..d {
+            let row = &w[i * d..(i + 1) * d];
+            let mut acc = 0f32;
+            for j in 0..d {
+                acc += row[j] * xq[l][j];
+            }
+            z[l][i] = alpha * acc;
+        }
+        let (ca, cb) = residual_coeffs(cfg, tau, l);
+        let (lo, hi) = x.split_at_mut(l + 1);
+        let (xl, xn) = (&lo[l], &mut hi[0]);
+        for i in 0..d {
+            xn[i] = ca * xl[i] + cb * act.apply(z[l][i]);
+        }
+    }
+}
+
+/// RMS-normalize the final residual state: y = x / rms(x). Returns rms.
+fn rms_norm(x: &[f32], y: &mut [f32]) -> f32 {
+    let d = x.len();
+    let ms = x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / d as f64;
+    let r = (ms + 1e-6).sqrt() as f32;
+    for i in 0..d {
+        y[i] = x[i] / r;
+    }
+    r
+}
+
+fn forward_logits(
+    cfg: &ModelConfig,
+    params: &[Vec<f32>],
+    tokens: &[i32],
+    tau: f32,
+) -> Result<Vec<f32>> {
+    let (d, v, s) = (cfg.width, cfg.vocab, cfg.seq_len);
+    let act = Act::parse(&cfg.activation)?;
+    let plan = plan_for(cfg);
+    let qw = quantize_weights(cfg, params, &plan);
+    let embed = &params[0];
+    let s_out = head_mult(cfg);
+
+    let mut x: Vec<Vec<f32>> = (0..=cfg.depth).map(|_| vec![0f32; d]).collect();
+    let mut xq: Vec<Vec<f32>> = (0..cfg.depth).map(|_| vec![0f32; d]).collect();
+    let mut z: Vec<Vec<f32>> = (0..cfg.depth).map(|_| vec![0f32; d]).collect();
+    let mut y = vec![0f32; d];
+    let mut logits = vec![0f32; cfg.batch * s * v];
+
+    for b in 0..cfg.batch {
+        for t in 0..s {
+            let tok = tokens[b * s + t] as usize;
+            x[0].copy_from_slice(&embed[tok * d..(tok + 1) * d]);
+            quantize_slice(&mut x[0], QuantMode::Bf16);
+            forward_tower(cfg, &qw, act, &plan, tau, &mut x, &mut xq, &mut z);
+            rms_norm(&x[cfg.depth], &mut y);
+            quantize_slice(&mut y, QuantMode::Bf16);
+            let out = &mut logits[(b * s + t) * v..(b * s + t + 1) * v];
+            for (dd, &yd) in y.iter().enumerate() {
+                if yd == 0.0 {
+                    continue;
+                }
+                let row = &qw.head[dd * v..(dd + 1) * v];
+                for (vv, o) in out.iter_mut().enumerate() {
+                    *o += yd * row[vv];
+                }
+            }
+            for o in out.iter_mut() {
+                *o *= s_out;
+            }
+        }
+    }
+    Ok(logits)
+}
+
+/// Full forward + backward over all scored positions. Returns per-tensor
+/// gradients (state order), mean next-token loss, and the global grad norm.
+fn backprop(
+    cfg: &ModelConfig,
+    params: &[Vec<f32>],
+    tokens: &[i32],
+    tau: f32,
+) -> Result<(Vec<Vec<f32>>, f32, f32)> {
+    let (d, v, s, l_n) = (cfg.width, cfg.vocab, cfg.seq_len, cfg.depth);
+    let n = n_param_tensors(cfg);
+    let act = Act::parse(&cfg.activation)?;
+    let plan = plan_for(cfg);
+    let qw = quantize_weights(cfg, params, &plan);
+    let embed = &params[0];
+    let alpha = hidden_mult(cfg);
+    let s_out = head_mult(cfg);
+    if s < 2 || cfg.batch == 0 {
+        bail!("batch {} x seq_len {s} too small to score next-token loss", cfg.batch);
+    }
+    let scored = cfg.batch * (s - 1);
+
+    let mut grads: Vec<Vec<f32>> = params.iter().map(|p| vec![0f32; p.len()]).collect();
+    let mut x: Vec<Vec<f32>> = (0..=l_n).map(|_| vec![0f32; d]).collect();
+    let mut xq: Vec<Vec<f32>> = (0..l_n).map(|_| vec![0f32; d]).collect();
+    let mut z: Vec<Vec<f32>> = (0..l_n).map(|_| vec![0f32; d]).collect();
+    let mut y = vec![0f32; d];
+    let mut logits = vec![0f32; v];
+    let mut dlogits = vec![0f32; v];
+    let mut dy = vec![0f32; d];
+    let mut dxn = vec![0f32; d];
+    let mut dxl = vec![0f32; d];
+    let mut dz = vec![0f32; d];
+    let mut loss_sum = 0f64;
+
+    for b in 0..cfg.batch {
+        for t in 0..s - 1 {
+            let tok = tokens[b * s + t] as usize;
+            let tgt = tokens[b * s + t + 1] as usize;
+            x[0].copy_from_slice(&embed[tok * d..(tok + 1) * d]);
+            quantize_slice(&mut x[0], QuantMode::Bf16);
+            forward_tower(cfg, &qw, act, &plan, tau, &mut x, &mut xq, &mut z);
+            let r = rms_norm(&x[l_n], &mut y);
+            quantize_slice(&mut y, QuantMode::Bf16);
+
+            logits.iter_mut().for_each(|o| *o = 0.0);
+            for (dd, &yd) in y.iter().enumerate() {
+                if yd == 0.0 {
+                    continue;
+                }
+                let row = &qw.head[dd * v..(dd + 1) * v];
+                for (vv, o) in logits.iter_mut().enumerate() {
+                    *o += yd * row[vv];
+                }
+            }
+            for o in logits.iter_mut() {
+                *o *= s_out;
+            }
+
+            // stable cross-entropy + dlogits = (softmax - onehot) / scored
+            let m = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let zden: f64 = logits.iter().map(|&o| ((o - m) as f64).exp()).sum();
+            let lse = m as f64 + zden.ln();
+            loss_sum += lse - logits[tgt] as f64;
+            let inv = 1.0 / scored as f32;
+            for vv in 0..v {
+                let p = (((logits[vv] - m) as f64).exp() / zden) as f32;
+                dlogits[vv] = (p - if vv == tgt { 1.0 } else { 0.0 }) * inv;
+            }
+
+            // head backward: g_head += s_out * y ⊗ dlogits; dy = s_out * head @ dlogits
+            let g_head = &mut grads[n - 1];
+            for dd in 0..d {
+                let row = &qw.head[dd * v..(dd + 1) * v];
+                let g_row = &mut g_head[dd * v..(dd + 1) * v];
+                let yd = y[dd];
+                let mut acc = 0f32;
+                for vv in 0..v {
+                    let dl = dlogits[vv];
+                    g_row[vv] += s_out * yd * dl;
+                    acc += row[vv] * dl;
+                }
+                dy[dd] = s_out * acc;
+            }
+
+            // RMS-norm backward: dx = (dy - y·mean(dy⊙y)) / r
+            let mdot = dy.iter().zip(&y).map(|(&a, &b)| (a as f64) * (b as f64)).sum::<f64>()
+                / d as f64;
+            for dd in 0..d {
+                dxn[dd] = (dy[dd] - y[dd] * mdot as f32) / r;
+            }
+
+            // residual tower backward (straight-through quantization)
+            for l in (0..l_n).rev() {
+                let (ca, cb) = residual_coeffs(cfg, tau, l);
+                for i in 0..d {
+                    dz[i] = cb * dxn[i] * act.deriv(z[l][i]);
+                }
+                quantize_slice(&mut dz, plan.grad);
+                let w = &qw.hidden[l];
+                let g_w = &mut grads[1 + l];
+                for i in 0..d {
+                    dxl[i] = ca * dxn[i];
+                }
+                for i in 0..d {
+                    let dzi = dz[i];
+                    if dzi == 0.0 {
+                        continue;
+                    }
+                    let row = &w[i * d..(i + 1) * d];
+                    let g_row = &mut g_w[i * d..(i + 1) * d];
+                    let xql = &xq[l];
+                    for j in 0..d {
+                        g_row[j] += alpha * dzi * xql[j];
+                        dxl[j] += alpha * row[j] * dzi;
+                    }
+                }
+                std::mem::swap(&mut dxn, &mut dxl);
+            }
+
+            // embedding backward
+            let g_embed = &mut grads[0];
+            for dd in 0..d {
+                g_embed[tok * d + dd] += dxn[dd];
+            }
+        }
+    }
+
+    let gnorm_sq: f64 = grads
+        .iter()
+        .map(|g| g.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>())
+        .sum();
+    let loss = (loss_sum / scored as f64) as f32;
+    Ok((grads, loss, gnorm_sq.sqrt() as f32))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::backend::Backend;
+
+    fn micro_backend() -> ReferenceBackend {
+        ReferenceBackend::new(&[micro_config()]).unwrap()
+    }
+
+    fn init_state(be: &ReferenceBackend, cfg: &ModelConfig, seed: i32) -> Vec<Tensor> {
+        let name = Kind::Init.name_for(cfg);
+        be.run(&name, &[Tensor::scalar_i32(seed)]).unwrap()
+    }
+
+    #[test]
+    fn init_is_deterministic_and_unit_variance() {
+        let be = micro_backend();
+        let cfg = micro_config();
+        let a = init_state(&be, &cfg, 7);
+        let b = init_state(&be, &cfg, 7);
+        assert_eq!(a.len(), 2 * n_param_tensors(&cfg));
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x, y);
+        }
+        let c = init_state(&be, &cfg, 8);
+        assert_ne!(a[0], c[0]);
+        // µS init: unit variance embedding
+        let e = a[0].as_f32().unwrap();
+        let var = e.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / e.len() as f64;
+        assert!((var - 1.0).abs() < 0.15, "embed var {var}");
+        // momenta zero
+        let m = a[n_param_tensors(&cfg)].as_f32().unwrap();
+        assert!(m.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn train_step_abi_and_loss_near_ln_vocab() {
+        let be = micro_backend();
+        let cfg = micro_config();
+        let state = init_state(&be, &cfg, 0);
+        let n = n_param_tensors(&cfg);
+        let mut inputs = state;
+        let tokens: Vec<i32> = (0..cfg.batch * cfg.seq_len).map(|i| (i % cfg.vocab) as i32).collect();
+        inputs.push(Tensor::i32(tokens, &[cfg.batch, cfg.seq_len]).unwrap());
+        inputs.push(Tensor::scalar_f32(0.01));
+        inputs.push(Tensor::scalar_f32(1e-4));
+        inputs.push(Tensor::scalar_f32(0.4));
+        let outs = be.run(&Kind::TrainStep.name_for(&cfg), &inputs).unwrap();
+        assert_eq!(outs.len(), 2 * n + 2);
+        let loss = outs[2 * n].scalar().unwrap();
+        let gnorm = outs[2 * n + 1].scalar().unwrap();
+        let ln_v = (cfg.vocab as f32).ln();
+        assert!((loss - ln_v).abs() < 0.8, "init loss {loss}, ln|V| {ln_v}");
+        assert!(gnorm.is_finite() && gnorm > 0.0);
+    }
+
+    #[test]
+    fn repeated_steps_reduce_loss_on_fixed_batch() {
+        let be = micro_backend();
+        let cfg = micro_config();
+        let n = n_param_tensors(&cfg);
+        let mut state = init_state(&be, &cfg, 1);
+        // a learnable fixed batch: strict bigram cycle
+        let tokens: Vec<i32> =
+            (0..cfg.batch * cfg.seq_len).map(|i| ((i * 3) % cfg.vocab) as i32).collect();
+        let tok = Tensor::i32(tokens, &[cfg.batch, cfg.seq_len]).unwrap();
+        let mut first = None;
+        let mut last = 0f32;
+        for _ in 0..60 {
+            let mut inputs = state.clone();
+            inputs.push(tok.clone());
+            inputs.push(Tensor::scalar_f32(0.01));
+            inputs.push(Tensor::scalar_f32(0.0));
+            inputs.push(Tensor::scalar_f32(0.4));
+            let mut outs = be.run(&Kind::TrainStep.name_for(&cfg), &inputs).unwrap();
+            last = outs[2 * n].scalar().unwrap();
+            assert!(last.is_finite());
+            first.get_or_insert(last);
+            outs.truncate(2 * n);
+            state = outs;
+        }
+        let first = first.unwrap();
+        assert!(last < first - 0.02, "no learning: {first} -> {last}");
+    }
+
+    #[test]
+    fn fwd_logits_shape_and_finiteness() {
+        let be = micro_backend();
+        let cfg = micro_config();
+        let state = init_state(&be, &cfg, 2);
+        let n = n_param_tensors(&cfg);
+        let mut inputs: Vec<Tensor> = state[..n].to_vec();
+        let tokens: Vec<i32> = vec![1; cfg.batch * cfg.seq_len];
+        inputs.push(Tensor::i32(tokens, &[cfg.batch, cfg.seq_len]).unwrap());
+        inputs.push(Tensor::scalar_f32(0.4));
+        let outs = be.run(&Kind::Fwd.name_for(&cfg), &inputs).unwrap();
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0].shape(), &[cfg.batch, cfg.seq_len, cfg.vocab]);
+        assert!(outs[0].as_f32().unwrap().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn execute_checks_arity_and_registration() {
+        let be = micro_backend();
+        let cfg = micro_config();
+        let err = be.run(&Kind::TrainStep.name_for(&cfg), &[Tensor::scalar_f32(1.0)]);
+        assert!(err.unwrap_err().to_string().contains("expects"));
+        assert!(be.run("train_nonexistent", &[]).is_err());
+        // resolve() registers previously-unknown valid configs dynamically
+        let cfg2 = ModelConfig { width: 32, depth: 2, ..micro_config() };
+        assert!(be.manifest().find_for("train_step", &cfg2).is_none());
+        let meta = be.resolve("train_step", &cfg2).unwrap();
+        assert_eq!(meta.inputs.len(), 2 * n_param_tensors(&cfg2) + 4);
+    }
+
+    #[test]
+    fn residual_coeffs_preserve_unit_variance() {
+        let cfg = micro_config();
+        let (a, b) = residual_coeffs(&cfg, 0.4, 0);
+        assert!((a * a + b * b - 1.0).abs() < 1e-6);
+        let rm = ModelConfig { residual: "running_mean".into(), ..cfg };
+        for l in 0..4 {
+            let (a, b) = residual_coeffs(&rm, 0.0, l);
+            assert!((a * a + b * b - 1.0).abs() < 1e-6, "layer {l}");
+        }
+    }
+
+    #[test]
+    fn free_releases_store_entries() {
+        let be = micro_backend();
+        let h = be.upload(&Tensor::scalar_f32(1.0)).unwrap();
+        assert_eq!(be.download(&h).unwrap().scalar().unwrap(), 1.0);
+        be.free(&h);
+        assert!(be.download(&h).is_err());
+    }
+}

@@ -1,0 +1,245 @@
+//! Session: device-resident training state over a [`Backend`].
+//!
+//! Owns the `2 * n_params` state handles between steps, so the only
+//! per-step host transfers are the token batch going in and the two
+//! scalars (loss, grad-norm) coming out — full-state transfers happen at
+//! explicit checkpoint/probe boundaries ([`Session::read_back`]) instead
+//! of every step like the old `Engine` path. [`Session::stats`] accounts
+//! those step-path transfers (time and bytes), which is what the bench
+//! suite records to `BENCH_step.json`.
+
+use std::time::Instant;
+
+use super::backend::{Backend, ExecStats, TensorHandle};
+use super::tensor::Tensor;
+use crate::config::ModelConfig;
+use crate::util::error::{Context, Result};
+use crate::{bail, err};
+
+/// Host-side snapshot of the training state: `params ++ momenta`, all f32
+/// master copies, in artifact input order.
+#[derive(Debug, Clone)]
+pub struct TrainState {
+    pub tensors: Vec<Tensor>,
+    pub n_params: usize,
+}
+
+impl TrainState {
+    pub fn params(&self) -> &[Tensor] {
+        &self.tensors[..self.n_params]
+    }
+}
+
+/// One model's device-resident training state + the artifacts that act on
+/// it. Sessions are single-threaded by design; parallel sweeps run one
+/// session per worker thread over a shared (Sync) backend.
+pub struct Session<'b> {
+    backend: &'b dyn Backend,
+    pub cfg: ModelConfig,
+    train_name: String,
+    init_name: String,
+    n_params: usize,
+    state: Vec<TensorHandle>,
+    stats: ExecStats,
+}
+
+impl<'b> Session<'b> {
+    /// Resolve the train/init artifacts for `cfg` and validate the ABI.
+    /// The session starts empty: call [`Session::init`] or
+    /// [`Session::load_state`] before stepping.
+    pub fn new(backend: &'b dyn Backend, cfg: &ModelConfig) -> Result<Session<'b>> {
+        let train = backend
+            .resolve("train_step", cfg)
+            .with_context(|| format!("no train artifact for config {}", cfg.name()))?;
+        let init = backend
+            .resolve("init", cfg)
+            .with_context(|| format!("no init artifact for config {}", cfg.name()))?;
+        let n_params = (train.inputs.len().saturating_sub(4)) / 2;
+        if n_params == 0
+            || train.inputs.len() != 2 * n_params + 4
+            || train.outputs.len() != 2 * n_params + 2
+        {
+            bail!("unexpected train_step ABI for {}", cfg.name());
+        }
+        Ok(Session {
+            backend,
+            cfg: cfg.clone(),
+            train_name: train.name,
+            init_name: init.name,
+            n_params,
+            state: Vec::new(),
+            stats: ExecStats::default(),
+        })
+    }
+
+    pub fn backend(&self) -> &'b dyn Backend {
+        self.backend
+    }
+
+    pub fn n_params_tensors(&self) -> usize {
+        self.n_params
+    }
+
+    pub fn train_artifact(&self) -> &str {
+        &self.train_name
+    }
+
+    /// Step-path execution statistics: `calls` = steps taken,
+    /// `transfer_*` covers ONLY what crosses the host boundary per step
+    /// (tokens + hyperparameter scalars in, loss + gnorm out). Full-state
+    /// reads via [`Session::read_back`] are deliberately not included —
+    /// they are the checkpoint/probe boundary, not the step path.
+    pub fn stats(&self) -> &ExecStats {
+        &self.stats
+    }
+
+    fn drop_state(&mut self) {
+        for h in self.state.drain(..) {
+            self.backend.free(&h);
+        }
+    }
+
+    /// Initialize state on-device by running the `init` artifact
+    /// (unit-variance / sigma_init inits happen in-graph).
+    pub fn init(&mut self, seed: i32) -> Result<()> {
+        let seed_t = Tensor::scalar_i32(seed);
+        let h = self.backend.upload(&seed_t)?;
+        let outs = self.backend.execute(&self.init_name, std::slice::from_ref(&h));
+        self.backend.free(&h);
+        let outs = outs?;
+        if outs.len() != 2 * self.n_params {
+            for h in &outs {
+                self.backend.free(h);
+            }
+            bail!("init produced {} tensors, expected {}", outs.len(), 2 * self.n_params);
+        }
+        self.drop_state();
+        self.state = outs;
+        Ok(())
+    }
+
+    /// Upload a host snapshot as the new device-resident state.
+    pub fn load_state(&mut self, state: &TrainState) -> Result<()> {
+        if state.tensors.len() != 2 * self.n_params {
+            bail!(
+                "state has {} tensors, session expects {}",
+                state.tensors.len(),
+                2 * self.n_params
+            );
+        }
+        let mut handles = Vec::with_capacity(state.tensors.len());
+        for t in &state.tensors {
+            handles.push(self.backend.upload(t)?);
+        }
+        self.drop_state();
+        self.state = handles;
+        Ok(())
+    }
+
+    /// Transfer the full state back to the host (checkpoint / probe /
+    /// allreduce boundary). The device copy stays resident.
+    pub fn read_back(&self) -> Result<TrainState> {
+        if self.state.is_empty() {
+            bail!("session state not initialized (call init or load_state)");
+        }
+        let mut tensors = Vec::with_capacity(self.state.len());
+        for h in &self.state {
+            tensors.push(self.backend.download(h).context("reading back train state")?);
+        }
+        Ok(TrainState { tensors, n_params: self.n_params })
+    }
+
+    /// Host copies of the parameter tensors only (for eval / probes).
+    pub fn params_host(&self) -> Result<Vec<Tensor>> {
+        if self.state.is_empty() {
+            bail!("session state not initialized (call init or load_state)");
+        }
+        let mut out = Vec::with_capacity(self.n_params);
+        for h in &self.state[..self.n_params] {
+            out.push(self.backend.download(h).context("reading back params")?);
+        }
+        Ok(out)
+    }
+
+    /// One optimizer step. `lr` is the base-width learning rate for this
+    /// step (scheduling already applied); tokens length must be batch*seq.
+    /// Only the token batch + 3 hyperparameter scalars (in) and the
+    /// loss/gnorm scalars (out) cross the host boundary.
+    pub fn step(&mut self, tokens: &[i32], lr: f64, wd: f64, tau: f64) -> Result<(f32, f32)> {
+        if self.state.is_empty() {
+            bail!("session state not initialized (call init or load_state)");
+        }
+        let t0 = Instant::now();
+        let tok = Tensor::i32(tokens.to_vec(), &[self.cfg.batch, self.cfg.seq_len])?;
+        let tok_bytes = tok.byte_len() as u64;
+        let mut small = Vec::with_capacity(4);
+        small.push(self.backend.upload(&tok)?);
+        for v in [lr as f32, wd as f32, tau as f32] {
+            small.push(self.backend.upload(&Tensor::scalar_f32(v))?);
+        }
+        let t1 = Instant::now();
+
+        let mut inputs: Vec<TensorHandle> = Vec::with_capacity(self.state.len() + 4);
+        inputs.extend(self.state.iter().cloned());
+        inputs.extend(small.iter().cloned());
+        let result = self.backend.execute(&self.train_name, &inputs);
+        for h in &small {
+            self.backend.free(h);
+        }
+        let mut outs = result?;
+        let t2 = Instant::now();
+
+        if outs.len() != 2 * self.n_params + 2 {
+            for h in &outs {
+                self.backend.free(h);
+            }
+            bail!(
+                "train_step '{}' produced {} outputs, expected {}",
+                self.train_name,
+                outs.len(),
+                2 * self.n_params + 2
+            );
+        }
+        let gnorm_h = outs.pop().ok_or_else(|| err!("missing gnorm output"))?;
+        let loss_h = outs.pop().ok_or_else(|| err!("missing loss output"))?;
+        let loss_res = self
+            .backend
+            .download(&loss_h)
+            .and_then(|t| t.scalar())
+            .with_context(|| format!("reading loss scalar from '{}'", self.train_name));
+        let gnorm_res = self
+            .backend
+            .download(&gnorm_h)
+            .and_then(|t| t.scalar())
+            .with_context(|| format!("reading gnorm scalar from '{}'", self.train_name));
+        self.backend.free(&loss_h);
+        self.backend.free(&gnorm_h);
+        let (loss, gnorm) = match (loss_res, gnorm_res) {
+            (Ok(l), Ok(g)) => (l, g),
+            (l, g) => {
+                // don't strand the new state generation in the store
+                for h in &outs {
+                    self.backend.free(h);
+                }
+                return Err(l.err().or_else(|| g.err()).expect("one result errored"));
+            }
+        };
+        let t3 = Instant::now();
+
+        // adopt the new state; free the old generation
+        self.drop_state();
+        self.state = outs;
+
+        self.stats.calls += 1;
+        self.stats.execute_time += t2 - t1;
+        self.stats.transfer_time += (t1 - t0) + (t3 - t2);
+        self.stats.transfer_bytes += tok_bytes + 3 * 4 + 2 * 4;
+        Ok((loss, gnorm))
+    }
+}
+
+impl Drop for Session<'_> {
+    fn drop(&mut self) {
+        self.drop_state();
+    }
+}

@@ -1,0 +1,140 @@
+//! Host tensor: the backend-agnostic exchange format at the L3<->runtime
+//! boundary (replaces `xla::Literal` in the public API).
+//!
+//! The artifact ABI is f32 / i32 only by design — FP8/BF16 numerics live
+//! *inside* the graphs (or inside the reference interpreter); master state
+//! crosses the boundary in f32.
+
+use super::manifest::Dtype;
+use crate::util::error::{Context, Result};
+use crate::{bail, err};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: TensorData,
+}
+
+impl Tensor {
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("tensor_f32: {} elements for shape {:?}", data.len(), shape);
+        }
+        Ok(Tensor { shape: shape.to_vec(), data: TensorData::F32(data) })
+    }
+
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("tensor_i32: {} elements for shape {:?}", data.len(), shape);
+        }
+        Ok(Tensor { shape: shape.to_vec(), data: TensorData::I32(data) })
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: TensorData::F32(vec![v]) }
+    }
+
+    pub fn scalar_i32(v: i32) -> Tensor {
+        Tensor { shape: vec![], data: TensorData::I32(vec![v]) }
+    }
+
+    pub fn zeros_f32(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: TensorData::F32(vec![0.0; n]) }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self.data {
+            TensorData::F32(_) => Dtype::F32,
+            TensorData::I32(_) => Dtype::I32,
+        }
+    }
+
+    pub fn elements(&self) -> usize {
+        match &self.data {
+            TensorData::F32(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+        }
+    }
+
+    /// Host-memory footprint of the payload (both dtypes are 4 bytes/elem).
+    pub fn byte_len(&self) -> usize {
+        self.elements() * 4
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            TensorData::I32(_) => Err(err!("tensor is i32, expected f32")),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            TensorData::F32(_) => Err(err!("tensor is f32, expected i32")),
+        }
+    }
+
+    pub fn to_f32_vec(&self) -> Result<Vec<f32>> {
+        self.as_f32().map(|s| s.to_vec())
+    }
+
+    /// Scalar f32 accessor (shape [] or single-element tensors).
+    pub fn scalar(&self) -> Result<f32> {
+        let v = self.as_f32().context("reading scalar")?;
+        if v.len() != 1 {
+            bail!("expected scalar, got {} elements", v.len());
+        }
+        Ok(v[0])
+    }
+
+    pub fn scalar_i32_value(&self) -> Result<i32> {
+        let v = self.as_i32().context("reading i32 scalar")?;
+        if v.len() != 1 {
+            bail!("expected scalar, got {} elements", v.len());
+        }
+        Ok(v[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_checks_shape() {
+        assert!(Tensor::f32(vec![1.0, 2.0], &[3]).is_err());
+        let t = Tensor::f32(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(t.elements(), 4);
+        assert_eq!(t.byte_len(), 16);
+        assert_eq!(t.dtype(), Dtype::F32);
+        assert_eq!(t.shape(), &[2, 2]);
+    }
+
+    #[test]
+    fn scalars() {
+        assert_eq!(Tensor::scalar_f32(2.5).scalar().unwrap(), 2.5);
+        assert_eq!(Tensor::scalar_i32(-3).scalar_i32_value().unwrap(), -3);
+        assert!(Tensor::scalar_i32(1).scalar().is_err());
+    }
+
+    #[test]
+    fn dtype_mismatch_errors() {
+        let t = Tensor::i32(vec![1, 2], &[2]).unwrap();
+        assert!(t.as_f32().is_err());
+        assert_eq!(t.as_i32().unwrap(), &[1, 2]);
+    }
+}

@@ -1,0 +1,150 @@
+//! Error substrate (the `anyhow` crate is unavailable offline).
+//!
+//! Mirrors the subset of the anyhow API this codebase uses: an opaque
+//! [`Error`] carrying a context chain, a [`Result`] alias, a [`Context`]
+//! extension trait for `Result`/`Option`, and the [`bail!`]/[`err!`]
+//! macros. `{e}` displays the outermost context; `{e:#}` displays the full
+//! chain separated by `": "` (matching anyhow's alternate formatting).
+
+use std::fmt;
+
+/// Opaque error: a chain of context strings, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Error {
+        Error { chain: vec![m.into()] }
+    }
+
+    /// Wrap with an outer context frame.
+    pub fn context(mut self, m: impl Into<String>) -> Error {
+        self.chain.insert(0, m.into());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn frames(&self) -> &[String] {
+        &self.chain
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or("unknown error"))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or("unknown error"))?;
+        for c in self.chain.iter().skip(1) {
+            write!(f, "\n  caused by: {c}")?;
+        }
+        Ok(())
+    }
+}
+
+// Deliberately NOT `impl std::error::Error for Error` — that is what makes
+// the blanket conversion below coherent (same trick anyhow uses).
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context("...")` / `.with_context(|| ...)` on `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f().to_string()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Early-return with a formatted error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// Construct an [`Error`] from a format string (anyhow's `anyhow!`).
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/a/file")?;
+        Ok(())
+    }
+
+    #[test]
+    fn context_chain_and_alternate_display() {
+        let e = io_fail().context("loading config").unwrap_err();
+        assert!(e.to_string().contains("loading config"));
+        let full = format!("{e:#}");
+        assert!(full.starts_with("loading config: "), "{full}");
+        assert!(e.frames().len() >= 2);
+    }
+
+    #[test]
+    fn option_context() {
+        let x: Option<u32> = None;
+        let e = x.with_context(|| format!("missing {}", "thing")).unwrap_err();
+        assert_eq!(e.to_string(), "missing thing");
+        assert_eq!(Some(3u32).context("fine").unwrap(), 3);
+    }
+
+    #[test]
+    fn bail_and_err_macros() {
+        fn f(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("bad value {}", 7);
+            }
+            Ok(1)
+        }
+        assert_eq!(f(true).unwrap_err().to_string(), "bad value 7");
+        assert_eq!(f(false).unwrap(), 1);
+        let e: Error = err!("x = {}", 2);
+        assert_eq!(e.to_string(), "x = 2");
+    }
+}

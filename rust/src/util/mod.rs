@@ -3,6 +3,7 @@
 //! because the build is fully offline (see DESIGN.md).
 
 pub mod bench;
+pub mod error;
 pub mod json;
 pub mod proptest;
 pub mod rng;
