@@ -58,6 +58,12 @@ fn main() {
         let mut b = buf.clone();
         std::hint::black_box(E4M3.quantize_slice(&mut b));
     });
+    let fast = E4M3.fast_caster();
+    run("hot:fp8_fast_quantize_64k_elems", &mut || {
+        let mut b = buf.clone();
+        fast.quantize_slice(&mut b);
+        std::hint::black_box(&b);
+    });
     run("hot:fp8_underflow_fraction_64k", &mut || {
         std::hint::black_box(E4M3.underflow_fraction(&buf));
     });
@@ -70,6 +76,17 @@ fn main() {
 
     run("hot:tensor_pack_512x64_f32", &mut || {
         std::hint::black_box(tensor_f32(&buf[..512 * 64], &[512, 64]).unwrap());
+    });
+
+    // the batched interpreter's GEMM kernel (deterministic 8-lane dot)
+    let mut ga = vec![0f32; 256 * 256];
+    let mut gb = vec![0f32; 256 * 256];
+    let mut gc = vec![0f32; 256 * 256];
+    rng.fill_normal(&mut ga, 1.0);
+    rng.fill_normal(&mut gb, 1.0);
+    run("hot:gemm_bt_256cubed", &mut || {
+        munit::runtime::gemm::matmul_bt(&ga, &gb, &mut gc, 256, 256, 256, 1.0);
+        std::hint::black_box(&gc);
     });
 
     let manifest_text = std::fs::read_to_string("artifacts/manifest.json").ok();
@@ -121,18 +138,37 @@ fn main() {
         }
     };
     eprintln!("train-step benches on backend: {}", backend.platform());
-    for (w, d, tag) in [
+    let mut step_cfgs: Vec<(ModelConfig, String)> = [
         (32usize, 4usize, "fig6_w32"),
         (64, 4, "fig6_fig9_fig11_w64"),
         (128, 6, "fig2_fig3_fig7_fig12_M"),
         (256, 8, "fig7_table5_L"),
         (64, 24, "fig4b_fig5_deep"),
-    ] {
+    ]
+    .into_iter()
+    .map(|(w, d, tag)| (ModelConfig { width: w, depth: d, ..ModelConfig::default() }, tag.into()))
+    .collect();
+    // the width-384 roster shape — the batched-interpreter acceptance
+    // config (vocab 2048, seq 256, batch 8); tokens/sec lands in
+    // BENCH_step.json so the perf trajectory is tracked across PRs
+    step_cfgs.push((
+        ModelConfig {
+            width: 384,
+            depth: 6,
+            head_dim: 64,
+            vocab: 2048,
+            seq_len: 256,
+            batch: 8,
+            ..ModelConfig::default()
+        },
+        "roster_w384".into(),
+    ));
+    for (cfg, tag) in step_cfgs {
+        let (w, d) = (cfg.width, cfg.depth);
         let name = format!("paper:train_step_{tag}_w{w}d{d}");
         if !filter.is_empty() && !name.contains(&filter) {
             continue;
         }
-        let cfg = ModelConfig { width: w, depth: d, ..ModelConfig::default() };
         let Ok(trainer) = Trainer::new(backend.as_ref(), &cfg) else { continue };
         let Ok(mut session) = trainer.init(0) else { continue };
         let mut b = Batcher::new(spec.clone(), 0, 0, 1, cfg.batch, cfg.seq_len);

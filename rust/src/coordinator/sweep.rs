@@ -159,7 +159,9 @@ pub fn run_sequential(
 
 /// Run a grid with `n_workers` in-process threads over a shared backend.
 /// Workers pull points from a shared queue; outcomes land in grid order
-/// and are identical to `run_sequential`'s (deterministic runs).
+/// and are identical to `run_sequential`'s (deterministic runs — the
+/// reference interpreter's internal parallelism is bit-identical at any
+/// thread budget, so splitting the budget across workers is safe).
 pub fn run_parallel(
     backend: &dyn Backend,
     cfg: &ModelConfig,
@@ -170,23 +172,29 @@ pub fn run_parallel(
     verbose: bool,
 ) -> Result<Vec<SweepOutcome>> {
     let n_workers = n_workers.max(1).min(points.len().max(1));
+    // divide the interpreter's worker-thread budget across sweep workers so
+    // n_workers concurrent train steps don't oversubscribe the CPU by
+    // workers x cores (read on the caller thread: respects its override)
+    let threads_per_worker = (crate::util::parallel::max_threads() / n_workers).max(1);
     let next = AtomicUsize::new(0);
     let results: Mutex<Vec<Option<Result<SweepOutcome>>>> =
         Mutex::new((0..points.len()).map(|_| None).collect());
     std::thread::scope(|scope| {
         for _ in 0..n_workers {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= points.len() {
-                    break;
-                }
-                let r = run_point(backend, cfg, base, corpus, &points[i]);
-                if verbose {
-                    if let Ok(o) = &r {
-                        report(i, points.len(), o);
+            scope.spawn(|| {
+                crate::util::parallel::with_max_threads(threads_per_worker, || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= points.len() {
+                        break;
                     }
-                }
-                results.lock().expect("results lock")[i] = Some(r);
+                    let r = run_point(backend, cfg, base, corpus, &points[i]);
+                    if verbose {
+                        if let Ok(o) = &r {
+                            report(i, points.len(), o);
+                        }
+                    }
+                    results.lock().expect("results lock")[i] = Some(r);
+                })
             });
         }
     });

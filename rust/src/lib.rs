@@ -10,12 +10,15 @@
 //!   - [`runtime`]: the execution API. A [`runtime::Backend`] trait
 //!     (`upload`/`execute`/`download` over opaque tensor handles) with two
 //!     implementations — the pure-Rust [`runtime::ReferenceBackend`]
-//!     (interprets µS/SP configs through [`fp8`] emulation; no artifacts
-//!     needed) and the PJRT CPU path over AOT HLO-text artifacts (feature
-//!     `pjrt`, `xla` crate). [`runtime::Session`] owns the
-//!     *device-resident* `2·n_params` train state between steps: per-step
-//!     host traffic is tokens in, loss/gnorm out; full-state transfers
-//!     happen only at checkpoint/probe boundaries (`read_back`).
+//!     (a *batched* interpreter: positions run as `[rows, d]` matrices
+//!     through the cache-blocked, bit-deterministic GEMMs of
+//!     [`runtime::gemm`], with µS/SP numerics emulated via [`fp8`] and its
+//!     bit-twiddling `FastCast`; no artifacts needed) and the PJRT CPU
+//!     path over AOT HLO-text artifacts (feature `pjrt`, `xla` crate).
+//!     [`runtime::Session`] owns the *device-resident* `2·n_params` train
+//!     state between steps: per-step host traffic is tokens in, loss/gnorm
+//!     out (constant lr/wd/tau handles are cached on-device); full-state
+//!     transfers happen only at checkpoint/probe boundaries (`read_back`).
 //!   - [`coordinator`]: trainer (schedules, divergence guard, probes),
 //!     thread-parallel sweep engine (workers share one `Send + Sync`
 //!     backend), simulated DDP, checkpoints, metrics, data pipeline.
@@ -23,7 +26,9 @@
 //!     [`eval`], [`repro`], [`util`]: configs/presets, synthetic corpus,
 //!     parametrization rules, numerics analyses, throughput model, eval
 //!     suite, figure/table drivers, offline substrates (JSON / RNG /
-//!     error / bench / proptest).
+//!     error / bench / proptest / `util::parallel`, the deterministic
+//!     scoped-thread substrate — fixed chunking, fixed-order reductions,
+//!     bit-identical results at any thread count).
 //! - **L2** (`python/compile/model.py`): µS/SP transformer fwd/bwd + Lion,
 //!   AOT-lowered to HLO text artifacts (the `pjrt` catalogue).
 //! - **L1** (`python/compile/kernels/`): Pallas FP8 GEMM / cast-transpose /

@@ -1,0 +1,264 @@
+//! Cache-blocked, bit-deterministic f32 GEMM kernels for the reference
+//! interpreter's batched hot path.
+//!
+//! Two shapes cover every product the interpreter needs:
+//!
+//!  - [`matmul_bt`]: `C = s · A @ Bᵀ` with the right-hand matrix stored
+//!    row-per-output-column, so both operands stream contiguously (the
+//!    forward hidden layers, the LM head, and the activation-gradient
+//!    products all fit this after a one-time weight transpose);
+//!  - [`add_matmul_at_b`]: `C += s · Aᵀ @ B`, accumulated as rank-1
+//!    updates in ascending row order (the weight-gradient products).
+//!
+//! Determinism contract (matches [`crate::util::parallel`]): every output
+//! element is produced by exactly one chunk, the inner accumulation order
+//! is fixed by the kernel (eight stride-8 lanes folded in a fixed tree,
+//! then the tail), and chunk boundaries never depend on the thread count —
+//! so results are bit-identical across any number of worker threads. The
+//! fixed-lane layout is also what lets the compiler vectorize the inner
+//! loops without reassociating floating-point math.
+
+use crate::util::parallel;
+
+/// Fixed-order dot product: eight accumulator lanes over stride-8 blocks,
+/// folded as `((l0+l4)+(l1+l5)) + ((l2+l6)+(l3+l7))`, then the scalar
+/// tail. The lane partition is a function of `a.len()` only.
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut lanes = [0f32; 8];
+    let n8 = a.len() / 8 * 8;
+    let (a8, a_tail) = a.split_at(n8);
+    let (b8, b_tail) = b.split_at(n8);
+    for (ab, bb) in a8.chunks_exact(8).zip(b8.chunks_exact(8)) {
+        for l in 0..8 {
+            lanes[l] += ab[l] * bb[l];
+        }
+    }
+    let mut tail = 0f32;
+    for (x, y) in a_tail.iter().zip(b_tail) {
+        tail += x * y;
+    }
+    ((lanes[0] + lanes[4]) + (lanes[1] + lanes[5]))
+        + ((lanes[2] + lanes[6]) + (lanes[3] + lanes[7]))
+        + tail
+}
+
+/// `C[i,j] = scale * Σ_k A[i,k] · B[j,k]` — i.e. `C = scale · A @ Bᵀ`
+/// with `B` stored transposed (row `j` of `b` holds logical column `j`).
+/// `a` is `[m,k]`, `b` is `[n,k]`, `c` is `[m,n]`, all row-major.
+/// Overwrites `c`. Parallel over row chunks of `c`; column blocks keep the
+/// active `b` rows hot in cache.
+pub fn matmul_bt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, k: usize, scale: f32) {
+    assert_eq!(a.len(), m * k, "matmul_bt: A is not [m,k]");
+    assert_eq!(b.len(), n * k, "matmul_bt: B is not [n,k]");
+    assert_eq!(c.len(), m * n, "matmul_bt: C is not [m,n]");
+    if m == 0 || n == 0 {
+        return;
+    }
+    const ROW_CHUNK: usize = 16;
+    const COL_BLOCK: usize = 64;
+    let threads = parallel::threads_for(2 * (m as u64) * (n as u64) * (k as u64));
+    parallel::par_chunks_mut(c, ROW_CHUNK * n, threads, |ci, c_chunk| {
+        let i0 = ci * ROW_CHUNK;
+        let rows = c_chunk.len() / n;
+        for j0 in (0..n).step_by(COL_BLOCK) {
+            let j1 = (j0 + COL_BLOCK).min(n);
+            for i in 0..rows {
+                let a_row = &a[(i0 + i) * k..(i0 + i + 1) * k];
+                let c_row = &mut c_chunk[i * n..(i + 1) * n];
+                for j in j0..j1 {
+                    c_row[j] = scale * dot(a_row, &b[j * k..(j + 1) * k]);
+                }
+            }
+        }
+    });
+}
+
+/// `C[i,j] += scale * Σ_r A[r,i] · B[r,j]` — i.e. `C += scale · Aᵀ @ B`.
+/// `a` is `[r,p]`, `b` is `[r,n]`, `c` is `[p,n]`, all row-major.
+/// Accumulates into `c` as rank-1 updates in ascending `r` order (each
+/// output element's addition sequence is fixed regardless of threading).
+/// Rows of `a` whose entry is exactly 0 are skipped — the added term would
+/// be `0 * B[r,j]`, and the interpreter's quantized gradients are often
+/// sparse enough for this to matter.
+pub fn add_matmul_at_b(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    r: usize,
+    p: usize,
+    n: usize,
+    scale: f32,
+) {
+    assert_eq!(a.len(), r * p, "add_matmul_at_b: A is not [r,p]");
+    assert_eq!(b.len(), r * n, "add_matmul_at_b: B is not [r,n]");
+    assert_eq!(c.len(), p * n, "add_matmul_at_b: C is not [p,n]");
+    if p == 0 || n == 0 || r == 0 {
+        return;
+    }
+    const ROW_CHUNK: usize = 8;
+    let threads = parallel::threads_for(2 * (r as u64) * (p as u64) * (n as u64));
+    parallel::par_chunks_mut(c, ROW_CHUNK * n, threads, |ci, c_chunk| {
+        let i0 = ci * ROW_CHUNK;
+        let rows = c_chunk.len() / n;
+        for rr in 0..r {
+            let a_row = &a[rr * p..(rr + 1) * p];
+            let b_row = &b[rr * n..(rr + 1) * n];
+            for i in 0..rows {
+                let s = scale * a_row[i0 + i];
+                if s == 0.0 {
+                    continue;
+                }
+                let c_row = &mut c_chunk[i * n..(i + 1) * n];
+                for (cv, bv) in c_row.iter_mut().zip(b_row) {
+                    *cv += s * bv;
+                }
+            }
+        }
+    });
+}
+
+/// Blocked out-of-place transpose: `dst[c*rows + r] = src[r*cols + c]`.
+pub fn transpose(src: &[f32], rows: usize, cols: usize, dst: &mut [f32]) {
+    assert_eq!(src.len(), rows * cols, "transpose: src is not [rows,cols]");
+    assert_eq!(dst.len(), rows * cols, "transpose: dst is not [cols,rows]");
+    const TB: usize = 32;
+    for r0 in (0..rows).step_by(TB) {
+        let r1 = (r0 + TB).min(rows);
+        for c0 in (0..cols).step_by(TB) {
+            let c1 = (c0 + TB).min(cols);
+            for rr in r0..r1 {
+                for cc in c0..c1 {
+                    dst[cc * rows + rr] = src[rr * cols + cc];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::parallel::with_max_threads;
+    use crate::util::rng::Rng;
+
+    fn naive_bt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, s: f32) -> Vec<f32> {
+        let mut c = vec![0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0f64;
+                for kk in 0..k {
+                    acc += a[i * k + kk] as f64 * b[j * k + kk] as f64;
+                }
+                c[i * n + j] = s * (acc as f32);
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_bt_matches_naive_within_tolerance() {
+        let mut rng = Rng::new(1);
+        let (m, n, k) = (13, 17, 29);
+        let mut a = vec![0f32; m * k];
+        let mut b = vec![0f32; n * k];
+        rng.fill_normal(&mut a, 1.0);
+        rng.fill_normal(&mut b, 1.0);
+        let mut c = vec![0f32; m * n];
+        matmul_bt(&a, &b, &mut c, m, n, k, 0.5);
+        let want = naive_bt(&a, &b, m, n, k, 0.5);
+        for (g, w) in c.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-4, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn matmul_bt_identity_and_zero_dims() {
+        // B = I (stored transposed, identity is symmetric) => C = scale * A
+        let (m, k) = (5usize, 4usize);
+        let a: Vec<f32> = (0..m * k).map(|i| i as f32).collect();
+        let mut eye = vec![0f32; k * k];
+        for i in 0..k {
+            eye[i * k + i] = 1.0;
+        }
+        let mut c = vec![0f32; m * k];
+        matmul_bt(&a, &eye, &mut c, m, k, k, 2.0);
+        for (g, w) in c.iter().zip(&a) {
+            assert_eq!(*g, 2.0 * w);
+        }
+        let mut empty: Vec<f32> = Vec::new();
+        matmul_bt(&[], &eye, &mut empty, 0, k, k, 1.0);
+    }
+
+    #[test]
+    fn add_matmul_at_b_matches_naive_and_accumulates() {
+        let mut rng = Rng::new(2);
+        let (r, p, n) = (23, 9, 11);
+        let mut a = vec![0f32; r * p];
+        let mut b = vec![0f32; r * n];
+        rng.fill_normal(&mut a, 1.0);
+        rng.fill_normal(&mut b, 1.0);
+        // sprinkle exact zeros to exercise the skip path
+        for i in (0..a.len()).step_by(7) {
+            a[i] = 0.0;
+        }
+        let mut c = vec![1f32; p * n]; // nonzero: checks += not =
+        add_matmul_at_b(&a, &b, &mut c, r, p, n, 0.25);
+        for i in 0..p {
+            for j in 0..n {
+                let mut acc = 0f64;
+                for rr in 0..r {
+                    acc += 0.25 * a[rr * p + i] as f64 * b[rr * n + j] as f64;
+                }
+                let want = 1.0 + acc as f32;
+                let got = c[i * n + j];
+                assert!((got - want).abs() < 1e-4, "[{i},{j}] {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn kernels_are_bit_identical_across_thread_counts() {
+        let mut rng = Rng::new(3);
+        // big enough to clear the parallel threshold
+        let (m, n, k) = (96, 96, 96);
+        let mut a = vec![0f32; m * k];
+        let mut b = vec![0f32; n * k];
+        rng.fill_normal(&mut a, 1.0);
+        rng.fill_normal(&mut b, 1.0);
+        let run_bt = |threads: usize| {
+            with_max_threads(threads, || {
+                let mut c = vec![0f32; m * n];
+                matmul_bt(&a, &b, &mut c, m, n, k, 1.0);
+                c
+            })
+        };
+        let run_atb = |threads: usize| {
+            with_max_threads(threads, || {
+                let mut c = vec![0f32; k * n];
+                add_matmul_at_b(&a, &b, &mut c, m, k, n, 1.0);
+                c
+            })
+        };
+        let (bt1, atb1) = (run_bt(1), run_atb(1));
+        for threads in [2usize, 5] {
+            assert_eq!(bt1, run_bt(threads), "matmul_bt drifted at {threads} threads");
+            assert_eq!(atb1, run_atb(threads), "add_matmul_at_b drifted at {threads} threads");
+        }
+    }
+
+    #[test]
+    fn transpose_round_trips() {
+        let mut rng = Rng::new(4);
+        let (r, c) = (37, 53);
+        let mut src = vec![0f32; r * c];
+        rng.fill_normal(&mut src, 1.0);
+        let mut t = vec![0f32; r * c];
+        let mut back = vec![0f32; r * c];
+        transpose(&src, r, c, &mut t);
+        transpose(&t, c, r, &mut back);
+        assert_eq!(src, back);
+        assert_eq!(t[3 * r + 5], src[5 * c + 3]);
+    }
+}

@@ -18,6 +18,7 @@
 //! artifact directory.
 
 mod backend;
+pub mod gemm;
 mod manifest;
 #[cfg(feature = "pjrt")]
 mod pjrt;

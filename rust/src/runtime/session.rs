@@ -40,6 +40,14 @@ pub struct Session<'b> {
     init_name: String,
     n_params: usize,
     state: Vec<TensorHandle>,
+    /// Reusable host-side token tensor (overwritten each step — no
+    /// per-step allocation).
+    tok_host: Tensor,
+    /// Device handles for the lr/wd/tau scalars, cached by value: a scalar
+    /// is re-uploaded only when its value changes (first step, or a
+    /// schedule update), so constant hyperparameters cross the host
+    /// boundary once, not every step.
+    scalar_cache: [Option<(f32, TensorHandle)>; 3],
     stats: ExecStats,
 }
 
@@ -61,6 +69,7 @@ impl<'b> Session<'b> {
         {
             bail!("unexpected train_step ABI for {}", cfg.name());
         }
+        let tok_host = Tensor::i32(vec![0; cfg.batch * cfg.seq_len], &[cfg.batch, cfg.seq_len])?;
         Ok(Session {
             backend,
             cfg: cfg.clone(),
@@ -68,6 +77,8 @@ impl<'b> Session<'b> {
             init_name: init.name,
             n_params,
             state: Vec::new(),
+            tok_host,
+            scalar_cache: [None, None, None],
             stats: ExecStats::default(),
         })
     }
@@ -163,29 +174,44 @@ impl<'b> Session<'b> {
 
     /// One optimizer step. `lr` is the base-width learning rate for this
     /// step (scheduling already applied); tokens length must be batch*seq.
-    /// Only the token batch + 3 hyperparameter scalars (in) and the
-    /// loss/gnorm scalars (out) cross the host boundary.
+    /// Only the token batch, any *changed* hyperparameter scalars (in),
+    /// and the loss/gnorm scalars (out) cross the host boundary — constant
+    /// scalars are uploaded once and their device handles reused, and the
+    /// host token buffer is reused across steps. `transfer_bytes` counts
+    /// only what actually moved.
     pub fn step(&mut self, tokens: &[i32], lr: f64, wd: f64, tau: f64) -> Result<(f32, f32)> {
         if self.state.is_empty() {
             bail!("session state not initialized (call init or load_state)");
         }
         let t0 = Instant::now();
-        let tok = Tensor::i32(tokens.to_vec(), &[self.cfg.batch, self.cfg.seq_len])?;
-        let tok_bytes = tok.byte_len() as u64;
-        let mut small = Vec::with_capacity(4);
-        small.push(self.backend.upload(&tok)?);
-        for v in [lr as f32, wd as f32, tau as f32] {
-            small.push(self.backend.upload(&Tensor::scalar_f32(v))?);
+        self.tok_host.copy_i32_from(tokens).context("packing token batch")?;
+        let tok_bytes = self.tok_host.byte_len() as u64;
+        let tok_h = self.backend.upload(&self.tok_host)?;
+        let mut moved_bytes = tok_bytes;
+        for (slot, v) in [lr as f32, wd as f32, tau as f32].into_iter().enumerate() {
+            let cached = matches!(
+                &self.scalar_cache[slot],
+                Some((cv, _)) if cv.to_bits() == v.to_bits()
+            );
+            if !cached {
+                let h = self.backend.upload(&Tensor::scalar_f32(v))?;
+                if let Some((_, old)) = self.scalar_cache[slot].replace((v, h)) {
+                    self.backend.free(&old);
+                }
+                moved_bytes += 4;
+            }
         }
         let t1 = Instant::now();
 
         let mut inputs: Vec<TensorHandle> = Vec::with_capacity(self.state.len() + 4);
         inputs.extend(self.state.iter().cloned());
-        inputs.extend(small.iter().cloned());
-        let result = self.backend.execute(&self.train_name, &inputs);
-        for h in &small {
-            self.backend.free(h);
+        inputs.push(tok_h.clone());
+        for slot in &self.scalar_cache {
+            let (_, h) = slot.as_ref().expect("scalar cache filled above");
+            inputs.push(h.clone());
         }
+        let result = self.backend.execute(&self.train_name, &inputs);
+        self.backend.free(&tok_h);
         let mut outs = result?;
         let t2 = Instant::now();
 
@@ -233,7 +259,7 @@ impl<'b> Session<'b> {
         self.stats.calls += 1;
         self.stats.execute_time += t2 - t1;
         self.stats.transfer_time += (t1 - t0) + (t3 - t2);
-        self.stats.transfer_bytes += tok_bytes + 3 * 4 + 2 * 4;
+        self.stats.transfer_bytes += moved_bytes + 2 * 4;
         Ok((loss, gnorm))
     }
 }
@@ -241,5 +267,10 @@ impl<'b> Session<'b> {
 impl Drop for Session<'_> {
     fn drop(&mut self) {
         self.drop_state();
+        for slot in &mut self.scalar_cache {
+            if let Some((_, h)) = slot.take() {
+                self.backend.free(&h);
+            }
+        }
     }
 }

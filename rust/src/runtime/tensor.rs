@@ -108,6 +108,22 @@ impl Tensor {
         }
         Ok(v[0])
     }
+
+    /// Overwrite an i32 tensor's payload in place (shape unchanged).
+    /// Lets steady-state callers (the `Session` step path) reuse one host
+    /// buffer instead of reallocating a tensor per step.
+    pub fn copy_i32_from(&mut self, src: &[i32]) -> Result<()> {
+        match &mut self.data {
+            TensorData::I32(v) => {
+                if v.len() != src.len() {
+                    bail!("copy_i32_from: {} elements into tensor of {}", src.len(), v.len());
+                }
+                v.copy_from_slice(src);
+                Ok(())
+            }
+            TensorData::F32(_) => Err(err!("tensor is f32, expected i32")),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -136,5 +152,15 @@ mod tests {
         let t = Tensor::i32(vec![1, 2], &[2]).unwrap();
         assert!(t.as_f32().is_err());
         assert_eq!(t.as_i32().unwrap(), &[1, 2]);
+    }
+
+    #[test]
+    fn copy_i32_from_reuses_buffer_and_checks_shape() {
+        let mut t = Tensor::i32(vec![0, 0, 0], &[3]).unwrap();
+        t.copy_i32_from(&[4, 5, 6]).unwrap();
+        assert_eq!(t.as_i32().unwrap(), &[4, 5, 6]);
+        assert!(t.copy_i32_from(&[1, 2]).is_err());
+        let mut f = Tensor::scalar_f32(1.0);
+        assert!(f.copy_i32_from(&[1]).is_err());
     }
 }

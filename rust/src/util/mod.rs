@@ -5,6 +5,7 @@
 pub mod bench;
 pub mod error;
 pub mod json;
+pub mod parallel;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

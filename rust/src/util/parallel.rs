@@ -1,0 +1,312 @@
+//! Deterministic scoped-thread parallelism for the reference interpreter.
+//!
+//! The determinism contract: **results are bit-identical for any thread
+//! count**, including 1. Every primitive here partitions work into chunks
+//! whose boundaries depend only on `(n, chunk_len)` — never on the thread
+//! count — and either
+//!
+//!  - writes disjoint output chunks ([`par_chunks_mut`], [`par_join2`]):
+//!    each output element is produced by exactly one chunk, with the same
+//!    arithmetic regardless of which thread runs it; or
+//!  - reduces per-chunk partials **in ascending chunk order**
+//!    ([`par_map_reduce`]): the fold sequence is fixed even though chunk
+//!    computation is concurrent.
+//!
+//! Threads are scoped (`std::thread::scope`), spawned per call, and chunks
+//! are striped over workers — no pool, no atomics, no unsafe. Callers gate
+//! spawning by work size via [`threads_for`], so tiny problems (the micro
+//! test config) stay single-threaded and pay zero spawn overhead, with
+//! identical results either way. This is what preserves the PR-1 sweep
+//! `threaded == sequential` guarantee while the interpreter itself is
+//! internally parallel.
+
+use std::cell::Cell;
+use std::ops::Range;
+
+thread_local! {
+    /// Test/benchmark hook: per-thread cap on worker threads.
+    static FORCED_THREADS: Cell<Option<usize>> = const { Cell::new(None) };
+}
+
+/// Worker-thread budget for the calling thread: the forced override if one
+/// is active (see [`with_max_threads`]), else the machine's available
+/// parallelism.
+pub fn max_threads() -> usize {
+    if let Some(n) = FORCED_THREADS.with(|f| f.get()) {
+        return n.max(1);
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f` with the calling thread's worker budget capped at `n`.
+/// Thread-local, so concurrent tests (or sweep workers) don't race; used
+/// by the determinism tests to compare 1-thread vs N-thread execution.
+pub fn with_max_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    let prev = FORCED_THREADS.with(|c| c.replace(Some(n.max(1))));
+    let out = f();
+    FORCED_THREADS.with(|c| c.set(prev));
+    out
+}
+
+/// Scalar-op threshold below which spawning threads costs more than it
+/// saves (measured in "fused multiply-add"-sized operations).
+const PAR_MIN_OPS: u64 = 1 << 19;
+
+/// Thread budget for a job of roughly `ops` scalar operations: 1 (inline)
+/// below [`PAR_MIN_OPS`], else [`max_threads`].
+pub fn threads_for(ops: u64) -> usize {
+    if ops < PAR_MIN_OPS {
+        1
+    } else {
+        max_threads()
+    }
+}
+
+fn chunk_range(i: usize, chunk_len: usize, n: usize) -> Range<usize> {
+    i * chunk_len..((i + 1) * chunk_len).min(n)
+}
+
+/// Process `data` in fixed `chunk_len` chunks, possibly in parallel.
+/// `f(chunk_index, chunk)` — chunk `i` covers elements
+/// `i*chunk_len .. (i+1)*chunk_len`. Chunks are disjoint `&mut` slices, so
+/// no reduction is needed and results cannot depend on scheduling.
+pub fn par_chunks_mut<T, F>(data: &mut [T], chunk_len: usize, threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk_len > 0, "chunk_len must be positive");
+    if data.is_empty() {
+        return;
+    }
+    let n_chunks = data.len().div_ceil(chunk_len);
+    let threads = threads.clamp(1, n_chunks);
+    if threads <= 1 {
+        for (i, c) in data.chunks_mut(chunk_len).enumerate() {
+            f(i, c);
+        }
+        return;
+    }
+    // Stripe chunks over workers; assignment affects only *who* computes a
+    // chunk, never what it computes.
+    let mut buckets: Vec<Vec<(usize, &mut [T])>> = (0..threads).map(|_| Vec::new()).collect();
+    for (i, c) in data.chunks_mut(chunk_len).enumerate() {
+        buckets[i % threads].push((i, c));
+    }
+    let f = &f;
+    std::thread::scope(|scope| {
+        let mut buckets = buckets.into_iter();
+        let mine = buckets.next().expect("threads >= 1");
+        for bucket in buckets {
+            scope.spawn(move || {
+                for (i, c) in bucket {
+                    f(i, c);
+                }
+            });
+        }
+        for (i, c) in mine {
+            f(i, c);
+        }
+    });
+}
+
+/// Like [`par_chunks_mut`] over two parallel buffers: chunk `i` of `a`
+/// (length `a_chunk`) is processed together with chunk `i` of `b` (length
+/// `b_chunk`). Use when one row-parallel pass must write two outputs
+/// (e.g. d-logits and the per-row loss).
+pub fn par_join2<A, B, F>(
+    a: &mut [A],
+    b: &mut [B],
+    a_chunk: usize,
+    b_chunk: usize,
+    threads: usize,
+    f: F,
+) where
+    A: Send,
+    B: Send,
+    F: Fn(usize, &mut [A], &mut [B]) + Sync,
+{
+    assert!(a_chunk > 0 && b_chunk > 0, "chunk lengths must be positive");
+    assert_eq!(
+        a.len().div_ceil(a_chunk),
+        b.len().div_ceil(b_chunk),
+        "par_join2: buffers disagree on chunk count"
+    );
+    if a.is_empty() {
+        return;
+    }
+    let n_chunks = a.len().div_ceil(a_chunk);
+    let threads = threads.clamp(1, n_chunks);
+    let pairs = a.chunks_mut(a_chunk).zip(b.chunks_mut(b_chunk)).enumerate();
+    if threads <= 1 {
+        for (i, (ca, cb)) in pairs {
+            f(i, ca, cb);
+        }
+        return;
+    }
+    let mut buckets: Vec<Vec<(usize, &mut [A], &mut [B])>> =
+        (0..threads).map(|_| Vec::new()).collect();
+    for (i, (ca, cb)) in pairs {
+        buckets[i % threads].push((i, ca, cb));
+    }
+    let f = &f;
+    std::thread::scope(|scope| {
+        let mut buckets = buckets.into_iter();
+        let mine = buckets.next().expect("threads >= 1");
+        for bucket in buckets {
+            scope.spawn(move || {
+                for (i, ca, cb) in bucket {
+                    f(i, ca, cb);
+                }
+            });
+        }
+        for (i, ca, cb) in mine {
+            f(i, ca, cb);
+        }
+    });
+}
+
+/// Map fixed chunks of `0..n` (possibly in parallel), then fold the
+/// per-chunk partials **in ascending chunk order** on the calling thread.
+/// Chunk boundaries and fold order are thread-count-independent, so the
+/// result is bit-deterministic (used for the loss and grad-norm
+/// reductions).
+pub fn par_map_reduce<R, M, F>(
+    n: usize,
+    chunk_len: usize,
+    threads: usize,
+    map: M,
+    mut fold: F,
+    init: R,
+) -> R
+where
+    R: Send,
+    M: Fn(usize, Range<usize>) -> R + Sync,
+    F: FnMut(R, R) -> R,
+{
+    assert!(chunk_len > 0, "chunk_len must be positive");
+    if n == 0 {
+        return init;
+    }
+    let n_chunks = n.div_ceil(chunk_len);
+    let threads = threads.clamp(1, n_chunks);
+    let mut partials: Vec<(usize, R)> = Vec::with_capacity(n_chunks);
+    if threads <= 1 {
+        for i in 0..n_chunks {
+            partials.push((i, map(i, chunk_range(i, chunk_len, n))));
+        }
+    } else {
+        let map = &map;
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(threads - 1);
+            for t in 1..threads {
+                handles.push(scope.spawn(move || {
+                    let mut out = Vec::new();
+                    let mut i = t;
+                    while i < n_chunks {
+                        out.push((i, map(i, chunk_range(i, chunk_len, n))));
+                        i += threads;
+                    }
+                    out
+                }));
+            }
+            let mut i = 0;
+            while i < n_chunks {
+                partials.push((i, map(i, chunk_range(i, chunk_len, n))));
+                i += threads;
+            }
+            for h in handles {
+                partials.extend(h.join().expect("parallel worker panicked"));
+            }
+        });
+        partials.sort_by_key(|(i, _)| *i);
+    }
+    let mut acc = init;
+    for (_, r) in partials {
+        acc = fold(acc, r);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_disjointly_any_thread_count() {
+        for threads in [1usize, 2, 3, 8] {
+            let mut v = vec![0u32; 103];
+            par_chunks_mut(&mut v, 10, threads, |i, c| {
+                for (j, x) in c.iter_mut().enumerate() {
+                    *x = (i * 10 + j) as u32 + 1;
+                }
+            });
+            // every element written exactly once with its own index
+            for (k, x) in v.iter().enumerate() {
+                assert_eq!(*x, k as u32 + 1, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn join2_pairs_chunks_by_index() {
+        for threads in [1usize, 4] {
+            let mut a = vec![0u32; 12];
+            let mut b = vec![0u32; 3];
+            par_join2(&mut a, &mut b, 4, 1, threads, |i, ca, cb| {
+                cb[0] = i as u32;
+                for x in ca.iter_mut() {
+                    *x = i as u32;
+                }
+            });
+            assert_eq!(b, vec![0, 1, 2]);
+            assert_eq!(&a[..4], &[0, 0, 0, 0]);
+            assert_eq!(&a[8..], &[2, 2, 2, 2]);
+        }
+    }
+
+    #[test]
+    fn map_reduce_is_thread_count_invariant() {
+        // f32 partial sums: chunked fold order must make the result
+        // bit-identical across thread counts (the determinism contract)
+        let xs: Vec<f32> = (0..1000).map(|i| (i as f32).sin() * 1e-3).collect();
+        let sum_with = |threads| {
+            par_map_reduce(
+                xs.len(),
+                64,
+                threads,
+                |_, r| xs[r].iter().sum::<f32>(),
+                |a, b| a + b,
+                0f32,
+            )
+        };
+        let s1 = sum_with(1);
+        for threads in [2usize, 3, 7] {
+            assert_eq!(s1.to_bits(), sum_with(threads).to_bits());
+        }
+    }
+
+    #[test]
+    fn forced_thread_budget_is_scoped_and_thread_local() {
+        assert!(max_threads() >= 1);
+        let inside = with_max_threads(1, max_threads);
+        assert_eq!(inside, 1);
+        let nested = with_max_threads(4, || with_max_threads(2, max_threads));
+        assert_eq!(nested, 2);
+        assert!(max_threads() >= 1); // restored
+    }
+
+    #[test]
+    fn threads_for_gates_small_work() {
+        assert_eq!(threads_for(16), 1);
+        assert_eq!(threads_for(u64::MAX), max_threads());
+    }
+
+    #[test]
+    fn empty_and_degenerate_inputs() {
+        let mut v: Vec<u8> = Vec::new();
+        par_chunks_mut(&mut v, 4, 8, |_, _| panic!("no chunks expected"));
+        let r = par_map_reduce(0, 4, 8, |_, _| 1u64, |a, b| a + b, 0u64);
+        assert_eq!(r, 0);
+    }
+}
