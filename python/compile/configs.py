@@ -75,9 +75,13 @@ class ModelConfig:
         return "static" if self.variant == "mus" else "dynamic"
 
     def n_params(self) -> int:
+        # per block: qkv + attn-out + ffn-up + ffn-down + two gain-only
+        # RMS norms; plus embed, the final RMS gain, and the LM head
+        # (matches rust ModelConfig::n_params and the runtime block
+        # layout exactly).
         d, f, v, l = self.width, self.ffn_width, self.vocab, self.depth
-        per_layer = d * 3 * d + d * d + d * f + f * d + 4 * d
-        return v * d + l * per_layer + 2 * d + d * v
+        per_layer = d * 3 * d + d * d + d * f + f * d + 2 * d
+        return v * d + l * per_layer + d + d * v
 
     def name(self) -> str:
         res = "" if self.residual == "fixed" else f"_{self.residual}"
@@ -112,12 +116,9 @@ def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
         ("w_o", (l, d, d)),
         ("w_up", (l, d, f)),
         ("w_down", (l, f, d)),
-        ("ln1_g", (l, d)),
-        ("ln1_b", (l, d)),
-        ("ln2_g", (l, d)),
-        ("ln2_b", (l, d)),
-        ("lnf_g", (d,)),
-        ("lnf_b", (d,)),
+        ("rms1_g", (l, d)),
+        ("rms2_g", (l, d)),
+        ("rmsf_g", (d,)),
         ("head", (d, v)),
     ]
 

@@ -43,6 +43,13 @@ def layernorm(x, g, b, eps=1e-5):
     return (x - mu) / jnp.sqrt(var + eps) * g + b
 
 
+def rmsnorm(x, g, eps=1e-6):
+    """Gain-only RMS norm over the last axis (the block norm of the
+    transformer model; matches the rust reference runtime's epsilon)."""
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * g
+
+
 def attention(q, k, v, sqrt_softmax=False, causal=True):
     """Causal multi-head attention. q,k,v: [B, H, S, Dh].
 

@@ -50,10 +50,8 @@ def init_params(seed, cfg: ModelConfig) -> List[jax.Array]:
     params = []
     for name, shape in param_specs(cfg):
         key, sub = jax.random.split(key)
-        if name.startswith("ln") and name.endswith("_g"):
+        if name.startswith("rms"):  # gain-only RMS norms start at 1
             params.append(jnp.ones(shape, jnp.float32))
-        elif name.startswith("ln") and name.endswith("_b"):
-            params.append(jnp.zeros(shape, jnp.float32))
         else:
             params.append(sigma * jax.random.normal(sub, shape, jnp.float32))
     return params
@@ -167,7 +165,7 @@ def _vcos(v):
 def _block(x, layer, coeffs, cfg: ModelConfig, probe: bool):
     """One transformer block. x: [B,S,D]. layer: tuple of per-layer params.
     coeffs: ((a1,c1),(a2,c2)) residual combination weights (Eq. 10/11)."""
-    w_qkv, w_o, w_up, w_down, g1, bb1, g2, bb2 = layer
+    w_qkv, w_o, w_up, w_down, g1, g2 = layer
     (a1, c1), (a2, c2) = coeffs
     b, s, d = x.shape
     h, dh = cfg.n_heads, cfg.head_dim
@@ -203,11 +201,11 @@ def _block(x, layer, coeffs, cfg: ModelConfig, probe: bool):
 
     x_in = x
     if cfg.ln_placement == "pre":
-        x = a1 * x + c1 * attn_f(ref.layernorm(x, g1, bb1))
-        x = a2 * x + c2 * ffn_f(ref.layernorm(x, g2, bb2))
-    else:  # res_post: LN is the *last* op of each residual branch (Fig 4a)
-        x = a1 * x + c1 * ref.layernorm(attn_f(x), g1, bb1)
-        x = a2 * x + c2 * ref.layernorm(ffn_f(x), g2, bb2)
+        x = a1 * x + c1 * attn_f(ref.rmsnorm(x, g1))
+        x = a2 * x + c2 * ffn_f(ref.rmsnorm(x, g2))
+    else:  # res_post: the norm is the *last* op of each residual branch (Fig 4a)
+        x = a1 * x + c1 * ref.rmsnorm(attn_f(x), g1)
+        x = a2 * x + c2 * ref.rmsnorm(ffn_f(x), g2)
 
     if not probe:
         return x, None
@@ -271,7 +269,7 @@ def forward(params: List[jax.Array], tokens, tau, cfg: ModelConfig, probe: bool 
 
     layer_params = (
         p["w_qkv"], p["w_o"], p["w_up"], p["w_down"],
-        p["ln1_g"], p["ln1_b"], p["ln2_g"], p["ln2_b"],
+        p["rms1_g"], p["rms2_g"],
     )
 
     def body(carry, xs):
@@ -282,7 +280,7 @@ def forward(params: List[jax.Array], tokens, tau, cfg: ModelConfig, probe: bool 
         return x_new, ps
 
     x, stats = jax.lax.scan(body, x, layer_params + (coeffs,))
-    x = ref.layernorm(x, p["lnf_g"], p["lnf_b"])
+    x = ref.rmsnorm(x, p["rmsf_g"])
     b, s, d = x.shape
     logits = _linear(x.reshape(b * s, d), p["head"], "head", cfg)
     logits = logits.reshape(b, s, cfg.vocab).astype(jnp.float32)

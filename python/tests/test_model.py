@@ -28,7 +28,7 @@ class TestInit:
         params = model.init_params(0, cfg)
         names = [n for n, _ in param_specs(cfg)]
         for n, p in zip(names, params):
-            if n.startswith("ln"):
+            if n.startswith("rms"):
                 continue
             assert abs(float(jnp.std(p)) - 1.0) < 0.05, n
 
@@ -37,16 +37,17 @@ class TestInit:
         params = model.init_params(0, cfg)
         names = [n for n, _ in param_specs(cfg)]
         for n, p in zip(names, params):
-            if n.startswith("ln"):
+            if n.startswith("rms"):
                 continue
             assert abs(float(jnp.std(p)) - 0.02) < 0.005, n
 
-    def test_ln_init(self):
+    def test_rms_gain_init(self):
         cfg = cfg_of()
         params = model.init_params(0, cfg)
         d = dict(zip([n for n, _ in param_specs(cfg)], params))
-        assert float(jnp.min(d["ln1_g"])) == 1.0
-        assert float(jnp.max(jnp.abs(d["ln1_b"]))) == 0.0
+        assert float(jnp.min(d["rms1_g"])) == 1.0
+        assert float(jnp.max(d["rms1_g"])) == 1.0
+        assert float(jnp.min(d["rmsf_g"])) == 1.0
 
     def test_momentum_zero(self):
         cfg = cfg_of()
@@ -143,7 +144,7 @@ class TestTrainStep:
         *_, gnorm = model.train_step(params, mom, tokens_for(cfg), 1e-3, 0.0, 0.3, cfg)
         assert np.isfinite(float(gnorm)) and float(gnorm) > 0
 
-    def test_wd_shrinks_weights_not_ln(self):
+    def test_wd_shrinks_weights_not_norm_gains(self):
         cfg = cfg_of()
         params, mom = model.init_state(0, cfg)
         names = [n for n, _ in param_specs(cfg)]
@@ -152,7 +153,7 @@ class TestTrainStep:
         d1 = dict(zip(names, p2))
         # lr=0: only fully-decoupled wd acts -> decayed params shrink by 0.9
         np.testing.assert_allclose(np.asarray(d1["w_o"]), 0.9 * np.asarray(d0["w_o"]), rtol=1e-6)
-        np.testing.assert_array_equal(np.asarray(d1["ln1_g"]), np.asarray(d0["ln1_g"]))
+        np.testing.assert_array_equal(np.asarray(d1["rms1_g"]), np.asarray(d0["rms1_g"]))
 
 
 class TestTransferRules:
@@ -161,7 +162,7 @@ class TestTransferRules:
         assert lr_mult(cfg, "w_qkv") == pytest.approx(0.5)  # sqrt(32/128)
         assert lr_mult(cfg, "embed") == 1.0
         assert lr_mult(cfg, "head") == 1.0
-        assert lr_mult(cfg, "ln1_g") == 1.0
+        assert lr_mult(cfg, "rms1_g") == 1.0
 
     def test_sp_linear_lr_rule(self):
         cfg = cfg_of(width=128, d_base=32, variant="sp", residual="standard")
@@ -179,8 +180,8 @@ class TestTransferRules:
         cfg = cfg_of()
         assert wd_mult(cfg, "w_up") == 1.0
         assert wd_mult(cfg, "embed") == 1.0
-        assert wd_mult(cfg, "ln2_b") == 0.0
-        assert wd_mult(cfg, "lnf_g") == 0.0
+        assert wd_mult(cfg, "rms2_g") == 0.0
+        assert wd_mult(cfg, "rmsf_g") == 0.0
 
 
 class TestMuPInvariance:

@@ -89,6 +89,32 @@ fn main() {
         std::hint::black_box(&gc);
     });
 
+    // the op-level block's per-head causal attention kernel (fwd + bwd)
+    let (s_a, dh_a) = (128usize, 64usize);
+    let mut qa = vec![0f32; s_a * dh_a];
+    let mut ka = vec![0f32; s_a * dh_a];
+    let mut va = vec![0f32; s_a * dh_a];
+    rng.fill_normal(&mut qa, 1.0);
+    rng.fill_normal(&mut ka, 1.0);
+    rng.fill_normal(&mut va, 1.0);
+    let attn_scale = 1.0 / (dh_a as f32).sqrt();
+    let mut probs_a = vec![0f32; s_a * s_a];
+    let mut oa = vec![0f32; s_a * dh_a];
+    run("hot:attention_causal_fwd_s128_dh64", &mut || {
+        munit::runtime::gemm::attn_forward_causal(
+            &qa, &ka, &va, &mut probs_a, &mut oa, s_a, dh_a, attn_scale,
+        );
+        std::hint::black_box(&oa);
+    });
+    let (mut dqa, mut dka, mut dva) =
+        (vec![0f32; s_a * dh_a], vec![0f32; s_a * dh_a], vec![0f32; s_a * dh_a]);
+    run("hot:attention_causal_bwd_s128_dh64", &mut || {
+        munit::runtime::gemm::attn_backward_causal(
+            &oa, &probs_a, &qa, &ka, &va, &mut dqa, &mut dka, &mut dva, s_a, dh_a, attn_scale,
+        );
+        std::hint::black_box(&dqa);
+    });
+
     let manifest_text = std::fs::read_to_string("artifacts/manifest.json").ok();
     if let Some(text) = &manifest_text {
         run("hot:manifest_json_parse", &mut || {
@@ -162,6 +188,21 @@ fn main() {
             ..ModelConfig::default()
         },
         "roster_w384".into(),
+    ));
+    // attention-bearing shape: long sequence relative to width, so the
+    // causal-attention kernels dominate the step (CI asserts this row is
+    // present in BENCH_step.json)
+    step_cfgs.push((
+        ModelConfig {
+            width: 128,
+            depth: 4,
+            head_dim: 32,
+            vocab: 512,
+            seq_len: 256,
+            batch: 4,
+            ..ModelConfig::default()
+        },
+        "attention_s256".into(),
     ));
     for (cfg, tag) in step_cfgs {
         let (w, d) = (cfg.width, cfg.depth);

@@ -8,6 +8,7 @@
 //! the perf model and memory planner) and the CPU-scale proxies the repro
 //! experiments actually train.
 
+use crate::scaling::Scheme;
 use crate::util::json::Json;
 
 #[derive(Debug, Clone, PartialEq)]
@@ -54,18 +55,42 @@ impl ModelConfig {
         self.width * self.ffn_ratio
     }
 
-    /// Total parameter count (matches python `ModelConfig.n_params`).
+    /// Total parameter count (matches python `ModelConfig.n_params` and
+    /// the reference runtime's per-block tensor layout: w_qkv, w_o, w_up,
+    /// w_down plus two gain-only RMS norms per block, one final gain).
     pub fn n_params(&self) -> usize {
         let (d, f, v, l) = (self.width, self.ffn_width(), self.vocab, self.depth);
-        let per_layer = d * 3 * d + d * d + d * f + f * d + 4 * d;
-        v * d + l * per_layer + 2 * d + d * v
+        let per_layer = d * 3 * d + d * d + d * f + f * d + 2 * d;
+        v * d + l * per_layer + d + d * v
     }
 
-    /// Hidden-linear FLOPs for one token, forward pass (2*M*N*K per GEMM).
+    /// Hidden-linear FLOPs for one token, forward pass (2*M*N*K per GEMM;
+    /// the runtime's op-level shapes are tested to agree exactly).
     pub fn hidden_flops_per_token_fwd(&self) -> u64 {
         let d = self.width as u64;
         let f = self.ffn_width() as u64;
         2 * (d * 3 * d + d * d + d * f + f * d)
+    }
+
+    /// Attention score+value GEMM FLOPs for one *sequence*, forward pass,
+    /// with causal masking: query i touches i+1 keys and i+1 values at
+    /// 2·head_dim FLOPs each over all heads → `2·d·s·(s+1)`.
+    pub fn attn_flops_per_seq_fwd(&self) -> u64 {
+        let (d, s) = (self.width as u64, self.seq_len as u64);
+        2 * d * s * (s + 1)
+    }
+
+    /// The scaling scheme this config trains under: µS, SP+TE-style
+    /// dynamic FP8, or plain SP mixed precision. Assumes a config that
+    /// passed [`ModelConfig::validate`] — unknown variant strings fall
+    /// into the SP family, so the interpreter entry points (`init`,
+    /// `Prepared::new`) validate before consulting this.
+    pub fn scheme(&self) -> Scheme {
+        match (self.variant.as_str(), self.precision.as_str()) {
+            ("mus", _) => Scheme::Mus,
+            (_, "fp8") => Scheme::SpTe,
+            _ => Scheme::Sp,
+        }
     }
 
     /// Canonical artifact-name fragment (matches python `name()`).
@@ -119,6 +144,9 @@ impl ModelConfig {
         }
         if self.head_dim % 2 != 0 {
             return Err("head_dim must be even (RoPE halves it)".into());
+        }
+        if self.seq_len == 0 {
+            return Err("seq_len must be positive".into());
         }
         if !matches!(self.variant.as_str(), "mus" | "sp") {
             return Err(format!("unknown variant {}", self.variant));
@@ -268,16 +296,33 @@ mod tests {
 
     #[test]
     fn n_params_matches_python_formula() {
-        // mus_fp8 w384 d6 v2048 (the e2e config): ~12.2M
+        // mus_fp8 w384 d6 v2048 (the e2e config): ~12.2M. Per-block
+        // tensors: qkv + attn-out + ffn-up + ffn-down + two RMS gains
+        // (gain-only norms — matches python param_specs and the runtime
+        // block layout, which is tested to sum to n_params()).
         let c = ModelConfig {
             width: 384, depth: 6, head_dim: 64, vocab: 2048, seq_len: 256,
             batch: 8, ..Default::default()
         };
         let d = 384usize;
         let f = 4 * d;
-        let per = d * 3 * d + d * d + d * f + f * d + 4 * d;
-        assert_eq!(c.n_params(), 2048 * d + 6 * per + 2 * d + d * 2048);
+        let per = d * 3 * d + d * d + d * f + f * d + 2 * d;
+        assert_eq!(c.n_params(), 2048 * d + 6 * per + d + d * 2048);
         assert!(c.n_params() > 10_000_000 && c.n_params() < 14_000_000);
+    }
+
+    #[test]
+    fn scheme_mapping() {
+        assert_eq!(ModelConfig::default().scheme(), Scheme::Mus);
+        let sp8 = ModelConfig {
+            variant: "sp".into(),
+            precision: "fp8".into(),
+            residual: "standard".into(),
+            ..Default::default()
+        };
+        assert_eq!(sp8.scheme(), Scheme::SpTe);
+        let sp16 = ModelConfig { precision: "bf16".into(), ..sp8 };
+        assert_eq!(sp16.scheme(), Scheme::Sp);
     }
 
     #[test]
@@ -305,7 +350,10 @@ mod tests {
     #[test]
     fn validation_rejects_bad_configs() {
         let mut c = ModelConfig::default();
-        c.width = 65;
+        c.width = 65; // not divisible by head_dim
+        assert!(c.validate().is_err());
+        let mut c = ModelConfig::default();
+        c.seq_len = 0;
         assert!(c.validate().is_err());
         let mut c = ModelConfig::default();
         c.variant = "frob".into();

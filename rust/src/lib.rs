@@ -10,11 +10,16 @@
 //!   - [`runtime`]: the execution API. A [`runtime::Backend`] trait
 //!     (`upload`/`execute`/`download` over opaque tensor handles) with two
 //!     implementations — the pure-Rust [`runtime::ReferenceBackend`]
-//!     (a *batched* interpreter: positions run as `[rows, d]` matrices
-//!     through the cache-blocked, bit-deterministic GEMMs of
-//!     [`runtime::gemm`], with µS/SP numerics emulated via [`fp8`] and its
-//!     bit-twiddling `FastCast`; no artifacts needed) and the PJRT CPU
-//!     path over AOT HLO-text artifacts (feature `pjrt`, `xla` crate).
+//!     (a *batched* interpreter over the op-level transformer block of
+//!     `runtime::block`: RMS-norm → qkv → RoPE → multi-head causal
+//!     attention → attn-out → residual → RMS-norm → ffn-up → act →
+//!     ffn-down → residual per block, full backward, per-op FP8 plan on
+//!     the four hidden linears; activations run as `[batch·seq, d]`
+//!     matrices through the cache-blocked, bit-deterministic GEMM and
+//!     attention kernels of [`runtime::gemm`], with µS/SP numerics
+//!     emulated via [`fp8`] and its bit-twiddling `FastCast`; scaling
+//!     rules consumed from [`scaling`]; no artifacts needed) and the PJRT
+//!     CPU path over AOT HLO-text artifacts (feature `pjrt`, `xla` crate).
 //!     [`runtime::Session`] owns the *device-resident* `2·n_params` train
 //!     state between steps: per-step host traffic is tokens in, loss/gnorm
 //!     out (constant lr/wd/tau handles are cached on-device); full-state

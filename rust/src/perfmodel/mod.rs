@@ -19,6 +19,7 @@
 //! them (tested).
 
 use crate::config::presets::PaperConfig;
+use crate::runtime::block;
 
 /// Hardware description (H100 SXM defaults).
 #[derive(Debug, Clone)]
@@ -102,14 +103,19 @@ impl StepTime {
 
 /// Model one training step of a paper-scale config under `mode`.
 pub fn step_time(hw: &Hw, p: &PaperConfig, mode: Mode) -> StepTime {
+    let m = crate::config::presets::paper_model(p);
     let d = p.width as f64;
     let f = 4.0 * d;
     let l = p.depth as f64;
     let s = p.seq_len as f64;
     let tokens_per_gpu = (p.batch as f64 * s) / hw.n_gpus as f64;
+    let seqs_per_gpu = p.batch as f64 / hw.n_gpus as f64;
 
-    // --- hidden GEMMs: qkv, attn-out, ffn-up, ffn-down; fwd + dgrad + wgrad
-    let gemm_flops_per_tok = 2.0 * (d * 3.0 * d + d * d + d * f + f * d); // fwd
+    // --- hidden GEMMs: qkv, attn-out, ffn-up, ffn-down; fwd + dgrad +
+    // wgrad. The per-token forward count is enumerated from the runtime
+    // block's *actual* GEMM shapes (tested equal to the ModelConfig
+    // closed-form).
+    let gemm_flops_per_tok = block::hidden_gemm_flops_per_token_fwd(&m) as f64; // fwd
     let gemm_flops = 3.0 * gemm_flops_per_tok * tokens_per_gpu * l;
     let gemm_rate = match mode {
         Mode::Bf16 => hw.bf16_tflops * hw.gemm_eff_bf16,
@@ -118,10 +124,10 @@ pub fn step_time(hw: &Hw, p: &PaperConfig, mode: Mode) -> StepTime {
     let gemm = gemm_flops / gemm_rate;
 
     // --- attention score/value GEMMs AND the embedding/LM-head GEMMs stay
-    // BF16 in all modes (paper: only hidden linear layers are FP8);
-    // causal masking halves the effective context
-    let vocab = 32_768.0;
-    let attn_flops = 3.0 * (2.0 * 2.0 * d * (s / 2.0)) * tokens_per_gpu * l;
+    // BF16 in all modes (paper: only hidden linear layers are FP8); the
+    // per-sequence count is the exact causal sum 2·d·s·(s+1)
+    let vocab = m.vocab as f64;
+    let attn_flops = 3.0 * (block::attn_gemm_flops_per_seq_fwd(&m) as f64) * seqs_per_gpu * l;
     let head_flops = 3.0 * (2.0 * d * vocab) * tokens_per_gpu;
     let attention =
         (attn_flops + head_flops) / (hw.bf16_tflops * hw.gemm_eff_bf16 * 1e12);
@@ -266,6 +272,34 @@ mod tests {
             let total_flops = 6.0 * p.params_b * 1e9 * (p.batch as f64 * p.seq_len as f64);
             let mfu = total_flops / (t * hw.n_gpus as f64 * hw.bf16_tflops * 1e12);
             assert!(mfu > 0.25 && mfu < 0.72, "{}: mfu {mfu}", p.name);
+        }
+    }
+
+    #[test]
+    fn flops_split_agrees_with_block_op_level_shapes() {
+        // The perf model consumes the runtime block's op-level FLOP
+        // enumeration directly; these asserts pin that enumeration to the
+        // ModelConfig closed-form — exact equality on the hidden GEMMs
+        // and on the causal attention score/value count.
+        for p in paper_table4() {
+            let m = crate::config::presets::paper_model(&p);
+            assert_eq!(
+                block::hidden_gemm_flops_per_token_fwd(&m),
+                m.hidden_flops_per_token_fwd(),
+                "{}: hidden GEMM flops",
+                p.name
+            );
+            assert_eq!(
+                block::attn_gemm_flops_per_seq_fwd(&m),
+                m.attn_flops_per_seq_fwd(),
+                "{}: attention GEMM flops",
+                p.name
+            );
+            // the four shapes are exactly the paper's hidden linears
+            let shapes = block::hidden_gemm_shapes(&m);
+            assert_eq!(shapes.len(), 4);
+            let names: Vec<&str> = shapes.iter().map(|s| s.0).collect();
+            assert_eq!(names, ["qkv", "attn_out", "ffn_up", "ffn_down"]);
         }
     }
 

@@ -1,7 +1,7 @@
-//! Cache-blocked, bit-deterministic f32 GEMM kernels for the reference
-//! interpreter's batched hot path.
+//! Cache-blocked, bit-deterministic f32 GEMM + attention kernels for the
+//! reference interpreter's batched hot path.
 //!
-//! Two shapes cover every product the interpreter needs:
+//! Two GEMM shapes cover every dense product the interpreter needs:
 //!
 //!  - [`matmul_bt`]: `C = s · A @ Bᵀ` with the right-hand matrix stored
 //!    row-per-output-column, so both operands stream contiguously (the
@@ -9,6 +9,14 @@
 //!    products all fit this after a one-time weight transpose);
 //!  - [`add_matmul_at_b`]: `C += s · Aᵀ @ B`, accumulated as rank-1
 //!    updates in ascending row order (the weight-gradient products).
+//!
+//! [`attn_forward_causal`] / [`attn_backward_causal`] are the per-head
+//! causal softmax-attention kernels of the op-level transformer block
+//! (`runtime/block.rs`). They are deliberately single-threaded: the block
+//! parallelizes over (batch, head) pairs with fixed chunk boundaries, and
+//! each head's score/softmax/value math runs in one fixed serial order —
+//! so attention inherits the same any-thread-count bit-determinism as the
+//! GEMMs.
 //!
 //! Determinism contract (matches [`crate::util::parallel`]): every output
 //! element is produced by exactly one chunk, the inner accumulation order
@@ -117,6 +125,138 @@ pub fn add_matmul_at_b(
             }
         }
     });
+}
+
+/// Causal softmax attention, forward, for one (batch, head) pair.
+///
+/// `q`, `k`, `v` are `[s, dh]` row-major (RoPE already applied to q/k by
+/// the caller). Writes the post-softmax weights into `probs` (`[s, s]`,
+/// strict upper triangle zeroed — saved for the backward pass) and the
+/// attended values into `o` (`[s, dh]`): `o_i = Σ_{j≤i} P_ij · v_j` with
+/// `P_i = softmax(scale · q_i · k_{0..=i})`.
+///
+/// Numerically stable (per-row max subtraction); the softmax denominator
+/// accumulates in f64 over ascending `j`, so the result is a fixed
+/// function of the inputs — single-threaded by design, see module docs.
+pub fn attn_forward_causal(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    probs: &mut [f32],
+    o: &mut [f32],
+    s: usize,
+    dh: usize,
+    scale: f32,
+) {
+    assert_eq!(q.len(), s * dh, "attn_forward_causal: q is not [s,dh]");
+    assert_eq!(k.len(), s * dh, "attn_forward_causal: k is not [s,dh]");
+    assert_eq!(v.len(), s * dh, "attn_forward_causal: v is not [s,dh]");
+    assert_eq!(probs.len(), s * s, "attn_forward_causal: probs is not [s,s]");
+    assert_eq!(o.len(), s * dh, "attn_forward_causal: o is not [s,dh]");
+    for i in 0..s {
+        let qi = &q[i * dh..(i + 1) * dh];
+        let prow = &mut probs[i * s..(i + 1) * s];
+        let mut m = f32::NEG_INFINITY;
+        for j in 0..=i {
+            let sc = scale * dot(qi, &k[j * dh..(j + 1) * dh]);
+            prow[j] = sc;
+            m = m.max(sc);
+        }
+        let mut den = 0f64;
+        for p in prow[..=i].iter_mut() {
+            let e = (*p - m).exp();
+            *p = e;
+            den += e as f64;
+        }
+        let inv = (1.0 / den) as f32;
+        for p in prow[..=i].iter_mut() {
+            *p *= inv;
+        }
+        for p in prow[i + 1..].iter_mut() {
+            *p = 0.0;
+        }
+        let orow = &mut o[i * dh..(i + 1) * dh];
+        orow.fill(0.0);
+        for j in 0..=i {
+            let p = prow[j];
+            if p == 0.0 {
+                continue;
+            }
+            let vj = &v[j * dh..(j + 1) * dh];
+            for (ov, &vv) in orow.iter_mut().zip(vj) {
+                *ov += p * vv;
+            }
+        }
+    }
+}
+
+/// Backward of [`attn_forward_causal`] for one (batch, head) pair.
+///
+/// Given the upstream gradient `d_o` `[s, dh]` and the saved `probs`,
+/// overwrites `dq`, `dk`, `dv` (`[s, dh]` each) with the gradients at the
+/// (post-RoPE) q/k and v. Standard softmax-attention backward:
+/// `dP_ij = do_i · v_j`, `dS_ij = P_ij (dP_ij − Σ_j P_ij dP_ij)`,
+/// `dq_i = scale · Σ_j dS_ij k_j`, `dk_j = scale · Σ_i dS_ij q_i`,
+/// `dv_j = Σ_i P_ij do_i`. Accumulation runs in ascending `i` then `j`
+/// order — fixed, thread-count independent (callers parallelize over
+/// heads only).
+#[allow(clippy::too_many_arguments)]
+pub fn attn_backward_causal(
+    d_o: &[f32],
+    probs: &[f32],
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    dq: &mut [f32],
+    dk: &mut [f32],
+    dv: &mut [f32],
+    s: usize,
+    dh: usize,
+    scale: f32,
+) {
+    assert_eq!(d_o.len(), s * dh, "attn_backward_causal: d_o is not [s,dh]");
+    assert_eq!(probs.len(), s * s, "attn_backward_causal: probs is not [s,s]");
+    assert_eq!(q.len(), s * dh, "attn_backward_causal: q is not [s,dh]");
+    assert_eq!(k.len(), s * dh, "attn_backward_causal: k is not [s,dh]");
+    assert_eq!(v.len(), s * dh, "attn_backward_causal: v is not [s,dh]");
+    assert_eq!(dq.len(), s * dh, "attn_backward_causal: dq is not [s,dh]");
+    assert_eq!(dk.len(), s * dh, "attn_backward_causal: dk is not [s,dh]");
+    assert_eq!(dv.len(), s * dh, "attn_backward_causal: dv is not [s,dh]");
+    dq.fill(0.0);
+    dk.fill(0.0);
+    dv.fill(0.0);
+    let mut dp = vec![0f32; s];
+    for i in 0..s {
+        let doi = &d_o[i * dh..(i + 1) * dh];
+        let prow = &probs[i * s..(i + 1) * s];
+        let mut pdot = 0f64;
+        for j in 0..=i {
+            let g = dot(doi, &v[j * dh..(j + 1) * dh]);
+            dp[j] = g;
+            pdot += (prow[j] * g) as f64;
+        }
+        let pdot = pdot as f32;
+        let qi = &q[i * dh..(i + 1) * dh];
+        let dqi = &mut dq[i * dh..(i + 1) * dh];
+        for j in 0..=i {
+            let p = prow[j];
+            let ds = scale * p * (dp[j] - pdot);
+            let kj = &k[j * dh..(j + 1) * dh];
+            for c in 0..dh {
+                dqi[c] += ds * kj[c];
+            }
+            let dkj = &mut dk[j * dh..(j + 1) * dh];
+            for c in 0..dh {
+                dkj[c] += ds * qi[c];
+            }
+            if p != 0.0 {
+                let dvj = &mut dv[j * dh..(j + 1) * dh];
+                for c in 0..dh {
+                    dvj[c] += p * doi[c];
+                }
+            }
+        }
+    }
 }
 
 /// Blocked out-of-place transpose: `dst[c*rows + r] = src[r*cols + c]`.
@@ -245,6 +385,112 @@ mod tests {
         for threads in [2usize, 5] {
             assert_eq!(bt1, run_bt(threads), "matmul_bt drifted at {threads} threads");
             assert_eq!(atb1, run_atb(threads), "add_matmul_at_b drifted at {threads} threads");
+        }
+    }
+
+    #[test]
+    fn attn_forward_causal_matches_naive_softmax() {
+        let (s, dh) = (7usize, 6usize);
+        let mut rng = Rng::new(11);
+        let mut q = vec![0f32; s * dh];
+        let mut k = vec![0f32; s * dh];
+        let mut v = vec![0f32; s * dh];
+        rng.fill_normal(&mut q, 1.0);
+        rng.fill_normal(&mut k, 1.0);
+        rng.fill_normal(&mut v, 1.0);
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut probs = vec![0f32; s * s];
+        let mut o = vec![0f32; s * dh];
+        attn_forward_causal(&q, &k, &v, &mut probs, &mut o, s, dh, scale);
+        for i in 0..s {
+            // naive f64 softmax over j <= i
+            let mut logits = vec![0f64; i + 1];
+            for j in 0..=i {
+                let mut acc = 0f64;
+                for c in 0..dh {
+                    acc += q[i * dh + c] as f64 * k[j * dh + c] as f64;
+                }
+                logits[j] = scale as f64 * acc;
+            }
+            let m = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let den: f64 = logits.iter().map(|&l| (l - m).exp()).sum();
+            let mut row_sum = 0f64;
+            for j in 0..s {
+                let got = probs[i * s + j] as f64;
+                if j <= i {
+                    let want = (logits[j] - m).exp() / den;
+                    assert!((got - want).abs() < 1e-5, "P[{i},{j}] {got} vs {want}");
+                    row_sum += got;
+                } else {
+                    assert_eq!(got, 0.0, "causal mask leaked at [{i},{j}]");
+                }
+            }
+            assert!((row_sum - 1.0).abs() < 1e-5, "row {i} sums to {row_sum}");
+            for c in 0..dh {
+                let want: f64 = (0..=i)
+                    .map(|j| probs[i * s + j] as f64 * v[j * dh + c] as f64)
+                    .sum();
+                assert!((o[i * dh + c] as f64 - want).abs() < 1e-5);
+            }
+        }
+        // position 0 attends only to itself
+        assert_eq!(probs[0], 1.0);
+        for c in 0..dh {
+            assert!((o[c] - v[c]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn attn_backward_causal_matches_finite_difference() {
+        // FD through a scalar objective L = Σ w ⊙ attn(q,k,v), checking a
+        // few coordinates of each of dq, dk, dv. f32 forward, so the FD
+        // tolerance is loose-ish (1e-2 relative).
+        let (s, dh) = (5usize, 4usize);
+        let mut rng = Rng::new(12);
+        let mut q = vec![0f32; s * dh];
+        let mut k = vec![0f32; s * dh];
+        let mut v = vec![0f32; s * dh];
+        let mut w = vec![0f32; s * dh];
+        rng.fill_normal(&mut q, 1.0);
+        rng.fill_normal(&mut k, 1.0);
+        rng.fill_normal(&mut v, 1.0);
+        rng.fill_normal(&mut w, 1.0);
+        let scale = 1.0 / (dh as f32).sqrt();
+        let loss = |q: &[f32], k: &[f32], v: &[f32]| -> f64 {
+            let mut probs = vec![0f32; s * s];
+            let mut o = vec![0f32; s * dh];
+            attn_forward_causal(q, k, v, &mut probs, &mut o, s, dh, scale);
+            o.iter().zip(&w).map(|(&a, &b)| a as f64 * b as f64).sum()
+        };
+        let mut probs = vec![0f32; s * s];
+        let mut o = vec![0f32; s * dh];
+        attn_forward_causal(&q, &k, &v, &mut probs, &mut o, s, dh, scale);
+        let (mut dq, mut dk, mut dv) = (vec![0f32; s * dh], vec![0f32; s * dh], vec![0f32; s * dh]);
+        attn_backward_causal(&w, &probs, &q, &k, &v, &mut dq, &mut dk, &mut dv, s, dh, scale);
+        let h = 1e-3f32;
+        for (which, idx) in
+            [(0usize, 1usize), (0, s * dh - 2), (1, 2), (1, s * dh - 1), (2, 0), (2, s * dh / 2)]
+        {
+            let (base, grad): (&Vec<f32>, &[f32]) = match which {
+                0 => (&q, &dq),
+                1 => (&k, &dk),
+                _ => (&v, &dv),
+            };
+            let mut bplus = base.clone();
+            bplus[idx] += h;
+            let mut bminus = base.clone();
+            bminus[idx] -= h;
+            let g = grad[idx] as f64;
+            let (lp, lm) = match which {
+                0 => (loss(&bplus, &k, &v), loss(&bminus, &k, &v)),
+                1 => (loss(&q, &bplus, &v), loss(&q, &bminus, &v)),
+                _ => (loss(&q, &k, &bplus), loss(&q, &k, &bminus)),
+            };
+            let fd = (lp - lm) / (2.0 * h as f64);
+            assert!(
+                (fd - g).abs() <= 2e-2 * fd.abs().max(g.abs()) + 2e-3,
+                "buf{which}[{idx}]: fd {fd} vs analytic {g}"
+            );
         }
     }
 

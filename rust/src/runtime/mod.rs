@@ -9,8 +9,9 @@
 //!  - [`Session`] — owns the device-resident `TrainState` between steps;
 //!    per-step host traffic is tokens + 3 scalars in and 2 scalars out,
 //!    accounted in [`ExecStats`].
-//!  - [`ReferenceBackend`] — pure-Rust interpreter (fp8 emulation); runs
-//!    everywhere, no artifacts required.
+//!  - [`ReferenceBackend`] — pure-Rust interpreter (fp8 emulation) over
+//!    the op-level transformer block in `runtime::block` (real multi-head
+//!    causal attention + FFN); runs everywhere, no artifacts required.
 //!  - `PjrtBackend` (feature `pjrt`) — AOT HLO-text artifacts on the PJRT
 //!    CPU client (`xla` crate; vendored separately).
 //!
@@ -18,6 +19,7 @@
 //! artifact directory.
 
 mod backend;
+pub(crate) mod block;
 pub mod gemm;
 mod manifest;
 #[cfg(feature = "pjrt")]

@@ -124,6 +124,15 @@ impl Scheme {
         }
     }
 
+    /// Per-tensor fully-decoupled weight-decay mask (mirrors python
+    /// `wd_mult`): matrix parameters decay, norm gains/biases do not.
+    pub fn wd_mult(&self, kind: ParamKind) -> f64 {
+        match kind {
+            ParamKind::Norm => 0.0,
+            _ => 1.0,
+        }
+    }
+
     /// Fully-decoupled weight decay transfer (paper §3.2).
     pub fn wd_transfer(&self, d_base: usize, d_new: usize) -> f64 {
         match self {
@@ -231,6 +240,16 @@ mod tests {
         assert_eq!(Scheme::Mus.wd_transfer(256, 5120), 1.0);
         assert_eq!(Scheme::Sp.wd_transfer(256, 5120), 0.5);
         assert_eq!(Scheme::Sp.wd_transfer(256, 256), 1.0);
+    }
+
+    #[test]
+    fn wd_mult_excludes_norm_gains() {
+        for s in [Scheme::Sp, Scheme::SpTe, Scheme::Mus, Scheme::Mup, Scheme::Ump] {
+            assert_eq!(s.wd_mult(ParamKind::Norm), 0.0);
+            assert_eq!(s.wd_mult(ParamKind::Hidden), 1.0);
+            assert_eq!(s.wd_mult(ParamKind::Input), 1.0);
+            assert_eq!(s.wd_mult(ParamKind::Output), 1.0);
+        }
     }
 
     #[test]
