@@ -28,7 +28,7 @@ use munit::coordinator::trainer::Trainer;
 use munit::data::{Batcher, CorpusSpec};
 use munit::fp8::E4M3;
 use munit::perfmodel::{fig8, Hw};
-use munit::runtime::{open_backend, tensor_f32, Backend};
+use munit::runtime::{open_backend, tensor_f32, Backend, InferSession};
 use munit::scaling::comparison_matrix;
 use munit::util::bench::{bench, header, quick, BenchResult};
 use munit::util::json::Json;
@@ -114,6 +114,34 @@ fn main() {
         );
         std::hint::black_box(&dqa);
     });
+
+    // the decode path's single-query cached-attention kernel: one query
+    // against a 256-position BF16-paged KV history
+    {
+        let (ctx, dh_d, page) = (256usize, 64usize, 32usize);
+        let mut kv = vec![0f32; 2 * ctx * dh_d];
+        rng.fill_normal(&mut kv, 1.0);
+        let bits: Vec<u16> = kv
+            .iter()
+            .map(|&v| munit::runtime::gemm::f32_to_bf16_bits(v))
+            .collect();
+        let (k_bits, v_bits) = bits.split_at(ctx * dh_d);
+        let k_pages: Vec<&[u16]> = k_bits.chunks(page * dh_d).collect();
+        let v_pages: Vec<&[u16]> = v_bits.chunks(page * dh_d).collect();
+        let mut qd = vec![0f32; dh_d];
+        rng.fill_normal(&mut qd, 1.0);
+        let scale_d = 1.0 / (dh_d as f32).sqrt();
+        let (mut kf, mut vf) = (vec![0f32; ctx * dh_d], vec![0f32; ctx * dh_d]);
+        let mut scores_d = vec![0f32; ctx];
+        let mut od = vec![0f32; dh_d];
+        run("hot:attention_decode_cached_ctx256_dh64", &mut || {
+            munit::runtime::gemm::attn_decode_cached(
+                &qd, &k_pages, &v_pages, ctx, dh_d, scale_d, &mut kf, &mut vf,
+                &mut scores_d, &mut od,
+            );
+            std::hint::black_box(&od);
+        });
+    }
 
     let manifest_text = std::fs::read_to_string("artifacts/manifest.json").ok();
     if let Some(text) = &manifest_text {
@@ -260,6 +288,112 @@ fn main() {
         match std::fs::write("BENCH_step.json", format!("{doc}\n")) {
             Ok(()) => eprintln!("wrote BENCH_step.json"),
             Err(e) => eprintln!("could not write BENCH_step.json: {e}"),
+        }
+    }
+
+    // ---- inference benches: prefill + steady-state decode ---------------
+    // (BENCH_decode.json — CI asserts nonzero decode tokens/sec, so the
+    // serving-path perf trajectory is tracked across PRs like the step
+    // path). Names contain "decode" so `cargo bench -- decode` selects
+    // the whole group.
+    let mut decode_rows: Vec<Json> = Vec::new();
+    let decode_cfgs: Vec<(ModelConfig, &str)> = vec![
+        (ModelConfig::default(), "proxy_w64"),
+        (
+            ModelConfig {
+                width: 128,
+                depth: 4,
+                head_dim: 32,
+                vocab: 512,
+                seq_len: 256,
+                batch: 4,
+                ..ModelConfig::default()
+            },
+            "attention_s256",
+        ),
+    ];
+    for (cfg, tag) in decode_cfgs {
+        let group = format!("decode:{tag}_w{}d{}", cfg.width, cfg.depth);
+        if !filter.is_empty() && !group.contains(&filter) {
+            continue;
+        }
+        let Ok(trainer) = Trainer::new(backend.as_ref(), &cfg) else { continue };
+        let Ok(session) = trainer.init(0) else { continue };
+        let Ok(params) = session.params_host() else { continue };
+        let Ok(mut infer) = InferSession::new(&cfg, &params, 0.4) else { continue };
+        let cap = infer.context_capacity();
+        let prompt_len = (cap / 2).max(1);
+        let prompt: Vec<i32> = (0..prompt_len).map(|i| (i % cfg.vocab) as i32).collect();
+
+        // prefill throughput: fresh sequence per iteration
+        eprintln!("running {group} (prefill)…");
+        let r_prefill = bench(&format!("{group}_prefill"), 1, 3, Duration::from_secs(2), || {
+            let id = infer.add_sequence();
+            std::hint::black_box(infer.prefill(id, &prompt).unwrap());
+            infer.free_sequence(id).unwrap();
+        });
+        let prefill_tps = prompt_len as f64 / r_prefill.mean.as_secs_f64().max(1e-12);
+
+        // steady-state decode at batch 1 and batch 8: sequences are
+        // re-prefilled when they hit context capacity (amortized away
+        // over the cap/2 decode steps between refills)
+        let mut decode_tps = [0f64; 2];
+        for (bi, &batch) in [1usize, 8].iter().enumerate() {
+            let short: Vec<i32> = prompt[..4.min(prompt_len)].to_vec();
+            let mut ids = Vec::with_capacity(batch);
+            for _ in 0..batch {
+                let id = infer.add_sequence();
+                infer.prefill(id, &short).unwrap();
+                ids.push(id);
+            }
+            let mut tok = 0i32;
+            eprintln!("running {group} (decode b{batch})…");
+            let r = bench(
+                &format!("{group}_steady_b{batch}"),
+                2,
+                3,
+                Duration::from_secs(2),
+                || {
+                    for id in ids.iter_mut() {
+                        if infer.sequence_len(*id).unwrap() >= cap {
+                            infer.free_sequence(*id).unwrap();
+                            *id = infer.add_sequence();
+                            infer.prefill(*id, &short).unwrap();
+                        }
+                    }
+                    tok = (tok + 1) % cfg.vocab as i32;
+                    let items: Vec<_> = ids.iter().map(|&id| (id, tok)).collect();
+                    std::hint::black_box(infer.decode_batch(&items).unwrap());
+                },
+            );
+            decode_tps[bi] = batch as f64 / r.mean.as_secs_f64().max(1e-12);
+            for id in &ids {
+                infer.free_sequence(*id).unwrap();
+            }
+            results.push(r);
+        }
+        results.push(r_prefill);
+        decode_rows.push(Json::obj(vec![
+            ("config", Json::str(&cfg.name())),
+            ("bench", Json::str(&group)),
+            ("context_capacity", Json::num(cap as f64)),
+            ("prefill_tokens_per_sec", Json::num(prefill_tps)),
+            ("decode_tokens_per_sec_b1", Json::num(decode_tps[0])),
+            ("decode_tokens_per_sec_b8", Json::num(decode_tps[1])),
+            (
+                "kv_bytes_per_token",
+                Json::num(cfg.kv_cache_bytes_per_token() as f64),
+            ),
+        ]));
+    }
+    if !decode_rows.is_empty() {
+        let doc = Json::obj(vec![
+            ("backend", Json::str(&backend.platform())),
+            ("configs", Json::Arr(decode_rows)),
+        ]);
+        match std::fs::write("BENCH_decode.json", format!("{doc}\n")) {
+            Ok(()) => eprintln!("wrote BENCH_decode.json"),
+            Err(e) => eprintln!("could not write BENCH_decode.json: {e}"),
         }
     }
 

@@ -80,6 +80,28 @@ impl ModelConfig {
         2 * d * s * (s + 1)
     }
 
+    /// Single-query cached-attention FLOPs for one decode token at
+    /// context length `ctx`, per block: the query scores `ctx` keys and
+    /// mixes `ctx` values at 2·head_dim FLOPs each over all heads →
+    /// `4·d·ctx` (the runtime's decode kernel shape is tested to agree
+    /// exactly).
+    pub fn attn_decode_flops_per_token(&self, ctx: usize) -> u64 {
+        4 * self.width as u64 * ctx as u64
+    }
+
+    /// KV-cache bytes appended per decoded token across all layers: one
+    /// BF16 K row and one BF16 V row of `width` values per layer.
+    pub fn kv_cache_bytes_per_token(&self) -> u64 {
+        (self.depth * 2 * self.width * 2) as u64
+    }
+
+    /// KV-cache bytes READ by one decode token at context length `ctx`:
+    /// every layer streams its full cached K and V (`ctx · width` BF16
+    /// values each) — the bandwidth term of the decode roofline.
+    pub fn kv_cache_bytes_read_per_token(&self, ctx: usize) -> u64 {
+        self.kv_cache_bytes_per_token() * ctx as u64
+    }
+
     /// The scaling scheme this config trains under: µS, SP+TE-style
     /// dynamic FP8, or plain SP mixed precision. Assumes a config that
     /// passed [`ModelConfig::validate`] — unknown variant strings fall

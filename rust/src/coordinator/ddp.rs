@@ -21,34 +21,34 @@ use crate::data::{Batcher, CorpusSpec};
 use crate::runtime::{Backend, Tensor};
 use crate::util::error::Result;
 
-/// Average the i-th tensor across worker states, writing the mean back to
-/// every worker (the "allreduce").
-fn allreduce_mean(states: &mut [TrainState]) -> Result<()> {
+/// Mean of the workers' states (the "allreduce"). One f32 accumulation
+/// buffer is reused across tensors, and ONE reduced `TrainState` comes
+/// back: every worker loads it by reference at the `load_state` boundary
+/// instead of receiving its own deep clone — the old per-worker
+/// `Tensor::clone` fan-out was O(workers × state bytes) of pure copy
+/// churn per step on top of the reduction itself.
+fn allreduce_mean(states: &[TrainState]) -> Result<TrainState> {
     let n_workers = states.len();
-    if n_workers <= 1 {
-        return Ok(());
-    }
+    debug_assert!(n_workers > 1, "allreduce with fewer than two workers is a no-op");
     let n_tensors = states[0].tensors.len();
+    let inv = 1.0 / n_workers as f32;
+    let mut tensors = Vec::with_capacity(n_tensors);
+    let mut acc: Vec<f32> = Vec::new(); // reused across tensors
     for t in 0..n_tensors {
-        let shape = states[0].tensors[t].shape().to_vec();
-        let mut acc: Vec<f32> = states[0].tensors[t].to_f32_vec()?;
+        acc.clear();
+        acc.extend_from_slice(states[0].tensors[t].as_f32()?);
         for s in states.iter().skip(1) {
             let v = s.tensors[t].as_f32()?;
             for (a, b) in acc.iter_mut().zip(v) {
                 *a += *b;
             }
         }
-        let inv = 1.0 / n_workers as f32;
         for a in acc.iter_mut() {
             *a *= inv;
         }
-        let reduced = Tensor::f32(acc, &shape)?;
-        for s in states.iter_mut() {
-            // each worker gets its own copy of the reduced tensor
-            s.tensors[t] = reduced.clone();
-        }
+        tensors.push(Tensor::f32(acc.clone(), states[0].tensors[t].shape())?);
     }
-    Ok(())
+    Ok(TrainState { tensors, n_params: states[0].n_params })
 }
 
 /// Train with `k` simulated workers for `tc.steps` synchronized steps.
@@ -88,9 +88,9 @@ pub fn train_ddp(
             for session in sessions.iter() {
                 states.push(session.read_back()?);
             }
-            allreduce_mean(&mut states)?;
-            for (session, state) in sessions.iter_mut().zip(&states) {
-                session.load_state(state)?;
+            let reduced = allreduce_mean(&states)?;
+            for session in sessions.iter_mut() {
+                session.load_state(&reduced)?;
             }
         }
         let loss = loss_sum / n_workers as f32;

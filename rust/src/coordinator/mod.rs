@@ -12,12 +12,17 @@
 //! - [`ddp`]: simulated multi-worker data parallelism (sharded streams +
 //!   periodic parameter averaging), exercising the distributed code path
 //!   µS claims compatibility with (no per-tensor amax collectives needed).
+//! - [`serve`]: continuous-batching inference scheduler over
+//!   `runtime::InferSession` — staggered admissions, between-step
+//!   evictions, one batched decode execute per step, per-request latency
+//!   accounting.
 //! - [`metrics`]: JSONL run logging.
 
 pub mod checkpoint;
 pub mod ddp;
 pub mod metrics;
 pub mod pipeline;
+pub mod serve;
 pub mod sweep;
 pub mod trainer;
 

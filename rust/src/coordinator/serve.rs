@@ -1,0 +1,548 @@
+//! Continuous-batching serve loop over an [`InferSession`].
+//!
+//! The scheduler the ROADMAP's "serve heavy traffic" goal needs, at
+//! reference scale: requests arrive at arbitrary steps, get admitted
+//! into a bounded decode batch as slots free up, and every live sequence
+//! advances one token per step through **one batched decode execute**
+//! ([`InferSession::decode_batch`]). Sequences leave the batch the step
+//! they finish (max tokens or stop token) and their KV pages recycle
+//! immediately — admissions and evictions happen *between* decode steps,
+//! never by restarting the batch.
+//!
+//! Because batched decode is row-local under static-FP8/BF16 plans (see
+//! `runtime::infer`), a request's generated tokens are identical whatever
+//! batch it shared — tested against isolated one-request runs. Accounting
+//! follows `ExecStats` practice: per-request admission/first-token/finish
+//! steps and wall latency, plus aggregate prefill/decode tokens-per-sec
+//! in the [`ServeReport`].
+
+use std::time::{Duration, Instant};
+
+use crate::bail;
+use crate::config::ModelConfig;
+use crate::runtime::{sample_greedy, sample_topk, InferSession, SeqId};
+use crate::util::error::Result;
+use crate::util::rng::Rng;
+
+/// Per-request sampling policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Sampling {
+    Greedy,
+    /// Seeded top-k at a temperature: deterministic per request,
+    /// independent of batch composition (each request owns its RNG).
+    TopK { k: usize, temperature: f32, seed: u64 },
+}
+
+/// One generation request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    /// Serve step at which the request becomes visible to the scheduler.
+    pub arrival_step: usize,
+    /// Generating this token finishes the request early (eviction).
+    pub stop_token: Option<i32>,
+    pub sampling: Sampling,
+}
+
+/// Scheduler knobs.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Maximum live sequences per decode step.
+    pub max_batch: usize,
+    /// Hard cap on scheduler steps (guards non-terminating request sets).
+    pub max_steps: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { max_batch: 8, max_steps: 10_000 }
+    }
+}
+
+/// One finished request.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub prompt_len: usize,
+    /// True when a stop token ended generation before `max_new_tokens`.
+    pub stopped_early: bool,
+    pub arrival_step: usize,
+    pub admitted_step: usize,
+    pub finished_step: usize,
+    /// Wall time from admission (prefill start) to the first token.
+    pub first_token_latency: Duration,
+    /// Wall time from admission to the final token.
+    pub total_latency: Duration,
+}
+
+/// Aggregate outcome of draining a request set.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub completions: Vec<Completion>,
+    pub steps: usize,
+    pub prefill_tokens: u64,
+    pub decode_tokens: u64,
+    pub wall: Duration,
+    /// Generated tokens per second over the time actually spent in
+    /// decode executes (from [`InferSession`]'s per-phase accounting).
+    pub decode_tokens_per_sec: f64,
+    /// Prompt tokens per second over the time actually spent in prefill.
+    pub prefill_tokens_per_sec: f64,
+    /// Mean live sequences per decode step (batching effectiveness).
+    pub mean_batch_occupancy: f64,
+}
+
+struct Live {
+    req: usize,
+    seq: SeqId,
+    rng: Rng,
+    admitted_step: usize,
+    admitted_at: Instant,
+    first_token_at: Instant,
+    /// Generated so far; the last entry is the token to feed next step.
+    tokens: Vec<i32>,
+    stopped_early: bool,
+}
+
+/// The one sampling dispatch — shared by the serve loop and
+/// [`generate_one`], so batched and isolated generation cannot diverge
+/// on how a policy is applied.
+fn draw(sampling: Sampling, logits: &[f32], rng: &mut Rng) -> i32 {
+    match sampling {
+        Sampling::Greedy => sample_greedy(logits),
+        Sampling::TopK { k, temperature, .. } => sample_topk(logits, k, temperature, rng),
+    }
+}
+
+fn sample(req: &Request, live: &mut Live, logits: &[f32]) -> i32 {
+    draw(req.sampling, logits, &mut live.rng)
+}
+
+fn finished(req: &Request, live: &Live) -> bool {
+    live.stopped_early || live.tokens.len() >= req.max_new_tokens
+}
+
+/// Move every finished live sequence into `completions`, freeing its KV
+/// pages. Runs before admission (so finished sequences release their
+/// batch slots the step they finish) and again after admission (so a
+/// request whose first sampled token already stops never enters a
+/// decode).
+fn evict_finished(
+    infer: &mut InferSession,
+    requests: &[Request],
+    live: &mut Vec<Live>,
+    completions: &mut Vec<Completion>,
+    step: usize,
+) -> Result<()> {
+    let mut i = 0;
+    while i < live.len() {
+        let req = &requests[live[i].req];
+        if finished(req, &live[i]) {
+            let l = live.remove(i);
+            infer.free_sequence(l.seq)?;
+            completions.push(Completion {
+                id: req.id,
+                tokens: l.tokens,
+                prompt_len: req.prompt.len(),
+                stopped_early: l.stopped_early,
+                arrival_step: req.arrival_step,
+                admitted_step: l.admitted_step,
+                finished_step: step,
+                first_token_latency: l.first_token_at - l.admitted_at,
+                total_latency: Instant::now() - l.admitted_at,
+            });
+        } else {
+            i += 1;
+        }
+    }
+    Ok(())
+}
+
+/// Drain `requests` through the continuous-batching loop. Requests are
+/// admitted in `(arrival_step, id)` order as batch slots free up; every
+/// request must fit the session's context capacity
+/// (`prompt + max_new_tokens ≤ capacity`). Returns per-request
+/// completions (sorted by id) and aggregate throughput.
+pub fn serve(
+    infer: &mut InferSession,
+    requests: &[Request],
+    sc: &ServeConfig,
+) -> Result<ServeReport> {
+    if sc.max_batch == 0 {
+        bail!("serve: max_batch must be positive");
+    }
+    let cap = infer.context_capacity();
+    for r in requests {
+        if r.prompt.is_empty() {
+            bail!("request {}: empty prompt", r.id);
+        }
+        if r.max_new_tokens == 0 {
+            bail!("request {}: max_new_tokens must be positive", r.id);
+        }
+        if r.prompt.len() + r.max_new_tokens > cap {
+            bail!(
+                "request {}: prompt {} + max_new {} exceeds context capacity {cap}",
+                r.id,
+                r.prompt.len(),
+                r.max_new_tokens
+            );
+        }
+    }
+    // admission queue: arrival order, id as the deterministic tiebreak
+    let mut queue: Vec<usize> = (0..requests.len()).collect();
+    queue.sort_by_key(|&i| (requests[i].arrival_step, requests[i].id));
+    let mut next_admit = 0usize;
+    let mut live: Vec<Live> = Vec::new();
+    let mut completions: Vec<Completion> = Vec::new();
+    let (mut prefill_tokens, mut decode_tokens) = (0u64, 0u64);
+    let mut occupancy_sum = 0u64;
+    let mut decode_steps = 0usize;
+    // per-phase time baselines (the session may have served before)
+    let stats0 = infer.stats().clone();
+    let t0 = Instant::now();
+    let mut step = 0usize;
+
+    while completions.len() < requests.len() {
+        if step >= sc.max_steps {
+            bail!(
+                "serve: {} of {} requests unfinished after max_steps {}",
+                requests.len() - completions.len(),
+                requests.len(),
+                sc.max_steps
+            );
+        }
+        // ---- evict sequences that finished last step, freeing slots ----
+        evict_finished(infer, requests, &mut live, &mut completions, step)?;
+
+        // ---- admit: fill free batch slots with arrived requests --------
+        while next_admit < queue.len()
+            && live.len() < sc.max_batch
+            && requests[queue[next_admit]].arrival_step <= step
+        {
+            let ri = queue[next_admit];
+            next_admit += 1;
+            let req = &requests[ri];
+            let admitted_at = Instant::now();
+            let seq = infer.add_sequence();
+            let logits = infer.prefill(seq, &req.prompt)?;
+            prefill_tokens += req.prompt.len() as u64;
+            let last = &logits[(req.prompt.len() - 1) * infer.config().vocab..];
+            let mut l = Live {
+                req: ri,
+                seq,
+                rng: match req.sampling {
+                    // the request's own seed, untouched by batch state —
+                    // identical draws whether served batched or alone
+                    Sampling::TopK { seed, .. } => Rng::new(seed),
+                    Sampling::Greedy => Rng::new(req.id),
+                },
+                admitted_step: step,
+                admitted_at,
+                first_token_at: admitted_at,
+                tokens: Vec::with_capacity(req.max_new_tokens),
+                stopped_early: false,
+            };
+            let tok = sample(req, &mut l, last);
+            l.first_token_at = Instant::now();
+            l.tokens.push(tok);
+            if req.stop_token == Some(tok) {
+                l.stopped_early = true;
+            }
+            live.push(l);
+        }
+
+        // ---- evict requests whose first sampled token already finished
+        // them (instant stop / max_new == 1), before any decode ---------
+        evict_finished(infer, requests, &mut live, &mut completions, step)?;
+
+        // ---- one batched decode over every live sequence ---------------
+        if !live.is_empty() {
+            let items: Vec<(SeqId, i32)> =
+                live.iter().map(|l| (l.seq, *l.tokens.last().expect("seeded"))).collect();
+            let outs = infer.decode_batch(&items)?;
+            decode_tokens += outs.len() as u64;
+            occupancy_sum += live.len() as u64;
+            decode_steps += 1;
+            for (l, logits) in live.iter_mut().zip(&outs) {
+                let req = &requests[l.req];
+                let tok = sample(req, l, logits);
+                l.tokens.push(tok);
+                if req.stop_token == Some(tok) {
+                    l.stopped_early = true;
+                }
+            }
+        } else if next_admit >= queue.len() {
+            // nothing live and nothing left to admit: the eviction pass
+            // above has drained everything
+            debug_assert_eq!(completions.len(), requests.len());
+        }
+        step += 1;
+    }
+
+    let wall = t0.elapsed();
+    completions.sort_by_key(|c| c.id);
+    let stats1 = infer.stats();
+    let prefill_secs = (stats1.prefill_time - stats0.prefill_time).as_secs_f64().max(1e-9);
+    let decode_secs = (stats1.decode_time - stats0.decode_time).as_secs_f64().max(1e-9);
+    Ok(ServeReport {
+        steps: step,
+        prefill_tokens,
+        decode_tokens,
+        wall,
+        decode_tokens_per_sec: decode_tokens as f64 / decode_secs,
+        prefill_tokens_per_sec: prefill_tokens as f64 / prefill_secs,
+        mean_batch_occupancy: occupancy_sum as f64 / decode_steps.max(1) as f64,
+        completions,
+    })
+}
+
+/// Generate one sequence in isolation (no batching): prefill the prompt,
+/// then feed sampled tokens until `max_new_tokens` or the stop token.
+/// The per-sequence oracle the continuous-batching test compares against,
+/// and the engine behind the CLI `generate` subcommand.
+pub fn generate_one(
+    infer: &mut InferSession,
+    prompt: &[i32],
+    max_new_tokens: usize,
+    stop_token: Option<i32>,
+    sampling: Sampling,
+) -> Result<Vec<i32>> {
+    if prompt.is_empty() || max_new_tokens == 0 {
+        bail!("generate: prompt and max_new_tokens must be non-empty");
+    }
+    let vocab = infer.config().vocab;
+    let seq = infer.add_sequence();
+    let logits = infer.prefill(seq, prompt)?;
+    let mut rng = match sampling {
+        Sampling::TopK { seed, .. } => Rng::new(seed),
+        Sampling::Greedy => Rng::new(0),
+    };
+    let mut tok = draw(sampling, &logits[(prompt.len() - 1) * vocab..], &mut rng);
+    let mut out = vec![tok];
+    while out.len() < max_new_tokens && stop_token != Some(tok) {
+        let l = infer.decode_step(seq, tok)?;
+        tok = draw(sampling, &l, &mut rng);
+        out.push(tok);
+    }
+    infer.free_sequence(seq)?;
+    Ok(out)
+}
+
+/// Synthetic mixed-length request set for benches, the CLI, and tests:
+/// staggered arrivals, varied prompt/generation lengths, an early-stop
+/// token on every third request.
+pub fn synthetic_requests(cfg: &ModelConfig, n: usize, seed: u64) -> Vec<Request> {
+    let cap = cfg.seq_len;
+    let mut rng = Rng::new(seed ^ 0x5E4E);
+    (0..n as u64)
+        .map(|id| {
+            let prompt_len = 2 + rng.below((cap / 4).max(2) - 1);
+            let max_new = 1 + rng.below((cap - prompt_len).min(cap / 3).max(1));
+            Request {
+                id,
+                prompt: (0..prompt_len).map(|_| rng.below(cfg.vocab) as i32).collect(),
+                max_new_tokens: max_new,
+                arrival_step: rng.below(6),
+                stop_token: if id % 3 == 2 { Some(rng.below(cfg.vocab) as i32) } else { None },
+                sampling: if id % 2 == 0 {
+                    Sampling::Greedy
+                } else {
+                    Sampling::TopK { k: 4, temperature: 1.0, seed: 0xC0DE ^ id }
+                },
+            }
+        })
+        .collect()
+}
+
+/// Format a per-request latency table (CLI / e2e reporting).
+pub fn latency_table(report: &ServeReport) -> String {
+    let mut out = String::from(
+        "  req  prompt  new  arrive  admit  finish  first-tok   total\n",
+    );
+    for c in &report.completions {
+        out.push_str(&format!(
+            "  {:>3}  {:>6}  {:>3}  {:>6}  {:>5}  {:>6}  {:>8.2?}  {:>6.2?}{}\n",
+            c.id,
+            c.prompt_len,
+            c.tokens.len(),
+            c.arrival_step,
+            c.admitted_step,
+            c.finished_step,
+            c.first_token_latency,
+            c.total_latency,
+            if c.stopped_early { "  [stop]" } else { "" },
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::InferSession;
+
+    fn lane_cfg() -> ModelConfig {
+        ModelConfig {
+            width: 16,
+            depth: 2,
+            head_dim: 8,
+            vocab: 64,
+            seq_len: 24,
+            batch: 2,
+            ..ModelConfig::default()
+        }
+    }
+
+    fn session(cfg: &ModelConfig, seed: i32) -> InferSession {
+        let params = crate::runtime::block::init_params(cfg, seed);
+        InferSession::from_params(cfg, params, 0.4).unwrap()
+    }
+
+    /// Acceptance: a mixed-length request set with staggered admissions
+    /// and early evictions drains to the SAME per-sequence tokens as
+    /// running each request alone (µS static FP8 — row-local decode).
+    /// The set is handcrafted so the scheduler properties hold by
+    /// construction: five prompt lengths, three arrival steps, uneven
+    /// generation lengths (so sequences leave the batch while others are
+    /// mid-flight), stop tokens, and both sampling modes.
+    #[test]
+    fn continuous_batching_matches_isolated_generation() {
+        let cfg = lane_cfg();
+        let topk = |seed: u64| Sampling::TopK { k: 4, temperature: 1.0, seed };
+        let mk = |id, prompt: &[i32], max_new, arrival, stop| Request {
+            id,
+            prompt: prompt.to_vec(),
+            max_new_tokens: max_new,
+            arrival_step: arrival,
+            stop_token: stop,
+            sampling: if id % 2 == 0 { Sampling::Greedy } else { topk(100 + id) },
+        };
+        let requests = vec![
+            mk(0, &[1, 2], 6, 0, None),
+            mk(1, &[3, 4, 5], 5, 0, None),
+            mk(2, &[6, 7, 8, 9], 8, 2, Some(11)),
+            mk(3, &[2, 3], 3, 3, None),
+            mk(4, &[1, 2, 3, 4, 5, 6], 7, 5, Some(0)),
+        ];
+
+        let mut batched = session(&cfg, 5);
+        let sc = ServeConfig { max_batch: 3, max_steps: 5_000 };
+        let report = serve(&mut batched, &requests, &sc).unwrap();
+        assert_eq!(report.completions.len(), requests.len());
+        assert!(batched.live_sequences() == 0, "serve must drain every sequence");
+        assert_eq!(batched.kv_slabs_in_use(), 0, "all KV pages recycled");
+        assert!(report.decode_tokens_per_sec > 0.0);
+        assert!(report.mean_batch_occupancy >= 1.0);
+
+        for c in &report.completions {
+            let req = requests.iter().find(|r| r.id == c.id).unwrap();
+            let mut solo = session(&cfg, 5);
+            let alone = generate_one(
+                &mut solo,
+                &req.prompt,
+                req.max_new_tokens,
+                req.stop_token,
+                req.sampling,
+            )
+            .unwrap();
+            assert_eq!(
+                c.tokens, alone,
+                "request {} diverged under batching (batched {:?} vs alone {:?})",
+                c.id, c.tokens, alone
+            );
+        }
+    }
+
+    /// Simultaneous arrivals genuinely share decode steps: three equal
+    /// requests admitted at step 0 ride every decode execute together.
+    #[test]
+    fn simultaneous_requests_share_decode_steps() {
+        let cfg = lane_cfg();
+        let mut sess = session(&cfg, 4);
+        let requests: Vec<Request> = (0..3u64)
+            .map(|id| Request {
+                id,
+                prompt: (0..2 + id as usize).map(|t| (t as i32 + 1) % cfg.vocab as i32).collect(),
+                max_new_tokens: 6,
+                arrival_step: 0,
+                stop_token: None,
+                sampling: Sampling::Greedy,
+            })
+            .collect();
+        let sc = ServeConfig { max_batch: 3, max_steps: 100 };
+        let report = serve(&mut sess, &requests, &sc).unwrap();
+        // each request samples once at admission + 5 decode steps; all
+        // three stay live for every decode step → occupancy is exactly 3
+        assert!(
+            report.mean_batch_occupancy > 2.9,
+            "expected full batches, got occupancy {}",
+            report.mean_batch_occupancy
+        );
+        assert!(report.completions.iter().all(|c| c.tokens.len() == 6));
+    }
+
+    #[test]
+    fn early_stop_evicts_and_frees_pages() {
+        let cfg = lane_cfg();
+        let mut sess = session(&cfg, 9);
+        // force the stop token to be whatever greedy produces first:
+        // run once to discover it, then serve with it as the stop token
+        let probe = generate_one(&mut sess, &[1, 2, 3], 4, None, Sampling::Greedy).unwrap();
+        let req = Request {
+            id: 0,
+            prompt: vec![1, 2, 3],
+            max_new_tokens: 10,
+            arrival_step: 0,
+            stop_token: Some(probe[0]),
+            sampling: Sampling::Greedy,
+        };
+        let report = serve(&mut sess, &[req], &ServeConfig::default()).unwrap();
+        let c = &report.completions[0];
+        assert!(c.stopped_early);
+        assert_eq!(c.tokens.len(), 1, "stop token generated at the first sample");
+        assert_eq!(sess.kv_slabs_in_use(), 0);
+    }
+
+    #[test]
+    fn serve_rejects_oversized_and_degenerate_requests() {
+        let cfg = lane_cfg();
+        let mut sess = session(&cfg, 1);
+        let mut r = synthetic_requests(&cfg, 1, 0);
+        r[0].prompt = vec![0; cfg.seq_len];
+        r[0].max_new_tokens = 1;
+        assert!(serve(&mut sess, &r, &ServeConfig::default()).is_err(), "over capacity");
+        let mut r = synthetic_requests(&cfg, 1, 0);
+        r[0].prompt.clear();
+        assert!(serve(&mut sess, &r, &ServeConfig::default()).is_err(), "empty prompt");
+        let r = synthetic_requests(&cfg, 2, 0);
+        let sc = ServeConfig { max_batch: 1, max_steps: 1 };
+        assert!(serve(&mut sess, &r, &sc).is_err(), "max_steps guard");
+    }
+
+    #[test]
+    fn latency_accounting_is_ordered() {
+        let cfg = lane_cfg();
+        let mut sess = session(&cfg, 2);
+        let requests = synthetic_requests(&cfg, 4, 77);
+        let report = serve(&mut sess, &requests, &ServeConfig::default()).unwrap();
+        for c in &report.completions {
+            assert!(c.admitted_step >= c.arrival_step);
+            assert!(c.finished_step >= c.admitted_step);
+            assert!(c.total_latency >= c.first_token_latency);
+            assert!(!c.tokens.is_empty());
+        }
+        // ids sorted, one completion per request
+        let ids: Vec<u64> = report.completions.iter().map(|c| c.id).collect();
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        assert_eq!(ids, sorted);
+        assert!(report.steps > 0);
+        assert_eq!(
+            report.prefill_tokens,
+            requests.iter().map(|r| r.prompt.len() as u64).sum::<u64>()
+        );
+    }
+}

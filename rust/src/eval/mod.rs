@@ -19,7 +19,7 @@
 use crate::bail;
 use crate::config::ModelConfig;
 use crate::data::{Batcher, CorpusSpec};
-use crate::runtime::{scalar_f32, tensor_i32, Backend, Tensor, TensorHandle};
+use crate::runtime::{scalar_f32, tensor_i32, Backend, InferSession, Tensor, TensorHandle};
 use crate::util::error::{Context, Result};
 use crate::util::rng::Rng;
 
@@ -232,6 +232,67 @@ fn score_lm(
     }
 }
 
+/// Mean next-token NLL of one token sequence through the **incremental
+/// decode path**: the sequence is fed one token per step through the KV
+/// cache and each step's logits score the next token. The
+/// training-inference numerics-match check: under the static-FP8 and
+/// BF16 plans every decode step's logits are bit-identical to the
+/// corresponding `fwd` row, so this equals [`fwd_nll`] *exactly* (tested
+/// — not within a tolerance).
+pub fn decode_nll(infer: &mut InferSession, tokens: &[i32]) -> Result<f64> {
+    if tokens.len() < 2 {
+        bail!("decode_nll needs at least 2 tokens, got {}", tokens.len());
+    }
+    // the final token is only scored, never fed — decode_step's own
+    // validation would miss it, and nll_of would index out of bounds
+    check_vocab(tokens, infer.config().vocab)?;
+    if tokens.len() - 1 > infer.context_capacity() {
+        bail!(
+            "decode_nll: {} tokens need {} decode steps, beyond context capacity {}",
+            tokens.len(),
+            tokens.len() - 1,
+            infer.context_capacity()
+        );
+    }
+    let id = infer.add_sequence();
+    // free the sequence on every path — a mid-loop decode error must not
+    // leave it holding KV pages in a long-lived session
+    let scored = (|| -> Result<f64> {
+        let mut nll = 0f64;
+        let mut logits = infer.decode_step(id, tokens[0])?;
+        for t in 1..tokens.len() {
+            nll += nll_of(&logits, tokens[t] as usize);
+            if t + 1 < tokens.len() {
+                logits = infer.decode_step(id, tokens[t])?;
+            }
+        }
+        Ok(nll / (tokens.len() - 1) as f64)
+    })();
+    let freed = infer.free_sequence(id);
+    let nll = scored?;
+    freed?;
+    Ok(nll)
+}
+
+/// Mean next-token NLL of one sequence from full-sequence logits
+/// (`[seq_len, vocab]`, a `fwd` artifact row block) — the same scoring
+/// [`decode_nll`] applies step by step.
+pub fn fwd_nll(cfg: &ModelConfig, logits: &[f32], tokens: &[i32]) -> Result<f64> {
+    let (s, v) = (tokens.len(), cfg.vocab);
+    if s < 2 || logits.len() != s * v {
+        bail!("fwd_nll: {} logits for {} tokens of vocab {}", logits.len(), s, v);
+    }
+    check_vocab(tokens, v)?;
+    let mut nll = 0f64;
+    for t in 0..s - 1 {
+        nll += nll_of(&logits[t * v..(t + 1) * v], tokens[t + 1] as usize);
+    }
+    Ok(nll / (s - 1) as f64)
+}
+
+// one shared token-range check across train/infer/eval entry points
+use crate::runtime::block::check_tokens as check_vocab;
+
 fn argmax(row: &[f32]) -> usize {
     let mut best = 0;
     for (i, &x) in row.iter().enumerate() {
@@ -251,6 +312,47 @@ fn nll_of(row: &[f32], target: usize) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::block;
+
+    /// The numerics-match claim at the eval layer: NLL computed token by
+    /// token through the KV-cache decode path equals NLL from the
+    /// full-sequence forward EXACTLY (f64 bit equality — both score
+    /// bit-identical logits with the same `nll_of`), for the µS
+    /// static-FP8 and BF16 plans.
+    #[test]
+    fn nll_via_decode_matches_nll_via_fwd_exactly() {
+        for precision in ["fp8", "bf16"] {
+            let cfg = ModelConfig {
+                width: 16,
+                depth: 2,
+                head_dim: 8,
+                vocab: 64,
+                seq_len: 12,
+                batch: 2,
+                precision: precision.into(),
+                ..ModelConfig::default()
+            };
+            let params = block::init_params(&cfg, 13);
+            let prep = crate::runtime::block::Prepared::new(&cfg, 0.4).unwrap();
+            let tokens: Vec<i32> = (0..cfg.batch * cfg.seq_len)
+                .map(|i| ((i * 7 + 2) % cfg.vocab) as i32)
+                .collect();
+            let full = block::forward_logits(&cfg, &prep, &params, &tokens).unwrap();
+            let (s, v) = (cfg.seq_len, cfg.vocab);
+            let mut infer = InferSession::from_params(&cfg, params, 0.4).unwrap();
+            for b in 0..cfg.batch {
+                let seq_toks = &tokens[b * s..(b + 1) * s];
+                let via_fwd =
+                    fwd_nll(&cfg, &full[b * s * v..(b + 1) * s * v], seq_toks).unwrap();
+                let via_decode = decode_nll(&mut infer, seq_toks).unwrap();
+                assert_eq!(
+                    via_decode.to_bits(),
+                    via_fwd.to_bits(),
+                    "mus+{precision} seq {b}: decode NLL {via_decode} vs fwd NLL {via_fwd}"
+                );
+            }
+        }
+    }
 
     #[test]
     fn argmax_and_nll() {

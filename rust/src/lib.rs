@@ -24,9 +24,19 @@
 //!     state between steps: per-step host traffic is tokens in, loss/gnorm
 //!     out (constant lr/wd/tau handles are cached on-device); full-state
 //!     transfers happen only at checkpoint/probe boundaries (`read_back`).
+//!     The **inference layer** rides the same op pipeline:
+//!     [`runtime::InferSession`] quantizes params once (the training
+//!     casts), prefills through the training forward (bit-identical
+//!     logits), and decodes incrementally over a paged BF16 KV cache
+//!     (`runtime::kvcache` — fixed-size slabs, free-list recycling, memory
+//!     ∝ live tokens) via the shared single-query attention kernel;
+//!     greedy + seeded top-k sampling.
 //!   - [`coordinator`]: trainer (schedules, divergence guard, probes),
 //!     thread-parallel sweep engine (workers share one `Send + Sync`
-//!     backend), simulated DDP, checkpoints, metrics, data pipeline.
+//!     backend), simulated DDP, checkpoints, continuous-batching serve
+//!     loop (`coordinator::serve`: staggered admissions, between-step
+//!     evictions, one batched decode execute per step, per-request
+//!     latency + tokens/sec accounting), metrics, data pipeline.
 //!   - [`config`], [`data`], [`scaling`], [`analysis`], [`perfmodel`],
 //!     [`eval`], [`repro`], [`util`]: configs/presets, synthetic corpus,
 //!     parametrization rules, numerics analyses, throughput model, eval

@@ -9,6 +9,11 @@
 //!   figure     fig2..fig12     reproduce a paper figure (see DESIGN.md §4)
 //!   table      table2..table5  reproduce a paper table
 //!   e2e                        headline end-to-end driver (≈12M-param µS FP8)
+//!   generate   --config NAME   train briefly, then autoregressive decode
+//!                              (--prompt-len N --new M --topk K --steps S)
+//!   serve      --config NAME   continuous-batching serve loop over a
+//!                              synthetic request set (--requests N
+//!                              --max-batch B --steps S), latency report
 //!   bench-step --config NAME   per-step latency + host-transfer breakdown
 //!
 //! Flags: --artifacts DIR (default ./artifacts), --results DIR (default
@@ -260,6 +265,18 @@ fn run() -> Result<()> {
             std::fs::write(results.join("reports").join("e2e.txt"), &report)?;
             Ok(())
         }
+        "generate" => {
+            let backend = backend_for(&args, &artifacts)?;
+            let name = args.get("config").context("--config required")?;
+            let cfg = config_by_name(backend.as_ref(), name)?;
+            generate_cmd(backend.as_ref(), &cfg, &args)
+        }
+        "serve" => {
+            let backend = backend_for(&args, &artifacts)?;
+            let name = args.get("config").context("--config required")?;
+            let cfg = config_by_name(backend.as_ref(), name)?;
+            serve_cmd(backend.as_ref(), &cfg, &args)
+        }
         "bench-step" => {
             let backend = backend_for(&args, &artifacts)?;
             let name = args.get("config").context("--config required")?;
@@ -267,9 +284,98 @@ fn run() -> Result<()> {
             bench_step(backend.as_ref(), &cfg, args.usize_or("steps", 20))
         }
         other => Err(munit::err!(
-            "unknown command '{other}' (try: info train sweep ddp figure table e2e bench-step)"
+            "unknown command '{other}' (try: info train sweep ddp figure table e2e \
+             generate serve bench-step)"
         )),
     }
+}
+
+/// Train `--steps` quick steps so generation isn't pure noise, then hand
+/// the parameters to an `InferSession`.
+fn infer_session_for(
+    backend: &dyn Backend,
+    cfg: &ModelConfig,
+    args: &Args,
+) -> Result<munit::runtime::InferSession> {
+    let steps = args.usize_or("steps", 30);
+    let tc = tc_from_args(args, cfg);
+    let trainer = Trainer::new(backend, cfg)?;
+    let mut session = trainer.init(tc.init_seed)?;
+    let mut batcher = Batcher::new(corpus_for(cfg), tc.seed, 0, 1, cfg.batch, cfg.seq_len);
+    eprintln!("pre-training {steps} steps on {}…", cfg.name());
+    for step in 0..steps {
+        let lr = tc.schedule.lr_at(tc.lr, step, steps);
+        session.step(&batcher.next_batch(), lr, tc.wd, tc.tau)?;
+    }
+    let params = session.params_host()?;
+    munit::runtime::InferSession::new(cfg, &params, tc.tau as f32)
+}
+
+/// `munit generate`: prefill a corpus prompt, decode autoregressively.
+fn generate_cmd(backend: &dyn Backend, cfg: &ModelConfig, args: &Args) -> Result<()> {
+    use munit::coordinator::serve::{generate_one, Sampling};
+    let mut infer = infer_session_for(backend, cfg, args)?;
+    let prompt_len =
+        args.usize_or("prompt-len", (cfg.seq_len / 4).max(2)).clamp(1, cfg.seq_len - 1);
+    let max_new =
+        args.usize_or("new", cfg.seq_len / 2).clamp(1, cfg.seq_len - prompt_len);
+    let topk = args.usize_or("topk", 0);
+    let sampling = if topk > 1 {
+        Sampling::TopK {
+            k: topk,
+            temperature: args.f64_or("temperature", 1.0) as f32,
+            seed: args.usize_or("seed", 0) as u64,
+        }
+    } else {
+        Sampling::Greedy
+    };
+    let mut batcher = Batcher::new(corpus_for(cfg), 1234, 7, 8, 1, prompt_len);
+    let prompt = batcher.next_batch();
+    let t0 = std::time::Instant::now();
+    let out = generate_one(&mut infer, &prompt, max_new, None, sampling)?;
+    let dt = t0.elapsed();
+    println!("prompt ({} tokens):    {:?}", prompt.len(), prompt);
+    println!("generated ({} tokens): {:?}", out.len(), out);
+    let s = infer.stats();
+    println!(
+        "prefill: {} tokens in {:?} | decode: {} tokens in {:?} ({:.0} tok/s end-to-end)",
+        s.prefill_tokens,
+        s.prefill_time,
+        s.decode_tokens,
+        s.decode_time,
+        out.len() as f64 / dt.as_secs_f64().max(1e-9),
+    );
+    Ok(())
+}
+
+/// `munit serve`: drain a synthetic request set through the
+/// continuous-batching scheduler and print the latency table.
+fn serve_cmd(backend: &dyn Backend, cfg: &ModelConfig, args: &Args) -> Result<()> {
+    use munit::coordinator::serve;
+    let mut infer = infer_session_for(backend, cfg, args)?;
+    let n_requests = args.usize_or("requests", 8);
+    let sc = serve::ServeConfig {
+        max_batch: args.usize_or("max-batch", 4),
+        ..Default::default()
+    };
+    let requests = serve::synthetic_requests(cfg, n_requests, args.usize_or("seed", 0) as u64);
+    let report = serve::serve(&mut infer, &requests, &sc)?;
+    println!(
+        "served {} requests in {} steps ({:?} wall, mean batch occupancy {:.2})",
+        report.completions.len(),
+        report.steps,
+        report.wall,
+        report.mean_batch_occupancy
+    );
+    println!(
+        "prefill {:.0} tok/s ({} tokens) | decode {:.0} tok/s ({} tokens)",
+        report.prefill_tokens_per_sec,
+        report.prefill_tokens,
+        report.decode_tokens_per_sec,
+        report.decode_tokens
+    );
+    print!("{}", serve::latency_table(&report));
+    Ok(())
 }
 
 fn parse_range(s: &str) -> Result<(i32, i32)> {
@@ -346,6 +452,20 @@ fn e2e(ctx: &Ctx, steps: usize) -> Result<String> {
     let r16 = repro::train_cached(ctx, &cfg16, &tc)?;
     let corpus = corpus_for(&cfg8);
     let ev = munit::eval::evaluate(ctx.backend(), &cfg8, state8.params(), tau, &corpus, 3, 7)?;
+    // training-inference numerics match: NLL scored through the KV-cache
+    // decode path must equal NLL from the full forward (bit-exact under
+    // the µS static-FP8 plan)
+    let mut infer = munit::runtime::InferSession::new(&cfg8, state8.params(), tau as f32)?;
+    let mut held_out = Batcher::new(corpus.clone(), 99, 7, 8, 1, cfg8.seq_len);
+    let seq_toks = held_out.next_batch();
+    let via_fwd = {
+        let id = infer.add_sequence();
+        let logits = infer.prefill(id, &seq_toks)?;
+        let r = munit::eval::fwd_nll(&cfg8, &logits, &seq_toks)?;
+        infer.free_sequence(id)?;
+        r
+    };
+    let via_decode = munit::eval::decode_nll(&mut infer, &seq_toks)?;
     let bucket = (steps / 12).max(1);
     let mut curve = String::new();
     for (i, chunk) in r8.losses.chunks(bucket).enumerate() {
@@ -359,7 +479,8 @@ fn e2e(ctx: &Ctx, steps: usize) -> Result<String> {
          spikes: fp8 {}, bf16 {} | diverged: {} / {}\n\
          throughput (this CPU): {:.0} tok/s\n\
          eval (FP8 weights+activations, W8A8-analog inference):\n\
-         \u{20}\u{20}next-token acc {:.1}% | NLL {:.3} | cloze {:.1}% | repeat {:.1}% | induction {:.1}%\n",
+         \u{20}\u{20}next-token acc {:.1}% | NLL {:.3} | cloze {:.1}% | repeat {:.1}% | induction {:.1}%\n\
+         training-inference match: NLL via fwd {:.6} vs via KV-cache decode {:.6} (bit-equal: {})\n",
         cfg8.n_params(),
         steps * cfg8.batch * cfg8.seq_len,
         r8.final_loss,
@@ -375,6 +496,9 @@ fn e2e(ctx: &Ctx, steps: usize) -> Result<String> {
         ev.bigram_cloze_acc * 100.0,
         ev.repeat_acc * 100.0,
         ev.induction_acc * 100.0,
+        via_fwd,
+        via_decode,
+        via_fwd.to_bits() == via_decode.to_bits(),
     ))
 }
 

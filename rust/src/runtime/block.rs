@@ -18,10 +18,26 @@
 //! (static E4M3/E5M2 for µS+FP8, TE-style dynamic scaling for SP+FP8,
 //! BF16 otherwise) — per-op so that recipes which differ per matmul
 //! (u-µP keeps attn-out/ffn-down in BF16; FP8-LM is per-tensor dynamic)
-//! are expressible. Attention is never FP8: its operands (the qkv
+//! are expressible. Attention is never FP8: its operands (the RoPE'd qkv
 //! projections) are BF16-rounded and the score/softmax/value arithmetic
 //! runs in f32, like the embedding, norms, and LM head (paper Table 1
 //! keeps everything but the hidden linears in high precision).
+//!
+//! **Shared per-op pipeline.** The forward is expressed as reusable
+//! per-op functions — [`op_embed`], [`op_rmsnorm`], [`op_linear`],
+//! [`rope_rotate`] (via the head marshallers), [`apply_act`],
+//! [`residual_combine`], plus the shared single-query attention kernel
+//! `gemm::attn_one_query` — consumed by BOTH the full-sequence
+//! train/eval forward ([`forward_tower`], geometry-generic over
+//! `batch × s`) and the incremental KV-cache decode path
+//! (`runtime::infer`). Prefill *is* the training forward called through
+//! [`logits_rows`] with an optional per-layer KV sink, so training and
+//! inference numerics match by construction: a decode step over the
+//! BF16 KV cache reproduces the matching training-forward logits row
+//! bit for bit under the static-FP8 and BF16 plans (dynamic SP+FP8
+//! scaling computes its amax over whatever tensor it sees, so its decode
+//! numerics depend on batch composition — exactly the serving-side
+//! overhead the paper's static scaling deletes).
 //!
 //! Every scaling rule — init std, output multipliers, LR/wd transfer —
 //! is consumed from [`crate::scaling::Scheme`]; nothing is re-derived
@@ -223,6 +239,17 @@ pub(crate) fn hidden_gemm_flops_per_token_fwd(cfg: &ModelConfig) -> u64 {
 pub(crate) fn attn_gemm_flops_per_seq_fwd(cfg: &ModelConfig) -> u64 {
     let (s, dh, h) = (cfg.seq_len as u64, cfg.head_dim as u64, cfg.n_heads() as u64);
     h * 2 * dh * s * (s + 1)
+}
+
+/// Single-query cached-attention FLOPs for ONE decode token at context
+/// length `ctx` (the token attends to `ctx` cached positions including
+/// itself), per block: the query scores `ctx` keys and mixes `ctx`
+/// values, 2·dh FLOPs each, over h heads → `h · 4·dh·ctx` = `4·d·ctx`.
+/// Enumerated from the same per-head kernel shape the decode path
+/// executes (`gemm::attn_one_query` over the gathered cache).
+pub(crate) fn attn_decode_flops_per_token(cfg: &ModelConfig, ctx: usize) -> u64 {
+    let (dh, h) = (cfg.head_dim as u64, cfg.n_heads() as u64);
+    h * 4 * dh * ctx as u64
 }
 
 // ---------------------------------------------------------------------------
@@ -565,12 +592,17 @@ pub(crate) fn quantize_params(
 // Workspace
 
 /// Batched activations for one interpreter call. Row `r` of each
-/// `[rows, d]` buffer is the residual-stream state of (batch b = r/s,
-/// position t = r%s); `rows` is always `batch · seq_len` (attention
-/// couples positions within a sequence, so full sequences flow through).
-/// Everything the backward pass replays is saved here; scratch buffers
-/// are allocated once per call and reused across the layer loop.
+/// `[rows, d]` buffer is the residual-stream state of (sequence b = r/s,
+/// position t = r%s); `rows` is always `batch · s` (attention couples
+/// positions within a sequence, so full sequences flow through). The
+/// geometry is explicit — training uses the config's `batch × seq_len`,
+/// prefill runs one sequence of prompt length `s ≤ seq_len` through the
+/// *same* tower. Everything the backward pass replays is saved here;
+/// scratch buffers are allocated once per call and reused across the
+/// layer loop.
 pub(crate) struct Workspace {
+    pub batch: usize,
+    pub s: usize,
     pub rows: usize,
     /// Per-layer save indexing stride: 1 for training (block l's saves
     /// live at index l for the backward pass), 0 for forward-only calls
@@ -615,23 +647,25 @@ pub(crate) struct Workspace {
 
 impl Workspace {
     /// Training workspace: per-layer saves retained for the backward pass.
-    pub(crate) fn new(cfg: &ModelConfig, rows: usize) -> Workspace {
-        Workspace::with_saves(cfg, rows, true)
+    pub(crate) fn new(cfg: &ModelConfig, batch: usize, s: usize) -> Workspace {
+        Workspace::with_saves(cfg, batch, s, true)
     }
 
-    /// Forward-only workspace (the `fwd` artifact / eval path): one shared
-    /// save slot reused by every block.
-    pub(crate) fn new_forward_only(cfg: &ModelConfig, rows: usize) -> Workspace {
-        Workspace::with_saves(cfg, rows, false)
+    /// Forward-only workspace (the `fwd` artifact / eval / prefill path):
+    /// one shared save slot reused by every block.
+    pub(crate) fn new_forward_only(cfg: &ModelConfig, batch: usize, s: usize) -> Workspace {
+        Workspace::with_saves(cfg, batch, s, false)
     }
 
-    fn with_saves(cfg: &ModelConfig, rows: usize, keep: bool) -> Workspace {
-        debug_assert_eq!(rows, cfg.batch * cfg.seq_len);
-        let (d, f, s) = (cfg.width, cfg.ffn_width(), cfg.seq_len);
-        let heads_total = cfg.batch * cfg.n_heads();
+    fn with_saves(cfg: &ModelConfig, batch: usize, s: usize, keep: bool) -> Workspace {
+        let rows = batch * s;
+        let (d, f) = (cfg.width, cfg.ffn_width());
+        let heads_total = batch * cfg.n_heads();
         let n_save = if keep { cfg.depth } else { 1 };
         let vd = |len: usize| (0..n_save).map(|_| vec![0f32; len]).collect::<Vec<_>>();
         Workspace {
+            batch,
+            s,
             rows,
             stride: if keep { 1 } else { 0 },
             x: (0..=if keep { cfg.depth } else { 0 }).map(|_| vec![0f32; rows * d]).collect(),
@@ -655,6 +689,88 @@ impl Workspace {
             t_d0: vec![0f32; rows * d],
             t_d1: vec![0f32; rows * d],
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared per-op functions
+//
+// Each op below is THE implementation of its pipeline stage: the
+// full-sequence train/eval forward (`forward_tower`), prefill
+// (`logits_rows`), and the incremental decode path (`runtime::infer`)
+// all call these same functions — there is no parallel decode copy of
+// the norm / linear / activation / residual math to keep in sync.
+
+/// The one token-range check every entry point shares (train unpack,
+/// prefill, decode, eval scoring): ids must lie in `0..vocab`.
+pub(crate) fn check_tokens(tokens: &[i32], vocab: usize) -> Result<()> {
+    for &t in tokens {
+        if t < 0 || t as usize >= vocab {
+            bail!("token id {t} out of vocab range 0..{vocab}");
+        }
+    }
+    Ok(())
+}
+
+/// Token-embedding gather into `[rows, d]`, BF16-rounded (the embedding
+/// is BF16 with output multiplier 1 in every variant — paper Table 2).
+pub(crate) fn op_embed(embed: &[f32], toks: &[i32], d: usize, out: &mut [f32]) {
+    let threads = parallel::threads_for(out.len() as u64 * 8);
+    parallel::par_chunks_mut(out, ROW_CHUNK * d, threads, |ci, c| {
+        let r0 = ci * ROW_CHUNK;
+        for (i, row) in c.chunks_mut(d).enumerate() {
+            let tok = toks[r0 + i] as usize;
+            row.copy_from_slice(&embed[tok * d..(tok + 1) * d]);
+        }
+    });
+    quantize_slice(out, QuantMode::Bf16);
+}
+
+/// Gained RMS-norm over rows: `out[r] = (x[r] / rms(x[r])) ⊙ g`. Saves
+/// the normalized rows (`n`) and per-row divisors (`r`) for the backward
+/// pass (forward-only callers pass scratch).
+pub(crate) fn op_rmsnorm(
+    x: &[f32],
+    g: &[f32],
+    d: usize,
+    n: &mut [f32],
+    r: &mut [f32],
+    out: &mut [f32],
+) {
+    rms_rows(x, d, r);
+    normalize_rows(x, r, d, n);
+    scale_by_gain(n, g, d, out);
+}
+
+/// Quantized linear: quantize the input activations in place per the
+/// op's [`QuantMode`], then `out = alpha · xq @ Wᵀ` (`w_t` is the
+/// pre-transposed `[dout, din]` quantized weight).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn op_linear(
+    xq: &mut [f32],
+    mode: QuantMode,
+    w_t: &[f32],
+    out: &mut [f32],
+    rows: usize,
+    dout: usize,
+    din: usize,
+    alpha: f32,
+) {
+    quantize_slice(xq, mode);
+    matmul_bt(xq, w_t, out, rows, dout, din, alpha);
+}
+
+/// RoPE rotation of one head vector's rotary pairs at one table row:
+/// `dst[j] = src[j]·cos[j] − src[half+j]·sin[j]`,
+/// `dst[half+j] = src[j]·sin[j] + src[half+j]·cos[j]`.
+/// The single rotation implementation behind both head marshallers
+/// (training/prefill `split_heads_rope`, decode `split_heads_rope_rows`).
+#[inline]
+pub(crate) fn rope_rotate(src: &[f32], cos: &[f32], sin: &[f32], half: usize, dst: &mut [f32]) {
+    for j in 0..half {
+        let (cj, sj) = (cos[j], sin[j]);
+        dst[j] = src[j] * cj - src[half + j] * sj;
+        dst[half + j] = src[j] * sj + src[half + j] * cj;
     }
 }
 
@@ -704,8 +820,9 @@ fn scale_by_gain(n: &[f32], g: &[f32], d: usize, out: &mut [f32]) {
     });
 }
 
-/// `out = a*x + b*br` elementwise.
-fn residual_combine(x: &[f32], br: &[f32], a: f32, b: f32, out: &mut [f32]) {
+/// Scaled residual combine, `out = a*x + b*br` elementwise — the
+/// residual op of both the training forward and the decode path.
+pub(crate) fn residual_combine(x: &[f32], br: &[f32], a: f32, b: f32, out: &mut [f32]) {
     let threads = parallel::threads_for(out.len() as u64 * 4);
     parallel::par_chunks_mut(out, ELEM_CHUNK, threads, |ci, c| {
         let off = ci * ELEM_CHUNK;
@@ -748,8 +865,9 @@ fn add_scaled(x: &[f32], cmul: f32, y: &[f32], out: &mut [f32]) {
     });
 }
 
-/// `out = act(z)` elementwise.
-fn apply_act(z: &[f32], act: Act, out: &mut [f32]) {
+/// `out = act(z)` elementwise — the FFN activation op of both the
+/// training forward and the decode path.
+pub(crate) fn apply_act(z: &[f32], act: Act, out: &mut [f32]) {
     let threads = parallel::threads_for(out.len() as u64 * 8);
     parallel::par_chunks_mut(out, ELEM_CHUNK, threads, |ci, c| {
         let off = ci * ELEM_CHUNK;
@@ -820,17 +938,19 @@ fn rmsnorm_backward(
 // ---------------------------------------------------------------------------
 // Attention head marshalling
 
-/// Scatter `z_qkv` `[rows, 3d]` into per-(batch, head) q/k/v blocks with
-/// RoPE applied to q and k. Chunk (b,h) of `qkv_heads` is laid out
-/// `[q(s,dh), k(s,dh), v(s,dh)]`.
+/// Scatter `z_qkv` `[rows, 3d]` into per-(sequence, head) q/k/v blocks
+/// with RoPE applied to q and k ([`rope_rotate`]). Chunk (b,h) of
+/// `qkv_heads` is laid out `[q(s,dh), k(s,dh), v(s,dh)]`; position t of
+/// sequence b rotates by table row t.
 fn split_heads_rope(
     z_qkv: &[f32],
     cfg: &ModelConfig,
+    s: usize,
     rope_cos: &[f32],
     rope_sin: &[f32],
     qkv_heads: &mut [f32],
 ) {
-    let (d, s, dh, h) = (cfg.width, cfg.seq_len, cfg.head_dim, cfg.n_heads());
+    let (d, dh, h) = (cfg.width, cfg.head_dim, cfg.n_heads());
     let half = dh / 2;
     let unit = 3 * s * dh;
     let threads = parallel::threads_for(z_qkv.len() as u64 * 4);
@@ -846,26 +966,55 @@ fn split_heads_rope(
             let vs = &src[2 * d + hh * dh..2 * d + (hh + 1) * dh];
             let cos = &rope_cos[t * half..(t + 1) * half];
             let sin = &rope_sin[t * half..(t + 1) * half];
-            let qd = &mut qc[t * dh..(t + 1) * dh];
-            for j in 0..half {
-                let (cj, sj) = (cos[j], sin[j]);
-                qd[j] = qs[j] * cj - qs[half + j] * sj;
-                qd[half + j] = qs[j] * sj + qs[half + j] * cj;
-            }
-            let kd = &mut kc[t * dh..(t + 1) * dh];
-            for j in 0..half {
-                let (cj, sj) = (cos[j], sin[j]);
-                kd[j] = ks[j] * cj - ks[half + j] * sj;
-                kd[half + j] = ks[j] * sj + ks[half + j] * cj;
-            }
+            rope_rotate(qs, cos, sin, half, &mut qc[t * dh..(t + 1) * dh]);
+            rope_rotate(ks, cos, sin, half, &mut kc[t * dh..(t + 1) * dh]);
             vc[t * dh..(t + 1) * dh].copy_from_slice(vs);
         }
     });
 }
 
-/// Merge per-(batch, head) attention outputs `[b·h, s, dh]` → `[rows, d]`.
-fn merge_heads(o_heads: &[f32], cfg: &ModelConfig, out: &mut [f32]) {
-    let (d, s, dh, h) = (cfg.width, cfg.seq_len, cfg.head_dim, cfg.n_heads());
+/// Decode-side head marshalling: scatter `z_qkv` `[rows, 3d]` (one row
+/// per live sequence) into per-(row, head) q/k/v blocks `[rows·h, dh]`,
+/// rotating q and k at each row's absolute position `pos[r]` — the same
+/// [`rope_rotate`] the training marshaller applies at position `t`.
+/// Sequential: decode rows are few and the work is O(rows·d).
+pub(crate) fn split_heads_rope_rows(
+    z_qkv: &[f32],
+    pos: &[usize],
+    cfg: &ModelConfig,
+    rope_cos: &[f32],
+    rope_sin: &[f32],
+    q_heads: &mut [f32],
+    k_heads: &mut [f32],
+    v_heads: &mut [f32],
+) {
+    let (d, dh, h) = (cfg.width, cfg.head_dim, cfg.n_heads());
+    let half = dh / 2;
+    for (r, &t) in pos.iter().enumerate() {
+        let src = &z_qkv[r * 3 * d..(r + 1) * 3 * d];
+        let cos = &rope_cos[t * half..(t + 1) * half];
+        let sin = &rope_sin[t * half..(t + 1) * half];
+        for hh in 0..h {
+            let o = (r * h + hh) * dh;
+            rope_rotate(&src[hh * dh..(hh + 1) * dh], cos, sin, half, &mut q_heads[o..o + dh]);
+            rope_rotate(
+                &src[d + hh * dh..d + (hh + 1) * dh],
+                cos,
+                sin,
+                half,
+                &mut k_heads[o..o + dh],
+            );
+            v_heads[o..o + dh]
+                .copy_from_slice(&src[2 * d + hh * dh..2 * d + (hh + 1) * dh]);
+        }
+    }
+}
+
+/// Merge per-(sequence, head) attention outputs `[b·h, s, dh]` →
+/// `[rows, d]`. The decode path calls it with `s = 1` (one output row
+/// per live sequence).
+pub(crate) fn merge_heads(o_heads: &[f32], cfg: &ModelConfig, s: usize, out: &mut [f32]) {
+    let (d, dh, h) = (cfg.width, cfg.head_dim, cfg.n_heads());
     let threads = parallel::threads_for(out.len() as u64 * 2);
     parallel::par_chunks_mut(out, ROW_CHUNK * d, threads, |ci, c| {
         let r0 = ci * ROW_CHUNK;
@@ -881,8 +1030,8 @@ fn merge_heads(o_heads: &[f32], cfg: &ModelConfig, out: &mut [f32]) {
 }
 
 /// Inverse of [`merge_heads`]: scatter `[rows, d]` → `[b·h, s, dh]`.
-fn split_heads_plain(d_merge: &[f32], cfg: &ModelConfig, do_heads: &mut [f32]) {
-    let (d, s, dh, h) = (cfg.width, cfg.seq_len, cfg.head_dim, cfg.n_heads());
+fn split_heads_plain(d_merge: &[f32], cfg: &ModelConfig, s: usize, do_heads: &mut [f32]) {
+    let (d, dh, h) = (cfg.width, cfg.head_dim, cfg.n_heads());
     let threads = parallel::threads_for(do_heads.len() as u64 * 2);
     parallel::par_chunks_mut(do_heads, s * dh, threads, |bh, chunk| {
         let b = bh / h;
@@ -899,11 +1048,12 @@ fn split_heads_plain(d_merge: &[f32], cfg: &ModelConfig, do_heads: &mut [f32]) {
 fn merge_heads_rope_bwd(
     dqkv_heads: &[f32],
     cfg: &ModelConfig,
+    s: usize,
     rope_cos: &[f32],
     rope_sin: &[f32],
     dz_qkv: &mut [f32],
 ) {
-    let (d, s, dh, h) = (cfg.width, cfg.seq_len, cfg.head_dim, cfg.n_heads());
+    let (d, dh, h) = (cfg.width, cfg.head_dim, cfg.n_heads());
     let half = dh / 2;
     let threads = parallel::threads_for(dz_qkv.len() as u64 * 4);
     parallel::par_chunks_mut(dz_qkv, ROW_CHUNK * 3 * d, threads, |ci, c| {
@@ -932,17 +1082,19 @@ fn merge_heads_rope_bwd(
     });
 }
 
-/// Run the causal attention kernel over all (batch, head) pairs,
+/// Run the causal attention kernel over all (sequence, head) pairs,
 /// filling `probs` and `o_heads` (fixed chunk-per-head parallelism).
 fn attention_all_heads_fwd(
     qkv_heads: &[f32],
     probs: &mut [f32],
     o_heads: &mut [f32],
     cfg: &ModelConfig,
+    batch: usize,
+    s: usize,
     scale: f32,
 ) {
-    let (s, dh, h) = (cfg.seq_len, cfg.head_dim, cfg.n_heads());
-    let heads_total = cfg.batch * h;
+    let (dh, h) = (cfg.head_dim, cfg.n_heads());
+    let heads_total = batch * h;
     let unit = 3 * s * dh;
     let threads = parallel::threads_for((heads_total * 2 * s * s * dh) as u64);
     parallel::par_join2(probs, o_heads, s * s, s * dh, threads, |i, pc, oc| {
@@ -954,17 +1106,20 @@ fn attention_all_heads_fwd(
     });
 }
 
-/// Backward over all (batch, head) pairs: fills `dqkv_heads`.
+/// Backward over all (sequence, head) pairs: fills `dqkv_heads`.
+#[allow(clippy::too_many_arguments)]
 fn attention_all_heads_bwd(
     do_heads: &[f32],
     probs: &[f32],
     qkv_heads: &[f32],
     dqkv_heads: &mut [f32],
     cfg: &ModelConfig,
+    batch: usize,
+    s: usize,
     scale: f32,
 ) {
-    let (s, dh) = (cfg.seq_len, cfg.head_dim);
-    let heads_total = cfg.batch * cfg.n_heads();
+    let dh = cfg.head_dim;
+    let heads_total = batch * cfg.n_heads();
     let unit = 3 * s * dh;
     let threads = parallel::threads_for((heads_total * 4 * s * s * dh) as u64);
     parallel::par_chunks_mut(dqkv_heads, unit, threads, |i, chunk| {
@@ -983,9 +1138,17 @@ fn attention_all_heads_bwd(
 // ---------------------------------------------------------------------------
 // Forward
 
+/// Per-layer KV sink for prefill: called once per block with the
+/// BF16-rounded post-RoPE `qkv_heads` buffer (`[b·h, 3, s, dh]` chunks)
+/// so the inference layer can populate its KV cache from the SAME values
+/// the forward attended over.
+pub(crate) type KvSink<'a> = &'a mut dyn FnMut(usize, &[f32]);
+
 /// Forward the whole batch through the block pipeline and the final
 /// RMS-norm, filling the workspace. `toks[r]` is the input token of row
-/// `r` (full sequences: `rows = batch · seq_len`).
+/// `r` (full sequences: `rows = ws.batch · ws.s`). Training, eval, and
+/// prefill all run through this one tower; `kv_sink` (prefill only)
+/// observes each layer's attention operands.
 pub(crate) fn forward_tower(
     cfg: &ModelConfig,
     prep: &Prepared,
@@ -993,25 +1156,17 @@ pub(crate) fn forward_tower(
     params: &[Vec<f32>],
     toks: &[i32],
     ws: &mut Workspace,
+    mut kv_sink: Option<KvSink<'_>>,
 ) {
     let (d, f) = (cfg.width, cfg.ffn_width());
-    let rows = ws.rows;
+    let (rows, batch, s) = (ws.rows, ws.batch, ws.s);
     let attn_scale = 1.0 / (cfg.head_dim as f32).sqrt();
-    let row_threads = parallel::threads_for((rows * d) as u64 * 8);
     // save-slot stride: 1 when the backward pass will replay the saves,
     // 0 on forward-only calls (all blocks share slot 0)
     let st = ws.stride;
 
     // token-embedding gather (output multiplier 1, BF16 — Table 2)
-    let embed = &params[0];
-    parallel::par_chunks_mut(&mut ws.x[0], ROW_CHUNK * d, row_threads, |ci, c| {
-        let r0 = ci * ROW_CHUNK;
-        for (i, out) in c.chunks_mut(d).enumerate() {
-            let tok = toks[r0 + i] as usize;
-            out.copy_from_slice(&embed[tok * d..(tok + 1) * d]);
-        }
-    });
-    quantize_slice(&mut ws.x[0], QuantMode::Bf16);
+    op_embed(&params[0], toks, d, &mut ws.x[0]);
 
     for l in 0..cfg.depth {
         let [(a1, b1), (a2, b2)] = prep.coeffs[l];
@@ -1020,35 +1175,72 @@ pub(crate) fn forward_tower(
         // ---- attention branch ------------------------------------------
         match prep.placement {
             NormPlacement::Pre => {
-                rms_rows(&ws.x[li], d, &mut ws.r1[li]);
-                normalize_rows(&ws.x[li], &ws.r1[li], d, &mut ws.n1[li]);
-                scale_by_gain(&ws.n1[li], &params[idx_g1(l)], d, &mut ws.xq_attn[li]);
+                op_rmsnorm(
+                    &ws.x[li],
+                    &params[idx_g1(l)],
+                    d,
+                    &mut ws.n1[li],
+                    &mut ws.r1[li],
+                    &mut ws.xq_attn[li],
+                );
             }
             NormPlacement::ResPost => {
                 let (xq_attn, x) = (&mut ws.xq_attn[li], &ws.x[li]);
                 xq_attn.copy_from_slice(x);
             }
         }
-        quantize_slice(&mut ws.xq_attn[li], prep.plan.qkv);
 
-        // qkv projection: z_qkv = α_qkv · xq @ W_qkv
-        matmul_bt(&ws.xq_attn[li], &qp.qkv_t[l], &mut ws.z_qkv, rows, 3 * d, d, prep.alpha_qkv);
+        // qkv projection: z_qkv = α_qkv · quant(xq) @ W_qkv
+        op_linear(
+            &mut ws.xq_attn[li],
+            prep.plan.qkv,
+            &qp.qkv_t[l],
+            &mut ws.z_qkv,
+            rows,
+            3 * d,
+            d,
+            prep.alpha_qkv,
+        );
         // attention operands are BF16-rounded in every variant (the
-        // score/softmax/value arithmetic itself runs in f32)
+        // score/softmax/value arithmetic itself runs in f32): once at the
+        // projection output, and again after RoPE so the rotated q/k are
+        // exactly what a BF16 KV cache stores — training and decode
+        // attend over identical values
         quantize_slice(&mut ws.z_qkv, QuantMode::Bf16);
-        split_heads_rope(&ws.z_qkv, cfg, &prep.rope_cos, &prep.rope_sin, &mut ws.qkv_heads[li]);
+        split_heads_rope(
+            &ws.z_qkv,
+            cfg,
+            s,
+            &prep.rope_cos,
+            &prep.rope_sin,
+            &mut ws.qkv_heads[li],
+        );
+        quantize_slice(&mut ws.qkv_heads[li], QuantMode::Bf16);
+        if let Some(sink) = kv_sink.as_mut() {
+            sink(l, &ws.qkv_heads[li]);
+        }
         attention_all_heads_fwd(
             &ws.qkv_heads[li],
             &mut ws.probs[li],
             &mut ws.o_heads,
             cfg,
+            batch,
+            s,
             attn_scale,
         );
-        merge_heads(&ws.o_heads, cfg, &mut ws.xq_o[li]);
-        quantize_slice(&mut ws.xq_o[li], prep.plan.attn_out);
+        merge_heads(&ws.o_heads, cfg, s, &mut ws.xq_o[li]);
 
-        // attn-out projection: z_o = α_o · xq_o @ W_o
-        matmul_bt(&ws.xq_o[li], &qp.attn_out_t[l], &mut ws.t_d1, rows, d, d, prep.alpha_attn_out);
+        // attn-out projection: z_o = α_o · quant(xq_o) @ W_o
+        op_linear(
+            &mut ws.xq_o[li],
+            prep.plan.attn_out,
+            &qp.attn_out_t[l],
+            &mut ws.t_d1,
+            rows,
+            d,
+            d,
+            prep.alpha_attn_out,
+        );
 
         // scaled residual add #1 → xmid
         match prep.placement {
@@ -1056,9 +1248,14 @@ pub(crate) fn forward_tower(
                 residual_combine(&ws.x[li], &ws.t_d1, a1, b1, &mut ws.xmid[li]);
             }
             NormPlacement::ResPost => {
-                rms_rows(&ws.t_d1, d, &mut ws.r1[li]);
-                normalize_rows(&ws.t_d1, &ws.r1[li], d, &mut ws.n1[li]);
-                scale_by_gain(&ws.n1[li], &params[idx_g1(l)], d, &mut ws.t_d0);
+                op_rmsnorm(
+                    &ws.t_d1,
+                    &params[idx_g1(l)],
+                    d,
+                    &mut ws.n1[li],
+                    &mut ws.r1[li],
+                    &mut ws.t_d0,
+                );
                 residual_combine(&ws.x[li], &ws.t_d0, a1, b1, &mut ws.xmid[li]);
             }
         }
@@ -1066,27 +1263,38 @@ pub(crate) fn forward_tower(
         // ---- ffn branch ------------------------------------------------
         match prep.placement {
             NormPlacement::Pre => {
-                rms_rows(&ws.xmid[li], d, &mut ws.r2[li]);
-                normalize_rows(&ws.xmid[li], &ws.r2[li], d, &mut ws.n2[li]);
-                scale_by_gain(&ws.n2[li], &params[idx_g2(l)], d, &mut ws.xq_up[li]);
+                op_rmsnorm(
+                    &ws.xmid[li],
+                    &params[idx_g2(l)],
+                    d,
+                    &mut ws.n2[li],
+                    &mut ws.r2[li],
+                    &mut ws.xq_up[li],
+                );
             }
             NormPlacement::ResPost => {
                 let (xq_up, xmid) = (&mut ws.xq_up[li], &ws.xmid[li]);
                 xq_up.copy_from_slice(xmid);
             }
         }
-        quantize_slice(&mut ws.xq_up[li], prep.plan.ffn_up);
 
-        // ffn-up: z_up = α_up · xq_up @ W_up
-        matmul_bt(&ws.xq_up[li], &qp.ffn_up_t[l], &mut ws.z_up[li], rows, f, d, prep.alpha_ffn_up);
+        // ffn-up: z_up = α_up · quant(xq_up) @ W_up
+        op_linear(
+            &mut ws.xq_up[li],
+            prep.plan.ffn_up,
+            &qp.ffn_up_t[l],
+            &mut ws.z_up[li],
+            rows,
+            f,
+            d,
+            prep.alpha_ffn_up,
+        );
 
-        // activation → quantized ffn-down input
+        // activation → ffn-down: z_down = α_down · quant(act(z_up)) @ W_down
         apply_act(&ws.z_up[li], prep.act, &mut ws.xq_down[li]);
-        quantize_slice(&mut ws.xq_down[li], prep.plan.ffn_down);
-
-        // ffn-down: z_down = α_down · xq_down @ W_down
-        matmul_bt(
-            &ws.xq_down[li],
+        op_linear(
+            &mut ws.xq_down[li],
+            prep.plan.ffn_down,
             &qp.ffn_down_t[l],
             &mut ws.t_d1,
             rows,
@@ -1101,19 +1309,51 @@ pub(crate) fn forward_tower(
                 residual_combine(&ws.xmid[li], &ws.t_d1, a2, b2, &mut ws.x[ln]);
             }
             NormPlacement::ResPost => {
-                rms_rows(&ws.t_d1, d, &mut ws.r2[li]);
-                normalize_rows(&ws.t_d1, &ws.r2[li], d, &mut ws.n2[li]);
-                scale_by_gain(&ws.n2[li], &params[idx_g2(l)], d, &mut ws.t_d0);
+                op_rmsnorm(
+                    &ws.t_d1,
+                    &params[idx_g2(l)],
+                    d,
+                    &mut ws.n2[li],
+                    &mut ws.r2[li],
+                    &mut ws.t_d0,
+                );
                 residual_combine(&ws.xmid[li], &ws.t_d0, a2, b2, &mut ws.x[ln]);
             }
         }
     }
 
     // final RMS-norm (gained) → BF16 LM-head input
-    rms_rows(&ws.x[cfg.depth * st], d, &mut ws.rf);
-    normalize_rows(&ws.x[cfg.depth * st], &ws.rf, d, &mut ws.nf);
-    scale_by_gain(&ws.nf, &params[idx_gf(cfg)], d, &mut ws.y);
+    op_rmsnorm(
+        &ws.x[cfg.depth * st],
+        &params[idx_gf(cfg)],
+        d,
+        &mut ws.nf,
+        &mut ws.rf,
+        &mut ws.y,
+    );
     quantize_slice(&mut ws.y, QuantMode::Bf16);
+}
+
+/// Logits `[batch·s, vocab]` for pre-quantized params over an explicit
+/// geometry — the shared entry of the `fwd` artifact (full batch) and
+/// `InferSession::prefill` (one sequence, optional KV capture).
+pub(crate) fn logits_rows(
+    cfg: &ModelConfig,
+    prep: &Prepared,
+    qp: &QuantParams,
+    params: &[Vec<f32>],
+    tokens: &[i32],
+    batch: usize,
+    s: usize,
+    kv_sink: Option<KvSink<'_>>,
+) -> Vec<f32> {
+    let (d, v) = (cfg.width, cfg.vocab);
+    let rows = batch * s;
+    let mut ws = Workspace::new_forward_only(cfg, batch, s);
+    forward_tower(cfg, prep, qp, params, tokens, &mut ws, kv_sink);
+    let mut logits = vec![0f32; rows * v];
+    matmul_bt(&ws.y, &qp.head_t, &mut logits, rows, v, d, prep.alpha_head);
+    logits
 }
 
 /// Full-batch logits `[rows, vocab]` (the `fwd` artifact).
@@ -1123,14 +1363,8 @@ pub(crate) fn forward_logits(
     params: &[Vec<f32>],
     tokens: &[i32],
 ) -> Result<Vec<f32>> {
-    let (d, v) = (cfg.width, cfg.vocab);
-    let rows = cfg.batch * cfg.seq_len;
     let qp = quantize_params(cfg, params, &prep.plan, false);
-    let mut ws = Workspace::new_forward_only(cfg, rows);
-    forward_tower(cfg, prep, &qp, params, tokens, &mut ws);
-    let mut logits = vec![0f32; rows * v];
-    matmul_bt(&ws.y, &qp.head_t, &mut logits, rows, v, d, prep.alpha_head);
-    Ok(logits)
+    Ok(logits_rows(cfg, prep, &qp, params, tokens, cfg.batch, cfg.seq_len, None))
 }
 
 // ---------------------------------------------------------------------------
@@ -1155,8 +1389,8 @@ pub(crate) fn train_grads(
     let rows = cfg.batch * s;
     let scored = cfg.batch * (s - 1);
     let qp = quantize_params(cfg, params, &prep.plan, true);
-    let mut ws = Workspace::new(cfg, rows);
-    forward_tower(cfg, prep, &qp, params, tokens, &mut ws);
+    let mut ws = Workspace::new(cfg, cfg.batch, s);
+    forward_tower(cfg, prep, &qp, params, tokens, &mut ws, None);
 
     // logits, then in place: dlogits = (softmax − onehot) / scored,
     // zeroed on the unscored final position of each sequence
@@ -1304,16 +1538,18 @@ pub(crate) fn train_grads(
         add_matmul_at_b(&ws.xq_o[l], &dz_o, &mut grads[idx_o(l)], rows, d, d, prep.alpha_attn_out);
         matmul_bt(&dz_o, &qp.attn_out[l], &mut d_merge, rows, d, d, prep.alpha_attn_out);
 
-        split_heads_plain(&d_merge, cfg, &mut do_heads);
+        split_heads_plain(&d_merge, cfg, s, &mut do_heads);
         attention_all_heads_bwd(
             &do_heads,
             &ws.probs[l],
             &ws.qkv_heads[l],
             &mut dqkv_heads,
             cfg,
+            cfg.batch,
+            s,
             attn_scale,
         );
-        merge_heads_rope_bwd(&dqkv_heads, cfg, &prep.rope_cos, &prep.rope_sin, &mut dz_qkv);
+        merge_heads_rope_bwd(&dqkv_heads, cfg, s, &prep.rope_cos, &prep.rope_sin, &mut dz_qkv);
         quantize_slice(&mut dz_qkv, prep.plan.grad);
         add_matmul_at_b(
             &ws.xq_attn[l],

@@ -12,11 +12,15 @@
 //!
 //! [`attn_forward_causal`] / [`attn_backward_causal`] are the per-head
 //! causal softmax-attention kernels of the op-level transformer block
-//! (`runtime/block.rs`). They are deliberately single-threaded: the block
-//! parallelizes over (batch, head) pairs with fixed chunk boundaries, and
-//! each head's score/softmax/value math runs in one fixed serial order —
-//! so attention inherits the same any-thread-count bit-determinism as the
-//! GEMMs.
+//! (`runtime/block.rs`), and [`attn_decode_cached`] is the single-query
+//! cached-attention kernel of the KV-cache decode path — all three run
+//! their score/softmax/value math through the one shared
+//! [`attn_one_query`] routine, so train/prefill and decode share the
+//! attention arithmetic by construction. They are deliberately
+//! single-threaded: callers parallelize over (batch, head) — or, for
+//! decode, (sequence, head) — pairs with fixed chunk boundaries, and each
+//! head's math runs in one fixed serial order, so attention inherits the
+//! same any-thread-count bit-determinism as the GEMMs.
 //!
 //! Determinism contract (matches [`crate::util::parallel`]): every output
 //! element is produced by exactly one chunk, the inner accumulation order
@@ -127,17 +131,70 @@ pub fn add_matmul_at_b(
     });
 }
 
+/// Softmax attention of ONE query against the first `len` K/V rows —
+/// the shared inner kernel of both attention entry points:
+/// [`attn_forward_causal`] calls it per row (training / prefill, query
+/// `i` with `len = i + 1`) and [`attn_decode_cached`] calls it once per
+/// decode step against the gathered KV cache. One implementation, one
+/// accumulation order — a decode step is bit-identical to the matching
+/// row of the full-sequence forward when its operands are.
+///
+/// `q` is `[dh]`, `k`/`v` are `[len, dh]` row-major. Writes the
+/// post-softmax weights into `scores` (`[len]`) and the attended values
+/// into `o` (`[dh]`). Numerically stable (max subtraction); the softmax
+/// denominator accumulates in f64 over ascending `j`, so the result is a
+/// fixed function of the inputs — single-threaded by design, see module
+/// docs.
+pub fn attn_one_query(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    len: usize,
+    dh: usize,
+    scale: f32,
+    scores: &mut [f32],
+    o: &mut [f32],
+) {
+    debug_assert_eq!(q.len(), dh);
+    debug_assert_eq!(scores.len(), len);
+    debug_assert!(k.len() >= len * dh && v.len() >= len * dh);
+    let mut m = f32::NEG_INFINITY;
+    for j in 0..len {
+        let sc = scale * dot(q, &k[j * dh..(j + 1) * dh]);
+        scores[j] = sc;
+        m = m.max(sc);
+    }
+    let mut den = 0f64;
+    for p in scores.iter_mut() {
+        let e = (*p - m).exp();
+        *p = e;
+        den += e as f64;
+    }
+    let inv = (1.0 / den) as f32;
+    for p in scores.iter_mut() {
+        *p *= inv;
+    }
+    o[..dh].fill(0.0);
+    for j in 0..len {
+        let p = scores[j];
+        if p == 0.0 {
+            continue;
+        }
+        let vj = &v[j * dh..(j + 1) * dh];
+        for (ov, &vv) in o[..dh].iter_mut().zip(vj) {
+            *ov += p * vv;
+        }
+    }
+}
+
 /// Causal softmax attention, forward, for one (batch, head) pair.
 ///
 /// `q`, `k`, `v` are `[s, dh]` row-major (RoPE already applied to q/k by
 /// the caller). Writes the post-softmax weights into `probs` (`[s, s]`,
 /// strict upper triangle zeroed — saved for the backward pass) and the
 /// attended values into `o` (`[s, dh]`): `o_i = Σ_{j≤i} P_ij · v_j` with
-/// `P_i = softmax(scale · q_i · k_{0..=i})`.
-///
-/// Numerically stable (per-row max subtraction); the softmax denominator
-/// accumulates in f64 over ascending `j`, so the result is a fixed
-/// function of the inputs — single-threaded by design, see module docs.
+/// `P_i = softmax(scale · q_i · k_{0..=i})`. Each row runs through
+/// [`attn_one_query`] — the same kernel the KV-cache decode path uses.
 pub fn attn_forward_causal(
     q: &[f32],
     k: &[f32],
@@ -154,40 +211,83 @@ pub fn attn_forward_causal(
     assert_eq!(probs.len(), s * s, "attn_forward_causal: probs is not [s,s]");
     assert_eq!(o.len(), s * dh, "attn_forward_causal: o is not [s,dh]");
     for i in 0..s {
-        let qi = &q[i * dh..(i + 1) * dh];
         let prow = &mut probs[i * s..(i + 1) * s];
-        let mut m = f32::NEG_INFINITY;
-        for j in 0..=i {
-            let sc = scale * dot(qi, &k[j * dh..(j + 1) * dh]);
-            prow[j] = sc;
-            m = m.max(sc);
-        }
-        let mut den = 0f64;
-        for p in prow[..=i].iter_mut() {
-            let e = (*p - m).exp();
-            *p = e;
-            den += e as f64;
-        }
-        let inv = (1.0 / den) as f32;
-        for p in prow[..=i].iter_mut() {
-            *p *= inv;
-        }
+        attn_one_query(
+            &q[i * dh..(i + 1) * dh],
+            k,
+            v,
+            i + 1,
+            dh,
+            scale,
+            &mut prow[..=i],
+            &mut o[i * dh..(i + 1) * dh],
+        );
         for p in prow[i + 1..].iter_mut() {
             *p = 0.0;
         }
-        let orow = &mut o[i * dh..(i + 1) * dh];
-        orow.fill(0.0);
-        for j in 0..=i {
-            let p = prow[j];
-            if p == 0.0 {
-                continue;
-            }
-            let vj = &v[j * dh..(j + 1) * dh];
-            for (ov, &vv) in orow.iter_mut().zip(vj) {
-                *ov += p * vv;
-            }
+    }
+}
+
+/// Reinterpret BF16 bits as f32 (BF16 is the upper half of an f32).
+#[inline]
+pub fn bf16_to_f32(bits: u16) -> f32 {
+    f32::from_bits((bits as u32) << 16)
+}
+
+/// Truncate an f32 that is already on the BF16 grid to its BF16 bits.
+/// Lossless for values the interpreter BF16-rounds before caching.
+#[inline]
+pub fn f32_to_bf16_bits(v: f32) -> u16 {
+    (v.to_bits() >> 16) as u16
+}
+
+/// Single-query cached attention for one (sequence, head) pair — the
+/// decode-path kernel. `q` is `[dh]` (RoPE already applied at the query's
+/// absolute position); the K/V history comes as ordered lists of BF16
+/// pages (each `[page_rows, dh]` row-major, see `runtime::kvcache`) whose
+/// rows concatenate to the sequence's first `len` cached positions.
+///
+/// The pages are gathered into the `kf`/`vf` f32 scratch (`[len, dh]`
+/// each) and scored by [`attn_one_query`] — the same inner kernel the
+/// full-sequence causal forward uses, in the same accumulation order, so
+/// a decode step reproduces the matching training-forward row bit for bit
+/// (the cache stores BF16-rounded operands, and BF16 → f32 is exact).
+/// Serial by design: callers parallelize over (sequence, head) pairs with
+/// fixed chunk boundaries, preserving any-thread-count bit-determinism.
+#[allow(clippy::too_many_arguments)]
+pub fn attn_decode_cached(
+    q: &[f32],
+    k_pages: &[&[u16]],
+    v_pages: &[&[u16]],
+    len: usize,
+    dh: usize,
+    scale: f32,
+    kf: &mut [f32],
+    vf: &mut [f32],
+    scores: &mut [f32],
+    o: &mut [f32],
+) {
+    assert_eq!(q.len(), dh, "attn_decode_cached: q is not [dh]");
+    assert!(kf.len() >= len * dh, "attn_decode_cached: kf scratch too small");
+    assert!(vf.len() >= len * dh, "attn_decode_cached: vf scratch too small");
+    assert!(scores.len() >= len, "attn_decode_cached: scores scratch too small");
+    let mut row = 0usize;
+    for (kp, vp) in k_pages.iter().zip(v_pages) {
+        debug_assert_eq!(kp.len(), vp.len());
+        let n = (kp.len() / dh).min(len - row);
+        for (dst, &b) in kf[row * dh..(row + n) * dh].iter_mut().zip(&kp[..n * dh]) {
+            *dst = bf16_to_f32(b);
+        }
+        for (dst, &b) in vf[row * dh..(row + n) * dh].iter_mut().zip(&vp[..n * dh]) {
+            *dst = bf16_to_f32(b);
+        }
+        row += n;
+        if row == len {
+            break;
         }
     }
+    assert_eq!(row, len, "attn_decode_cached: pages hold {row} rows, need {len}");
+    attn_one_query(q, kf, vf, len, dh, scale, &mut scores[..len], o);
 }
 
 /// Backward of [`attn_forward_causal`] for one (batch, head) pair.
@@ -491,6 +591,67 @@ mod tests {
                 (fd - g).abs() <= 2e-2 * fd.abs().max(g.abs()) + 2e-3,
                 "buf{which}[{idx}]: fd {fd} vs analytic {g}"
             );
+        }
+    }
+
+    /// The decode kernel against the training kernel, kernel-level: for
+    /// BF16-rounded operands (what the tower produces and the cache
+    /// stores), a single cached query reproduces the matching causal
+    /// row bit for bit — including when the history spans several pages
+    /// and the last page is partially filled.
+    #[test]
+    fn attn_decode_cached_matches_causal_rows_bitwise() {
+        let (s, dh, page_rows) = (11usize, 6usize, 4usize);
+        let mut rng = Rng::new(21);
+        let mut q = vec![0f32; s * dh];
+        let mut k = vec![0f32; s * dh];
+        let mut v = vec![0f32; s * dh];
+        rng.fill_normal(&mut q, 1.0);
+        rng.fill_normal(&mut k, 1.0);
+        rng.fill_normal(&mut v, 1.0);
+        let bf16 = crate::fp8::BF16.fast_caster();
+        bf16.quantize_slice(&mut q);
+        bf16.quantize_slice(&mut k);
+        bf16.quantize_slice(&mut v);
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut probs = vec![0f32; s * s];
+        let mut o = vec![0f32; s * dh];
+        attn_forward_causal(&q, &k, &v, &mut probs, &mut o, s, dh, scale);
+
+        let k_bits: Vec<u16> = k.iter().map(|&x| f32_to_bf16_bits(x)).collect();
+        let v_bits: Vec<u16> = v.iter().map(|&x| f32_to_bf16_bits(x)).collect();
+        let k_pages: Vec<&[u16]> = k_bits.chunks(page_rows * dh).collect();
+        let v_pages: Vec<&[u16]> = v_bits.chunks(page_rows * dh).collect();
+        let (mut kf, mut vf) = (vec![0f32; s * dh], vec![0f32; s * dh]);
+        let mut scores = vec![0f32; s];
+        let mut od = vec![0f32; dh];
+        for i in [0usize, 3, 4, s - 1] {
+            let len = i + 1;
+            attn_decode_cached(
+                &q[i * dh..(i + 1) * dh],
+                &k_pages,
+                &v_pages,
+                len,
+                dh,
+                scale,
+                &mut kf,
+                &mut vf,
+                &mut scores,
+                &mut od,
+            );
+            for c in 0..dh {
+                assert_eq!(
+                    od[c].to_bits(),
+                    o[i * dh + c].to_bits(),
+                    "row {i} col {c}: decode {} vs causal {}",
+                    od[c],
+                    o[i * dh + c]
+                );
+            }
+            // the scores are the causal row's probabilities
+            for j in 0..len {
+                assert_eq!(scores[j].to_bits(), probs[i * s + j].to_bits());
+            }
         }
     }
 

@@ -1,0 +1,274 @@
+//! Paged per-sequence KV cache for the incremental decode path.
+//!
+//! Storage is **BF16**: the attention operands are BF16-rounded by the
+//! forward tower in every variant (see `runtime::block`), so caching
+//! their upper 16 bits is lossless — a decode step reads back exactly
+//! the f32 values a full-sequence forward would attend over, which is
+//! what makes decode logits bit-identical to the training forward under
+//! the static-FP8 and BF16 plans.
+//!
+//! Memory is **paged**: each (layer, head) chain of a sequence grows in
+//! fixed [`SLAB_TOKENS`]-position slabs drawn from a shared [`KvPool`].
+//! A slab holds that chain's K rows then V rows (`[k: T×dh][v: T×dh]`
+//! BF16 bits). Slabs are recycled through a free list when sequences are
+//! evicted — the pool is a ring of pages, so resident memory scales with
+//! *live tokens* across sequences, not with `max_seq × n_sequences`.
+//!
+//! Positions are append-only per sequence: all `depth × heads` chains of
+//! a sequence share one length counter ([`SeqKv::len`]), bumped once per
+//! decoded token by [`SeqKv::advance`] after every layer has appended.
+
+use crate::config::ModelConfig;
+use crate::runtime::gemm::f32_to_bf16_bits;
+
+/// Positions per slab. Small enough that a short sequence wastes little
+/// (< `2·dh·SLAB_TOKENS` BF16 values per chain), large enough that page
+/// chains stay short at the proxy context lengths.
+pub(crate) const SLAB_TOKENS: usize = 32;
+
+/// Bytes per stored cache value (BF16).
+pub(crate) const KV_BYTES_PER_VALUE: usize = 2;
+
+/// Bytes of KV cache READ by one decode token at context length `ctx`:
+/// every layer's every head streams `ctx` K rows and `ctx` V rows of
+/// `head_dim` BF16 values — `depth · 2 · ctx · width · 2` bytes. This is
+/// the bandwidth term of the decode roofline; the perfmodel consumes it
+/// and a test pins it to the `ModelConfig` closed form.
+pub(crate) fn kv_bytes_read_per_token(cfg: &ModelConfig, ctx: usize) -> u64 {
+    (cfg.depth * 2 * ctx * cfg.width * KV_BYTES_PER_VALUE) as u64
+}
+
+/// Bytes of KV cache WRITTEN per decoded token (one K row + one V row
+/// per layer): `depth · 2 · width · 2`.
+pub(crate) fn kv_bytes_written_per_token(cfg: &ModelConfig) -> u64 {
+    (cfg.depth * 2 * cfg.width * KV_BYTES_PER_VALUE) as u64
+}
+
+/// Shared slab pool. One pool serves every sequence of an `InferSession`;
+/// freed slabs are reused LIFO before any new allocation.
+pub(crate) struct KvPool {
+    dh: usize,
+    n_chains: usize,
+    slab_len: usize,
+    slabs: Vec<Vec<u16>>,
+    free: Vec<usize>,
+}
+
+/// One sequence's cache: per-(layer, head) slab chains plus the shared
+/// position counter.
+pub(crate) struct SeqKv {
+    len: usize,
+    /// `chains[layer * n_heads + head]` = ordered slab ids.
+    chains: Vec<Vec<usize>>,
+}
+
+impl SeqKv {
+    /// Cached positions (tokens whose K/V are fully appended).
+    pub(crate) fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Commit one appended token across all chains.
+    pub(crate) fn advance(&mut self) {
+        self.len += 1;
+    }
+}
+
+impl KvPool {
+    pub(crate) fn new(cfg: &ModelConfig) -> KvPool {
+        KvPool {
+            dh: cfg.head_dim,
+            n_chains: cfg.depth * cfg.n_heads(),
+            slab_len: 2 * SLAB_TOKENS * cfg.head_dim,
+            slabs: Vec::new(),
+            free: Vec::new(),
+        }
+    }
+
+    /// Fresh empty sequence (no slabs held until the first append).
+    pub(crate) fn new_seq(&self) -> SeqKv {
+        SeqKv { len: 0, chains: vec![Vec::new(); self.n_chains] }
+    }
+
+    /// Return every slab of `seq` to the free list (eviction).
+    pub(crate) fn free_seq(&mut self, seq: &mut SeqKv) {
+        for chain in &mut seq.chains {
+            self.free.extend(chain.drain(..));
+        }
+        seq.len = 0;
+    }
+
+    /// Slabs currently held by live sequences.
+    pub(crate) fn slabs_in_use(&self) -> usize {
+        self.slabs.len() - self.free.len()
+    }
+
+    /// Bytes per slab (BF16 payload).
+    pub(crate) fn slab_bytes(&self) -> usize {
+        self.slab_len * KV_BYTES_PER_VALUE
+    }
+
+    fn alloc(&mut self) -> usize {
+        if let Some(id) = self.free.pop() {
+            return id;
+        }
+        self.slabs.push(vec![0u16; self.slab_len]);
+        self.slabs.len() - 1
+    }
+
+    /// Append one position's K and V rows (`[dh]` f32, already
+    /// BF16-rounded by the tower) to chain `(layer, head)` of `seq` at
+    /// slot `slot`. Prefill appends slots `0..prompt_len` per chain;
+    /// decode appends at `seq.len()`. The caller commits the position via
+    /// [`SeqKv::advance`] (or [`KvPool::commit_prefill`]) once every
+    /// layer has appended.
+    pub(crate) fn append(
+        &mut self,
+        seq: &mut SeqKv,
+        chain: usize,
+        slot: usize,
+        k_row: &[f32],
+        v_row: &[f32],
+    ) {
+        debug_assert_eq!(k_row.len(), self.dh);
+        debug_assert_eq!(v_row.len(), self.dh);
+        let (si, off) = (slot / SLAB_TOKENS, slot % SLAB_TOKENS);
+        if seq.chains[chain].len() == si {
+            let id = self.alloc();
+            seq.chains[chain].push(id);
+        }
+        let slab = &mut self.slabs[seq.chains[chain][si]];
+        let k_at = off * self.dh;
+        let v_at = SLAB_TOKENS * self.dh + off * self.dh;
+        for (dst, &v) in slab[k_at..k_at + self.dh].iter_mut().zip(k_row) {
+            *dst = f32_to_bf16_bits(v);
+        }
+        for (dst, &v) in slab[v_at..v_at + self.dh].iter_mut().zip(v_row) {
+            *dst = f32_to_bf16_bits(v);
+        }
+    }
+
+    /// Commit a prefill of `n` positions (every chain already appended
+    /// slots `0..n`).
+    pub(crate) fn commit_prefill(&self, seq: &mut SeqKv, n: usize) {
+        debug_assert_eq!(seq.len, 0, "prefill on a non-empty sequence");
+        debug_assert!(seq.chains.iter().all(|c| c.len() == n.div_ceil(SLAB_TOKENS)));
+        seq.len = n;
+    }
+
+    /// Append the K and V page slices of chain `(layer, head)` covering
+    /// the first `len` positions, in order, onto `kp`/`vp` (the caller
+    /// owns clearing — the decode path accumulates every
+    /// (sequence, head) pair's pages into one flat per-layer list, so
+    /// the hot loop allocates two Vecs per layer, not two per pair).
+    /// Full slabs contribute `SLAB_TOKENS` rows; the kernel clips the
+    /// final partial page to `len`.
+    pub(crate) fn pages<'a>(
+        &'a self,
+        seq: &SeqKv,
+        chain: usize,
+        len: usize,
+        kp: &mut Vec<&'a [u16]>,
+        vp: &mut Vec<&'a [u16]>,
+    ) {
+        let n_slabs = len.div_ceil(SLAB_TOKENS);
+        let half = SLAB_TOKENS * self.dh;
+        for &id in &seq.chains[chain][..n_slabs] {
+            let slab = &self.slabs[id];
+            kp.push(&slab[..half]);
+            vp.push(&slab[half..]);
+        }
+    }
+
+    /// Chain index of `(layer, head)` given the model's head count.
+    pub(crate) fn chain_of(&self, n_heads: usize, layer: usize, head: usize) -> usize {
+        layer * n_heads + head
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::gemm::bf16_to_f32;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig { width: 16, depth: 2, head_dim: 8, ..ModelConfig::default() }
+    }
+
+    #[test]
+    fn append_and_read_back_round_trips_bf16() {
+        let cfg = cfg();
+        let mut pool = KvPool::new(&cfg);
+        let mut seq = pool.new_seq();
+        let dh = cfg.head_dim;
+        // values on the BF16 grid: integers below 256 are exact (7-bit
+        // mantissa), so the truncating store round-trips losslessly
+        let mk = |base: f32| -> (Vec<f32>, Vec<f32>) {
+            let k = (0..dh).map(|j| base + j as f32).collect();
+            let v = (0..dh).map(|j| -base - j as f32).collect();
+            (k, v)
+        };
+        let n = SLAB_TOKENS + 3; // spills into a second slab
+        for slot in 0..n {
+            for chain in 0..cfg.depth * cfg.n_heads() {
+                let (k, v) = mk(slot as f32 + chain as f32 * 64.0);
+                pool.append(&mut seq, chain, slot, &k, &v);
+            }
+        }
+        pool.commit_prefill(&mut seq, n);
+        assert_eq!(seq.len(), n);
+        let (mut kp, mut vp) = (Vec::new(), Vec::new());
+        let chain = pool.chain_of(cfg.n_heads(), 1, 1);
+        pool.pages(&seq, chain, n, &mut kp, &mut vp);
+        assert_eq!(kp.len(), 2);
+        // row SLAB_TOKENS+2 lives at offset 2 of the second page
+        let (k, v) = mk((SLAB_TOKENS + 2) as f32 + chain as f32 * 64.0);
+        for j in 0..dh {
+            assert_eq!(bf16_to_f32(kp[1][2 * dh + j]), k[j]);
+            assert_eq!(bf16_to_f32(vp[1][2 * dh + j]), v[j]);
+        }
+    }
+
+    #[test]
+    fn pool_memory_scales_with_live_tokens_and_recycles_pages() {
+        let cfg = cfg();
+        let chains = cfg.depth * cfg.n_heads();
+        let mut pool = KvPool::new(&cfg);
+        let mut a = pool.new_seq();
+        let row = vec![0f32; cfg.head_dim];
+        for slot in 0..2 * SLAB_TOKENS {
+            for c in 0..chains {
+                pool.append(&mut a, c, slot, &row, &row);
+            }
+            a.advance();
+        }
+        // two slabs per chain, only for the tokens actually cached
+        assert_eq!(pool.slabs_in_use(), 2 * chains);
+        let peak = pool.slabs_in_use();
+        // eviction returns every page ...
+        pool.free_seq(&mut a);
+        assert_eq!(pool.slabs_in_use(), 0);
+        assert_eq!(a.len(), 0);
+        // ... and a new sequence reuses them instead of growing the pool
+        let mut b = pool.new_seq();
+        for slot in 0..SLAB_TOKENS {
+            for c in 0..chains {
+                pool.append(&mut b, c, slot, &row, &row);
+            }
+            b.advance();
+        }
+        assert_eq!(pool.slabs_in_use(), chains);
+        assert_eq!(pool.slabs.len(), peak, "pool grew despite free pages");
+    }
+
+    #[test]
+    fn byte_accounting_matches_config_closed_forms() {
+        let cfg = ModelConfig { width: 384, depth: 6, head_dim: 64, ..ModelConfig::default() };
+        for ctx in [1usize, 17, 256] {
+            assert_eq!(kv_bytes_read_per_token(&cfg, ctx), cfg.kv_cache_bytes_read_per_token(ctx));
+        }
+        assert_eq!(kv_bytes_written_per_token(&cfg), cfg.kv_cache_bytes_per_token());
+        let pool = KvPool::new(&cfg);
+        assert_eq!(pool.slab_bytes(), 2 * SLAB_TOKENS * cfg.head_dim * KV_BYTES_PER_VALUE);
+    }
+}

@@ -12,6 +12,12 @@
 //!  - [`ReferenceBackend`] — pure-Rust interpreter (fp8 emulation) over
 //!    the op-level transformer block in `runtime::block` (real multi-head
 //!    causal attention + FFN); runs everywhere, no artifacts required.
+//!  - [`InferSession`] — the session layer's inference counterpart:
+//!    parameters quantized once (the same static casts training uses),
+//!    prefill through the training forward, incremental decode over a
+//!    paged BF16 KV cache (`runtime::kvcache`), greedy / seeded top-k
+//!    sampling. Decode logits are bit-identical to the training forward
+//!    under static-FP8/BF16 plans — the paper's training-inference match.
 //!  - `PjrtBackend` (feature `pjrt`) — AOT HLO-text artifacts on the PJRT
 //!    CPU client (`xla` crate; vendored separately).
 //!
@@ -21,6 +27,8 @@
 mod backend;
 pub(crate) mod block;
 pub mod gemm;
+mod infer;
+pub(crate) mod kvcache;
 mod manifest;
 #[cfg(feature = "pjrt")]
 mod pjrt;
@@ -29,6 +37,7 @@ mod session;
 mod tensor;
 
 pub use backend::{Backend, ExecStats, TensorHandle};
+pub use infer::{sample_greedy, sample_topk, InferSession, InferStats, SeqId};
 pub use manifest::{ArtifactMeta, Dtype, Manifest, TensorSpec};
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;

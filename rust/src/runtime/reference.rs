@@ -381,11 +381,7 @@ fn unpack_state(cfg: &ModelConfig, inputs: &[Arc<Tensor>], with_momenta: bool) -
     if tokens.len() != cfg.batch * cfg.seq_len {
         bail!("tokens length {} != batch*seq = {}", tokens.len(), cfg.batch * cfg.seq_len);
     }
-    for &t in &tokens {
-        if t < 0 || t as usize >= cfg.vocab {
-            bail!("token id {t} out of vocab range 0..{}", cfg.vocab);
-        }
-    }
+    block::check_tokens(&tokens, cfg.vocab)?;
     Ok(StateView { params, momenta, tokens })
 }
 

@@ -166,6 +166,69 @@ fn checkpoint_roundtrip_resumes_identically_reference() {
 }
 
 #[test]
+fn checkpoint_mid_run_resume_is_bit_identical_both_fp8_lanes() {
+    // Save at step 3 of 6, reload into a FRESH session, continue — the
+    // final state must be bit-identical to the uninterrupted run, for
+    // both FP8 lanes (µS static E4M3/E5M2 and SP TE-style dynamic).
+    for (variant, residual, lr) in
+        [("mus", "fixed", 1.0 / 128.0), ("sp", "standard", 1.0 / 256.0)]
+    {
+        let cfg = ModelConfig {
+            variant: variant.into(),
+            precision: "fp8".into(),
+            residual: residual.into(),
+            ..micro_config()
+        };
+        let be = ReferenceBackend::new(&[cfg.clone()]).unwrap();
+        let trainer = Trainer::new(&be, &cfg).unwrap();
+        let corpus = micro_corpus(&cfg);
+        let (wd, tau) = (1e-4, 0.4);
+
+        // uninterrupted: 6 steps straight through
+        let mut batcher = Batcher::new(corpus.clone(), 21, 0, 1, cfg.batch, cfg.seq_len);
+        let mut straight = trainer.init(2).unwrap();
+        let mut losses_straight = Vec::new();
+        for _ in 0..6 {
+            losses_straight.push(straight.step(&batcher.next_batch(), lr, wd, tau).unwrap().0);
+        }
+        let final_straight = straight.read_back().unwrap();
+
+        // interrupted: 3 steps, checkpoint to disk, reload into a fresh
+        // session, 3 more steps on the continuing data stream
+        let mut batcher = Batcher::new(corpus.clone(), 21, 0, 1, cfg.batch, cfg.seq_len);
+        let mut first_half = trainer.init(2).unwrap();
+        let mut losses_resumed = Vec::new();
+        for _ in 0..3 {
+            losses_resumed.push(first_half.step(&batcher.next_batch(), lr, wd, tau).unwrap().0);
+        }
+        let meta = be.resolve("train_step", &cfg).unwrap();
+        let specs = &meta.inputs[..2 * trainer.n_params_tensors()];
+        let path = std::env::temp_dir().join(format!("munit_ckpt_midrun_{variant}.bin"));
+        checkpoint::save(&path, &first_half.read_back().unwrap(), specs).unwrap();
+        drop(first_half);
+        let restored = checkpoint::load(&path, specs).unwrap();
+        std::fs::remove_file(&path).ok();
+        let mut resumed = trainer.session_from(&restored).unwrap();
+        for _ in 0..3 {
+            losses_resumed.push(resumed.step(&batcher.next_batch(), lr, wd, tau).unwrap().0);
+        }
+        let final_resumed = resumed.read_back().unwrap();
+
+        assert_eq!(losses_straight, losses_resumed, "{variant}+fp8: losses diverged");
+        assert_eq!(
+            final_straight.tensors.len(),
+            final_resumed.tensors.len(),
+            "{variant}+fp8: tensor count"
+        );
+        for (i, (a, b)) in
+            final_straight.tensors.iter().zip(&final_resumed.tensors).enumerate()
+        {
+            assert_eq!(a, b, "{variant}+fp8: tensor {i} not bit-identical after resume");
+        }
+    }
+}
+
+#[test]
 fn ddp_single_worker_matches_plain_trainer_reference() {
     let be = reference_backend();
     let cfg = micro_config();
@@ -287,6 +350,38 @@ fn sp_variant_trains_reference() {
     let r = trainer.run(&tc, &mut batcher).unwrap();
     assert!(!r.diverged);
     assert!(r.losses.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn trained_model_serves_through_continuous_batching() {
+    // The full serving path over the public API: train on the reference
+    // backend, lift the parameters into an InferSession, drain a
+    // synthetic request set through the continuous-batching scheduler.
+    use munit::coordinator::serve;
+    use munit::runtime::InferSession;
+    let be = reference_backend();
+    let cfg = micro_config();
+    let trainer = Trainer::new(&be, &cfg).unwrap();
+    let mut batcher = Batcher::new(micro_corpus(&cfg), 5, 0, 1, cfg.batch, cfg.seq_len);
+    let mut session = trainer.init(4).unwrap();
+    for _ in 0..3 {
+        session.step(&batcher.next_batch(), 1.0 / 128.0, 1e-4, 0.4).unwrap();
+    }
+    let params = session.params_host().unwrap();
+    let mut infer = InferSession::new(&cfg, &params, 0.4).unwrap();
+    let mut requests = serve::synthetic_requests(&cfg, 5, 3);
+    for r in &mut requests {
+        // guarantee real decode traffic whatever the sampled lengths
+        r.max_new_tokens = r.max_new_tokens.max(3);
+    }
+    let sc = serve::ServeConfig { max_batch: 2, max_steps: 2_000 };
+    let report = serve::serve(&mut infer, &requests, &sc).unwrap();
+    assert_eq!(report.completions.len(), requests.len());
+    assert!(report.decode_tokens > 0 && report.decode_tokens_per_sec > 0.0);
+    assert_eq!(infer.kv_slabs_in_use(), 0, "serve must recycle every KV page");
+    let s = infer.stats();
+    assert_eq!(s.decode_tokens, report.decode_tokens);
+    assert_eq!(s.prefill_tokens, report.prefill_tokens);
 }
 
 #[test]
