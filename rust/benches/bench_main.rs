@@ -68,6 +68,16 @@ fn main() {
         std::hint::black_box(E4M3.underflow_fraction(&buf));
     });
 
+    // telemetry-sink primitives: the deterministic RMS reduction every
+    // recorded op pays when a capture is active, and the per-op FP8
+    // cast-health pass (both zero-cost when telemetry is off)
+    run("hot:telemetry_sum_sq_64k", &mut || {
+        std::hint::black_box(munit::runtime::gemm::sum_sq(&buf));
+    });
+    run("hot:fp8_cast_health_64k", &mut || {
+        std::hint::black_box(E4M3.cast_health(&buf, 1.0));
+    });
+
     let spec = CorpusSpec::default();
     let mut batcher = Batcher::new(spec.clone(), 0, 0, 1, 4, 128);
     run("hot:data_batch_4x128", &mut || {

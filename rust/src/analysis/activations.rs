@@ -5,14 +5,19 @@
 //! (|err| < 1.5e-7, far below bf16 resolution — the comparisons in Fig 10
 //! are made after a bf16 round-trip anyway).
 
+/// FFN activation functions studied by the Fig 10 underflow analysis.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Activation {
+    /// Exact (erf-form) GELU.
     Gelu,
+    /// SiLU / swish.
     Silu,
+    /// ReLU.
     Relu,
 }
 
 impl Activation {
+    /// Config-string name ("gelu" / "silu" / "relu").
     pub fn name(&self) -> &'static str {
         match self {
             Activation::Gelu => "gelu",
@@ -21,6 +26,7 @@ impl Activation {
         }
     }
 
+    /// Evaluate the activation at `x`.
     pub fn apply(&self, x: f32) -> f32 {
         match self {
             Activation::Gelu => gelu(x),
@@ -29,6 +35,7 @@ impl Activation {
         }
     }
 
+    /// Every variant, in Fig 10's plotting order.
     pub fn all() -> [Activation; 3] {
         [Activation::Gelu, Activation::Silu, Activation::Relu]
     }

@@ -7,6 +7,7 @@
 //! artifacts (see `python/compile/model.py::probe_fn`) and are only
 //! post-processed here.
 
+/// Exact-GELU / SiLU / ReLU reference implementations (f32).
 pub mod activations;
 
 /// log10 exponent of the first probe-histogram bin edge (must match

@@ -11,20 +11,34 @@
 use crate::scaling::Scheme;
 use crate::util::json::Json;
 
+/// Model shape + numerics recipe (mirrors `python/compile/configs.py`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelConfig {
+    /// Model (residual stream) width `d`.
     pub width: usize,
+    /// Number of transformer blocks.
     pub depth: usize,
+    /// Per-head dimension (heads = `width / head_dim`).
     pub head_dim: usize,
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Training sequence length (also the RoPE-table / context range).
     pub seq_len: usize,
+    /// Sequences per training batch.
     pub batch: usize,
+    /// FFN expansion factor (`ffn_width = width * ffn_ratio`).
     pub ffn_ratio: usize,
+    /// Reference width the base hyperparameters were tuned at (the
+    /// scheme's LR-transfer rules scale relative to this).
     pub d_base: usize,
-    pub variant: String,    // "mus" | "sp"
-    pub precision: String,  // "fp8" | "bf16"
-    pub residual: String,   // "fixed" | "running_mean" | "standard"
-    pub activation: String, // "gelu" | "silu" | "relu"
+    /// Parametrization variant: `"mus"` | `"sp"`.
+    pub variant: String,
+    /// Hidden-linear compute precision: `"fp8"` | `"bf16"`.
+    pub precision: String,
+    /// Residual scheme: `"fixed"` | `"running_mean"` | `"standard"`.
+    pub residual: String,
+    /// FFN activation: `"gelu"` | `"silu"` | `"relu"`.
+    pub activation: String,
 }
 
 impl Default for ModelConfig {
@@ -47,10 +61,12 @@ impl Default for ModelConfig {
 }
 
 impl ModelConfig {
+    /// Attention head count, `width / head_dim`.
     pub fn n_heads(&self) -> usize {
         self.width / self.head_dim
     }
 
+    /// FFN hidden width, `width * ffn_ratio`.
     pub fn ffn_width(&self) -> usize {
         self.width * self.ffn_ratio
     }
@@ -126,6 +142,8 @@ impl ModelConfig {
         )
     }
 
+    /// Parse a manifest/checkpoint config object (missing optional keys
+    /// take this crate's defaults).
     pub fn from_json(j: &Json) -> Option<ModelConfig> {
         Some(ModelConfig {
             width: j.get("width")?.as_usize()?,
@@ -143,6 +161,8 @@ impl ModelConfig {
         })
     }
 
+    /// Serialize as the manifest's config object ([`ModelConfig::from_json`]
+    /// round-trips it).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("width", Json::num(self.width as f64)),
@@ -160,6 +180,9 @@ impl ModelConfig {
         ])
     }
 
+    /// Reject shape/recipe combinations the interpreter cannot train
+    /// (indivisible widths, odd head dims, unknown variant/precision/
+    /// residual strings, SP with fixed residuals).
     pub fn validate(&self) -> Result<(), String> {
         if self.width % self.head_dim != 0 {
             return Err(format!("width {} not divisible by head_dim {}", self.width, self.head_dim));
@@ -189,13 +212,20 @@ impl ModelConfig {
 /// Learning-rate schedule (paper: cosine decaying to 10% of max).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Schedule {
+    /// Flat LR for the whole run.
     Constant,
     /// Cosine from peak to `final_frac * peak` over the run, with linear
     /// warmup for the first `warmup` steps.
-    Cosine { final_frac: f64, warmup: usize },
+    Cosine {
+        /// Fraction of the peak LR the cosine decays to.
+        final_frac: f64,
+        /// Linear-warmup steps before the cosine begins.
+        warmup: usize,
+    },
 }
 
 impl Schedule {
+    /// Learning rate at `step` of a `total`-step run with peak LR `base`.
     pub fn lr_at(&self, base: f64, step: usize, total: usize) -> f64 {
         match *self {
             Schedule::Constant => base,
@@ -215,6 +245,7 @@ impl Schedule {
 /// L3-side training-run description.
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
+    /// Optimizer steps to run.
     pub steps: usize,
     /// Base-width learning rate (the artifact applies transfer multipliers).
     pub lr: f64,
@@ -222,13 +253,17 @@ pub struct TrainConfig {
     pub wd: f64,
     /// Fixed residual coefficient (µS only; ignored by SP artifacts).
     pub tau: f64,
+    /// Learning-rate schedule applied to `lr`.
     pub schedule: Schedule,
+    /// Data-stream seed (the batcher is deterministic in it).
     pub seed: u64,
+    /// Parameter-init seed (fed to the `init` artifact).
     pub init_seed: i32,
     /// Abort when loss exceeds this (divergence guard).
     pub max_loss: f64,
     /// Count a "loss spike" when loss jumps by more than this over EMA.
     pub spike_threshold: f64,
+    /// Print/emit a metrics line every this many steps (CLI policy).
     pub log_every: usize,
 }
 
@@ -258,15 +293,25 @@ pub mod presets {
 
     /// Paper Table 4 rows: (name, params, width, depth, heads, batch, seq, tau).
     pub struct PaperConfig {
+        /// Row label ("1b" … "13b").
         pub name: &'static str,
+        /// Reported parameter count, billions.
         pub params_b: f64,
+        /// Training tokens, billions.
         pub tokens_b: f64,
+        /// Optimizer steps of the production run.
         pub steps: usize,
+        /// Global batch (sequences).
         pub batch: usize,
+        /// Sequence length.
         pub seq_len: usize,
+        /// Model width.
         pub width: usize,
+        /// Transformer blocks.
         pub depth: usize,
+        /// Attention heads.
         pub n_heads: usize,
+        /// Fixed-residual τ the paper trained with.
         pub tau: f64,
     }
 
@@ -307,6 +352,7 @@ pub mod presets {
         ModelConfig { width, depth, ..ModelConfig::default() }
     }
 
+    /// Recommended fixed-residual τ for a config's depth (paper Fig 9).
     pub fn tau_for(cfg: &ModelConfig) -> f64 {
         recommended_tau(cfg.depth)
     }

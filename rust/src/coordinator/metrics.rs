@@ -9,12 +9,15 @@ use crate::coordinator::trainer::{RunResult, StepMetrics};
 use crate::util::error::Result;
 use crate::util::json::Json;
 
+/// JSONL writer: one line per step plus a summary line per run.
 pub struct MetricsLogger {
     writer: BufWriter<File>,
+    /// Path of the `.jsonl` file being written.
     pub path: PathBuf,
 }
 
 impl MetricsLogger {
+    /// Create (truncate) `dir/<run_name>.jsonl`.
     pub fn create(dir: &Path, run_name: &str) -> Result<MetricsLogger> {
         create_dir_all(dir)?;
         let path = dir.join(format!("{run_name}.jsonl"));
@@ -22,6 +25,7 @@ impl MetricsLogger {
         Ok(MetricsLogger { writer: BufWriter::new(f), path })
     }
 
+    /// Append one step record.
     pub fn log_step(&mut self, m: &StepMetrics) -> Result<()> {
         let j = Json::obj(vec![
             ("kind", Json::str("step")),
@@ -35,6 +39,7 @@ impl MetricsLogger {
         Ok(())
     }
 
+    /// Append the run-summary record and flush.
     pub fn log_summary(&mut self, run_name: &str, r: &RunResult) -> Result<()> {
         let j = summary_json(run_name, r);
         writeln!(self.writer, "{j}")?;
@@ -43,6 +48,7 @@ impl MetricsLogger {
     }
 }
 
+/// Run-summary JSON object (the `train-one` stdout format).
 pub fn summary_json(run_name: &str, r: &RunResult) -> Json {
     Json::obj(vec![
         ("kind", Json::str("summary")),

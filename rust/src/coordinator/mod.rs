@@ -16,14 +16,27 @@
 //!   `runtime::InferSession` — staggered admissions, between-step
 //!   evictions, one batched decode execute per step, per-request latency
 //!   accounting.
+//! - [`transfer`]: width-transfer measurement harness — coordinate
+//!   checks (per-op RMS across widths via the telemetry sink) and
+//!   LR-transfer sweeps; backs `munit coordcheck` / `munit transfer` and
+//!   their `REPORT_*.json` outputs.
 //! - [`metrics`]: JSONL run logging.
 
+/// Binary checkpoint save/load for `TrainState`.
 pub mod checkpoint;
+/// Simulated multi-worker data parallelism.
 pub mod ddp;
+/// JSONL run logging.
 pub mod metrics;
+/// Background data generation with bounded-channel backpressure.
 pub mod pipeline;
+/// Continuous-batching inference scheduler.
 pub mod serve;
+/// Hyperparameter grid engine (threaded workers, optimal subsets).
 pub mod sweep;
+/// Single-model training loop over device-resident sessions.
 pub mod trainer;
+/// Width-transfer measurement harness (coordinate checks + LR sweeps).
+pub mod transfer;
 
 pub use trainer::{RunResult, TrainState, Trainer};

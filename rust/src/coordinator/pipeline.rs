@@ -11,6 +11,7 @@ use std::thread::JoinHandle;
 
 use crate::data::{Batcher, CorpusSpec};
 
+/// Handle to a background batch producer (bounded queue + thread).
 pub struct DataPipeline {
     rx: Receiver<Vec<i32>>,
     handle: Option<JoinHandle<()>>,
@@ -56,6 +57,7 @@ impl DataPipeline {
         self.rx.recv().ok()
     }
 
+    /// Tokens per produced batch (`batch * seq_len`).
     pub fn tokens_per_batch(&self) -> usize {
         self.tokens_per_batch
     }

@@ -27,22 +27,34 @@ use crate::util::rng::Rng;
 /// Per-request sampling policy.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Sampling {
+    /// Deterministic argmax (lowest index on ties).
     Greedy,
     /// Seeded top-k at a temperature: deterministic per request,
     /// independent of batch composition (each request owns its RNG).
-    TopK { k: usize, temperature: f32, seed: u64 },
+    TopK {
+        /// Candidates kept per draw (`k <= 1` degenerates to greedy).
+        k: usize,
+        /// Softmax temperature over the kept candidates.
+        temperature: f32,
+        /// Per-request RNG seed.
+        seed: u64,
+    },
 }
 
 /// One generation request.
 #[derive(Debug, Clone)]
 pub struct Request {
+    /// Caller-chosen request id (echoed in the completion).
     pub id: u64,
+    /// Prompt token ids.
     pub prompt: Vec<i32>,
+    /// Generation budget (the request finishes when it is reached).
     pub max_new_tokens: usize,
     /// Serve step at which the request becomes visible to the scheduler.
     pub arrival_step: usize,
     /// Generating this token finishes the request early (eviction).
     pub stop_token: Option<i32>,
+    /// Per-request sampling policy.
     pub sampling: Sampling,
 }
 
@@ -64,13 +76,19 @@ impl Default for ServeConfig {
 /// One finished request.
 #[derive(Debug, Clone)]
 pub struct Completion {
+    /// The originating request's id.
     pub id: u64,
+    /// Generated tokens (stop token included when one fired).
     pub tokens: Vec<i32>,
+    /// Prompt length of the originating request.
     pub prompt_len: usize,
     /// True when a stop token ended generation before `max_new_tokens`.
     pub stopped_early: bool,
+    /// Scheduler step the request became visible.
     pub arrival_step: usize,
+    /// Scheduler step the request was admitted (prefill ran).
     pub admitted_step: usize,
+    /// Scheduler step the request finished.
     pub finished_step: usize,
     /// Wall time from admission (prefill start) to the first token.
     pub first_token_latency: Duration,
@@ -81,10 +99,15 @@ pub struct Completion {
 /// Aggregate outcome of draining a request set.
 #[derive(Debug, Clone)]
 pub struct ServeReport {
+    /// Every finished request, in completion order.
     pub completions: Vec<Completion>,
+    /// Scheduler steps taken to drain the request set.
     pub steps: usize,
+    /// Total prompt tokens prefilled.
     pub prefill_tokens: u64,
+    /// Total tokens decoded.
     pub decode_tokens: u64,
+    /// Wall time of the whole drain.
     pub wall: Duration,
     /// Generated tokens per second over the time actually spent in
     /// decode executes (from [`InferSession`]'s per-phase accounting).

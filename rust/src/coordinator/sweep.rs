@@ -20,18 +20,27 @@ use crate::err;
 use crate::runtime::Backend;
 use crate::util::error::Result;
 
+/// One grid coordinate: (learning rate, weight decay, residual τ).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SweepPoint {
+    /// Base learning rate η.
     pub lr: f64,
+    /// Fully-decoupled weight decay λ.
     pub wd: f64,
+    /// Fixed-residual coefficient τ.
     pub tau: f64,
 }
 
+/// Result of training one grid point.
 #[derive(Debug, Clone)]
 pub struct SweepOutcome {
+    /// The grid coordinate trained.
     pub point: SweepPoint,
+    /// Tail-averaged final loss.
     pub final_loss: f64,
+    /// Divergence-guard verdict.
     pub diverged: bool,
+    /// Loss spikes counted during the run.
     pub spikes: usize,
 }
 

@@ -20,22 +20,34 @@ pub use crate::runtime::TrainState;
 /// Per-step record.
 #[derive(Debug, Clone)]
 pub struct StepMetrics {
+    /// Step index (0-based).
     pub step: usize,
+    /// Mean next-token loss of the step's batch.
     pub loss: f32,
+    /// Global gradient norm.
     pub gnorm: f32,
+    /// Learning rate the schedule applied this step.
     pub lr: f64,
+    /// Wall time of the step (host side).
     pub step_time: Duration,
 }
 
 /// Outcome of a training run.
 #[derive(Debug, Clone)]
 pub struct RunResult {
+    /// Per-step losses (length = `steps_done`).
     pub losses: Vec<f32>,
+    /// Per-step gradient norms.
     pub gnorms: Vec<f32>,
+    /// Steps completed (shorter than requested on divergence).
     pub steps_done: usize,
+    /// Did the divergence guard fire?
     pub diverged: bool,
+    /// Loss spikes counted over the run.
     pub spikes: usize,
+    /// Total wall time.
     pub wall: Duration,
+    /// Training throughput over the run.
     pub tokens_per_sec: f64,
 }
 
@@ -56,12 +68,14 @@ impl RunResult {
 /// the device-resident state, the trainer carries schedule/guard logic.
 pub struct Trainer<'b> {
     backend: &'b dyn Backend,
+    /// The model configuration this trainer drives.
     pub cfg: ModelConfig,
     train_name: String,
     n_params: usize,
 }
 
 impl<'b> Trainer<'b> {
+    /// Resolve and validate the config's artifacts on `backend`.
     pub fn new(backend: &'b dyn Backend, cfg: &ModelConfig) -> Result<Trainer<'b>> {
         // Session::new performs artifact resolution + ABI validation.
         let probe = Session::new(backend, cfg)?;
@@ -73,14 +87,17 @@ impl<'b> Trainer<'b> {
         })
     }
 
+    /// The backend this trainer resolves against.
     pub fn backend(&self) -> &'b dyn Backend {
         self.backend
     }
 
+    /// Parameter-tensor count of the model (state = 2x this).
     pub fn n_params_tensors(&self) -> usize {
         self.n_params
     }
 
+    /// Name of the resolved `train_step` artifact.
     pub fn train_artifact(&self) -> &str {
         &self.train_name
     }

@@ -23,6 +23,7 @@ use crate::util::rng::{Rng, Zipf};
 /// Corpus generation parameters.
 #[derive(Debug, Clone)]
 pub struct CorpusSpec {
+    /// Vocabulary size (token ids are `0..vocab`).
     pub vocab: usize,
     /// Zipf exponent for rank-frequency (1.0-1.2 is text-like).
     pub zipf_s: f64,
@@ -104,6 +105,8 @@ pub struct TokenStream {
 }
 
 impl TokenStream {
+    /// Stream for shard `shard` of `n_shards` under `seed` (disjoint,
+    /// reproducible shards — the DDP loading property).
     pub fn new(spec: CorpusSpec, seed: u64, shard: usize, n_shards: usize) -> Self {
         assert!(shard < n_shards.max(1));
         let rng = Rng::new(seed).fork(0x5AD0 + shard as u64);
@@ -111,6 +114,7 @@ impl TokenStream {
         TokenStream { spec, zipf, rng, recent: Vec::new(), prev: 0 }
     }
 
+    /// Draw the next token (repetition / global-Zipf / bigram mixture).
     pub fn next_token(&mut self) -> u32 {
         let tok = if !self.recent.is_empty() && self.rng.f64() < self.spec.repeat_p {
             // burst repetition: copy from the recent window
@@ -132,6 +136,7 @@ impl TokenStream {
         tok
     }
 
+    /// Fill a buffer with consecutive stream tokens.
     pub fn fill(&mut self, out: &mut [i32]) {
         for v in out.iter_mut() {
             *v = self.next_token() as i32;
@@ -142,12 +147,15 @@ impl TokenStream {
 /// Deterministic batch producer: yields `[batch * seq_len]` i32 buffers.
 pub struct Batcher {
     stream: TokenStream,
+    /// Sequences per batch.
     pub batch: usize,
+    /// Tokens per sequence.
     pub seq_len: usize,
     produced: usize,
 }
 
 impl Batcher {
+    /// Batcher over one shard's [`TokenStream`].
     pub fn new(spec: CorpusSpec, seed: u64, shard: usize, n_shards: usize,
                batch: usize, seq_len: usize) -> Self {
         Batcher {
@@ -158,6 +166,7 @@ impl Batcher {
         }
     }
 
+    /// Produce the next `[batch * seq_len]` token buffer.
     pub fn next_batch(&mut self) -> Vec<i32> {
         let mut out = vec![0i32; self.batch * self.seq_len];
         self.stream.fill(&mut out);
@@ -165,10 +174,12 @@ impl Batcher {
         out
     }
 
+    /// Batches produced so far.
     pub fn batches_produced(&self) -> usize {
         self.produced
     }
 
+    /// Tokens per batch (`batch * seq_len`).
     pub fn tokens_per_batch(&self) -> usize {
         self.batch * self.seq_len
     }

@@ -23,13 +23,21 @@ use crate::runtime::{scalar_f32, tensor_i32, Backend, InferSession, Tensor, Tens
 use crate::util::error::{Context, Result};
 use crate::util::rng::Rng;
 
+/// Aggregate scores of the in-context eval suite.
 #[derive(Debug, Clone, Default)]
 pub struct EvalReport {
+    /// Greedy next-token accuracy on held-out shards.
     pub next_token_acc: f64,
+    /// Mean next-token negative log-likelihood.
     pub avg_nll: f64,
+    /// Accuracy restricted to positions whose modal continuation is
+    /// defined by the corpus bigram table.
     pub bigram_cloze_acc: f64,
+    /// Accuracy on positions whose target already appeared recently.
     pub repeat_acc: f64,
+    /// Accuracy on the repeated half of `prefix ++ prefix` prompts.
     pub induction_acc: f64,
+    /// Held-out positions behind `next_token_acc` / `avg_nll`.
     pub positions_scored: usize,
 }
 

@@ -36,7 +36,17 @@
 //!     backend), simulated DDP, checkpoints, continuous-batching serve
 //!     loop (`coordinator::serve`: staggered admissions, between-step
 //!     evictions, one batched decode execute per step, per-request
-//!     latency + tokens/sec accounting), metrics, data pipeline.
+//!     latency + tokens/sec accounting), metrics, data pipeline, and the
+//!     **measurement layer**: [`coordinator::transfer`] runs the paper's
+//!     coordinate checks (per-op RMS O(1) across width for µS, drift for
+//!     SP) and LR-transfer sweeps (`munit coordcheck` / `munit transfer`
+//!     → `REPORT_coordcheck.json` / `REPORT_transfer.json`).
+//!   - [`telemetry`]: thread-scoped numerics sink — when a
+//!     [`telemetry::capture`] is active, the block pipeline records per-op
+//!     forward/backward RMS for every tensor in the tower and
+//!     [`fp8::CastHealth`] counters (underflow/saturation/subnormal rates)
+//!     for every FP8-quantized operand; zero overhead and bit-identical
+//!     training when off (see `docs/NUMERICS.md`).
 //!   - [`config`], [`data`], [`scaling`], [`analysis`], [`perfmodel`],
 //!     [`eval`], [`repro`], [`util`]: configs/presets, synthetic corpus,
 //!     parametrization rules, numerics analyses, throughput model, eval
@@ -64,15 +74,36 @@
     clippy::new_without_default,
     clippy::uninlined_format_args
 )]
+// Every public item carries documentation; CI enforces it via
+// `cargo doc --no-deps` with RUSTDOCFLAGS="-D warnings" (and clippy's
+// -D warnings promotes this lint too).
+#![warn(missing_docs)]
 
+/// Numerics analyses: attention variance (Fig 2), value-token correlation
+/// (Fig 3), activation-function FP8 underflow (Fig 10), outlier metrics.
 pub mod analysis;
+/// Typed configuration: model shapes, training runs, paper presets.
 pub mod config;
+/// L3 training framework: trainer, sweeps, DDP, checkpoints, serve loop,
+/// metrics, data pipeline, and the width-transfer measurement harness.
 pub mod coordinator;
+/// Deterministic synthetic corpus (Zipfian bigram streams) + batching.
 pub mod data;
+/// In-context evaluation suite (Table 5 substitute) and NLL scoring.
 pub mod eval;
+/// Software E4M3/E5M2/BF16 emulation, bit-exact with `ml_dtypes`.
 pub mod fp8;
+/// Analytic H100 throughput model (Fig 8) + decode roofline.
 pub mod perfmodel;
+/// Paper figure/table reproduction drivers.
 pub mod repro;
+/// Execution runtime: `Backend` trait, sessions, reference interpreter,
+/// inference engine, KV cache, GEMM/attention kernels.
 pub mod runtime;
+/// Parametrization & hyperparameter-transfer rule library (Tables 1-3).
 pub mod scaling;
+/// Per-op RMS + FP8 cast-health telemetry (thread-scoped capture sink).
+pub mod telemetry;
+/// Offline substrates: JSON, RNG, errors, stats, tables, bench harness,
+/// property testing, deterministic scoped-thread parallelism.
 pub mod util;

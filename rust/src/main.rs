@@ -1,6 +1,8 @@
 //! `munit` — µnit Scaling training framework CLI (L3 leader entrypoint).
 //!
-//! Subcommands:
+//! Subcommands (the dispatch table `COMMANDS` below is the single source
+//! of truth — the unknown-command help is generated from it, so the list
+//! cannot go stale):
 //!   info                       list artifacts, platform, presets
 //!   train      --config NAME   train one model, JSONL metrics to results/
 //!   train-one  --config NAME   one run, JSON summary on stdout (scripting)
@@ -15,11 +17,17 @@
 //!                              synthetic request set (--requests N
 //!                              --max-batch B --steps S), latency report
 //!   bench-step --config NAME   per-step latency + host-transfer breakdown
+//!   coordcheck                 per-op RMS coordinate check across widths
+//!                              (µS O(1) band vs SP drift) via the
+//!                              telemetry sink → REPORT_coordcheck.json
+//!   transfer                   loss-vs-LR curves per width (µS best-LR
+//!                              width-stability) → REPORT_transfer.json
 //!
 //! Flags: --artifacts DIR (default ./artifacts), --results DIR (default
 //! ./results), --backend auto|reference|pjrt (default auto), --fast
-//! (shrink steps/grids). Without AOT artifacts (or without the `pjrt`
-//! feature) everything runs on the pure-Rust reference backend.
+//! (shrink steps/grids; coordcheck/transfer also take --widths a,b,c and
+//! --steps N). Without AOT artifacts (or without the `pjrt` feature)
+//! everything runs on the pure-Rust reference backend.
 
 #![allow(clippy::uninlined_format_args)]
 
@@ -27,7 +35,7 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 use munit::config::{ModelConfig, TrainConfig};
-use munit::coordinator::{ddp, metrics::MetricsLogger, sweep, trainer::Trainer};
+use munit::coordinator::{ddp, metrics::MetricsLogger, sweep, trainer::Trainer, transfer};
 use munit::data::Batcher;
 use munit::repro::{self, corpus_for, proxy_tc, Ctx};
 use munit::runtime::{open_backend, Backend, ReferenceBackend};
@@ -87,6 +95,58 @@ impl Args {
     }
 }
 
+/// Parsed invocation: arguments plus the artifact/results directories.
+/// Every command handler receives this (and only this), so the dispatch
+/// table below can hold plain `fn` pointers.
+struct Cli {
+    args: Args,
+    artifacts: PathBuf,
+    results: PathBuf,
+}
+
+impl Cli {
+    fn backend(&self) -> Result<Box<dyn Backend>> {
+        backend_for(&self.args, &self.artifacts)
+    }
+
+    /// Resolve `--config NAME` against the backend's catalogue.
+    fn named_config(&self, backend: &dyn Backend) -> Result<ModelConfig> {
+        let name = self.args.get("config").context("--config required")?;
+        config_by_name(backend, name)
+    }
+}
+
+/// One CLI subcommand: its name IS the dispatch key, and the
+/// unknown-command help is generated from this table (regression: the
+/// old hand-maintained help string had drifted — it omitted `train-one`).
+struct Cmd {
+    name: &'static str,
+    run: fn(&Cli) -> Result<()>,
+}
+
+/// The dispatch table. Adding a command here is the whole registration.
+const COMMANDS: &[Cmd] = &[
+    Cmd { name: "info", run: cmd_info },
+    Cmd { name: "train", run: cmd_train },
+    Cmd { name: "train-one", run: cmd_train_one },
+    Cmd { name: "sweep", run: cmd_sweep },
+    Cmd { name: "ddp", run: cmd_ddp },
+    Cmd { name: "figure", run: cmd_repro },
+    Cmd { name: "table", run: cmd_repro },
+    Cmd { name: "e2e", run: cmd_e2e },
+    Cmd { name: "generate", run: cmd_generate },
+    Cmd { name: "serve", run: cmd_serve },
+    Cmd { name: "bench-step", run: cmd_bench_step },
+    Cmd { name: "coordcheck", run: cmd_coordcheck },
+    Cmd { name: "transfer", run: cmd_transfer },
+];
+
+/// Space-separated command list for help/error text — derived from
+/// [`COMMANDS`] so it cannot go stale.
+fn command_list() -> String {
+    COMMANDS.iter().map(|c| c.name).collect::<Vec<_>>().join(" ")
+}
+
 /// Open the execution backend per --backend (auto|reference|pjrt).
 fn backend_for(args: &Args, artifacts: &Path) -> Result<Box<dyn Backend>> {
     match args.get("backend").unwrap_or("auto") {
@@ -125,169 +185,231 @@ fn config_by_name(backend: &dyn Backend, name: &str) -> Result<ModelConfig> {
 
 fn run() -> Result<()> {
     let args = Args::parse();
-    let artifacts = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
-    let results = PathBuf::from(args.get("results").unwrap_or("results"));
-    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("info");
-
-    match cmd {
-        "info" => {
-            let backend = backend_for(&args, &artifacts)?;
-            println!("platform: {}", backend.platform());
-            println!("artifacts ({}):", backend.manifest().artifacts.len());
-            let mut names: Vec<String> = backend
-                .manifest()
-                .artifacts
-                .iter()
-                .filter_map(|a| a.config.as_ref())
-                .map(|c| c.name())
-                .collect();
-            names.sort();
-            names.dedup();
-            for n in names {
-                println!("  {n}");
-            }
-            Ok(())
-        }
-        "train" => {
-            let backend = backend_for(&args, &artifacts)?;
-            let name = args.get("config").context("--config required")?;
-            let cfg = config_by_name(backend.as_ref(), name)?;
-            let tc = tc_from_args(&args, &cfg);
-            let trainer = Trainer::new(backend.as_ref(), &cfg)?;
-            let mut batcher =
-                Batcher::new(corpus_for(&cfg), tc.seed, 0, 1, cfg.batch, cfg.seq_len);
-            let mut log = MetricsLogger::create(&results, &format!("train_{name}"))?;
-            let log_every = tc.log_every;
-            let r = trainer.run_with(&tc, &mut batcher, |m, _| {
-                let _ = log.log_step(m);
-                if m.step % log_every == 0 {
-                    println!(
-                        "step {:>5} loss {:.4} gnorm {:.3} lr {:.5}",
-                        m.step, m.loss, m.gnorm, m.lr
-                    );
-                }
-            })?;
-            log.log_summary(name, &r)?;
-            println!(
-                "done: {} steps, final loss {:.4}, {:.0} tok/s{}",
-                r.steps_done,
-                r.final_loss(10),
-                r.tokens_per_sec,
-                if r.diverged { " [DIVERGED]" } else { "" }
-            );
-            Ok(())
-        }
-        "train-one" => {
-            let backend = backend_for(&args, &artifacts)?;
-            let name = args.get("config").context("--config required")?;
-            let cfg = config_by_name(backend.as_ref(), name)?;
-            let tc = tc_from_args(&args, &cfg);
-            let trainer = Trainer::new(backend.as_ref(), &cfg)?;
-            let mut batcher =
-                Batcher::new(corpus_for(&cfg), tc.seed, 0, 1, cfg.batch, cfg.seq_len);
-            let r = trainer.run(&tc, &mut batcher)?;
-            println!("{}", munit::coordinator::metrics::summary_json(name, &r));
-            Ok(())
-        }
-        "sweep" => {
-            let backend = backend_for(&args, &artifacts)?;
-            let name = args.get("config").context("--config required")?;
-            let cfg = config_by_name(backend.as_ref(), name)?;
-            let tc = tc_from_args(&args, &cfg);
-            let (lo, hi) = parse_range(args.get("lr-exp").unwrap_or("-9:-5"))?;
-            let lrs = sweep::pow2_axis(lo, hi);
-            let wds: Vec<f64> = [0.5, 1.0, 4.0].iter().map(|m| m * tc.wd).collect();
-            let taus = vec![tc.tau];
-            let points = sweep::grid(&lrs, &wds, &taus);
-            println!("sweep: {} points over {}", points.len(), name);
-            // --workers N runs N in-process threads over the shared
-            // backend (--procs kept as a legacy alias)
-            let workers = args.usize_or("workers", args.usize_or("procs", 1));
-            let corpus = corpus_for(&cfg);
-            let outcomes = if workers > 1 {
-                sweep::run_parallel(backend.as_ref(), &cfg, &tc, &corpus, &points, workers, true)?
-            } else {
-                sweep::run_sequential(backend.as_ref(), &cfg, &tc, &corpus, &points, true)?
-            };
-            if let Some(b) = sweep::best(&outcomes) {
-                println!(
-                    "best: lr=2^{:.0} wd={:.5} tau={:.2} loss={:.4}",
-                    b.point.lr.log2(),
-                    b.point.wd,
-                    b.point.tau,
-                    b.final_loss
-                );
-                for o in sweep::optimal_subset(&outcomes, 0.0025) {
-                    println!(
-                        "  within 0.25%: lr=2^{:.0} wd={:.5} tau={:.2} loss={:.4}",
-                        o.point.lr.log2(),
-                        o.point.wd,
-                        o.point.tau,
-                        o.final_loss
-                    );
-                }
-            } else {
-                println!("all runs diverged");
-            }
-            Ok(())
-        }
-        "ddp" => {
-            let backend = backend_for(&args, &artifacts)?;
-            let name = args.get("config").context("--config required")?;
-            let cfg = config_by_name(backend.as_ref(), name)?;
-            let tc = tc_from_args(&args, &cfg);
-            let workers = args.usize_or("workers", 2);
-            let r = ddp::train_ddp(backend.as_ref(), &cfg, &tc, &corpus_for(&cfg), workers)?;
-            println!(
-                "ddp x{}: {} steps, final loss {:.4}, {:.0} tok/s (aggregate)",
-                workers,
-                r.steps_done,
-                r.final_loss(10),
-                r.tokens_per_sec
-            );
-            Ok(())
-        }
-        "figure" | "table" => {
-            let which = args.positional.get(1).context("which figure/table?")?.clone();
-            let ctx = Ctx::new(&artifacts, &results, args.has("fast"))?;
-            let report = dispatch_repro(&ctx, &which)?;
-            println!("{report}");
-            std::fs::create_dir_all(results.join("reports"))?;
-            std::fs::write(results.join("reports").join(format!("{which}.txt")), &report)?;
-            Ok(())
-        }
-        "e2e" => {
-            let ctx = Ctx::new(&artifacts, &results, args.has("fast"))?;
-            let steps = args.usize_or("steps", if args.has("fast") { 60 } else { 300 });
-            let report = e2e(&ctx, steps)?;
-            println!("{report}");
-            std::fs::create_dir_all(results.join("reports"))?;
-            std::fs::write(results.join("reports").join("e2e.txt"), &report)?;
-            Ok(())
-        }
-        "generate" => {
-            let backend = backend_for(&args, &artifacts)?;
-            let name = args.get("config").context("--config required")?;
-            let cfg = config_by_name(backend.as_ref(), name)?;
-            generate_cmd(backend.as_ref(), &cfg, &args)
-        }
-        "serve" => {
-            let backend = backend_for(&args, &artifacts)?;
-            let name = args.get("config").context("--config required")?;
-            let cfg = config_by_name(backend.as_ref(), name)?;
-            serve_cmd(backend.as_ref(), &cfg, &args)
-        }
-        "bench-step" => {
-            let backend = backend_for(&args, &artifacts)?;
-            let name = args.get("config").context("--config required")?;
-            let cfg = config_by_name(backend.as_ref(), name)?;
-            bench_step(backend.as_ref(), &cfg, args.usize_or("steps", 20))
-        }
-        other => Err(munit::err!(
-            "unknown command '{other}' (try: info train sweep ddp figure table e2e \
-             generate serve bench-step)"
-        )),
+    let cli = Cli {
+        artifacts: PathBuf::from(args.get("artifacts").unwrap_or("artifacts")),
+        results: PathBuf::from(args.get("results").unwrap_or("results")),
+        args,
+    };
+    let cmd = cli.args.positional.first().map(|s| s.as_str()).unwrap_or("info");
+    match COMMANDS.iter().find(|c| c.name == cmd) {
+        Some(c) => (c.run)(&cli),
+        None => Err(munit::err!("unknown command '{cmd}' (try: {})", command_list())),
     }
+}
+
+fn cmd_info(cli: &Cli) -> Result<()> {
+    let backend = cli.backend()?;
+    println!("platform: {}", backend.platform());
+    println!("commands: {}", command_list());
+    println!("artifacts ({}):", backend.manifest().artifacts.len());
+    let mut names: Vec<String> = backend
+        .manifest()
+        .artifacts
+        .iter()
+        .filter_map(|a| a.config.as_ref())
+        .map(|c| c.name())
+        .collect();
+    names.sort();
+    names.dedup();
+    for n in names {
+        println!("  {n}");
+    }
+    Ok(())
+}
+
+fn cmd_train(cli: &Cli) -> Result<()> {
+    let backend = cli.backend()?;
+    let cfg = cli.named_config(backend.as_ref())?;
+    let name = cfg.name();
+    let tc = tc_from_args(&cli.args, &cfg);
+    let trainer = Trainer::new(backend.as_ref(), &cfg)?;
+    let mut batcher = Batcher::new(corpus_for(&cfg), tc.seed, 0, 1, cfg.batch, cfg.seq_len);
+    let mut log = MetricsLogger::create(&cli.results, &format!("train_{name}"))?;
+    let log_every = tc.log_every;
+    let r = trainer.run_with(&tc, &mut batcher, |m, _| {
+        let _ = log.log_step(m);
+        if m.step % log_every == 0 {
+            println!(
+                "step {:>5} loss {:.4} gnorm {:.3} lr {:.5}",
+                m.step, m.loss, m.gnorm, m.lr
+            );
+        }
+    })?;
+    log.log_summary(&name, &r)?;
+    println!(
+        "done: {} steps, final loss {:.4}, {:.0} tok/s{}",
+        r.steps_done,
+        r.final_loss(10),
+        r.tokens_per_sec,
+        if r.diverged { " [DIVERGED]" } else { "" }
+    );
+    Ok(())
+}
+
+fn cmd_train_one(cli: &Cli) -> Result<()> {
+    let backend = cli.backend()?;
+    let cfg = cli.named_config(backend.as_ref())?;
+    let tc = tc_from_args(&cli.args, &cfg);
+    let trainer = Trainer::new(backend.as_ref(), &cfg)?;
+    let mut batcher = Batcher::new(corpus_for(&cfg), tc.seed, 0, 1, cfg.batch, cfg.seq_len);
+    let r = trainer.run(&tc, &mut batcher)?;
+    println!("{}", munit::coordinator::metrics::summary_json(&cfg.name(), &r));
+    Ok(())
+}
+
+fn cmd_sweep(cli: &Cli) -> Result<()> {
+    let backend = cli.backend()?;
+    let cfg = cli.named_config(backend.as_ref())?;
+    let tc = tc_from_args(&cli.args, &cfg);
+    let (lo, hi) = parse_range(cli.args.get("lr-exp").unwrap_or("-9:-5"))?;
+    let lrs = sweep::pow2_axis(lo, hi);
+    let wds: Vec<f64> = [0.5, 1.0, 4.0].iter().map(|m| m * tc.wd).collect();
+    let taus = vec![tc.tau];
+    let points = sweep::grid(&lrs, &wds, &taus);
+    println!("sweep: {} points over {}", points.len(), cfg.name());
+    // --workers N runs N in-process threads over the shared backend
+    // (--procs kept as a legacy alias)
+    let workers = cli.args.usize_or("workers", cli.args.usize_or("procs", 1));
+    let corpus = corpus_for(&cfg);
+    let outcomes = if workers > 1 {
+        sweep::run_parallel(backend.as_ref(), &cfg, &tc, &corpus, &points, workers, true)?
+    } else {
+        sweep::run_sequential(backend.as_ref(), &cfg, &tc, &corpus, &points, true)?
+    };
+    if let Some(b) = sweep::best(&outcomes) {
+        println!(
+            "best: lr=2^{:.0} wd={:.5} tau={:.2} loss={:.4}",
+            b.point.lr.log2(),
+            b.point.wd,
+            b.point.tau,
+            b.final_loss
+        );
+        for o in sweep::optimal_subset(&outcomes, 0.0025) {
+            println!(
+                "  within 0.25%: lr=2^{:.0} wd={:.5} tau={:.2} loss={:.4}",
+                o.point.lr.log2(),
+                o.point.wd,
+                o.point.tau,
+                o.final_loss
+            );
+        }
+    } else {
+        println!("all runs diverged");
+    }
+    Ok(())
+}
+
+fn cmd_ddp(cli: &Cli) -> Result<()> {
+    let backend = cli.backend()?;
+    let cfg = cli.named_config(backend.as_ref())?;
+    let tc = tc_from_args(&cli.args, &cfg);
+    let workers = cli.args.usize_or("workers", 2);
+    let r = ddp::train_ddp(backend.as_ref(), &cfg, &tc, &corpus_for(&cfg), workers)?;
+    println!(
+        "ddp x{}: {} steps, final loss {:.4}, {:.0} tok/s (aggregate)",
+        workers,
+        r.steps_done,
+        r.final_loss(10),
+        r.tokens_per_sec
+    );
+    Ok(())
+}
+
+/// Shared handler of `figure` and `table` (the repro driver key decides).
+fn cmd_repro(cli: &Cli) -> Result<()> {
+    let which = cli.args.positional.get(1).context("which figure/table?")?.clone();
+    let ctx = Ctx::new(&cli.artifacts, &cli.results, cli.args.has("fast"))?;
+    let report = dispatch_repro(&ctx, &which)?;
+    println!("{report}");
+    save_report(&cli.results, &format!("{which}.txt"), &report)
+}
+
+fn cmd_e2e(cli: &Cli) -> Result<()> {
+    let ctx = Ctx::new(&cli.artifacts, &cli.results, cli.args.has("fast"))?;
+    let steps = cli.args.usize_or("steps", if cli.args.has("fast") { 60 } else { 300 });
+    let report = e2e(&ctx, steps)?;
+    println!("{report}");
+    save_report(&cli.results, "e2e.txt", &report)
+}
+
+fn cmd_generate(cli: &Cli) -> Result<()> {
+    let backend = cli.backend()?;
+    let cfg = cli.named_config(backend.as_ref())?;
+    generate_cmd(backend.as_ref(), &cfg, &cli.args)
+}
+
+fn cmd_serve(cli: &Cli) -> Result<()> {
+    let backend = cli.backend()?;
+    let cfg = cli.named_config(backend.as_ref())?;
+    serve_cmd(backend.as_ref(), &cfg, &cli.args)
+}
+
+fn cmd_bench_step(cli: &Cli) -> Result<()> {
+    let backend = cli.backend()?;
+    let cfg = cli.named_config(backend.as_ref())?;
+    bench_step(backend.as_ref(), &cfg, cli.args.usize_or("steps", 20))
+}
+
+/// Harness shape for coordcheck/transfer: `--fast` picks the smoke
+/// config; `--widths a,b,c` and `--steps N` override either.
+fn harness_from_args(args: &Args) -> Result<transfer::HarnessConfig> {
+    let mut hc = if args.has("fast") {
+        transfer::HarnessConfig::smoke()
+    } else {
+        transfer::HarnessConfig::standard()
+    };
+    if let Some(ws) = args.get("widths") {
+        let mut widths = ws
+            .split(',')
+            .map(|w| w.trim().parse::<usize>().map_err(|e| munit::err!("bad width '{w}': {e}")))
+            .collect::<Result<Vec<_>>>()?;
+        // the harness requires ascending unique widths (widths[0] is µS's
+        // d_base and the shift statistics are signed smallest→largest)
+        widths.sort_unstable();
+        widths.dedup();
+        hc.widths = widths;
+    }
+    if let Some(steps) = args.get("steps") {
+        let steps: usize = steps.parse()?;
+        hc.coord_steps = steps;
+        hc.transfer_steps = steps;
+    }
+    Ok(hc)
+}
+
+fn cmd_coordcheck(cli: &Cli) -> Result<()> {
+    let backend = cli.backend()?;
+    let hc = harness_from_args(&cli.args)?;
+    let report = transfer::coordcheck(backend.as_ref(), &hc)?;
+    let text = transfer::coordcheck_table(&report);
+    println!("{text}");
+    save_report(&cli.results, "coordcheck.txt", &text)?;
+    let json = transfer::coordcheck_json(&report);
+    std::fs::write("REPORT_coordcheck.json", format!("{json}\n"))
+        .context("writing REPORT_coordcheck.json")?;
+    eprintln!("wrote REPORT_coordcheck.json");
+    Ok(())
+}
+
+fn cmd_transfer(cli: &Cli) -> Result<()> {
+    let backend = cli.backend()?;
+    let hc = harness_from_args(&cli.args)?;
+    let report = transfer::lr_transfer(backend.as_ref(), &hc)?;
+    let text = transfer::transfer_table(&report);
+    println!("{text}");
+    save_report(&cli.results, "transfer.txt", &text)?;
+    let json = transfer::transfer_json(&report);
+    std::fs::write("REPORT_transfer.json", format!("{json}\n"))
+        .context("writing REPORT_transfer.json")?;
+    eprintln!("wrote REPORT_transfer.json");
+    Ok(())
+}
+
+/// Persist a text report under `results/reports/`.
+fn save_report(results: &Path, file: &str, text: &str) -> Result<()> {
+    std::fs::create_dir_all(results.join("reports"))?;
+    std::fs::write(results.join("reports").join(file), text)?;
+    Ok(())
 }
 
 /// Train `--steps` quick steps so generation isn't pure noise, then hand

@@ -25,8 +25,11 @@ use crate::runtime::{block, kvcache};
 /// Hardware description (H100 SXM defaults).
 #[derive(Debug, Clone)]
 pub struct Hw {
+    /// Peak dense BF16 tensor-core TFLOP/s.
     pub bf16_tflops: f64,
+    /// Peak dense FP8 tensor-core TFLOP/s.
     pub fp8_tflops: f64,
+    /// Peak HBM bandwidth, TB/s.
     pub hbm_tbps: f64,
     /// Achievable fraction of peak for large GEMMs.
     pub gemm_eff_bf16: f64,
@@ -38,6 +41,7 @@ pub struct Hw {
     pub launch_s: f64,
     /// Allreduce bus bandwidth per GPU (NVLink ring), bytes/s.
     pub allreduce_bps: f64,
+    /// GPUs in the data-parallel group.
     pub n_gpus: usize,
 }
 
@@ -66,6 +70,7 @@ impl Default for Hw {
 /// Precision/scaling mode of a training run (Fig 8's three bars).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Mode {
+    /// BF16 mixed precision (no FP8 anywhere).
     Bf16,
     /// FP8 with TransformerEngine-style dynamic (amax) scaling.
     Fp8Te,
@@ -74,6 +79,7 @@ pub enum Mode {
 }
 
 impl Mode {
+    /// Bar label used by the Fig 8 tables.
     pub fn label(&self) -> &'static str {
         match self {
             Mode::Bf16 => "BF16",
@@ -86,16 +92,24 @@ impl Mode {
 /// Per-step time breakdown (seconds).
 #[derive(Debug, Clone)]
 pub struct StepTime {
+    /// Hidden-linear GEMMs (the FP8-eligible compute).
     pub gemm: f64,
+    /// Attention score/value + embedding/head GEMMs (always BF16).
     pub attention: f64,
+    /// FP8 operand cast passes (zero in BF16 mode).
     pub cast: f64,
+    /// TE-only per-tensor amax reductions.
     pub amax: f64,
+    /// TE-only per-tensor scale bookkeeping launches.
     pub bookkeeping: f64,
+    /// Norms/residuals/RoPE/softmax/activation/optimizer memory traffic.
     pub elementwise: f64,
+    /// Gradient allreduce over the DDP group.
     pub allreduce: f64,
 }
 
 impl StepTime {
+    /// Total modeled step time (sum of every term).
     pub fn total(&self) -> f64 {
         self.gemm + self.attention + self.cast + self.amax + self.bookkeeping
             + self.elementwise + self.allreduce
@@ -190,16 +204,22 @@ pub fn throughput(hw: &Hw, p: &PaperConfig, mode: Mode) -> f64 {
 /// One Fig 8 row.
 #[derive(Debug, Clone)]
 pub struct Fig8Row {
+    /// Model-size label (Table 4 row name).
     pub size: &'static str,
+    /// Cluster tokens/s under BF16.
     pub bf16: f64,
+    /// Cluster tokens/s under TE-style dynamic FP8.
     pub te: f64,
+    /// Cluster tokens/s under µS static FP8.
     pub mus: f64,
 }
 
 impl Fig8Row {
+    /// µS speedup over the BF16 baseline (paper: 25-33%).
     pub fn mus_over_bf16(&self) -> f64 {
         self.mus / self.bf16
     }
+    /// µS speedup over TE dynamic scaling (paper: 1-6%).
     pub fn mus_over_te(&self) -> f64 {
         self.mus / self.te
     }

@@ -60,10 +60,12 @@ fn sp_proxy(width: usize, depth: usize) -> ModelConfig {
     }
 }
 
-/// Default per-run hyperparameters for proxy training (found by the fig6
+/// Default µS base learning rate for proxy training (found by the fig6
 /// sweep; stable for µS by construction).
 pub const MUS_LR: f64 = 1.0 / 64.0;
+/// Default SP base learning rate for proxy training.
 pub const SP_LR: f64 = 1.0 / 256.0;
+/// Default weight decay for proxy training.
 pub const WD: f64 = 2f64 / 16384.0;
 
 /// Fig 2: attention output sigma vs sequence position — iid simulation

@@ -3,7 +3,9 @@
 //! aligned table mirroring the paper's rows/series, and persists raw data
 //! under `results/` (JSON) so reruns are incremental.
 
+/// One driver per paper figure (fig2..fig12).
 pub mod figures;
+/// One driver per paper table (table2..table5 / fig1).
 pub mod tables;
 
 use std::path::{Path, PathBuf};
@@ -18,22 +20,27 @@ use crate::util::json::Json;
 
 /// Shared driver context.
 pub struct Ctx {
+    /// Execution backend every driver runs against.
     pub backend: Box<dyn Backend>,
+    /// Results directory (runs/, reports/ live under it).
     pub results: PathBuf,
     /// Fast mode: fewer steps / smaller grids (CI-sized).
     pub fast: bool,
 }
 
 impl Ctx {
+    /// Open the backend for `artifact_dir` and ensure `results/runs/`.
     pub fn new(artifact_dir: &Path, results: &Path, fast: bool) -> Result<Ctx> {
         std::fs::create_dir_all(results.join("runs"))?;
         Ok(Ctx { backend: open_backend(artifact_dir)?, results: results.to_path_buf(), fast })
     }
 
+    /// Borrow the driver backend.
     pub fn backend(&self) -> &dyn Backend {
         self.backend.as_ref()
     }
 
+    /// Step budget: `full`, or a third of it (min 30) in fast mode.
     pub fn steps(&self, full: usize) -> usize {
         if self.fast {
             (full / 3).max(30)
@@ -46,10 +53,15 @@ impl Ctx {
 /// Summary of one cached training run.
 #[derive(Debug, Clone)]
 pub struct RunSummary {
+    /// Per-step losses.
     pub losses: Vec<f32>,
+    /// Tail-averaged final loss (the convergence metric).
     pub final_loss: f64,
+    /// Divergence-guard verdict.
     pub diverged: bool,
+    /// Loss spikes counted over the run.
     pub spikes: usize,
+    /// Training throughput of the (possibly cached) run.
     pub tokens_per_sec: f64,
 }
 
@@ -134,11 +146,13 @@ pub fn train_with_state(
     Ok((RunSummary::from_json(&summary).context("summary json roundtrip")?, state))
 }
 
+/// Batcher over the standard corpus at a config's vocab/batch geometry.
 pub fn corpus_batcher(cfg: &ModelConfig, seed: u64) -> Batcher {
     let spec = CorpusSpec { vocab: cfg.vocab, ..CorpusSpec::default() };
     Batcher::new(spec, seed, 0, 1, cfg.batch, cfg.seq_len)
 }
 
+/// The standard corpus spec at a config's vocabulary.
 pub fn corpus_for(cfg: &ModelConfig) -> CorpusSpec {
     CorpusSpec { vocab: cfg.vocab, ..CorpusSpec::default() }
 }

@@ -29,16 +29,20 @@ use crate::util::error::Result;
 /// Cumulative execution statistics for one artifact (or one session).
 #[derive(Debug, Clone, Default)]
 pub struct ExecStats {
+    /// Executions (for a session: steps taken).
     pub calls: usize,
+    /// Total device-execution time.
     pub execute_time: Duration,
     /// Host<->device transfer time attributable to this artifact/session.
     pub transfer_time: Duration,
+    /// One-time compile/warmup time (PJRT path).
     pub compile_time: Duration,
     /// Bytes moved across the host<->device boundary.
     pub transfer_bytes: u64,
 }
 
 impl ExecStats {
+    /// Mean execution time per call (zero before any call).
     pub fn per_call_execute(&self) -> Duration {
         if self.calls == 0 {
             Duration::ZERO
@@ -47,6 +51,7 @@ impl ExecStats {
         }
     }
 
+    /// Mean host-transfer time per call.
     pub fn per_call_transfer(&self) -> Duration {
         if self.calls == 0 {
             Duration::ZERO
@@ -61,16 +66,21 @@ impl ExecStats {
 /// they must stay movable across the C-ABI-ish trait boundary).
 #[derive(Debug, Clone)]
 pub struct TensorHandle {
+    /// Backend-assigned id (unique per live tensor).
     pub id: u64,
+    /// Shape of the referenced tensor.
     pub shape: Vec<usize>,
+    /// Element dtype of the referenced tensor.
     pub dtype: Dtype,
 }
 
 impl TensorHandle {
+    /// Element count implied by the shape.
     pub fn elements(&self) -> usize {
         self.shape.iter().product()
     }
 
+    /// Payload bytes (both ABI dtypes are 4 bytes/element).
     pub fn byte_len(&self) -> usize {
         self.elements() * 4
     }
@@ -86,10 +96,12 @@ pub(crate) struct HandleStore {
 }
 
 impl HandleStore {
+    /// Empty store; ids start at 1.
     pub fn new() -> HandleStore {
         HandleStore { store: Mutex::new(HashMap::new()), next_id: AtomicU64::new(1) }
     }
 
+    /// Take ownership of a tensor; returns its handle.
     pub fn insert(&self, t: Tensor) -> TensorHandle {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let h = TensorHandle { id, shape: t.shape().to_vec(), dtype: t.dtype() };
@@ -123,6 +135,7 @@ impl HandleStore {
             .ok_or_else(|| err!("dangling tensor handle {}", h.id))
     }
 
+    /// Drop a tensor (no-op for unknown handles).
     pub fn remove(&self, h: &TensorHandle) {
         self.store.lock().expect("store lock").remove(&h.id);
     }

@@ -50,6 +50,13 @@
 //! pairs with a fixed serial kernel per head ([`crate::runtime::gemm`]),
 //! and every reduction folds in a fixed order — results are bit-identical
 //! at any worker-thread count.
+//!
+//! **Telemetry**: when a [`crate::telemetry::capture`] is active on the
+//! calling thread, `observe_rms`/`observe_cast` hooks record every tower
+//! tensor's RMS and every FP8 operand's cast health. The hooks are one
+//! thread-local flag check when no sink is installed and strictly
+//! read-only when one is — training is bit-identical either way (tested),
+//! which is what keeps the instrument honest.
 
 use super::gemm::{
     add_matmul_at_b, attn_backward_causal, attn_forward_causal, matmul_bt, transpose,
@@ -58,10 +65,54 @@ use super::manifest::{Dtype, TensorSpec};
 use crate::config::ModelConfig;
 use crate::fp8::{Format, BF16, E4M3, E5M2};
 use crate::scaling::ParamKind;
+use crate::telemetry;
 use crate::util::error::{Error, Result};
 use crate::util::parallel;
 use crate::util::rng::Rng;
 use crate::{bail, err};
+
+// ---------------------------------------------------------------------------
+// Telemetry hooks
+//
+// Both helpers reduce to one thread-local flag check when no telemetry
+// sink is installed (the default), and only *read* tensors when one is —
+// training is bit-identical with the sink on, off, or absent (tested at
+// trainer level). They are called from sequential points of the pipeline
+// (never inside parallel kernels, whose worker threads would not see the
+// calling thread's sink).
+
+/// Record the RMS/abs-max of one tensor under `(op, layer)`.
+fn observe_rms(op: &'static str, layer: usize, xs: &[f32]) {
+    if telemetry::enabled() {
+        telemetry::record_rms(op, layer, xs);
+    }
+}
+
+/// Record FP8 cast-health for the tensor `mode` is about to quantize,
+/// exactly as the quantizer will see it: static µS casts at scale 1,
+/// dynamic TE-style casts per the same [`te_dynamic_scale`] policy
+/// `quantize_slice` executes (recomputed read-only here — the quantizer
+/// itself is not perturbed; an all-zero dynamic tensor records nothing
+/// because no cast runs). BF16 round-trips are not FP8 casts and record
+/// nothing.
+fn observe_cast(op: &'static str, layer: usize, xs: &[f32], mode: QuantMode) {
+    if !telemetry::enabled() || xs.is_empty() {
+        return;
+    }
+    let (fmt, scale) = match mode {
+        QuantMode::Bf16 => return,
+        QuantMode::StaticFp8(f) => (f, 1.0f32),
+        QuantMode::DynamicFp8(f) => {
+            let amax = super::gemm::abs_max(xs);
+            match te_dynamic_scale(f.fast_caster().max_finite(), amax) {
+                DynScale::Skip => return,
+                DynScale::Raw => (f, 1.0),
+                DynScale::Scale(s) => (f, s),
+            }
+        }
+    };
+    telemetry::record_cast(op, layer, fmt.name, fmt.cast_health(xs, scale));
+}
 
 /// SP weight-init stddev (the sigma_init knob SP practitioners sweep;
 /// matches `python/compile/configs.py`). Which tensors use it is decided
@@ -266,6 +317,37 @@ pub(crate) enum QuantMode {
     DynamicFp8(Format),
 }
 
+/// The TE-style dynamic-scaling decision for one tensor, given its
+/// (NaN-ignoring) amax. The ONE policy shared by the quantizer
+/// ([`quantize_slice`]) and the telemetry observer (`observe_cast`), so
+/// cast-health reports always describe the cast that actually ran.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(crate) enum DynScale {
+    /// All-zero tensor: TE skips the cast entirely (no 0/0 scale).
+    Skip,
+    /// Infinite amax: no finite scale exists. Raw-cast at scale 1 so the
+    /// overflow propagates (E4M3 -> NaN, E5M2 -> inf) instead of silently
+    /// passing inf/NaN activations through unquantized — SP+FP8
+    /// divergence must be observable, not masked. (A NaN amax cannot
+    /// happen: the NaN-ignoring max skips it, and NaN inputs already
+    /// propagate through the cast itself.)
+    Raw,
+    /// Rescale by `max_finite / amax`, clamped like TE: a deeply-
+    /// subnormal amax would give an inf scale, and 0.0 * inf = NaN would
+    /// poison exact zeros.
+    Scale(f32),
+}
+
+pub(crate) fn te_dynamic_scale(max_finite: f32, amax: f32) -> DynScale {
+    if amax == 0.0 {
+        DynScale::Skip
+    } else if !amax.is_finite() {
+        DynScale::Raw
+    } else {
+        DynScale::Scale((max_finite / amax).min(f32::MAX))
+    }
+}
+
 /// Quantize one (possibly batched) tensor in place via the fast cast.
 pub(crate) fn quantize_slice(xs: &mut [f32], mode: QuantMode) {
     let threads = parallel::threads_for(xs.len() as u64 * 8);
@@ -290,29 +372,20 @@ pub(crate) fn quantize_slice(xs: &mut [f32], mode: QuantMode) {
                 f32::max,
                 0f32,
             );
-            if amax == 0.0 {
-                return;
-            }
-            if !amax.is_finite() {
-                // No finite scale exists for an inf amax. Raw-cast at
-                // scale 1 so the overflow propagates (E4M3 -> NaN, E5M2 ->
-                // inf) instead of silently passing inf/NaN activations
-                // through unquantized — SP+FP8 divergence must be
-                // observable, not masked. (A NaN amax cannot happen: the
-                // NaN-ignoring max skips it, and NaN inputs already
-                // propagate through the cast below.)
-                parallel::par_chunks_mut(xs, ELEM_CHUNK, threads, |_, c| fc.cast_slice(c));
-                return;
-            }
-            // clamp like TE: a deeply-subnormal amax would give an inf
-            // scale, and 0.0 * inf = NaN would poison exact zeros
-            let scale = (fc.max_finite() / amax).min(f32::MAX);
-            let inv = 1.0 / scale; // TE dequant multiplies by the inverse scale
-            parallel::par_chunks_mut(xs, ELEM_CHUNK, threads, |_, c| {
-                for x in c.iter_mut() {
-                    *x = fc.quantize(*x * scale) * inv;
+            match te_dynamic_scale(fc.max_finite(), amax) {
+                DynScale::Skip => {}
+                DynScale::Raw => {
+                    parallel::par_chunks_mut(xs, ELEM_CHUNK, threads, |_, c| fc.cast_slice(c));
                 }
-            });
+                DynScale::Scale(scale) => {
+                    let inv = 1.0 / scale; // TE dequant: multiply by the inverse scale
+                    parallel::par_chunks_mut(xs, ELEM_CHUNK, threads, |_, c| {
+                        for x in c.iter_mut() {
+                            *x = fc.quantize(*x * scale) * inv;
+                        }
+                    });
+                }
+            }
         }
     }
 }
@@ -565,6 +638,11 @@ pub(crate) fn quantize_params(
         head_t: Vec::new(),
     };
     for l in 0..cfg.depth {
+        // weight-cast health (no-ops unless a telemetry sink is active)
+        observe_cast("w_qkv", l, &params[idx_qkv(l)], plan.qkv);
+        observe_cast("w_attn_out", l, &params[idx_o(l)], plan.attn_out);
+        observe_cast("w_ffn_up", l, &params[idx_up(l)], plan.ffn_up);
+        observe_cast("w_ffn_down", l, &params[idx_down(l)], plan.ffn_down);
         let (q, t) = quant_t(&params[idx_qkv(l)], d, 3 * d, plan.qkv);
         qp.qkv_t.push(t);
         let (q2, t) = quant_t(&params[idx_o(l)], d, d, plan.attn_out);
@@ -1167,6 +1245,7 @@ pub(crate) fn forward_tower(
 
     // token-embedding gather (output multiplier 1, BF16 — Table 2)
     op_embed(&params[0], toks, d, &mut ws.x[0]);
+    observe_rms("embed", 0, &ws.x[0]);
 
     for l in 0..cfg.depth {
         let [(a1, b1), (a2, b2)] = prep.coeffs[l];
@@ -1183,6 +1262,7 @@ pub(crate) fn forward_tower(
                     &mut ws.r1[li],
                     &mut ws.xq_attn[li],
                 );
+                observe_rms("post_norm1", l, &ws.xq_attn[li]);
             }
             NormPlacement::ResPost => {
                 let (xq_attn, x) = (&mut ws.xq_attn[li], &ws.x[li]);
@@ -1191,6 +1271,7 @@ pub(crate) fn forward_tower(
         }
 
         // qkv projection: z_qkv = α_qkv · quant(xq) @ W_qkv
+        observe_cast("qkv", l, &ws.xq_attn[li], prep.plan.qkv);
         op_linear(
             &mut ws.xq_attn[li],
             prep.plan.qkv,
@@ -1207,6 +1288,7 @@ pub(crate) fn forward_tower(
         // exactly what a BF16 KV cache stores — training and decode
         // attend over identical values
         quantize_slice(&mut ws.z_qkv, QuantMode::Bf16);
+        observe_rms("qkv", l, &ws.z_qkv);
         split_heads_rope(
             &ws.z_qkv,
             cfg,
@@ -1216,6 +1298,7 @@ pub(crate) fn forward_tower(
             &mut ws.qkv_heads[li],
         );
         quantize_slice(&mut ws.qkv_heads[li], QuantMode::Bf16);
+        observe_rms("post_rope", l, &ws.qkv_heads[li]);
         if let Some(sink) = kv_sink.as_mut() {
             sink(l, &ws.qkv_heads[li]);
         }
@@ -1229,8 +1312,10 @@ pub(crate) fn forward_tower(
             attn_scale,
         );
         merge_heads(&ws.o_heads, cfg, s, &mut ws.xq_o[li]);
+        observe_rms("attn_mix", l, &ws.xq_o[li]);
 
         // attn-out projection: z_o = α_o · quant(xq_o) @ W_o
+        observe_cast("attn_out", l, &ws.xq_o[li], prep.plan.attn_out);
         op_linear(
             &mut ws.xq_o[li],
             prep.plan.attn_out,
@@ -1241,6 +1326,7 @@ pub(crate) fn forward_tower(
             d,
             prep.alpha_attn_out,
         );
+        observe_rms("attn_out", l, &ws.t_d1);
 
         // scaled residual add #1 → xmid
         match prep.placement {
@@ -1256,9 +1342,11 @@ pub(crate) fn forward_tower(
                     &mut ws.r1[li],
                     &mut ws.t_d0,
                 );
+                observe_rms("post_norm1", l, &ws.t_d0);
                 residual_combine(&ws.x[li], &ws.t_d0, a1, b1, &mut ws.xmid[li]);
             }
         }
+        observe_rms("resid1", l, &ws.xmid[li]);
 
         // ---- ffn branch ------------------------------------------------
         match prep.placement {
@@ -1271,6 +1359,7 @@ pub(crate) fn forward_tower(
                     &mut ws.r2[li],
                     &mut ws.xq_up[li],
                 );
+                observe_rms("post_norm2", l, &ws.xq_up[li]);
             }
             NormPlacement::ResPost => {
                 let (xq_up, xmid) = (&mut ws.xq_up[li], &ws.xmid[li]);
@@ -1279,6 +1368,7 @@ pub(crate) fn forward_tower(
         }
 
         // ffn-up: z_up = α_up · quant(xq_up) @ W_up
+        observe_cast("ffn_up", l, &ws.xq_up[li], prep.plan.ffn_up);
         op_linear(
             &mut ws.xq_up[li],
             prep.plan.ffn_up,
@@ -1289,9 +1379,12 @@ pub(crate) fn forward_tower(
             d,
             prep.alpha_ffn_up,
         );
+        observe_rms("ffn_up", l, &ws.z_up[li]);
 
         // activation → ffn-down: z_down = α_down · quant(act(z_up)) @ W_down
         apply_act(&ws.z_up[li], prep.act, &mut ws.xq_down[li]);
+        observe_rms("ffn_act", l, &ws.xq_down[li]);
+        observe_cast("ffn_down", l, &ws.xq_down[li], prep.plan.ffn_down);
         op_linear(
             &mut ws.xq_down[li],
             prep.plan.ffn_down,
@@ -1302,6 +1395,7 @@ pub(crate) fn forward_tower(
             f,
             prep.alpha_ffn_down,
         );
+        observe_rms("ffn_down", l, &ws.t_d1);
 
         // scaled residual add #2 → x[l+1] (slot 0 again when forward-only)
         match prep.placement {
@@ -1317,9 +1411,11 @@ pub(crate) fn forward_tower(
                     &mut ws.r2[li],
                     &mut ws.t_d0,
                 );
+                observe_rms("post_norm2", l, &ws.t_d0);
                 residual_combine(&ws.xmid[li], &ws.t_d0, a2, b2, &mut ws.x[ln]);
             }
         }
+        observe_rms("resid2", l, &ws.x[ln]);
     }
 
     // final RMS-norm (gained) → BF16 LM-head input
@@ -1332,6 +1428,7 @@ pub(crate) fn forward_tower(
         &mut ws.y,
     );
     quantize_slice(&mut ws.y, QuantMode::Bf16);
+    observe_rms("final_norm", 0, &ws.y);
 }
 
 /// Logits `[batch·s, vocab]` for pre-quantized params over an explicit
@@ -1396,6 +1493,7 @@ pub(crate) fn train_grads(
     // zeroed on the unscored final position of each sequence
     let mut dlogits = vec![0f32; rows * v];
     matmul_bt(&ws.y, &qp.head_t, &mut dlogits, rows, v, d, prep.alpha_head);
+    observe_rms("logits", 0, &dlogits); // still the raw logits here
     let mut loss_rows = vec![0f64; rows];
     let inv = 1.0 / scored as f32;
     let logit_threads = parallel::threads_for((rows * v) as u64 * 8);
@@ -1429,12 +1527,14 @@ pub(crate) fn train_grads(
     );
 
     let mut grads: Vec<Vec<f32>> = params.iter().map(|p| vec![0f32; p.len()]).collect();
+    observe_rms("d_logits", 0, &dlogits);
 
     // LM head: g_head += α_out · yᵀ @ dlogits; dy = α_out · dlogits @ headᵀ
     add_matmul_at_b(&ws.y, &dlogits, &mut grads[n - 1], rows, d, v, prep.alpha_head);
     let mut dy = vec![0f32; rows * d];
     matmul_bt(&dlogits, &qp.head, &mut dy, rows, d, v, prep.alpha_head);
     drop(dlogits); // the [rows, v] buffer is the largest; release it early
+    observe_rms("d_final", 0, &dy);
 
     // final RMS-norm backward → dxn = dL/dx[depth]
     let mut dxn = vec![0f32; rows * d];
@@ -1479,6 +1579,8 @@ pub(crate) fn train_grads(
                 );
             }
         }
+        observe_rms("d_ffn_down", l, &dz_down);
+        observe_cast("d_ffn_down", l, &dz_down, prep.plan.grad);
         quantize_slice(&mut dz_down, prep.plan.grad);
         add_matmul_at_b(
             &ws.xq_down[l],
@@ -1492,6 +1594,8 @@ pub(crate) fn train_grads(
         matmul_bt(&dz_down, &qp.ffn_down[l], &mut d_a, rows, f, d, prep.alpha_ffn_down);
 
         act_backward(&d_a, &ws.z_up[l], prep.act, &mut dz_up);
+        observe_rms("d_ffn_up", l, &dz_up);
+        observe_cast("d_ffn_up", l, &dz_up, prep.plan.grad);
         quantize_slice(&mut dz_up, prep.plan.grad);
         add_matmul_at_b(&ws.xq_up[l], &dz_up, &mut grads[idx_up(l)], rows, d, f, prep.alpha_ffn_up);
         matmul_bt(&dz_up, &qp.ffn_up[l], &mut t_d, rows, d, f, prep.alpha_ffn_up);
@@ -1534,6 +1638,8 @@ pub(crate) fn train_grads(
                 );
             }
         }
+        observe_rms("d_attn_out", l, &dz_o);
+        observe_cast("d_attn_out", l, &dz_o, prep.plan.grad);
         quantize_slice(&mut dz_o, prep.plan.grad);
         add_matmul_at_b(&ws.xq_o[l], &dz_o, &mut grads[idx_o(l)], rows, d, d, prep.alpha_attn_out);
         matmul_bt(&dz_o, &qp.attn_out[l], &mut d_merge, rows, d, d, prep.alpha_attn_out);
@@ -1550,6 +1656,8 @@ pub(crate) fn train_grads(
             attn_scale,
         );
         merge_heads_rope_bwd(&dqkv_heads, cfg, s, &prep.rope_cos, &prep.rope_sin, &mut dz_qkv);
+        observe_rms("d_qkv", l, &dz_qkv);
+        observe_cast("d_qkv", l, &dz_qkv, prep.plan.grad);
         quantize_slice(&mut dz_qkv, prep.plan.grad);
         add_matmul_at_b(
             &ws.xq_attn[l],
@@ -1581,6 +1689,7 @@ pub(crate) fn train_grads(
             }
         }
         // dxn is now dL/dx[l]
+        observe_rms("d_resid", l, &dxn);
     }
 
     // embedding backward: sequential scatter (rows sharing a token collide,
@@ -2014,6 +2123,20 @@ mod tests {
         quantize_slice(&mut xs, QuantMode::DynamicFp8(E4M3));
         assert_eq!(xs[0], 0.0);
         assert!(xs.iter().all(|x| !x.is_nan()), "tiny-amax tensor produced NaN: {xs:?}");
+    }
+
+    #[test]
+    fn te_dynamic_scale_policy_cases() {
+        // the ONE policy quantize_slice and observe_cast share
+        let maxf = E4M3.max_finite() as f32;
+        assert_eq!(te_dynamic_scale(maxf, 0.0), DynScale::Skip);
+        assert_eq!(te_dynamic_scale(maxf, f32::INFINITY), DynScale::Raw);
+        assert_eq!(te_dynamic_scale(maxf, 448.0 * 1024.0), DynScale::Scale(1.0 / 1024.0));
+        // deeply-subnormal amax clamps instead of producing an inf scale
+        match te_dynamic_scale(maxf, 1e-43) {
+            DynScale::Scale(s) => assert!(s.is_finite()),
+            other => panic!("expected clamped scale, got {other:?}"),
+        }
     }
 
     #[test]

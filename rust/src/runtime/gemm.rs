@@ -359,6 +359,65 @@ pub fn attn_backward_causal(
     }
 }
 
+/// Chunk length for the telemetry reductions below (fixed — boundaries
+/// are a function of buffer length only, like every kernel here).
+const REDUCE_CHUNK: usize = 1 << 14;
+
+/// Deterministic f64 sum of squares: fixed `REDUCE_CHUNK` chunks mapped
+/// (possibly in parallel) and folded in ascending chunk order, so the
+/// result is bit-identical at any worker-thread count. This is the
+/// reduction behind the telemetry sink's per-op RMS records
+/// (`crate::telemetry`) — it shares the determinism contract of the GEMM
+/// kernels so enabling telemetry can never observe thread-dependent
+/// values.
+pub fn sum_sq(xs: &[f32]) -> f64 {
+    parallel::par_map_reduce(
+        xs.len(),
+        REDUCE_CHUNK,
+        parallel::threads_for(xs.len() as u64 * 2),
+        |_, r| xs[r].iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>(),
+        |a, b| a + b,
+        0f64,
+    )
+}
+
+/// Fused deterministic (Σx², max|x|) over one pass — what a telemetry RMS
+/// record needs, at half the traversal cost of calling [`sum_sq`] and
+/// [`abs_max`] separately. Same fixed-chunk ascending fold; NaN elements
+/// are ignored by the max (like a TE amax reduce).
+pub fn sum_sq_abs_max(xs: &[f32]) -> (f64, f32) {
+    parallel::par_map_reduce(
+        xs.len(),
+        REDUCE_CHUNK,
+        parallel::threads_for(xs.len() as u64 * 3),
+        |_, r| {
+            let mut ss = 0f64;
+            let mut am = 0f32;
+            for &x in &xs[r] {
+                ss += (x as f64) * (x as f64);
+                am = am.max(x.abs());
+            }
+            (ss, am)
+        },
+        |(ss_a, am_a), (ss_b, am_b)| (ss_a + ss_b, am_a.max(am_b)),
+        (0f64, 0f32),
+    )
+}
+
+/// Deterministic absolute maximum over a slice (0 for empty; NaN elements
+/// are ignored, like a TE amax reduce). Same fixed-chunk fold as
+/// [`sum_sq`].
+pub fn abs_max(xs: &[f32]) -> f32 {
+    parallel::par_map_reduce(
+        xs.len(),
+        REDUCE_CHUNK,
+        parallel::threads_for(xs.len() as u64),
+        |_, r| xs[r].iter().fold(0f32, |m, x| m.max(x.abs())),
+        f32::max,
+        0f32,
+    )
+}
+
 /// Blocked out-of-place transpose: `dst[c*rows + r] = src[r*cols + c]`.
 pub fn transpose(src: &[f32], rows: usize, cols: usize, dst: &mut [f32]) {
     assert_eq!(src.len(), rows * cols, "transpose: src is not [rows,cols]");
@@ -653,6 +712,35 @@ mod tests {
                 assert_eq!(scores[j].to_bits(), probs[i * s + j].to_bits());
             }
         }
+    }
+
+    #[test]
+    fn telemetry_reductions_deterministic_and_correct() {
+        let mut rng = Rng::new(9);
+        // big enough that the parallel threshold is cleared, so the
+        // thread-count assertions exercise the multi-thread path
+        let mut xs = vec![0f32; 300_000];
+        rng.fill_normal(&mut xs, 1.0);
+        xs[7] = -123.5;
+        let naive: f64 = xs.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        let s1 = with_max_threads(1, || sum_sq(&xs));
+        assert!((s1 - naive).abs() < 1e-6 * naive.abs());
+        for threads in [2usize, 5] {
+            assert_eq!(
+                s1.to_bits(),
+                with_max_threads(threads, || sum_sq(&xs)).to_bits(),
+                "sum_sq drifted at {threads} threads"
+            );
+        }
+        assert_eq!(abs_max(&xs), 123.5);
+        assert_eq!(abs_max(&[]), 0.0);
+        assert_eq!(abs_max(&[f32::NAN, 2.0]), 2.0, "amax ignores NaN");
+        assert_eq!(sum_sq(&[]), 0.0);
+        // the fused one-pass reduction is bit-identical to the pair
+        let (ss, am) = sum_sq_abs_max(&xs);
+        assert_eq!(ss.to_bits(), s1.to_bits());
+        assert_eq!(am, 123.5);
+        assert_eq!(sum_sq_abs_max(&[]), (0.0, 0.0));
     }
 
     #[test]

@@ -56,12 +56,17 @@ pub struct SeqId(u64);
 /// prefill is compute-bound and decode bandwidth-bound.
 #[derive(Debug, Clone, Default)]
 pub struct InferStats {
+    /// Prefill executes (one per prompt).
     pub prefill_calls: usize,
+    /// Prompt tokens pushed through prefill.
     pub prefill_tokens: u64,
+    /// Wall time spent inside prefill executes.
     pub prefill_time: Duration,
     /// Batched decode executes (one per serve step, not per token).
     pub decode_steps: usize,
+    /// Tokens decoded (one per live sequence per step).
     pub decode_tokens: u64,
+    /// Wall time spent inside decode executes.
     pub decode_time: Duration,
 }
 
@@ -216,6 +221,7 @@ impl InferSession {
         })
     }
 
+    /// The model configuration this session serves.
     pub fn config(&self) -> &ModelConfig {
         &self.cfg
     }
@@ -225,6 +231,7 @@ impl InferSession {
         self.cfg.seq_len
     }
 
+    /// Sequences currently registered (holding KV state).
     pub fn live_sequences(&self) -> usize {
         self.seqs.len()
     }
@@ -239,6 +246,7 @@ impl InferSession {
         self.pool.slabs_in_use() * self.pool.slab_bytes()
     }
 
+    /// Cumulative prefill/decode accounting.
     pub fn stats(&self) -> &InferStats {
         &self.stats
     }

@@ -7,9 +7,12 @@ use crate::util::error::{Context, Result};
 use crate::util::json::Json;
 use crate::{bail, err};
 
+/// Element type at the artifact ABI boundary (f32/i32 only by design).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Dtype {
+    /// 32-bit float.
     F32,
+    /// 32-bit signed integer (token ids, seeds).
     I32,
 }
 
@@ -23,14 +26,19 @@ impl Dtype {
     }
 }
 
+/// Name/shape/dtype of one ABI tensor.
 #[derive(Debug, Clone)]
 pub struct TensorSpec {
+    /// ABI tensor name (e.g. `"w_qkv0"`, `"tokens"`, `"loss"`).
     pub name: String,
+    /// Dimensions (empty = scalar).
     pub shape: Vec<usize>,
+    /// Element type.
     pub dtype: Dtype,
 }
 
 impl TensorSpec {
+    /// Element count implied by the shape.
     pub fn elements(&self) -> usize {
         self.shape.iter().product()
     }
@@ -53,23 +61,34 @@ impl TensorSpec {
     }
 }
 
+/// One artifact's ABI description.
 #[derive(Debug, Clone)]
 pub struct ArtifactMeta {
+    /// Unique artifact name (`train_<config>`, `fwd_<config>`, …).
     pub name: String,
+    /// Artifact kind: `"init"` / `"train_step"` / `"fwd"` / `"probe"`.
     pub kind: String,
+    /// HLO-text file relative to the manifest dir (empty for reference).
     pub file: String,
+    /// The model config the artifact was lowered for, if any.
     pub config: Option<ModelConfig>,
+    /// Input tensor specs, in call order.
     pub inputs: Vec<TensorSpec>,
+    /// Output tensor specs, in return order.
     pub outputs: Vec<TensorSpec>,
 }
 
+/// A backend's artifact catalogue.
 #[derive(Debug)]
 pub struct Manifest {
+    /// Directory the manifest (and artifact files) live in.
     pub dir: PathBuf,
+    /// Every artifact the backend can execute.
     pub artifacts: Vec<ArtifactMeta>,
 }
 
 impl Manifest {
+    /// Load `dir/manifest.json`.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
@@ -77,6 +96,7 @@ impl Manifest {
         Self::parse(dir, &text)
     }
 
+    /// Parse manifest JSON text (artifact files resolve against `dir`).
     pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
         let j = Json::parse(text).map_err(|e| err!("manifest: {e}"))?;
         let arts = j
@@ -112,6 +132,7 @@ impl Manifest {
         Ok(Manifest { dir: dir.to_path_buf(), artifacts })
     }
 
+    /// Artifact by exact name.
     pub fn find(&self, name: &str) -> Option<&ArtifactMeta> {
         self.artifacts.iter().find(|a| a.name == name)
     }
@@ -122,6 +143,7 @@ impl Manifest {
         self.artifacts.iter().find(|a| a.name == want)
     }
 
+    /// All artifacts of one kind.
     pub fn of_kind<'a>(&'a self, kind: &'a str) -> impl Iterator<Item = &'a ArtifactMeta> + 'a {
         self.artifacts.iter().filter(move |a| a.kind == kind)
     }

@@ -26,6 +26,7 @@
 
 mod backend;
 pub(crate) mod block;
+/// Deterministic GEMM / attention kernels + telemetry reductions.
 pub mod gemm;
 mod infer;
 pub(crate) mod kvcache;
@@ -55,22 +56,27 @@ pub fn tensor_f32(data: &[f32], shape: &[usize]) -> Result<Tensor> {
     Tensor::f32(data.to_vec(), shape)
 }
 
+/// i32 host tensor from a slice (see [`Tensor::i32`]).
 pub fn tensor_i32(data: &[i32], shape: &[usize]) -> Result<Tensor> {
     Tensor::i32(data.to_vec(), shape)
 }
 
+/// f32 scalar host tensor.
 pub fn scalar_f32(v: f32) -> Tensor {
     Tensor::scalar_f32(v)
 }
 
+/// i32 scalar host tensor.
 pub fn scalar_i32(v: i32) -> Tensor {
     Tensor::scalar_i32(v)
 }
 
+/// Copy a tensor's f32 payload out.
 pub fn to_f32_vec(t: &Tensor) -> Result<Vec<f32>> {
     t.to_f32_vec()
 }
 
+/// Read a scalar tensor's f32 value.
 pub fn to_f32_scalar(t: &Tensor) -> Result<f32> {
     t.scalar()
 }

@@ -101,6 +101,7 @@ pub struct PjrtBackend {
 }
 
 impl PjrtBackend {
+    /// Open the AOT artifact catalogue in `artifact_dir`.
     pub fn new(artifact_dir: impl AsRef<Path>) -> Result<PjrtBackend> {
         let manifest = Manifest::load(artifact_dir.as_ref())
             .context("loading artifacts/manifest.json (run `make artifacts`)")?;

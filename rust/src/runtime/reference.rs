@@ -40,6 +40,12 @@
 //! reductions fold fixed chunks in ascending order
 //! ([`crate::util::parallel`]) — tested at trainer level for both FP8
 //! lanes across 1/2/4 threads.
+//!
+//! Telemetry: `execute` interprets on the **calling** thread, so a
+//! [`crate::telemetry::capture`] installed around a `Session::step`
+//! observes the whole step — per-op RMS and FP8 cast health from the
+//! block pipeline's hooks. With no capture active the hooks are inert
+//! flag checks and the step path is exactly the uninstrumented one.
 
 use std::collections::HashMap;
 use std::path::PathBuf;

@@ -20,11 +20,14 @@ use crate::{bail, err};
 /// master copies, in artifact input order.
 #[derive(Debug, Clone)]
 pub struct TrainState {
+    /// `params ++ momenta`, in artifact input order.
     pub tensors: Vec<Tensor>,
+    /// How many leading tensors are parameters (the rest are momenta).
     pub n_params: usize,
 }
 
 impl TrainState {
+    /// The parameter tensors (momenta excluded).
     pub fn params(&self) -> &[Tensor] {
         &self.tensors[..self.n_params]
     }
@@ -35,6 +38,7 @@ impl TrainState {
 /// session per worker thread over a shared (Sync) backend.
 pub struct Session<'b> {
     backend: &'b dyn Backend,
+    /// The model configuration this session trains.
     pub cfg: ModelConfig,
     train_name: String,
     init_name: String,
@@ -83,14 +87,17 @@ impl<'b> Session<'b> {
         })
     }
 
+    /// The backend this session executes on.
     pub fn backend(&self) -> &'b dyn Backend {
         self.backend
     }
 
+    /// Parameter-tensor count of the model (state = 2x this).
     pub fn n_params_tensors(&self) -> usize {
         self.n_params
     }
 
+    /// Name of the resolved `train_step` artifact.
     pub fn train_artifact(&self) -> &str {
         &self.train_name
     }
@@ -261,6 +268,28 @@ impl<'b> Session<'b> {
         self.stats.transfer_time += (t1 - t0) + (t3 - t2);
         self.stats.transfer_bytes += moved_bytes + 2 * 4;
         Ok((loss, gnorm))
+    }
+
+    /// [`Session::step`] under a [`crate::telemetry::capture`] scope:
+    /// returns the step's `(loss, gnorm)` plus everything the interpreter
+    /// recorded — per-op forward/backward RMS and FP8 cast-health
+    /// counters. Recording is read-only, so a traced step produces a
+    /// bit-identical `TrainState` to an untraced one (tested at trainer
+    /// level for both FP8 lanes across 1/2/4 worker threads).
+    ///
+    /// The sink is thread-scoped and the reference backend interprets on
+    /// the calling thread; backends that execute elsewhere return an
+    /// empty report.
+    pub fn step_traced(
+        &mut self,
+        tokens: &[i32],
+        lr: f64,
+        wd: f64,
+        tau: f64,
+    ) -> Result<(f32, f32, crate::telemetry::TelemetryReport)> {
+        let (res, report) = crate::telemetry::capture(|| self.step(tokens, lr, wd, tau));
+        let (loss, gnorm) = res?;
+        Ok((loss, gnorm, report))
     }
 }
 

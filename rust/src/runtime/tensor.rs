@@ -9,12 +9,16 @@ use super::manifest::Dtype;
 use crate::util::error::{Context, Result};
 use crate::{bail, err};
 
+/// A host tensor's payload (the ABI is f32/i32 only by design).
 #[derive(Debug, Clone, PartialEq)]
 pub enum TensorData {
+    /// f32 payload.
     F32(Vec<f32>),
+    /// i32 payload (token ids, seeds).
     I32(Vec<i32>),
 }
 
+/// Shaped host tensor — the exchange format at the L3<->runtime boundary.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
     shape: Vec<usize>,
@@ -22,6 +26,7 @@ pub struct Tensor {
 }
 
 impl Tensor {
+    /// f32 tensor from owned data (shape must match the element count).
     pub fn f32(data: Vec<f32>, shape: &[usize]) -> Result<Tensor> {
         let n: usize = shape.iter().product();
         if n != data.len() {
@@ -30,6 +35,7 @@ impl Tensor {
         Ok(Tensor { shape: shape.to_vec(), data: TensorData::F32(data) })
     }
 
+    /// i32 tensor from owned data (shape must match the element count).
     pub fn i32(data: Vec<i32>, shape: &[usize]) -> Result<Tensor> {
         let n: usize = shape.iter().product();
         if n != data.len() {
@@ -38,23 +44,28 @@ impl Tensor {
         Ok(Tensor { shape: shape.to_vec(), data: TensorData::I32(data) })
     }
 
+    /// Scalar (rank-0) f32 tensor.
     pub fn scalar_f32(v: f32) -> Tensor {
         Tensor { shape: vec![], data: TensorData::F32(vec![v]) }
     }
 
+    /// Scalar (rank-0) i32 tensor.
     pub fn scalar_i32(v: i32) -> Tensor {
         Tensor { shape: vec![], data: TensorData::I32(vec![v]) }
     }
 
+    /// All-zero f32 tensor of the given shape.
     pub fn zeros_f32(shape: &[usize]) -> Tensor {
         let n: usize = shape.iter().product();
         Tensor { shape: shape.to_vec(), data: TensorData::F32(vec![0.0; n]) }
     }
 
+    /// The tensor's dimensions (empty = scalar).
     pub fn shape(&self) -> &[usize] {
         &self.shape
     }
 
+    /// Element dtype of the payload.
     pub fn dtype(&self) -> Dtype {
         match self.data {
             TensorData::F32(_) => Dtype::F32,
@@ -62,6 +73,7 @@ impl Tensor {
         }
     }
 
+    /// Element count of the payload.
     pub fn elements(&self) -> usize {
         match &self.data {
             TensorData::F32(v) => v.len(),
@@ -74,6 +86,7 @@ impl Tensor {
         self.elements() * 4
     }
 
+    /// Borrow the f32 payload (error on i32 tensors).
     pub fn as_f32(&self) -> Result<&[f32]> {
         match &self.data {
             TensorData::F32(v) => Ok(v),
@@ -81,6 +94,7 @@ impl Tensor {
         }
     }
 
+    /// Borrow the i32 payload (error on f32 tensors).
     pub fn as_i32(&self) -> Result<&[i32]> {
         match &self.data {
             TensorData::I32(v) => Ok(v),
@@ -88,6 +102,7 @@ impl Tensor {
         }
     }
 
+    /// Copy the f32 payload out.
     pub fn to_f32_vec(&self) -> Result<Vec<f32>> {
         self.as_f32().map(|s| s.to_vec())
     }
@@ -101,6 +116,7 @@ impl Tensor {
         Ok(v[0])
     }
 
+    /// Scalar i32 accessor (shape [] or single-element tensors).
     pub fn scalar_i32_value(&self) -> Result<i32> {
         let v = self.as_i32().context("reading i32 scalar")?;
         if v.len() != 1 {

@@ -37,6 +37,7 @@ pub enum ParamKind {
 }
 
 impl Scheme {
+    /// Human-readable scheme name (the Fig 1 row label).
     pub fn name(&self) -> &'static str {
         match self {
             Scheme::Sp => "SP (BF16)",
@@ -74,10 +75,13 @@ impl Scheme {
         }
     }
 
+    /// Does the scheme transfer hyperparameters zero-shot across widths?
     pub fn supports_hp_transfer(&self) -> bool {
         matches!(self, Scheme::Mup | Scheme::Ump | Scheme::Mus)
     }
 
+    /// Does the scheme need runtime per-tensor amax scaling (the overhead
+    /// µS's static scales delete)?
     pub fn uses_dynamic_scaling(&self) -> bool {
         matches!(self, Scheme::SpTe)
     }
@@ -108,6 +112,13 @@ impl Scheme {
 
     /// Zero-shot LR transfer: multiplier on the base learning rate when
     /// growing width from `d_base` to `d_new` (Adam-like optimizers).
+    ///
+    /// ```
+    /// use munit::scaling::{ParamKind, Scheme};
+    /// // µS §2.3: hidden LR scales as √(d_base/d); head LR is constant
+    /// assert_eq!(Scheme::Mus.lr_transfer(ParamKind::Hidden, 256, 1024), 0.5);
+    /// assert_eq!(Scheme::Mus.lr_transfer(ParamKind::Output, 256, 1024), 1.0);
+    /// ```
     pub fn lr_transfer(&self, kind: ParamKind, d_base: usize, d_new: usize) -> f64 {
         let ratio = d_base as f64 / d_new as f64;
         match (self, kind) {
@@ -133,6 +144,25 @@ impl Scheme {
         }
     }
 
+    /// Predicted width-scaling exponent β of hidden activation-GRADIENT
+    /// RMS at matched (vocab, batch, seq) inputs: `rms(grad) ∝ (1/d)^β`.
+    ///
+    /// Under µS (and µP) the LM head's `1/fan_in` output multiplier puts
+    /// a `1/d` on `dL/dy`, and every hidden op preserves that scale on
+    /// the way down (unit-variance weights × `1/√fan_in` multipliers and
+    /// O(1)-divisor norm backwards — the derivation is docs/NUMERICS.md
+    /// §Backward), so β = 1: the coordinate-check harness multiplies
+    /// recorded grad RMS by `(d/d_base)^β` and asserts the compensated
+    /// values are width-flat. SP has no static output multiplier and no
+    /// clean power law; it reports β = 0 (no compensation).
+    pub fn grad_rms_width_exponent(&self) -> f64 {
+        match self {
+            Scheme::Mus | Scheme::Mup => 1.0,
+            Scheme::Ump => 1.0,
+            Scheme::Sp | Scheme::SpTe => 0.0,
+        }
+    }
+
     /// Fully-decoupled weight decay transfer (paper §3.2).
     pub fn wd_transfer(&self, d_base: usize, d_new: usize) -> f64 {
         match self {
@@ -153,11 +183,17 @@ impl Scheme {
 /// One row of the paper's Fig 1 comparison matrix.
 #[derive(Debug, Clone)]
 pub struct SchemeRow {
+    /// The scheme this row describes.
     pub scheme: Scheme,
+    /// Any hidden matmuls in FP8?
     pub uses_fp8: bool,
+    /// Zero-shot hyperparameter transfer?
     pub hp_transfer: bool,
+    /// Hyperparameters a practitioner must sweep (Table 3).
     pub n_hparams: usize,
+    /// Free of runtime amax machinery?
     pub no_dynamic_scaling: bool,
+    /// Training numerics identical to inference numerics?
     pub train_infer_match: bool,
 }
 
@@ -233,6 +269,16 @@ mod tests {
     fn sp_lr_transfer_linear_rule() {
         assert!((Scheme::Sp.lr_transfer(ParamKind::Hidden, 256, 2048) - 0.125).abs() < 1e-12);
         assert!((Scheme::Sp.lr_transfer(ParamKind::Input, 256, 2048) - 0.125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn grad_exponent_by_scheme() {
+        // schemes with a 1/fan_in head multiplier put a clean 1/d on the
+        // backward stream; SP families have no compensable power law
+        assert_eq!(Scheme::Mus.grad_rms_width_exponent(), 1.0);
+        assert_eq!(Scheme::Mup.grad_rms_width_exponent(), 1.0);
+        assert_eq!(Scheme::Sp.grad_rms_width_exponent(), 0.0);
+        assert_eq!(Scheme::SpTe.grad_rms_width_exponent(), 0.0);
     }
 
     #[test]

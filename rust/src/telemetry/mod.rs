@@ -1,0 +1,410 @@
+//! Numerics telemetry: per-op RMS records + FP8 cast-health counters.
+//!
+//! The paper's first-principles claim is that µS keeps **every hidden
+//! tensor near unit scale**, which is exactly why static FP8 casts work
+//! without FP8-LM/TE-style dynamic amax machinery. This module turns the
+//! reference interpreter into an instrument for checking that claim: when
+//! a sink is installed, the op-level block pipeline
+//! (`runtime::block`) records
+//!
+//!  - the RMS and absolute maximum of every tensor in the tower — the
+//!    embedding, post-norm outputs, qkv projections, post-RoPE heads,
+//!    attention mix, attn-out, ffn-up/act/down, both residual streams,
+//!    the final norm, the logits, and each of their gradients — keyed by
+//!    `(op, layer)`;
+//!  - [`crate::fp8::CastHealth`] counters for every FP8-quantized operand
+//!    (weights, activations, gradients): underflow-to-zero, saturation,
+//!    overflow, and subnormal hit rates per quantized op.
+//!
+//! **Zero overhead when off.** The sink is a *thread-local scope*
+//! ([`capture`]), mirroring `util::parallel::with_max_threads`: outside a
+//! capture the recording hooks reduce to one thread-local flag check and
+//! touch no tensor data, so training with telemetry off is bit-identical
+//! to (and as fast as) the uninstrumented interpreter — asserted by the
+//! integration test `telemetry_capture_is_non_perturbing_and_off_hot_path`.
+//! When ON, recording only *reads* tensors (deterministic fixed-chunk
+//! reductions, `runtime::gemm::sum_sq`/`abs_max`), so captured training is
+//! bit-identical too — the instrument never perturbs the experiment.
+//!
+//! Scope: the sink is per-thread, and the reference backend interprets on
+//! the calling thread, so wrapping [`crate::runtime::Session::step`] (or
+//! using [`crate::runtime::Session::step_traced`]) captures that step's
+//! telemetry. Work dispatched to other threads (sweep workers, a real
+//! device backend) records nothing.
+//!
+//! ```
+//! let (sum, report) = munit::telemetry::capture(|| 2 + 2);
+//! assert_eq!(sum, 4);
+//! assert!(report.ops.is_empty()); // nothing instrumented ran
+//! ```
+//!
+//! The width-transfer harness (`coordinator::transfer`) consumes these
+//! reports to run the paper's coordinate checks and LR-transfer sweeps;
+//! `docs/NUMERICS.md` documents how to read the numbers.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+
+use crate::fp8::CastHealth;
+use crate::util::json::Json;
+
+thread_local! {
+    static SINK: RefCell<Option<Store>> = const { RefCell::new(None) };
+}
+
+#[derive(Default)]
+struct Store {
+    ops: BTreeMap<(&'static str, usize), OpAccum>,
+    casts: BTreeMap<(&'static str, usize), CastAccum>,
+}
+
+#[derive(Default, Clone, Copy)]
+struct OpAccum {
+    records: u64,
+    elems: u64,
+    sum_sq: f64,
+    abs_max: f64,
+}
+
+#[derive(Default, Clone)]
+struct CastAccum {
+    format: &'static str,
+    health: CastHealth,
+}
+
+/// Is a telemetry sink installed on the calling thread? The recording
+/// hooks in `runtime::block` consult this before touching any tensor, so
+/// the answer decides between "free" and "one read-only pass".
+pub fn enabled() -> bool {
+    SINK.with(|s| s.borrow().is_some())
+}
+
+/// Run `f` with a fresh telemetry sink installed on this thread and
+/// return its result together with everything recorded. Nesting replaces
+/// the outer sink for the inner scope and restores it afterwards (also on
+/// panic — the guard restores in `Drop`).
+pub fn capture<R>(f: impl FnOnce() -> R) -> (R, TelemetryReport) {
+    struct Guard {
+        prev: Option<Store>,
+    }
+    impl Drop for Guard {
+        fn drop(&mut self) {
+            SINK.with(|s| *s.borrow_mut() = self.prev.take());
+        }
+    }
+    let mut guard = Guard { prev: None };
+    guard.prev = SINK.with(|s| s.borrow_mut().replace(Store::default()));
+    let out = f();
+    let store = SINK.with(|s| s.borrow_mut().take()).unwrap_or_default();
+    drop(guard); // restores the previous sink (if any)
+    (out, TelemetryReport::from_store(store))
+}
+
+/// Record the RMS / abs-max of one tensor under `(op, layer)`. No-op
+/// without an installed sink. The reductions are the deterministic
+/// fixed-chunk folds of `runtime::gemm`, so recorded values are
+/// bit-identical at any worker-thread count.
+pub(crate) fn record_rms(op: &'static str, layer: usize, xs: &[f32]) {
+    if xs.is_empty() {
+        return;
+    }
+    SINK.with(|s| {
+        let mut sink = s.borrow_mut();
+        let Some(store) = sink.as_mut() else { return };
+        let (sum_sq, abs_max) = crate::runtime::gemm::sum_sq_abs_max(xs);
+        let a = store.ops.entry((op, layer)).or_default();
+        a.records += 1;
+        a.elems += xs.len() as u64;
+        a.sum_sq += sum_sq;
+        a.abs_max = a.abs_max.max(abs_max as f64);
+    });
+}
+
+/// Accumulate the cast-health counters of one quantized operand under
+/// `(op, layer)`. No-op without an installed sink.
+pub(crate) fn record_cast(op: &'static str, layer: usize, format: &'static str, h: CastHealth) {
+    SINK.with(|s| {
+        let mut sink = s.borrow_mut();
+        let Some(store) = sink.as_mut() else { return };
+        let a = store.casts.entry((op, layer)).or_default();
+        a.format = format;
+        a.health.merge(&h);
+    });
+}
+
+/// Aggregated RMS record for one `(op, layer)` site.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OpRecord {
+    /// Pipeline-stage name (e.g. `"qkv"`, `"resid2"`, `"d_ffn_down"`).
+    pub op: String,
+    /// Block index (0 for per-model sites like `"logits"`).
+    pub layer: usize,
+    /// Tensors recorded at this site (e.g. one per captured step).
+    pub records: u64,
+    /// Total elements across those tensors.
+    pub elems: u64,
+    /// Σx² across all recorded elements (f64, deterministic fold order).
+    pub sum_sq: f64,
+    /// Largest |x| seen at this site.
+    pub abs_max: f64,
+}
+
+impl OpRecord {
+    /// Root-mean-square over every element recorded at this site.
+    pub fn rms(&self) -> f64 {
+        if self.elems == 0 {
+            0.0
+        } else {
+            (self.sum_sq / self.elems as f64).sqrt()
+        }
+    }
+}
+
+/// Aggregated cast-health record for one quantized `(op, layer)` site.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CastRecord {
+    /// Quantized-op name (e.g. `"qkv"`, `"w_qkv"`, `"d_ffn_up"`).
+    pub op: String,
+    /// Block index.
+    pub layer: usize,
+    /// FP8 format name the op casts into (`"e4m3"` / `"e5m2"`).
+    pub format: String,
+    /// Accumulated counters across every recorded cast at this site.
+    pub health: CastHealth,
+}
+
+/// Everything one [`capture`] scope recorded, sorted by `(op, layer)`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TelemetryReport {
+    /// Per-site RMS records (forward activations and backward gradients).
+    pub ops: Vec<OpRecord>,
+    /// Per-site FP8 cast-health records (BF16 round-trips are not casts
+    /// in the FP8 sense and are not recorded).
+    pub casts: Vec<CastRecord>,
+}
+
+impl TelemetryReport {
+    fn from_store(store: Store) -> TelemetryReport {
+        TelemetryReport {
+            ops: store
+                .ops
+                .into_iter()
+                .map(|((op, layer), a)| OpRecord {
+                    op: op.to_string(),
+                    layer,
+                    records: a.records,
+                    elems: a.elems,
+                    sum_sq: a.sum_sq,
+                    abs_max: a.abs_max,
+                })
+                .collect(),
+            casts: store
+                .casts
+                .into_iter()
+                .map(|((op, layer), a)| CastRecord {
+                    op: op.to_string(),
+                    layer,
+                    format: a.format.to_string(),
+                    health: a.health,
+                })
+                .collect(),
+        }
+    }
+
+    /// True when nothing was recorded (no instrumented code ran).
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty() && self.casts.is_empty()
+    }
+
+    /// RMS of an op aggregated across layers (element-weighted: the
+    /// square root of the pooled Σx²/Σn), or `None` if never recorded.
+    pub fn op_rms(&self, op: &str) -> Option<f64> {
+        let mut sum_sq = 0f64;
+        let mut elems = 0u64;
+        for r in self.ops.iter().filter(|r| r.op == op) {
+            sum_sq += r.sum_sq;
+            elems += r.elems;
+        }
+        if elems == 0 {
+            None
+        } else {
+            Some((sum_sq / elems as f64).sqrt())
+        }
+    }
+
+    /// Distinct op names with RMS records, in sorted order.
+    pub fn op_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.ops.iter().map(|r| r.op.clone()).collect();
+        names.dedup(); // ops is sorted by (op, layer)
+        names
+    }
+
+    /// Cast-health of an op merged across layers, or `None` if the op
+    /// never cast to FP8 under this capture.
+    pub fn cast_totals(&self, op: &str) -> Option<CastHealth> {
+        let mut total = CastHealth::default();
+        let mut seen = false;
+        for r in self.casts.iter().filter(|r| r.op == op) {
+            total.merge(&r.health);
+            seen = true;
+        }
+        if seen {
+            Some(total)
+        } else {
+            None
+        }
+    }
+
+    /// Fold another report into this one (used to aggregate per-step
+    /// captures over a training run).
+    pub fn merge(&mut self, other: &TelemetryReport) {
+        let mut ops: BTreeMap<(String, usize), OpRecord> =
+            self.ops.drain(..).map(|r| ((r.op.clone(), r.layer), r)).collect();
+        for r in &other.ops {
+            let e = ops.entry((r.op.clone(), r.layer)).or_insert_with(|| OpRecord {
+                op: r.op.clone(),
+                layer: r.layer,
+                records: 0,
+                elems: 0,
+                sum_sq: 0.0,
+                abs_max: 0.0,
+            });
+            e.records += r.records;
+            e.elems += r.elems;
+            e.sum_sq += r.sum_sq;
+            e.abs_max = e.abs_max.max(r.abs_max);
+        }
+        self.ops = ops.into_values().collect();
+        let mut casts: BTreeMap<(String, usize), CastRecord> =
+            self.casts.drain(..).map(|r| ((r.op.clone(), r.layer), r)).collect();
+        for r in &other.casts {
+            let e = casts.entry((r.op.clone(), r.layer)).or_insert_with(|| CastRecord {
+                op: r.op.clone(),
+                layer: r.layer,
+                format: r.format.clone(),
+                health: CastHealth::default(),
+            });
+            e.health.merge(&r.health);
+        }
+        self.casts = casts.into_values().collect();
+    }
+
+    /// JSON projection (consumed by `REPORT_coordcheck.json` /
+    /// `REPORT_transfer.json` and the CI report checks).
+    pub fn to_json(&self) -> Json {
+        let ops = self
+            .ops
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("op", Json::str(&r.op)),
+                    ("layer", Json::num(r.layer as f64)),
+                    ("records", Json::num(r.records as f64)),
+                    ("elems", Json::num(r.elems as f64)),
+                    ("rms", Json::num(r.rms())),
+                    ("abs_max", Json::num(r.abs_max)),
+                ])
+            })
+            .collect();
+        let casts = self
+            .casts
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("op", Json::str(&r.op)),
+                    ("layer", Json::num(r.layer as f64)),
+                    ("format", Json::str(&r.format)),
+                    ("total", Json::num(r.health.total as f64)),
+                    ("nonzero", Json::num(r.health.nonzero as f64)),
+                    ("underflow_to_zero", Json::num(r.health.underflow_to_zero as f64)),
+                    ("saturated", Json::num(r.health.saturated as f64)),
+                    ("overflow_nonfinite", Json::num(r.health.overflow_nonfinite as f64)),
+                    ("subnormal", Json::num(r.health.subnormal as f64)),
+                    ("underflow_rate", Json::num(r.health.underflow_rate())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![("ops", Json::Arr(ops)), ("casts", Json::Arr(casts))])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_by_default_and_recording_is_scoped() {
+        assert!(!enabled());
+        record_rms("never", 0, &[1.0, 2.0]); // silently dropped
+        let ((), report) = capture(|| {
+            assert!(enabled());
+            record_rms("a", 0, &[3.0, 4.0]);
+            record_rms("a", 0, &[0.0]);
+            record_rms("a", 1, &[1.0]);
+        });
+        assert!(!enabled());
+        assert_eq!(report.ops.len(), 2);
+        let a0 = &report.ops[0];
+        assert_eq!((a0.op.as_str(), a0.layer, a0.records, a0.elems), ("a", 0, 2, 3));
+        // pooled rms over {3,4,0}: sqrt(25/3)
+        assert!((a0.rms() - (25f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert_eq!(a0.abs_max, 4.0);
+        // aggregate across layers: {3,4,0,1} -> sqrt(26/4)
+        assert!((report.op_rms("a").unwrap() - (26f64 / 4.0).sqrt()).abs() < 1e-12);
+        assert!(report.op_rms("missing").is_none());
+        assert_eq!(report.op_names(), vec!["a".to_string()]);
+    }
+
+    #[test]
+    fn nested_capture_restores_outer_sink() {
+        let ((), outer) = capture(|| {
+            record_rms("outer", 0, &[1.0]);
+            let ((), inner) = capture(|| record_rms("inner", 0, &[2.0]));
+            assert_eq!(inner.ops.len(), 1);
+            assert_eq!(inner.ops[0].op, "inner");
+            // the outer sink is live again
+            record_rms("outer", 0, &[1.0]);
+        });
+        assert_eq!(outer.ops.len(), 1);
+        assert_eq!(outer.ops[0].records, 2, "inner capture must not eat outer records");
+    }
+
+    #[test]
+    fn cast_records_merge_per_site() {
+        use crate::fp8::E4M3;
+        let ((), report) = capture(|| {
+            record_cast("qkv", 0, "e4m3", E4M3.cast_health(&[1.0, 1e-6], 1.0));
+            record_cast("qkv", 0, "e4m3", E4M3.cast_health(&[1000.0], 1.0));
+        });
+        assert_eq!(report.casts.len(), 1);
+        let c = &report.casts[0];
+        assert_eq!(c.format, "e4m3");
+        assert_eq!(c.health.total, 3);
+        assert_eq!(c.health.underflow_to_zero, 1);
+        assert_eq!(c.health.saturated, 1);
+        let t = report.cast_totals("qkv").unwrap();
+        assert_eq!(t.total, 3);
+        assert!(report.cast_totals("nope").is_none());
+    }
+
+    #[test]
+    fn report_merge_and_json_roundtrip() {
+        let ((), mut a) = capture(|| record_rms("x", 0, &[1.0, 1.0]));
+        let ((), b) = capture(|| {
+            record_rms("x", 0, &[1.0]);
+            record_rms("y", 2, &[2.0]);
+            record_cast("x", 0, "e5m2", crate::fp8::E5M2.cast_health(&[1.0], 1.0));
+        });
+        a.merge(&b);
+        assert_eq!(a.ops.len(), 2);
+        assert_eq!(a.ops[0].elems, 3);
+        assert_eq!(a.casts.len(), 1);
+        let j = a.to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("ops").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(parsed.get("casts").unwrap().as_arr().unwrap().len(), 1);
+        let op0 = &parsed.get("ops").unwrap().as_arr().unwrap()[0];
+        assert_eq!(op0.str_or("op", ""), "x");
+        assert!((op0.f64_or("rms", 0.0) - 1.0).abs() < 1e-12);
+    }
+}

@@ -5,17 +5,25 @@
 
 use std::time::{Duration, Instant};
 
+/// Timing statistics of one benchmark.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Benchmark name (the report's row label).
     pub name: String,
+    /// Measured iterations.
     pub iters: usize,
+    /// Mean per-iteration time.
     pub mean: Duration,
+    /// Fastest iteration.
     pub min: Duration,
+    /// Median iteration.
     pub p50: Duration,
+    /// 95th-percentile iteration.
     pub p95: Duration,
 }
 
 impl BenchResult {
+    /// One aligned report line (pair with [`header`]).
     pub fn report(&self) -> String {
         format!(
             "{:<44} {:>10} {:>12} {:>12} {:>12}  ({} iters)",
@@ -29,6 +37,7 @@ impl BenchResult {
     }
 }
 
+/// Column-header line matching [`BenchResult::report`].
 pub fn header() -> String {
     format!(
         "{:<44} {:>10} {:>12} {:>12} {:>12}",

@@ -14,6 +14,7 @@ pub struct Error {
 }
 
 impl Error {
+    /// Error from a plain message (the root of a context chain).
     pub fn msg(m: impl Into<String>) -> Error {
         Error { chain: vec![m.into()] }
     }
@@ -64,11 +65,14 @@ impl<E: std::error::Error> From<E> for Error {
     }
 }
 
+/// Crate-wide result alias over [`Error`] (mirrors `anyhow::Result`).
 pub type Result<T, E = Error> = std::result::Result<T, E>;
 
 /// `.context("...")` / `.with_context(|| ...)` on `Result` and `Option`.
 pub trait Context<T> {
+    /// Wrap an error (or `None`) with a fixed context message.
     fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    /// Wrap with a lazily-built context message (only on the error path).
     fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
 }
 

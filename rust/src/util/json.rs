@@ -9,19 +9,29 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+/// A parsed JSON value (numbers are f64, objects are ordered maps).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number.
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (keys sorted — serialization is deterministic).
     Obj(BTreeMap<String, Json>),
 }
 
+/// Parse failure with the byte offset it occurred at.
 #[derive(Debug)]
 pub struct JsonError {
+    /// Byte position of the failure in the input.
     pub pos: usize,
+    /// What the parser expected/found.
     pub msg: String,
 }
 
@@ -34,6 +44,14 @@ impl fmt::Display for JsonError {
 impl std::error::Error for JsonError {}
 
 impl Json {
+    /// Parse a complete JSON document (trailing data is an error).
+    ///
+    /// ```
+    /// use munit::util::json::Json;
+    /// let j = Json::parse(r#"{"loss": 2.5, "ok": true}"#).unwrap();
+    /// assert_eq!(j.f64_or("loss", 0.0), 2.5);
+    /// assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+    /// ```
     pub fn parse(s: &str) -> Result<Json, JsonError> {
         let mut p = Parser { b: s.as_bytes(), pos: 0 };
         p.skip_ws();
@@ -46,33 +64,40 @@ impl Json {
     }
 
     // -- typed accessors -------------------------------------------------
+
+    /// Object field lookup (`None` on non-objects / missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
             _ => None,
         }
     }
+    /// String payload, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// Numeric payload, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
             _ => None,
         }
     }
+    /// Number truncated to usize, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
+    /// Array elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
             _ => None,
         }
     }
+    /// Boolean payload, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -83,26 +108,34 @@ impl Json {
     pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).and_then(|v| v.as_str()).unwrap_or(default)
     }
+    /// `obj[key]` as f64, or `default`.
     pub fn f64_or(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
     }
+    /// `obj[key]` as usize, or `default`.
     pub fn usize_or(&self, key: &str, default: usize) -> usize {
         self.get(key).and_then(|v| v.as_usize()).unwrap_or(default)
     }
 
     // -- construction helpers --------------------------------------------
+
+    /// Object from (key, value) pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
+    /// Number value.
     pub fn num(n: f64) -> Json {
         Json::Num(n)
     }
+    /// String value (copied).
     pub fn str(s: &str) -> Json {
         Json::Str(s.to_string())
     }
+    /// Array of f64 numbers.
     pub fn arr_f64(v: &[f64]) -> Json {
         Json::Arr(v.iter().map(|x| Json::Num(*x)).collect())
     }
+    /// Array of f32 numbers (widened to f64).
     pub fn arr_f32(v: &[f32]) -> Json {
         Json::Arr(v.iter().map(|x| Json::Num(*x as f64)).collect())
     }
@@ -114,7 +147,12 @@ impl fmt::Display for Json {
             Json::Null => write!(f, "null"),
             Json::Bool(b) => write!(f, "{b}"),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                // JSON has no NaN/inf literals; emitting them would make
+                // the document unparseable (a diverged run's loss is the
+                // realistic path here) — serialize non-finite as null
+                if !n.is_finite() {
+                    write!(f, "null")
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     write!(f, "{}", *n as i64)
                 } else {
                     write!(f, "{n}")
@@ -355,6 +393,22 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("[1] x").is_err());
         assert!(Json::parse("'single'").is_err());
+    }
+
+    #[test]
+    fn nonfinite_numbers_serialize_as_null() {
+        // regression: a diverged run's NaN loss used to produce "NaN" —
+        // not JSON — breaking every downstream parser of the report files
+        let j = Json::obj(vec![
+            ("nan", Json::num(f64::NAN)),
+            ("inf", Json::num(f64::INFINITY)),
+            ("ok", Json::num(2.0)),
+        ]);
+        let text = j.to_string();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed.get("nan").unwrap(), &Json::Null);
+        assert_eq!(parsed.get("inf").unwrap(), &Json::Null);
+        assert_eq!(parsed.f64_or("ok", 0.0), 2.0);
     }
 
     #[test]

@@ -2,11 +2,19 @@
 //! bench harness, property-testing helper. Everything here is hand-rolled
 //! because the build is fully offline (see DESIGN.md).
 
+/// Tiny benchmark harness (criterion replacement).
 pub mod bench;
+/// Error substrate (anyhow replacement): context chains + macros.
 pub mod error;
+/// Minimal JSON parser/serializer (serde_json replacement).
 pub mod json;
+/// Deterministic scoped-thread parallelism (bit-identical at any count).
 pub mod parallel;
+/// Seeded property-testing helper (proptest replacement).
 pub mod proptest;
+/// Deterministic SplitMix64 RNG + Zipf sampler (rand replacement).
 pub mod rng;
+/// Small numeric helpers: mean/std/softmax/percentile/cosine/EMA.
 pub mod stats;
+/// Aligned plain-text table rendering.
 pub mod table;

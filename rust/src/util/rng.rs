@@ -11,6 +11,7 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// Stream seeded by `seed` (identical seeds ⇒ identical streams).
     pub fn new(seed: u64) -> Self {
         Rng { state: seed.wrapping_add(0x9E3779B97F4A7C15) }
     }
@@ -22,6 +23,7 @@ impl Rng {
         r
     }
 
+    /// Next raw 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
         let mut z = self.state;
@@ -35,6 +37,7 @@ impl Rng {
         (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
     }
 
+    /// Uniform f32 in [0, 1).
     pub fn f32(&mut self) -> f32 {
         self.f64() as f32
     }
@@ -57,10 +60,12 @@ impl Rng {
         (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
     }
 
+    /// Standard normal, f32.
     pub fn normal_f32(&mut self) -> f32 {
         self.normal() as f32
     }
 
+    /// Fill `out` with iid N(0, std²) samples.
     pub fn fill_normal(&mut self, out: &mut [f32], std: f32) {
         for v in out.iter_mut() {
             *v = self.normal_f32() * std;
@@ -77,6 +82,7 @@ pub struct Zipf {
 }
 
 impl Zipf {
+    /// Zipf(s) distribution over ranks `{0..n-1}`.
     pub fn new(n: usize, s: f64) -> Self {
         assert!(n > 0);
         let mut cdf = Vec::with_capacity(n);
@@ -92,11 +98,13 @@ impl Zipf {
         Zipf { cdf }
     }
 
+    /// Draw one rank.
     pub fn sample(&self, rng: &mut Rng) -> usize {
         let u = rng.f64();
         self.cdf.partition_point(|&c| c < u)
     }
 
+    /// Support size.
     pub fn n(&self) -> usize {
         self.cdf.len()
     }

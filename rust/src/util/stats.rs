@@ -17,10 +17,12 @@ pub fn std(xs: &[f32]) -> f64 {
     (xs.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
 }
 
+/// Minimum (`inf` for empty input).
 pub fn min(xs: &[f32]) -> f32 {
     xs.iter().copied().fold(f32::INFINITY, f32::min)
 }
 
+/// Maximum (`-inf` for empty input).
 pub fn max(xs: &[f32]) -> f32 {
     xs.iter().copied().fold(f32::NEG_INFINITY, f32::max)
 }
@@ -67,9 +69,11 @@ pub struct Ema {
 }
 
 impl Ema {
+    /// Tracker with smoothing factor `alpha` (1 = no smoothing).
     pub fn new(alpha: f64) -> Self {
         Ema { alpha, value: None }
     }
+    /// Fold in an observation; returns the updated average.
     pub fn update(&mut self, x: f64) -> f64 {
         let v = match self.value {
             None => x,
@@ -78,6 +82,7 @@ impl Ema {
         self.value = Some(v);
         v
     }
+    /// Current average (`None` before the first update).
     pub fn get(&self) -> Option<f64> {
         self.value
     }

@@ -385,6 +385,116 @@ fn trained_model_serves_through_continuous_batching() {
 }
 
 #[test]
+fn telemetry_capture_is_non_perturbing_and_off_hot_path() {
+    // Satellite acceptance: with the sink disabled (the default) the
+    // recording hooks reduce to a thread-local flag check and training is
+    // bit-identical to the pre-telemetry interpreter; with a capture
+    // active, recording is read-only — so traced and untraced runs must
+    // produce bit-identical TrainStates and losses, for both FP8 lanes,
+    // at 1/2/4 interpreter worker threads.
+    for (variant, residual, lr) in
+        [("mus", "fixed", 1.0 / 128.0), ("sp", "standard", 1.0 / 256.0)]
+    {
+        let cfg = ModelConfig {
+            variant: variant.into(),
+            precision: "fp8".into(),
+            residual: residual.into(),
+            ..micro_config()
+        };
+        let be = ReferenceBackend::new(&[cfg.clone()]).unwrap();
+        let trainer = Trainer::new(&be, &cfg).unwrap();
+        let corpus = micro_corpus(&cfg);
+        for threads in [1usize, 2, 4] {
+            munit::util::parallel::with_max_threads(threads, || {
+                let run = |traced: bool| {
+                    let mut session = trainer.init(5).unwrap();
+                    let mut batcher =
+                        Batcher::new(corpus.clone(), 13, 0, 1, cfg.batch, cfg.seq_len);
+                    let mut losses = Vec::new();
+                    let mut reports = Vec::new();
+                    for _ in 0..4 {
+                        let tokens = batcher.next_batch();
+                        if traced {
+                            let (loss, _, rep) =
+                                session.step_traced(&tokens, lr, 1e-4, 0.4).unwrap();
+                            losses.push(loss.to_bits());
+                            reports.push(rep);
+                        } else {
+                            assert!(!munit::telemetry::enabled());
+                            let (loss, _) = session.step(&tokens, lr, 1e-4, 0.4).unwrap();
+                            losses.push(loss.to_bits());
+                        }
+                    }
+                    (losses, session.read_back().unwrap(), reports)
+                };
+                let (l_plain, s_plain, _) = run(false);
+                let (l_traced, s_traced, reports) = run(true);
+                assert_eq!(
+                    l_plain, l_traced,
+                    "{variant}+fp8 @ {threads} threads: tracing changed the losses"
+                );
+                assert_eq!(s_plain.tensors.len(), s_traced.tensors.len());
+                for (i, (a, b)) in s_plain.tensors.iter().zip(&s_traced.tensors).enumerate() {
+                    assert_eq!(
+                        a, b,
+                        "{variant}+fp8 @ {threads} threads: tensor {i} perturbed by tracing"
+                    );
+                }
+                // the traces themselves are real: every step recorded
+                // forward + backward RMS and FP8 cast health, and the
+                // recorded values are thread-count invariant
+                for rep in &reports {
+                    assert!(!rep.is_empty(), "{variant}: empty telemetry report");
+                    for op in ["qkv", "resid2", "final_norm", "d_qkv", "d_resid"] {
+                        let Some(rms) = rep.op_rms(op) else {
+                            panic!("{variant}: no '{op}' telemetry");
+                        };
+                        assert!(rms.is_finite() && rms > 0.0, "{variant} {op}: rms {rms}");
+                    }
+                    assert!(
+                        rep.cast_totals("qkv").unwrap().total > 0,
+                        "{variant}: no qkv cast telemetry"
+                    );
+                }
+            });
+        }
+    }
+}
+
+#[test]
+fn telemetry_reports_bit_identical_across_thread_counts() {
+    // The recorded numbers themselves obey the determinism contract: the
+    // RMS reductions fold fixed chunks in fixed order, so a traced step's
+    // report is identical at any worker-thread budget.
+    let cfg = ModelConfig {
+        width: 64,
+        depth: 2,
+        head_dim: 8,
+        vocab: 128,
+        seq_len: 32,
+        batch: 4,
+        ..ModelConfig::default()
+    };
+    let corpus = CorpusSpec { vocab: cfg.vocab, ..CorpusSpec::default() };
+    let run = |threads: usize| {
+        munit::util::parallel::with_max_threads(threads, || {
+            let be = ReferenceBackend::new(&[cfg.clone()]).unwrap();
+            let trainer = Trainer::new(&be, &cfg).unwrap();
+            let mut session = trainer.init(1).unwrap();
+            let mut batcher = Batcher::new(corpus.clone(), 3, 0, 1, cfg.batch, cfg.seq_len);
+            let (_, _, rep) =
+                session.step_traced(&batcher.next_batch(), 1.0 / 128.0, 1e-4, 0.4).unwrap();
+            rep
+        })
+    };
+    let r1 = run(1);
+    assert!(!r1.is_empty());
+    for threads in [2usize, 4] {
+        assert_eq!(r1, run(threads), "telemetry drifted at {threads} threads");
+    }
+}
+
+#[test]
 fn backend_rejects_wrong_arity_reference() {
     let be = reference_backend();
     let cfg = micro_config();
