@@ -24,12 +24,15 @@ use munit::analysis::{
     InputDist,
 };
 use munit::config::ModelConfig;
+use munit::coordinator::collective::WireFormat;
+use munit::coordinator::shard;
 use munit::coordinator::trainer::Trainer;
 use munit::data::{Batcher, CorpusSpec};
 use munit::fp8::E4M3;
-use munit::perfmodel::{fig8, Hw};
+use munit::perfmodel::{fig8, shard_comm_bytes_per_step, Hw};
+use munit::repro::proxy_tc;
 use munit::runtime::{open_backend, tensor_f32, Backend, InferSession};
-use munit::scaling::comparison_matrix;
+use munit::scaling::{comparison_matrix, recommended_tau};
 use munit::util::bench::{bench, header, quick, BenchResult};
 use munit::util::json::Json;
 use munit::util::rng::Rng;
@@ -404,6 +407,68 @@ fn main() {
         match std::fs::write("BENCH_decode.json", format!("{doc}\n")) {
             Ok(()) => eprintln!("wrote BENCH_decode.json"),
             Err(e) => eprintln!("could not write BENCH_decode.json: {e}"),
+        }
+    }
+
+    // ---- sharded-execution benches (BENCH_shard.json) --------------------
+    // TP ∈ {1,2,4} × stages ∈ {1,2} over the 4-head proxy config, on the
+    // FP8 wire. Each row carries the measured comm bytes/step next to the
+    // perfmodel closed form (CI asserts the exact match plus nonzero
+    // tokens/sec, so the sharded-path perf AND the comm-model contract
+    // are tracked across PRs). Names contain "shard" for filtering.
+    let mut shard_rows: Vec<Json> = Vec::new();
+    let shard_cfg = ModelConfig::default(); // 4 heads: admits tp 1/2/4
+    let shard_tc =
+        proxy_tc(3, 1.0 / 64.0, 2.0 / 16384.0, recommended_tau(shard_cfg.depth), 0);
+    let wire = WireFormat::Fp8;
+    for tp in [1usize, 2, 4] {
+        for stages in [1usize, 2] {
+            let name = format!("shard:tp{tp}_pp{stages}_fp8wire");
+            if !filter.is_empty() && !name.contains(&filter) {
+                continue;
+            }
+            let sspec = shard::ShardSpec::new(tp, stages);
+            let opts = shard::ShardOpts::new(sspec, wire);
+            let mut last: Option<shard::ShardRun> = None;
+            eprintln!("running {name}…");
+            let r = bench(&name, 1, 2, Duration::from_secs(2), || {
+                let sr =
+                    shard::train_sharded(backend.as_ref(), &shard_cfg, &shard_tc, &spec, &opts)
+                        .unwrap();
+                last = Some(std::hint::black_box(sr));
+            });
+            let sr = last.unwrap();
+            let measured = sr.comm.bytes_per_step();
+            let modeled = shard_comm_bytes_per_step(
+                &shard_cfg,
+                tp,
+                stages,
+                wire.bytes_per_elem() as usize,
+            );
+            shard_rows.push(Json::obj(vec![
+                ("config", Json::str(&shard_cfg.name())),
+                ("bench", Json::str(&name)),
+                ("tp", Json::num(tp as f64)),
+                ("stages", Json::num(stages as f64)),
+                ("wire", Json::str(wire.label())),
+                ("steps", Json::num(sr.run.steps_done as f64)),
+                ("tokens_per_sec", Json::num(sr.run.tokens_per_sec)),
+                ("comm_bytes_per_step", Json::num(measured as f64)),
+                ("model_bytes_per_step", Json::num(modeled as f64)),
+                ("exact_match", Json::num(if measured == modeled { 1.0 } else { 0.0 })),
+                ("amax_syncs", Json::num(sr.comm.amax_syncs as f64)),
+            ]));
+            results.push(r);
+        }
+    }
+    if !shard_rows.is_empty() {
+        let doc = Json::obj(vec![
+            ("backend", Json::str(&backend.platform())),
+            ("configs", Json::Arr(shard_rows)),
+        ]);
+        match std::fs::write("BENCH_shard.json", format!("{doc}\n")) {
+            Ok(()) => eprintln!("wrote BENCH_shard.json"),
+            Err(e) => eprintln!("could not write BENCH_shard.json: {e}"),
         }
     }
 

@@ -7,6 +7,16 @@
 //! magic "MUSCKPT1" | u32 n_tensors | n_tensors x {
 //!     u32 name_len | name bytes | u32 ndim | u64 dims... | f32 data... }
 //! ```
+//!
+//! Sharded (tensor-parallel) runs use a container that embeds one state
+//! block per rank plus the shard geometry, so a resume under a
+//! different `ShardSpec` is rejected up front instead of producing a
+//! silently re-partitioned run:
+//!
+//! ```text
+//! magic "MUSSHRD1" | u32 tp | u32 stages | u32 step | u32 n_ranks |
+//!     n_ranks x { u32 n_tensors | tensors... }
+//! ```
 
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
@@ -18,16 +28,15 @@ use crate::runtime::{Tensor, TensorSpec};
 use crate::util::error::{Context, Result};
 
 const MAGIC: &[u8; 8] = b"MUSCKPT1";
+const SHARD_MAGIC: &[u8; 8] = b"MUSSHRD1";
 
-/// Serialize a state. `specs` supplies names/shapes (params then momentum,
-/// as in the train artifact's input list).
-pub fn save(path: &Path, state: &TrainState, specs: &[TensorSpec]) -> Result<()> {
+/// Write one state block (`u32 n_tensors` + named tensors) to `w`.
+/// `specs` supplies names/shapes (params then momenta, as in the train
+/// artifact's input list).
+fn write_state(w: &mut impl Write, state: &TrainState, specs: &[TensorSpec]) -> Result<()> {
     if specs.len() != state.tensors.len() {
         bail!("{} specs for {} tensors", specs.len(), state.tensors.len());
     }
-    let f = File::create(path).with_context(|| format!("creating {}", path.display()))?;
-    let mut w = BufWriter::new(f);
-    w.write_all(MAGIC)?;
     w.write_all(&(specs.len() as u32).to_le_bytes())?;
     for (spec, tensor) in specs.iter().zip(&state.tensors) {
         let data = tensor.as_f32().with_context(|| format!("tensor {}", spec.name))?;
@@ -46,33 +55,26 @@ pub fn save(path: &Path, state: &TrainState, specs: &[TensorSpec]) -> Result<()>
         };
         w.write_all(bytes)?;
     }
-    w.flush()?;
     Ok(())
 }
 
-/// Load a checkpoint, validating names/shapes against `specs`.
-pub fn load(path: &Path, specs: &[TensorSpec]) -> Result<TrainState> {
-    let f = File::open(path).with_context(|| format!("opening {}", path.display()))?;
-    let mut r = BufReader::new(f);
-    let mut magic = [0u8; 8];
-    r.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        bail!("{} is not a µS checkpoint", path.display());
-    }
-    let n = read_u32(&mut r)? as usize;
+/// Read one state block from `r`, validating names/shapes against
+/// `specs` (same order contract as [`write_state`]).
+fn read_state(r: &mut impl Read, specs: &[TensorSpec]) -> Result<TrainState> {
+    let n = read_u32(r)? as usize;
     if n != specs.len() {
         bail!("checkpoint has {n} tensors, expected {}", specs.len());
     }
     let mut tensors = Vec::with_capacity(n);
     for spec in specs {
-        let name_len = read_u32(&mut r)? as usize;
+        let name_len = read_u32(r)? as usize;
         let mut name = vec![0u8; name_len];
         r.read_exact(&mut name)?;
         let name = String::from_utf8(name)?;
         if name != spec.name {
             bail!("tensor order mismatch: got {name}, expected {}", spec.name);
         }
-        let ndim = read_u32(&mut r)? as usize;
+        let ndim = read_u32(r)? as usize;
         let mut shape = Vec::with_capacity(ndim);
         for _ in 0..ndim {
             let mut b = [0u8; 8];
@@ -91,6 +93,93 @@ pub fn load(path: &Path, specs: &[TensorSpec]) -> Result<TrainState> {
         tensors.push(Tensor::f32(data, &shape)?);
     }
     Ok(TrainState { n_params: n / 2, tensors })
+}
+
+/// Serialize a state. `specs` supplies names/shapes (params then momentum,
+/// as in the train artifact's input list).
+pub fn save(path: &Path, state: &TrainState, specs: &[TensorSpec]) -> Result<()> {
+    let f = File::create(path).with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    write_state(&mut w, state, specs)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a checkpoint, validating names/shapes against `specs`.
+pub fn load(path: &Path, specs: &[TensorSpec]) -> Result<TrainState> {
+    let f = File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{} is not a µS checkpoint", path.display());
+    }
+    read_state(&mut r, specs)
+}
+
+/// Serialize a sharded run: one state block per TP rank plus the shard
+/// geometry (`tp`, `stages`) and the step the checkpoint was taken at.
+/// `specs_per_rank[r]` names rank r's tensors (shard-suffixed).
+pub fn save_sharded(
+    path: &Path,
+    shards: &[TrainState],
+    specs_per_rank: &[Vec<TensorSpec>],
+    tp: u32,
+    stages: u32,
+    step: u32,
+) -> Result<()> {
+    if shards.len() != specs_per_rank.len() || shards.len() != tp as usize {
+        bail!("{} shard states / {} spec sets for tp={tp}", shards.len(), specs_per_rank.len());
+    }
+    let f = File::create(path).with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(SHARD_MAGIC)?;
+    for v in [tp, stages, step, shards.len() as u32] {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    for (state, specs) in shards.iter().zip(specs_per_rank) {
+        write_state(&mut w, state, specs)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a sharded checkpoint, rejecting a geometry mismatch: the file's
+/// `(tp, stages)` must equal the requested ones — resuming under a
+/// different `ShardSpec` requires an explicit repartition via a full
+/// (unsharded) checkpoint, not a silent reinterpretation of rank blobs.
+/// Returns the per-rank states and the saved step count.
+pub fn load_sharded(
+    path: &Path,
+    specs_per_rank: &[Vec<TensorSpec>],
+    tp: u32,
+    stages: u32,
+) -> Result<(Vec<TrainState>, u32)> {
+    let f = File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != SHARD_MAGIC {
+        bail!("{} is not a sharded µS checkpoint", path.display());
+    }
+    let (file_tp, file_stages) = (read_u32(&mut r)?, read_u32(&mut r)?);
+    let (step, n_ranks) = (read_u32(&mut r)?, read_u32(&mut r)?);
+    if file_tp != tp || file_stages != stages {
+        bail!(
+            "{} was saved with tp={file_tp}, stages={file_stages}; cannot resume under \
+             tp={tp}, stages={stages} (repartition via a full checkpoint instead)",
+            path.display()
+        );
+    }
+    if n_ranks as usize != specs_per_rank.len() {
+        bail!("checkpoint has {n_ranks} ranks, expected {}", specs_per_rank.len());
+    }
+    let mut shards = Vec::with_capacity(n_ranks as usize);
+    for specs in specs_per_rank {
+        shards.push(read_state(&mut r, specs)?);
+    }
+    Ok((shards, step))
 }
 
 fn read_u32(r: &mut impl Read) -> Result<u32> {

@@ -1,0 +1,325 @@
+//! Collectives over in-process worker states: allreduce / allgather /
+//! reduce-scatter with byte accounting and an FP8 wire format.
+//!
+//! Two jobs, deliberately separated:
+//!
+//! 1. **A deterministic reduction fold.** [`reduce_mean`] accumulates
+//!    per element in f64 over workers in ascending worker index and
+//!    rounds to f32 exactly once. The contract (tested): the result is
+//!    a pure function of the *multiset of inputs in index order* — it
+//!    does not depend on worker count beyond the values themselves, and
+//!    because the fold is element-wise it is invariant under any
+//!    element partitioning, so a reduce-scatter over segments followed
+//!    by an allgather is **bitwise identical** to a central allreduce.
+//!    `ddp::allreduce_mean` and the sharded trainer both delegate here.
+//!
+//! 2. **A wire format with accounting.** [`Collectives`] models what
+//!    crosses the inter-worker boundary: every shard movement is
+//!    counted in bytes (mirrored into an [`ExecStats`]) and, under the
+//!    [`WireFormat::Fp8`] wire, actually quantized through
+//!    [`crate::fp8::FastCast`] with [`CastHealth`] recorded — so
+//!    compressed-comm health is observable through the same telemetry
+//!    sink as the compute-path casts (`wire_param` / `wire_mom` ops).
+//!
+//! The FP8 wire uses **static** per-tensor scales (identically 1.0 for
+//! µS: every tensor is unit-variance by construction, the paper's §2
+//! claim). The scale is a compile-time constant of the shard spec, so
+//! workers exchange **zero** scale/amax bytes — [`Collectives::amax_syncs`]
+//! stays 0 and tests assert it. A dynamic-scaling recipe (TE-style
+//! delayed scaling) would have to allreduce an amax per tensor per step
+//! before any rank could cast; see `docs/NUMERICS.md` §Sharding.
+
+use crate::coordinator::trainer::TrainState;
+use crate::fp8::{CastHealth, FastCast, E4M3, E5M2};
+use crate::runtime::{ExecStats, Tensor};
+use crate::telemetry;
+use crate::util::error::Result;
+
+/// Precision of payloads on the inter-worker wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireFormat {
+    /// Master-precision wire: shards move as the f32 they are. This is
+    /// the repo's stand-in for the paper's BF16-comm baseline — kept
+    /// lossless on purpose so the sharded run is *bit-identical* to the
+    /// sequential one (the correctness oracle); byte counters report
+    /// the 4 B/elem that actually moved.
+    Master,
+    /// FP8 wire with static scale 1.0: params cross as E4M3, momenta as
+    /// E5M2 (the wider-range format — Lion momenta are grad-scale EMAs).
+    /// 1 B/elem and zero scale/amax exchange.
+    Fp8,
+}
+
+impl WireFormat {
+    /// Bytes per element on the wire.
+    pub fn bytes_per_elem(&self) -> u64 {
+        match self {
+            WireFormat::Master => 4,
+            WireFormat::Fp8 => 1,
+        }
+    }
+
+    /// Parse a CLI name: `master` (alias `bf16`) or `fp8`.
+    pub fn by_name(name: &str) -> Option<WireFormat> {
+        match name {
+            "master" | "bf16" | "f32" => Some(WireFormat::Master),
+            "fp8" => Some(WireFormat::Fp8),
+            _ => None,
+        }
+    }
+
+    /// Stable label for reports/benches.
+    pub fn label(&self) -> &'static str {
+        match self {
+            WireFormat::Master => "master",
+            WireFormat::Fp8 => "fp8",
+        }
+    }
+}
+
+/// What a shard payload is — selects the FP8 wire format and the
+/// telemetry op name.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Payload {
+    /// Parameter shard (E4M3 on the FP8 wire).
+    Param,
+    /// Optimizer-momentum shard (E5M2 on the FP8 wire).
+    Momentum,
+}
+
+/// Deterministic mean over `parts` (one slice per worker, equal length),
+/// written into `out`.
+///
+/// Contract: per element, contributions are accumulated in **f64** in
+/// ascending worker index and rounded to f32 exactly once. The fold is
+/// element-wise, so any partitioning of elements across reducers
+/// (reduce-scatter segments) recombines bitwise-identically to a central
+/// reduction — tested in this module.
+pub fn reduce_mean(parts: &[&[f32]], out: &mut Vec<f32>) {
+    let n = parts.len();
+    debug_assert!(n > 0, "reduce over zero workers");
+    let len = parts[0].len();
+    let inv = 1.0f64 / n as f64;
+    out.clear();
+    out.reserve(len);
+    for i in 0..len {
+        let mut acc = 0f64;
+        for p in parts {
+            debug_assert_eq!(p.len(), len);
+            acc += p[i] as f64;
+        }
+        out.push((acc * inv) as f32);
+    }
+}
+
+/// [`reduce_mean`] over whole train states: one reduced [`TrainState`]
+/// from `k` replicas, tensor by tensor, with the deterministic fold.
+pub fn reduce_mean_state(states: &[TrainState]) -> Result<TrainState> {
+    debug_assert!(!states.is_empty());
+    let n_tensors = states[0].tensors.len();
+    let mut tensors = Vec::with_capacity(n_tensors);
+    let mut acc: Vec<f32> = Vec::new(); // reused across tensors
+    let mut parts: Vec<&[f32]> = Vec::with_capacity(states.len());
+    for t in 0..n_tensors {
+        parts.clear();
+        for s in states {
+            parts.push(s.tensors[t].as_f32()?);
+        }
+        reduce_mean(&parts, &mut acc);
+        tensors.push(Tensor::f32(acc.clone(), states[0].tensors[t].shape())?);
+    }
+    Ok(TrainState { tensors, n_params: states[0].n_params })
+}
+
+/// Collective engine: applies the wire format to shard payloads and
+/// accounts every byte that crosses the worker boundary.
+pub struct Collectives {
+    wire: WireFormat,
+    param_cast: FastCast,
+    mom_cast: FastCast,
+    /// Aggregate transfer accounting (`transfer_bytes` = total wire
+    /// bytes, `calls` = collective operations issued).
+    pub stats: ExecStats,
+    /// Wire bytes spent gathering shards into full tensors.
+    pub allgather_bytes: u64,
+    /// Wire bytes spent scattering updated shards back to owners.
+    pub reduce_scatter_bytes: u64,
+    /// Wire bytes spent on pipeline stage-boundary activations.
+    pub activation_bytes: u64,
+    /// Merged cast health of everything FP8-quantized for the wire.
+    pub health: CastHealth,
+    /// Cross-shard scale/amax synchronizations performed. Static µS
+    /// scales keep this at **zero**; tests assert it.
+    pub amax_syncs: u64,
+}
+
+impl Collectives {
+    /// New engine with the given wire format and zeroed counters.
+    pub fn new(wire: WireFormat) -> Collectives {
+        Collectives {
+            wire,
+            param_cast: E4M3.fast_caster(),
+            mom_cast: E5M2.fast_caster(),
+            stats: ExecStats::default(),
+            allgather_bytes: 0,
+            reduce_scatter_bytes: 0,
+            activation_bytes: 0,
+            health: CastHealth::default(),
+            amax_syncs: 0,
+        }
+    }
+
+    /// The wire format in use.
+    pub fn wire(&self) -> WireFormat {
+        self.wire
+    }
+
+    /// Total wire bytes across all collective classes.
+    pub fn total_bytes(&self) -> u64 {
+        self.allgather_bytes + self.reduce_scatter_bytes + self.activation_bytes
+    }
+
+    fn apply_wire(&mut self, data: &mut [f32], payload: Payload, rank: usize) {
+        if self.wire != WireFormat::Fp8 {
+            return;
+        }
+        let (fmt, caster, op, name) = match payload {
+            Payload::Param => (E4M3, &self.param_cast, "wire_param", "e4m3"),
+            Payload::Momentum => (E5M2, &self.mom_cast, "wire_mom", "e5m2"),
+        };
+        // Static scale 1.0: µS keeps every tensor in the unit-variance
+        // band, so no per-step amax is measured and none is exchanged.
+        let h = fmt.cast_health(data, 1.0);
+        self.health.merge(&h);
+        telemetry::record_cast(op, rank, name, h);
+        caster.quantize_slice(data);
+    }
+
+    /// Allgather leg for one rank's shard of a tensor: every one of the
+    /// other `tp - 1` ranks receives this payload over the wire. Under
+    /// the FP8 wire the payload is quantized in place (what the
+    /// receivers — and the assembled compute — actually see).
+    pub fn allgather_shard(&mut self, data: &mut [f32], payload: Payload, tp: usize, rank: usize) {
+        if tp <= 1 {
+            return;
+        }
+        let t0 = std::time::Instant::now();
+        self.apply_wire(data, payload, rank);
+        let bytes = (tp as u64 - 1) * data.len() as u64 * self.wire.bytes_per_elem();
+        self.allgather_bytes += bytes;
+        self.stats.transfer_bytes += bytes;
+        self.stats.transfer_time += t0.elapsed();
+        self.stats.calls += 1;
+    }
+
+    /// Reduce-scatter leg for one rank's updated shard: the shard's new
+    /// values reach their owner across the wire (same format as the
+    /// gather leg, so owners hold wire-precision shards — the FP8-LM
+    /// "FP8 on the wire" discipline, idempotent on re-gather).
+    pub fn reduce_scatter_shard(
+        &mut self,
+        data: &mut [f32],
+        payload: Payload,
+        tp: usize,
+        rank: usize,
+    ) {
+        if tp <= 1 {
+            return;
+        }
+        let t0 = std::time::Instant::now();
+        self.apply_wire(data, payload, rank);
+        let bytes = (tp as u64 - 1) * data.len() as u64 * self.wire.bytes_per_elem();
+        self.reduce_scatter_bytes += bytes;
+        self.stats.transfer_bytes += bytes;
+        self.stats.transfer_time += t0.elapsed();
+        self.stats.calls += 1;
+    }
+
+    /// Account one pipeline stage-boundary activation (or activation-
+    /// gradient) send of `elems` f32 values. Stage boundaries stay at
+    /// master precision (the FP8 wire compresses *state* exchange, the
+    /// FP8-LM win; µS would additionally permit FP8 activations).
+    pub fn send_activations(&mut self, elems: usize) {
+        let bytes = elems as u64 * 4;
+        self.activation_bytes += bytes;
+        self.stats.transfer_bytes += bytes;
+        self.stats.calls += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reduce_mean_is_partition_invariant() {
+        // reduce-scatter over arbitrary segments + gather == central
+        // allreduce, bitwise — the property ddp and TP both lean on.
+        let mut rng = crate::util::rng::Rng::new(7);
+        let mut a = vec![0f32; 257];
+        let mut b = vec![0f32; 257];
+        let mut c = vec![0f32; 257];
+        rng.fill_normal(&mut a, 1.0);
+        rng.fill_normal(&mut b, 0.3);
+        rng.fill_normal(&mut c, 2.0);
+        let mut whole = Vec::new();
+        reduce_mean(&[&a, &b, &c], &mut whole);
+        for chunk in [1usize, 3, 64, 257] {
+            let mut pieced = Vec::new();
+            let mut seg = Vec::new();
+            let mut lo = 0;
+            while lo < a.len() {
+                let hi = (lo + chunk).min(a.len());
+                reduce_mean(&[&a[lo..hi], &b[lo..hi], &c[lo..hi]], &mut seg);
+                pieced.extend_from_slice(&seg);
+                lo = hi;
+            }
+            assert_eq!(whole, pieced, "chunk {chunk} changed the reduction");
+        }
+    }
+
+    #[test]
+    fn reduce_mean_single_worker_is_identity_modulo_rounding() {
+        let a = vec![1.5f32, -2.25, 0.0, 3.0e-8];
+        let mut out = Vec::new();
+        reduce_mean(&[&a], &mut out);
+        assert_eq!(a, out); // f64 round-trip of an f32 is exact
+    }
+
+    #[test]
+    fn fp8_wire_counts_bytes_and_health_without_amax_syncs() {
+        let mut coll = Collectives::new(WireFormat::Fp8);
+        let mut data = vec![0.5f32, -1.0, 1e-6, 600.0];
+        coll.allgather_shard(&mut data, Payload::Param, 2, 0);
+        assert_eq!(coll.allgather_bytes, 4); // (2-1) ranks x 4 elems x 1 B
+        assert_eq!(coll.amax_syncs, 0);
+        assert_eq!(coll.health.total, 4);
+        assert!(coll.health.saturated > 0, "600 should clip in e4m3");
+        // quantization actually happened and is idempotent on re-gather
+        assert_eq!(data[3], crate::fp8::E4M3.fast_caster().max_finite());
+        let once = data.clone();
+        coll.allgather_shard(&mut data, Payload::Param, 2, 0);
+        assert_eq!(once, data);
+    }
+
+    #[test]
+    fn master_wire_is_lossless_and_counts_four_bytes_per_elem() {
+        let mut coll = Collectives::new(WireFormat::Master);
+        let mut data = vec![0.123456789f32, -7.7e-30, 3.4e38];
+        let orig = data.clone();
+        coll.allgather_shard(&mut data, Payload::Momentum, 4, 1);
+        assert_eq!(orig, data);
+        assert_eq!(coll.allgather_bytes, 3 * 3 * 4); // (4-1) x 3 elems x 4 B
+        assert_eq!(coll.health.total, 0);
+    }
+
+    #[test]
+    fn tp1_moves_no_bytes() {
+        let mut coll = Collectives::new(WireFormat::Fp8);
+        let mut data = vec![1.0f32; 8];
+        coll.allgather_shard(&mut data, Payload::Param, 1, 0);
+        coll.reduce_scatter_shard(&mut data, Payload::Param, 1, 0);
+        assert_eq!(coll.total_bytes(), 0);
+        assert_eq!(data, vec![1.0f32; 8]); // no wire, no quantization
+    }
+}

@@ -13,42 +13,90 @@
 //! Each worker owns a device-resident [`Session`]; the allreduce is the
 //! one deliberate full-state host transfer per step (`read_back` -> mean
 //! -> `load_state`), i.e. exactly the collective boundary a single-host
-//! multi-worker run has.
+//! multi-worker run has. Batches come from per-worker background
+//! [`DataPipeline`]s, so token synthesis overlaps stepping instead of
+//! sitting on the critical path.
 
 use crate::config::{ModelConfig, TrainConfig};
+use crate::coordinator::collective;
+use crate::coordinator::pipeline::DataPipeline;
 use crate::coordinator::trainer::{RunResult, TrainState, Trainer};
-use crate::data::{Batcher, CorpusSpec};
-use crate::runtime::{Backend, Tensor};
+use crate::data::CorpusSpec;
+use crate::err;
+use crate::runtime::{Backend, Session};
 use crate::util::error::Result;
 
-/// Mean of the workers' states (the "allreduce"). One f32 accumulation
-/// buffer is reused across tensors, and ONE reduced `TrainState` comes
-/// back: every worker loads it by reference at the `load_state` boundary
-/// instead of receiving its own deep clone — the old per-worker
-/// `Tensor::clone` fan-out was O(workers × state bytes) of pure copy
-/// churn per step on top of the reduction itself.
-fn allreduce_mean(states: &[TrainState]) -> Result<TrainState> {
-    let n_workers = states.len();
-    debug_assert!(n_workers > 1, "allreduce with fewer than two workers is a no-op");
-    let n_tensors = states[0].tensors.len();
-    let inv = 1.0 / n_workers as f32;
-    let mut tensors = Vec::with_capacity(n_tensors);
-    let mut acc: Vec<f32> = Vec::new(); // reused across tensors
-    for t in 0..n_tensors {
-        acc.clear();
-        acc.extend_from_slice(states[0].tensors[t].as_f32()?);
-        for s in states.iter().skip(1) {
-            let v = s.tensors[t].as_f32()?;
-            for (a, b) in acc.iter_mut().zip(v) {
-                *a += *b;
+/// Mean of the workers' states (the "allreduce"), via the deterministic
+/// fold of [`collective::reduce_mean`]: per element, contributions are
+/// accumulated in f64 in **ascending worker index** and rounded to f32
+/// once. The reduced state is therefore a pure function of the ordered
+/// worker states — it cannot drift with accumulation order or with how
+/// elements are segmented across reducers (the old f32 running sum
+/// silently depended on both). ONE reduced `TrainState` comes back:
+/// every worker loads it by reference at the `load_state` boundary.
+pub fn allreduce_mean(states: &[TrainState]) -> Result<TrainState> {
+    debug_assert!(states.len() > 1, "allreduce with fewer than two workers is a no-op");
+    collective::reduce_mean_state(states)
+}
+
+/// The synchronized inner loop over pre-built worker sessions: step all
+/// workers, check every worker's LOCAL loss, then allreduce. Exposed so
+/// tests can drive it with doctored sessions (e.g. a non-finite state in
+/// one worker) and assert the lockstep contract below.
+///
+/// Divergence contract: local losses are checked **before** the
+/// allreduce. If ANY worker produces a non-finite (or over-threshold)
+/// loss, the run stops for all workers with `diverged = true` and the
+/// poisoned state is never averaged into the others — every session has
+/// stepped the same number of times, so the fleet halts in lockstep
+/// instead of desynchronizing.
+pub fn run_lockstep(
+    sessions: &mut [Session<'_>],
+    pipelines: &[DataPipeline],
+    tc: &TrainConfig,
+) -> Result<RunResult> {
+    let n_workers = sessions.len();
+    debug_assert_eq!(n_workers, pipelines.len());
+    let mut losses = Vec::with_capacity(tc.steps);
+    let mut gnorms = Vec::with_capacity(tc.steps);
+    let t0 = std::time::Instant::now();
+    let mut diverged = false;
+    for step in 0..tc.steps {
+        let lr = tc.schedule.lr_at(tc.lr, step, tc.steps);
+        let mut local = Vec::with_capacity(n_workers);
+        let mut gnorm_sum = 0f32;
+        for (w, session) in sessions.iter_mut().enumerate() {
+            let tokens =
+                pipelines[w].next().ok_or_else(|| err!("worker {w} data pipeline ended early"))?;
+            let (loss, gnorm) = session.step(&tokens, lr, tc.wd, tc.tau)?;
+            local.push(loss);
+            gnorm_sum += gnorm;
+        }
+        let loss = local.iter().sum::<f32>() / n_workers as f32;
+        losses.push(loss);
+        gnorms.push(gnorm_sum / n_workers as f32);
+        let any_bad = local.iter().any(|l| !l.is_finite() || *l as f64 > tc.max_loss);
+        if any_bad || !loss.is_finite() || loss as f64 > tc.max_loss {
+            diverged = true;
+            break; // before the collective: no worker averages in a bad state
+        }
+        if n_workers > 1 {
+            // collective boundary: one full-state transfer per worker
+            let mut states = Vec::with_capacity(n_workers);
+            for session in sessions.iter() {
+                states.push(session.read_back()?);
+            }
+            let reduced = allreduce_mean(&states)?;
+            for session in sessions.iter_mut() {
+                session.load_state(&reduced)?;
             }
         }
-        for a in acc.iter_mut() {
-            *a *= inv;
-        }
-        tensors.push(Tensor::f32(acc.clone(), states[0].tensors[t].shape())?);
     }
-    Ok(TrainState { tensors, n_params: states[0].n_params })
+    let wall = t0.elapsed();
+    let steps_done = losses.len();
+    let tokens_per_batch: usize = pipelines.iter().map(|p| p.tokens_per_batch()).sum();
+    let tokens_per_sec = (steps_done * tokens_per_batch) as f64 / wall.as_secs_f64().max(1e-9);
+    Ok(RunResult { losses, gnorms, steps_done, diverged, spikes: 0, wall, tokens_per_sec })
 }
 
 /// Train with `k` simulated workers for `tc.steps` synchronized steps.
@@ -65,53 +113,21 @@ pub fn train_ddp(
     for _ in 0..n_workers {
         sessions.push(trainer.init(tc.init_seed)?);
     }
-    let mut batchers: Vec<Batcher> = (0..n_workers)
-        .map(|w| Batcher::new(corpus.clone(), tc.seed, w, n_workers, cfg.batch, cfg.seq_len))
+    // background producers, one corpus shard per worker (bit-identical
+    // streams to direct `Batcher` use — tested in `pipeline`)
+    let pipelines: Vec<DataPipeline> = (0..n_workers)
+        .map(|w| {
+            DataPipeline::spawn(
+                corpus.clone(),
+                tc.seed,
+                w,
+                n_workers,
+                cfg.batch,
+                cfg.seq_len,
+                2,
+                Some(tc.steps),
+            )
+        })
         .collect();
-    let mut losses = Vec::with_capacity(tc.steps);
-    let mut gnorms = Vec::with_capacity(tc.steps);
-    let t0 = std::time::Instant::now();
-    let mut diverged = false;
-    for step in 0..tc.steps {
-        let lr = tc.schedule.lr_at(tc.lr, step, tc.steps);
-        let mut loss_sum = 0f32;
-        let mut gnorm_sum = 0f32;
-        for (w, session) in sessions.iter_mut().enumerate() {
-            let tokens = batchers[w].next_batch();
-            let (loss, gnorm) = session.step(&tokens, lr, tc.wd, tc.tau)?;
-            loss_sum += loss;
-            gnorm_sum += gnorm;
-        }
-        if n_workers > 1 {
-            // collective boundary: one full-state transfer per worker
-            let mut states = Vec::with_capacity(n_workers);
-            for session in sessions.iter() {
-                states.push(session.read_back()?);
-            }
-            let reduced = allreduce_mean(&states)?;
-            for session in sessions.iter_mut() {
-                session.load_state(&reduced)?;
-            }
-        }
-        let loss = loss_sum / n_workers as f32;
-        losses.push(loss);
-        gnorms.push(gnorm_sum / n_workers as f32);
-        if !loss.is_finite() || loss as f64 > tc.max_loss {
-            diverged = true;
-            break;
-        }
-    }
-    let wall = t0.elapsed();
-    let steps_done = losses.len();
-    let tokens_per_sec = (steps_done * n_workers * cfg.batch * cfg.seq_len) as f64
-        / wall.as_secs_f64().max(1e-9);
-    Ok(RunResult {
-        losses,
-        gnorms,
-        steps_done,
-        diverged,
-        spikes: 0,
-        wall,
-        tokens_per_sec,
-    })
+    run_lockstep(&mut sessions, &pipelines, tc)
 }

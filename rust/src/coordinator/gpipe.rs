@@ -1,0 +1,155 @@
+//! GPipe-style pipeline schedule: fill/drain microbatching over stages.
+//!
+//! Pipeline parallelism here is a *schedule + traffic model* layered on
+//! the sharded trainer: layers are partitioned into contiguous stages,
+//! the batch is split into microbatches, and each step is accounted as
+//! the classic fill/drain timetable — all forward microbatches flow
+//! through the stages, then all backwards drain in reverse (GPipe;
+//! activations for the backward are assumed stashed per stage). The
+//! scheduler is the source of truth for *when* stage boundaries are
+//! crossed, and the sharded trainer counts one activation (or
+//! activation-gradient) payload per crossing — which is why the
+//! measured bytes match `perfmodel`'s closed form exactly and are
+//! independent of the microbatch count (more microbatches = more,
+//! proportionally smaller, sends).
+//!
+//! Useful identities (tested):
+//! - slots: `2·m·s` for `m` microbatches over `s` stages;
+//! - makespan: `2·(m + s − 1)` stage-ticks;
+//! - bubble fraction: `(s − 1) / (m + s − 1)` of each direction idles.
+
+use std::ops::Range;
+
+/// Direction of a scheduled slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Forward microbatch through a stage.
+    Fwd,
+    /// Backward microbatch through a stage.
+    Bwd,
+}
+
+/// One (tick, stage) cell of the pipeline timetable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Slot {
+    /// Discrete time index (stage-ticks from step start).
+    pub tick: usize,
+    /// Pipeline stage executing this slot.
+    pub stage: usize,
+    /// Microbatch index being processed.
+    pub micro: usize,
+    /// Forward or backward.
+    pub phase: Phase,
+}
+
+/// Contiguous layer ranges per stage. `depth` must be divisible by
+/// `stages` (validated by `ShardSpec::validate`).
+pub fn stage_layers(depth: usize, stages: usize) -> Vec<Range<usize>> {
+    debug_assert!(stages >= 1 && depth % stages == 0);
+    let per = depth / stages;
+    (0..stages).map(|s| s * per..(s + 1) * per).collect()
+}
+
+/// The full fill/drain timetable for one step: forward slots for every
+/// (microbatch, stage), then backward slots in reverse microbatch and
+/// stage order, starting after the forward drain. Sorted by tick.
+pub fn schedule(stages: usize, microbatches: usize) -> Vec<Slot> {
+    let (s, m) = (stages, microbatches);
+    let mut slots = Vec::with_capacity(2 * m * s);
+    for j in 0..m {
+        for st in 0..s {
+            slots.push(Slot { tick: j + st, stage: st, micro: j, phase: Phase::Fwd });
+        }
+    }
+    let bwd0 = m + s - 1; // forward drain complete
+    for j in (0..m).rev() {
+        for st in (0..s).rev() {
+            let tick = bwd0 + (m - 1 - j) + (s - 1 - st);
+            slots.push(Slot { tick, stage: st, micro: j, phase: Phase::Bwd });
+        }
+    }
+    slots.sort_by_key(|sl| (sl.tick, sl.stage));
+    slots
+}
+
+/// Step length in stage-ticks: `2·(m + s − 1)`.
+pub fn makespan(stages: usize, microbatches: usize) -> usize {
+    2 * (microbatches + stages - 1)
+}
+
+/// Fraction of each direction's timetable a stage spends idle waiting
+/// for fill/drain: `(s − 1) / (m + s − 1)` — the GPipe bubble.
+pub fn bubble_fraction(stages: usize, microbatches: usize) -> f64 {
+    (stages - 1) as f64 / (microbatches + stages - 1) as f64
+}
+
+/// Stage-boundary crossings in one step: forward sends from every stage
+/// but the last, backward sends from every stage but the first —
+/// `2·m·(s − 1)` payloads.
+pub fn boundary_sends(slots: &[Slot], stages: usize) -> usize {
+    slots
+        .iter()
+        .filter(|sl| match sl.phase {
+            Phase::Fwd => sl.stage + 1 < stages,
+            Phase::Bwd => sl.stage > 0,
+        })
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn find(slots: &[Slot], stage: usize, micro: usize, phase: Phase) -> usize {
+        slots
+            .iter()
+            .find(|sl| sl.stage == stage && sl.micro == micro && sl.phase == phase)
+            .expect("slot present")
+            .tick
+    }
+
+    #[test]
+    fn schedule_respects_dependencies_and_exclusivity() {
+        for (s, m) in [(1usize, 1usize), (2, 2), (2, 4), (4, 4), (3, 6)] {
+            let slots = schedule(s, m);
+            assert_eq!(slots.len(), 2 * m * s);
+            // no stage runs two slots in one tick
+            let mut seen = std::collections::HashSet::new();
+            for sl in &slots {
+                assert!(seen.insert((sl.tick, sl.stage)), "stage double-booked: {sl:?}");
+                assert!(sl.tick < makespan(s, m));
+            }
+            for j in 0..m {
+                // forward flows downstream, backward upstream, and the
+                // backward of a microbatch follows its forward
+                for st in 0..s.saturating_sub(1) {
+                    assert!(find(&slots, st, j, Phase::Fwd) < find(&slots, st + 1, j, Phase::Fwd));
+                    assert!(find(&slots, st + 1, j, Phase::Bwd) < find(&slots, st, j, Phase::Bwd));
+                }
+                assert!(find(&slots, s - 1, j, Phase::Fwd) < find(&slots, s - 1, j, Phase::Bwd));
+            }
+        }
+    }
+
+    #[test]
+    fn boundary_sends_match_closed_form() {
+        for (s, m) in [(1usize, 1usize), (1, 4), (2, 2), (2, 8), (4, 4)] {
+            let slots = schedule(s, m);
+            assert_eq!(boundary_sends(&slots, s), 2 * m * (s - 1));
+        }
+    }
+
+    #[test]
+    fn stage_layers_partition_depth() {
+        let ranges = stage_layers(6, 3);
+        assert_eq!(ranges, vec![0..2, 2..4, 4..6]);
+        assert_eq!(stage_layers(4, 1), vec![0..4]);
+    }
+
+    #[test]
+    fn single_stage_has_no_bubble() {
+        assert_eq!(bubble_fraction(1, 4), 0.0);
+        assert!(bubble_fraction(4, 4) > 0.0);
+        assert_eq!(makespan(1, 1), 2);
+    }
+}

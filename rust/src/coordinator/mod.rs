@@ -12,6 +12,16 @@
 //! - [`ddp`]: simulated multi-worker data parallelism (sharded streams +
 //!   periodic parameter averaging), exercising the distributed code path
 //!   µS claims compatibility with (no per-tensor amax collectives needed).
+//! - [`collective`]: the collective layer those paths share — a
+//!   deterministic (order-fixed, partition-invariant) mean fold plus
+//!   allgather/reduce-scatter wire formats (lossless master or FP8 at
+//!   static µS scales) with byte + cast-health accounting.
+//! - [`gpipe`]: the GPipe fill/drain microbatch schedule (slot table,
+//!   makespan/bubble closed forms) used by the sharded trainer.
+//! - [`shard`]: sharded execution layer — Megatron-style tensor
+//!   parallelism (column-split QKV/up, row-split out/down) composed with
+//!   pipeline stages, per-shard µS scale validation, sharded
+//!   checkpoints, and comm accounting against `perfmodel` closed forms.
 //! - [`serve`]: continuous-batching inference scheduler over
 //!   `runtime::InferSession` — staggered admissions, between-step
 //!   evictions, one batched decode execute per step, per-request latency
@@ -24,14 +34,21 @@
 
 /// Binary checkpoint save/load for `TrainState`.
 pub mod checkpoint;
+/// Collective primitives: deterministic folds + wire formats with byte
+/// and FP8-health accounting.
+pub mod collective;
 /// Simulated multi-worker data parallelism.
 pub mod ddp;
+/// GPipe fill/drain microbatch schedule over pipeline stages.
+pub mod gpipe;
 /// JSONL run logging.
 pub mod metrics;
 /// Background data generation with bounded-channel backpressure.
 pub mod pipeline;
 /// Continuous-batching inference scheduler.
 pub mod serve;
+/// Sharded execution: tensor + pipeline parallelism with FP8 collectives.
+pub mod shard;
 /// Hyperparameter grid engine (threaded workers, optimal subsets).
 pub mod sweep;
 /// Single-model training loop over device-resident sessions.
@@ -39,4 +56,5 @@ pub mod trainer;
 /// Width-transfer measurement harness (coordinate checks + LR sweeps).
 pub mod transfer;
 
+pub use shard::{ShardOpts, ShardRun, ShardSpec};
 pub use trainer::{RunResult, TrainState, Trainer};

@@ -1,0 +1,620 @@
+//! Sharded execution: tensor parallelism (Megatron column/row splits)
+//! composed with pipeline stages, over FP8-compressible collectives.
+//!
+//! ## What is sharded
+//!
+//! [`ShardSpec`] partitions exactly the four hidden linears the FP8
+//! plan quantizes: `w_qkv` and `w_up` are **column**-split (each rank
+//! owns whole attention heads / whole FFN neurons), `w_o` and `w_down`
+//! are **row**-split (each rank contracts a band of the fan-in) — the
+//! geometry comes from `runtime::block::shard_axis`, so the partitioner
+//! can never drift from the block pipeline's layout. Embedding, head,
+//! and norm gains are replicated. Optimizer momenta shard exactly like
+//! their parameters. Pipeline stages partition depth into contiguous
+//! layer ranges with a GPipe fill/drain microbatch schedule
+//! ([`crate::coordinator::gpipe`]).
+//!
+//! ## Execution model and the correctness oracle
+//!
+//! This is *simulated* sharding in the same sense as `coordinator::ddp`:
+//! rank states are real host-side shards and every collective leg is
+//! real data movement (bytes counted, FP8 wire actually quantizes), but
+//! each step's math executes once, on the assembled full state, through
+//! the unmodified bit-exact `train_step` artifact. That construction is
+//! what makes the repo's standing contract extendable to sharding:
+//! with the lossless [`WireFormat::Master`] wire, a sharded run at any
+//! TP degree, stage count, or substrate thread count is **bit-identical**
+//! to the sequential single-worker run (genuine row-parallel partial-sum
+//! recombination could never be — float addition is not associative).
+//! Under [`WireFormat::Fp8`] the gathered shards really are E4M3/E5M2
+//! values, so the divergence from the master-wire run is a *measured*
+//! property, bounded in tests — while [`Collectives::amax_syncs`] stays
+//! zero because µS's static scales are constants of the spec
+//! (`scaling::Scheme::shard_output_mult`, validated at startup).
+
+use std::path::{Path, PathBuf};
+
+use crate::config::{ModelConfig, TrainConfig};
+use crate::coordinator::checkpoint;
+use crate::coordinator::collective::{Collectives, Payload, WireFormat};
+use crate::coordinator::gpipe::{self, Phase};
+use crate::coordinator::pipeline::DataPipeline;
+use crate::coordinator::trainer::{RunResult, TrainState};
+use crate::data::CorpusSpec;
+use crate::fp8::CastHealth;
+use crate::runtime::block::{self, ShardAxis};
+use crate::runtime::{Backend, Dtype, Session, Tensor, TensorSpec};
+use crate::scaling::ShardDim;
+use crate::util::error::{Context, Result};
+use crate::util::stats::Ema;
+use crate::{bail, err};
+
+/// How a model is sharded: TP degree × pipeline stages × microbatches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpec {
+    /// Tensor-parallel degree (must divide `n_heads` and `ffn_width`).
+    pub tp: usize,
+    /// Pipeline stages over depth (must divide `depth`).
+    pub stages: usize,
+    /// GPipe microbatches per step (must divide `batch`).
+    pub microbatches: usize,
+}
+
+impl ShardSpec {
+    /// Spec with `microbatches = stages` (the minimal fill/drain split).
+    pub fn new(tp: usize, stages: usize) -> ShardSpec {
+        ShardSpec { tp, stages, microbatches: stages.max(1) }
+    }
+
+    /// Same spec with an explicit microbatch count.
+    pub fn with_microbatches(mut self, m: usize) -> ShardSpec {
+        self.microbatches = m;
+        self
+    }
+
+    /// Check divisibility against a concrete model. TP must be
+    /// head-aligned (`tp | n_heads` keeps every rank's qkv columns on
+    /// whole heads) and divide the FFN width; stages must tile depth;
+    /// microbatches must tile the batch.
+    pub fn validate(&self, cfg: &ModelConfig) -> Result<()> {
+        if self.tp == 0 || self.stages == 0 || self.microbatches == 0 {
+            bail!("shard spec must be positive, got {self:?}");
+        }
+        if cfg.n_heads() % self.tp != 0 {
+            bail!("tp={} does not divide n_heads={} of {}", self.tp, cfg.n_heads(), cfg.name());
+        }
+        if cfg.ffn_width() % self.tp != 0 {
+            bail!("tp={} does not divide ffn_width={}", self.tp, cfg.ffn_width());
+        }
+        if cfg.depth % self.stages != 0 {
+            bail!("stages={} does not divide depth={}", self.stages, cfg.depth);
+        }
+        if cfg.batch % self.microbatches != 0 {
+            bail!("microbatches={} does not divide batch={}", self.microbatches, cfg.batch);
+        }
+        Ok(())
+    }
+
+    /// Stable label, e.g. `tp2.pp2.mb4`.
+    pub fn describe(&self) -> String {
+        format!("tp{}.pp{}.mb{}", self.tp, self.stages, self.microbatches)
+    }
+}
+
+/// Startup validation that per-shard scaling rules reproduce the
+/// unsharded multipliers: every sharded tensor's output-mult and
+/// init-std, derived from its rank-LOCAL fan-in via
+/// [`crate::scaling::Scheme::shard_output_mult`] /
+/// [`crate::scaling::Scheme::shard_init_std`], must equal the
+/// full-tensor values the assembled compute path applies. This is the
+/// "static scales survive sharding" property executed, and it would
+/// catch any drift between the partitioner's geometry and the scaling
+/// rules.
+pub fn validate_scales(cfg: &ModelConfig, spec: &ShardSpec) -> Result<()> {
+    let scheme = cfg.scheme();
+    let n_tensors = block::param_specs(cfg).len();
+    for idx in 0..n_tensors {
+        let role = block::role_of(cfg, idx);
+        let Some(axis) = block::shard_axis(role) else { continue };
+        let kind = block::param_kind(role);
+        let full_fan = block::fan_in(cfg, role);
+        let (dim, local_fan) = match axis {
+            ShardAxis::Col { .. } => (ShardDim::FanOut, full_fan),
+            ShardAxis::Row => (ShardDim::FanIn, full_fan / spec.tp),
+        };
+        let sharded = scheme.shard_output_mult(kind, dim, local_fan, spec.tp);
+        if sharded != scheme.output_mult(kind, full_fan) {
+            bail!("shard output-mult mismatch for {:?} (tensor {idx})", role);
+        }
+        let std_sharded = scheme.shard_init_std(kind, dim, local_fan, spec.tp, block::SIGMA_INIT);
+        if std_sharded != scheme.init_std(kind, full_fan, block::SIGMA_INIT) {
+            bail!("shard init-std mismatch for {:?} (tensor {idx})", role);
+        }
+    }
+    Ok(())
+}
+
+fn shard_shape(shape: &[usize], axis: ShardAxis, tp: usize) -> Vec<usize> {
+    match axis {
+        ShardAxis::Row => vec![shape[0] / tp, shape[1]],
+        ShardAxis::Col { .. } => vec![shape[0], shape[1] / tp],
+    }
+}
+
+fn shard_slice(data: &[f32], shape: &[usize], axis: ShardAxis, tp: usize, rank: usize) -> Vec<f32> {
+    let (rows, cols) = (shape[0], shape[1]);
+    match axis {
+        ShardAxis::Row => {
+            let per = rows / tp;
+            data[rank * per * cols..(rank + 1) * per * cols].to_vec()
+        }
+        ShardAxis::Col { blocks } => {
+            let cb = cols / blocks; // columns per packed group (q|k|v)
+            let sw = cb / tp; // this rank's columns per group
+            let mut v = Vec::with_capacity(rows * cols / tp);
+            for row in 0..rows {
+                let base = row * cols;
+                for b in 0..blocks {
+                    let off = base + b * cb + rank * sw;
+                    v.extend_from_slice(&data[off..off + sw]);
+                }
+            }
+            v
+        }
+    }
+}
+
+fn unshard_into(
+    full: &mut [f32],
+    shard: &[f32],
+    shape: &[usize],
+    axis: ShardAxis,
+    tp: usize,
+    rank: usize,
+) {
+    let (rows, cols) = (shape[0], shape[1]);
+    match axis {
+        ShardAxis::Row => {
+            let per = rows / tp;
+            full[rank * per * cols..(rank + 1) * per * cols].copy_from_slice(shard);
+        }
+        ShardAxis::Col { blocks } => {
+            let cb = cols / blocks;
+            let sw = cb / tp;
+            let mut src = 0usize;
+            for row in 0..rows {
+                let base = row * cols;
+                for b in 0..blocks {
+                    let off = base + b * cb + rank * sw;
+                    full[off..off + sw].copy_from_slice(&shard[src..src + sw]);
+                    src += sw;
+                }
+            }
+        }
+    }
+}
+
+/// Split a full `params ++ momenta` state into `tp` per-rank states.
+/// Sharded tensors are sliced per `block::shard_axis`; everything else
+/// (embedding, head, norm gains — and their momenta) is replicated.
+/// Exact inverse of [`assemble_state`], bitwise.
+pub fn partition_state(
+    cfg: &ModelConfig,
+    state: &TrainState,
+    spec: &ShardSpec,
+) -> Result<Vec<TrainState>> {
+    let n = state.n_params;
+    if state.tensors.len() != 2 * n {
+        bail!("state has {} tensors for {} params", state.tensors.len(), n);
+    }
+    let mut ranks: Vec<Vec<Tensor>> = (0..spec.tp).map(|_| Vec::with_capacity(2 * n)).collect();
+    for (idx, t) in state.tensors.iter().enumerate() {
+        let role = block::role_of(cfg, idx % n);
+        match block::shard_axis(role) {
+            None => {
+                for r in ranks.iter_mut() {
+                    r.push(t.clone());
+                }
+            }
+            Some(axis) => {
+                let data = t.as_f32()?;
+                let sshape = shard_shape(t.shape(), axis, spec.tp);
+                for (rank, r) in ranks.iter_mut().enumerate() {
+                    let v = shard_slice(data, t.shape(), axis, spec.tp, rank);
+                    r.push(Tensor::f32(v, &sshape)?);
+                }
+            }
+        }
+    }
+    Ok(ranks.into_iter().map(|tensors| TrainState { tensors, n_params: n }).collect())
+}
+
+/// Reassemble a full state from `tp` per-rank shards (inverse of
+/// [`partition_state`]; replicated tensors are taken from rank 0).
+pub fn assemble_state(
+    cfg: &ModelConfig,
+    shards: &[TrainState],
+    spec: &ShardSpec,
+) -> Result<TrainState> {
+    if shards.len() != spec.tp {
+        bail!("{} shard states for tp={}", shards.len(), spec.tp);
+    }
+    let n = shards[0].n_params;
+    let pspecs = block::param_specs(cfg);
+    let mut tensors = Vec::with_capacity(2 * n);
+    for idx in 0..2 * n {
+        let pidx = idx % n;
+        let role = block::role_of(cfg, pidx);
+        match block::shard_axis(role) {
+            None => tensors.push(shards[0].tensors[idx].clone()),
+            Some(axis) => {
+                let shape = &pspecs[pidx].shape;
+                let mut full = vec![0f32; pspecs[pidx].elements()];
+                for (rank, s) in shards.iter().enumerate() {
+                    unshard_into(
+                        &mut full,
+                        s.tensors[idx].as_f32()?,
+                        shape,
+                        axis,
+                        spec.tp,
+                        rank,
+                    );
+                }
+                tensors.push(Tensor::f32(full, shape)?);
+            }
+        }
+    }
+    Ok(TrainState { tensors, n_params: n })
+}
+
+/// Tensor specs (names + shapes) of one rank's shard state, params then
+/// momenta, mirroring the train artifact's `m_` naming. Sharded tensors
+/// are suffixed `@tp{rank}of{tp}` so a checkpoint can never silently
+/// load under the wrong geometry.
+pub fn shard_state_specs(cfg: &ModelConfig, spec: &ShardSpec, rank: usize) -> Vec<TensorSpec> {
+    let pspecs = block::param_specs(cfg);
+    let mut out = Vec::with_capacity(2 * pspecs.len());
+    let rank_spec = |ps: &TensorSpec, pidx: usize| {
+        match block::shard_axis(block::role_of(cfg, pidx)) {
+            None => ps.clone(),
+            Some(axis) => TensorSpec {
+                name: format!("{}@tp{}of{}", ps.name, rank, spec.tp),
+                shape: shard_shape(&ps.shape, axis, spec.tp),
+                dtype: Dtype::F32,
+            },
+        }
+    };
+    for (pidx, ps) in pspecs.iter().enumerate() {
+        out.push(rank_spec(ps, pidx));
+    }
+    for (pidx, ps) in pspecs.iter().enumerate() {
+        let mut s = rank_spec(ps, pidx);
+        s.name = format!("m_{}", s.name);
+        out.push(s);
+    }
+    out
+}
+
+/// Options for a sharded training run.
+#[derive(Debug, Clone)]
+pub struct ShardOpts {
+    /// The sharding geometry.
+    pub spec: ShardSpec,
+    /// Collective wire format (Master = the bit-identity oracle, Fp8 =
+    /// compressed state exchange).
+    pub wire: WireFormat,
+    /// Save a sharded checkpoint after completing N steps.
+    pub save_at: Option<(usize, PathBuf)>,
+    /// Resume from a sharded checkpoint (its spec must match).
+    pub resume_from: Option<PathBuf>,
+}
+
+impl ShardOpts {
+    /// Options with no checkpointing.
+    pub fn new(spec: ShardSpec, wire: WireFormat) -> ShardOpts {
+        ShardOpts { spec, wire, save_at: None, resume_from: None }
+    }
+}
+
+/// Communication accounting of a sharded run.
+#[derive(Debug, Clone)]
+pub struct CommReport {
+    /// Wire format the run used.
+    pub wire: WireFormat,
+    /// Steps the counters cover.
+    pub steps: usize,
+    /// Total allgather wire bytes.
+    pub allgather_bytes: u64,
+    /// Total reduce-scatter wire bytes.
+    pub reduce_scatter_bytes: u64,
+    /// Total pipeline stage-boundary activation bytes.
+    pub activation_bytes: u64,
+    /// Merged FP8 wire-cast health (zero counters on the master wire).
+    pub health: CastHealth,
+    /// Cross-shard amax/scale synchronizations (always 0 for static µS
+    /// scales — asserted in tests).
+    pub amax_syncs: u64,
+}
+
+impl CommReport {
+    /// All wire bytes across collective classes.
+    pub fn total_bytes(&self) -> u64 {
+        self.allgather_bytes + self.reduce_scatter_bytes + self.activation_bytes
+    }
+
+    /// Wire bytes per training step.
+    pub fn bytes_per_step(&self) -> u64 {
+        if self.steps == 0 {
+            0
+        } else {
+            self.total_bytes() / self.steps as u64
+        }
+    }
+}
+
+/// Outcome of [`train_sharded`]: run metrics, comm accounting, and the
+/// final assembled full state (for bit-identity checks / handoff).
+pub struct ShardRun {
+    /// Trainer-equivalent run metrics.
+    pub run: RunResult,
+    /// Wire traffic + health accounting.
+    pub comm: CommReport,
+    /// Final full `params ++ momenta` state, assembled from the shards.
+    pub final_state: TrainState,
+}
+
+/// Apply one collective leg (allgather or reduce-scatter) to every
+/// rank's sharded tensors: wire-transform + byte accounting.
+fn wire_leg(
+    coll: &mut Collectives,
+    shards: &mut [TrainState],
+    sharded_idx: &[usize],
+    n_params: usize,
+    tp: usize,
+    gather: bool,
+) -> Result<()> {
+    if tp <= 1 {
+        return Ok(());
+    }
+    for (rank, st) in shards.iter_mut().enumerate() {
+        for &idx in sharded_idx {
+            let (mut v, shape) = {
+                let t = &st.tensors[idx];
+                (t.as_f32()?.to_vec(), t.shape().to_vec())
+            };
+            let payload = if idx < n_params { Payload::Param } else { Payload::Momentum };
+            if gather {
+                coll.allgather_shard(&mut v, payload, tp, rank);
+            } else {
+                coll.reduce_scatter_shard(&mut v, payload, tp, rank);
+            }
+            st.tensors[idx] = Tensor::f32(v, &shape)?;
+        }
+    }
+    Ok(())
+}
+
+/// Train `cfg` sharded per `opts` for `tc.steps` steps.
+///
+/// Per step: each rank's shards cross the allgather wire (quantized
+/// under the FP8 format), the full state is assembled and stepped once
+/// through the bit-exact `train_step`, pipeline stage boundaries are
+/// charged per the GPipe schedule, and the updated state is
+/// reduce-scattered back to its owners. Data comes through the
+/// background [`DataPipeline`] (same stream as the sequential trainer's
+/// `Batcher`, so master-wire runs are bit-identical to `Trainer::run`).
+pub fn train_sharded(
+    backend: &dyn Backend,
+    cfg: &ModelConfig,
+    tc: &TrainConfig,
+    corpus: &CorpusSpec,
+    opts: &ShardOpts,
+) -> Result<ShardRun> {
+    opts.spec.validate(cfg)?;
+    validate_scales(cfg, &opts.spec)?;
+    let spec = opts.spec;
+    let mut coll = Collectives::new(opts.wire);
+    let slots = gpipe::schedule(spec.stages, spec.microbatches);
+    let send_elems = (cfg.batch / spec.microbatches) * cfg.seq_len * cfg.width;
+
+    let mut session = Session::new(backend, cfg)?;
+    let n_params = session.n_params_tensors();
+    let sharded_idx: Vec<usize> = (0..2 * n_params)
+        .filter(|&idx| block::shard_axis(block::role_of(cfg, idx % n_params)).is_some())
+        .collect();
+
+    let (mut shards, start_step) = match &opts.resume_from {
+        Some(path) => load_checkpoint(path, cfg, &spec)?,
+        None => {
+            session.init(tc.init_seed)?;
+            (partition_state(cfg, &session.read_back()?, &spec)?, 0)
+        }
+    };
+    if start_step >= tc.steps && opts.resume_from.is_some() {
+        bail!("checkpoint already at step {start_step}, run asks for {}", tc.steps);
+    }
+
+    let pipe = DataPipeline::spawn(
+        corpus.clone(),
+        tc.seed,
+        0,
+        1,
+        cfg.batch,
+        cfg.seq_len,
+        2,
+        Some(tc.steps),
+    );
+    for _ in 0..start_step {
+        // fast-forward the deterministic stream to the resume point
+        pipe.next().ok_or_else(|| err!("data pipeline ended during resume fast-forward"))?;
+    }
+
+    let mut losses = Vec::with_capacity(tc.steps - start_step);
+    let mut gnorms = Vec::with_capacity(tc.steps - start_step);
+    let mut ema = Ema::new(0.1);
+    let mut spikes = 0usize;
+    let mut diverged = false;
+    let t0 = std::time::Instant::now();
+    for step in start_step..tc.steps {
+        let lr = tc.schedule.lr_at(tc.lr, step, tc.steps);
+        let tokens = pipe.next().ok_or_else(|| err!("data pipeline ended early"))?;
+
+        // allgather: every rank's shards reach the compute site
+        wire_leg(&mut coll, &mut shards, &sharded_idx, n_params, spec.tp, true)?;
+        let full = assemble_state(cfg, &shards, &spec)?;
+        session.load_state(&full)?;
+        let (loss, gnorm) = session.step(&tokens, lr, tc.wd, tc.tau)?;
+
+        // pipeline stage boundaries, per the actual fill/drain timetable
+        for sl in &slots {
+            let crosses = match sl.phase {
+                Phase::Fwd => sl.stage + 1 < spec.stages,
+                Phase::Bwd => sl.stage > 0,
+            };
+            if crosses {
+                coll.send_activations(send_elems);
+            }
+        }
+
+        // reduce-scatter: updated shards return to their owners
+        shards = partition_state(cfg, &session.read_back()?, &spec)?;
+        wire_leg(&mut coll, &mut shards, &sharded_idx, n_params, spec.tp, false)?;
+
+        losses.push(loss);
+        gnorms.push(gnorm);
+        if let Some(prev) = ema.get() {
+            if (loss as f64) > prev + tc.spike_threshold {
+                spikes += 1;
+            }
+        }
+        ema.update(loss as f64);
+        if !loss.is_finite() || loss as f64 > tc.max_loss {
+            diverged = true;
+            break;
+        }
+        if let Some((at, path)) = &opts.save_at {
+            if step + 1 == *at {
+                save_checkpoint(path, cfg, &spec, step + 1, &shards)?;
+            }
+        }
+    }
+    let wall = t0.elapsed();
+    let steps_done = losses.len();
+    let tokens_per_sec =
+        (steps_done * cfg.batch * cfg.seq_len) as f64 / wall.as_secs_f64().max(1e-9);
+    let final_state = assemble_state(cfg, &shards, &spec)?;
+    Ok(ShardRun {
+        run: RunResult { losses, gnorms, steps_done, diverged, spikes, wall, tokens_per_sec },
+        comm: CommReport {
+            wire: opts.wire,
+            steps: steps_done,
+            allgather_bytes: coll.allgather_bytes,
+            reduce_scatter_bytes: coll.reduce_scatter_bytes,
+            activation_bytes: coll.activation_bytes,
+            health: coll.health,
+            amax_syncs: coll.amax_syncs,
+        },
+        final_state,
+    })
+}
+
+/// Save the per-rank shard states (+ spec + step) as one file.
+pub fn save_checkpoint(
+    path: &Path,
+    cfg: &ModelConfig,
+    spec: &ShardSpec,
+    step: usize,
+    shards: &[TrainState],
+) -> Result<()> {
+    let specs: Vec<Vec<TensorSpec>> =
+        (0..spec.tp).map(|r| shard_state_specs(cfg, spec, r)).collect();
+    checkpoint::save_sharded(path, shards, &specs, spec.tp as u32, spec.stages as u32, step as u32)
+        .with_context(|| format!("saving sharded checkpoint {}", path.display()))
+}
+
+/// Load a sharded checkpoint, rejecting any [`ShardSpec`] mismatch with
+/// a contextual error. Returns the per-rank states and the step count
+/// the checkpoint was taken at.
+pub fn load_checkpoint(
+    path: &Path,
+    cfg: &ModelConfig,
+    spec: &ShardSpec,
+) -> Result<(Vec<TrainState>, usize)> {
+    let specs: Vec<Vec<TensorSpec>> =
+        (0..spec.tp).map(|r| shard_state_specs(cfg, spec, r)).collect();
+    let (shards, step) =
+        checkpoint::load_sharded(path, &specs, spec.tp as u32, spec.stages as u32)
+            .with_context(|| format!("resuming sharded checkpoint {}", path.display()))?;
+    Ok((shards, step as usize))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{micro_config, ReferenceBackend};
+
+    fn seeded_state(cfg: &ModelConfig) -> TrainState {
+        let be = ReferenceBackend::new(std::slice::from_ref(cfg)).unwrap();
+        let mut s = Session::new(&be, cfg).unwrap();
+        s.init(11).unwrap();
+        s.read_back().unwrap()
+    }
+
+    #[test]
+    fn partition_then_assemble_is_bitwise_identity() {
+        let cfg = micro_config(); // 2 heads, ffn 64
+        let state = seeded_state(&cfg);
+        for tp in [1usize, 2] {
+            let spec = ShardSpec::new(tp, 1);
+            spec.validate(&cfg).unwrap();
+            let shards = partition_state(&cfg, &state, &spec).unwrap();
+            assert_eq!(shards.len(), tp);
+            let back = assemble_state(&cfg, &shards, &spec).unwrap();
+            for (a, b) in state.tensors.iter().zip(&back.tensors) {
+                assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap());
+                assert_eq!(a.shape(), b.shape());
+            }
+        }
+    }
+
+    #[test]
+    fn column_shards_are_head_aligned_and_row_shards_band_the_fan_in() {
+        // 2x2 toy with 2 packed groups: [r0: a0 a1 | b0 b1; r1: ...]
+        let data: Vec<f32> = (0..8).map(|x| x as f32).collect();
+        let shape = [2usize, 4usize];
+        let s0 = shard_slice(&data, &shape, ShardAxis::Col { blocks: 2 }, 2, 0);
+        let s1 = shard_slice(&data, &shape, ShardAxis::Col { blocks: 2 }, 2, 1);
+        // rank 0 takes column 0 of EACH group, rank 1 column 1 of each
+        assert_eq!(s0, vec![0.0, 2.0, 4.0, 6.0]);
+        assert_eq!(s1, vec![1.0, 3.0, 5.0, 7.0]);
+        let r0 = shard_slice(&data, &shape, ShardAxis::Row, 2, 0);
+        assert_eq!(r0, vec![0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn spec_validation_rejects_bad_geometry() {
+        let cfg = micro_config(); // n_heads = 2, depth = 2
+        assert!(ShardSpec::new(4, 1).validate(&cfg).is_err()); // tp > heads
+        assert!(ShardSpec::new(2, 2).validate(&cfg).is_ok());
+        assert!(ShardSpec::new(2, 3).validate(&cfg).is_err()); // 3 ∤ depth
+        assert!(ShardSpec::new(2, 1).with_microbatches(3).validate(&cfg).is_err());
+        assert!(ShardSpec::new(0, 1).validate(&cfg).is_err());
+        validate_scales(&cfg, &ShardSpec::new(2, 1)).unwrap();
+    }
+
+    #[test]
+    fn shard_specs_name_rank_and_geometry() {
+        let cfg = micro_config();
+        let spec = ShardSpec::new(2, 1);
+        let specs = shard_state_specs(&cfg, &spec, 1);
+        let n = specs.len() / 2;
+        let qkv = specs.iter().find(|s| s.name.starts_with("w_qkv0")).unwrap();
+        assert_eq!(qkv.name, "w_qkv0@tp1of2");
+        assert_eq!(qkv.shape, vec![cfg.width, 3 * cfg.width / 2]);
+        let m_qkv = specs[n..].iter().find(|s| s.name.contains("w_qkv0")).unwrap();
+        assert_eq!(m_qkv.name, "m_w_qkv0@tp1of2");
+        // replicated tensors keep their plain names
+        assert!(specs.iter().any(|s| s.name == "embed"));
+        assert!(specs.iter().any(|s| s.name == "m_head"));
+    }
+}

@@ -8,6 +8,9 @@
 //!   train-one  --config NAME   one run, JSON summary on stdout (scripting)
 //!   sweep      --config NAME   η/λ/τ grid (--workers N = in-process threads)
 //!   ddp        --config NAME   simulated multi-worker data-parallel run
+//!   shard      --config NAME   sharded run: tensor + pipeline parallel
+//!                              (--tp K --stages S --wire master|fp8),
+//!                              comm bytes cross-checked vs perfmodel
 //!   figure     fig2..fig12     reproduce a paper figure (see DESIGN.md §4)
 //!   table      table2..table5  reproduce a paper table
 //!   e2e                        headline end-to-end driver (≈12M-param µS FP8)
@@ -35,7 +38,8 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 use munit::config::{ModelConfig, TrainConfig};
-use munit::coordinator::{ddp, metrics::MetricsLogger, sweep, trainer::Trainer, transfer};
+use munit::coordinator::collective::WireFormat;
+use munit::coordinator::{ddp, metrics::MetricsLogger, shard, sweep, trainer::Trainer, transfer};
 use munit::data::Batcher;
 use munit::repro::{self, corpus_for, proxy_tc, Ctx};
 use munit::runtime::{open_backend, Backend, ReferenceBackend};
@@ -131,6 +135,7 @@ const COMMANDS: &[Cmd] = &[
     Cmd { name: "train-one", run: cmd_train_one },
     Cmd { name: "sweep", run: cmd_sweep },
     Cmd { name: "ddp", run: cmd_ddp },
+    Cmd { name: "shard", run: cmd_shard },
     Cmd { name: "figure", run: cmd_repro },
     Cmd { name: "table", run: cmd_repro },
     Cmd { name: "e2e", run: cmd_e2e },
@@ -311,6 +316,55 @@ fn cmd_ddp(cli: &Cli) -> Result<()> {
         r.steps_done,
         r.final_loss(10),
         r.tokens_per_sec
+    );
+    Ok(())
+}
+
+fn cmd_shard(cli: &Cli) -> Result<()> {
+    let backend = cli.backend()?;
+    let cfg = cli.named_config(backend.as_ref())?;
+    let tc = tc_from_args(&cli.args, &cfg);
+    let tp = cli.args.usize_or("tp", 2);
+    let stages = cli.args.usize_or("stages", 1);
+    let mb = cli.args.usize_or("microbatches", stages.max(1));
+    let spec = shard::ShardSpec::new(tp, stages).with_microbatches(mb);
+    let wire_name = cli.args.get("wire").unwrap_or("master");
+    let wire = WireFormat::by_name(wire_name)
+        .with_context(|| format!("unknown wire '{wire_name}' (master|fp8)"))?;
+    let opts = shard::ShardOpts::new(spec, wire);
+    let r = shard::train_sharded(backend.as_ref(), &cfg, &tc, &corpus_for(&cfg), &opts)?;
+    println!(
+        "shard {} wire={}: {} steps, final loss {:.4}, {:.0} tok/s{}",
+        spec.describe(),
+        wire.label(),
+        r.run.steps_done,
+        r.run.final_loss(10),
+        r.run.tokens_per_sec,
+        if r.run.diverged { " (diverged)" } else { "" }
+    );
+    let modeled = munit::perfmodel::shard_comm_bytes_per_step(
+        &cfg,
+        tp,
+        stages,
+        wire.bytes_per_elem() as usize,
+    );
+    let measured = r.comm.bytes_per_step();
+    println!(
+        "  comm/step: allgather {} B, reduce-scatter {} B, activations {} B -> {} B \
+         (perfmodel {} B, {})",
+        r.comm.allgather_bytes / r.comm.steps.max(1) as u64,
+        r.comm.reduce_scatter_bytes / r.comm.steps.max(1) as u64,
+        r.comm.activation_bytes / r.comm.steps.max(1) as u64,
+        measured,
+        modeled,
+        if measured == modeled { "exact match" } else { "MISMATCH" }
+    );
+    println!(
+        "  wire health: {} casts, underflow {:.2e}, saturation {:.2e}, amax syncs {}",
+        r.comm.health.total,
+        r.comm.health.underflow_rate(),
+        r.comm.health.saturation_rate(),
+        r.comm.amax_syncs
     );
     Ok(())
 }

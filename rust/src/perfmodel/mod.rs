@@ -357,6 +357,68 @@ pub fn memory_per_gpu(p: &PaperConfig, n_gpus: usize) -> f64 {
     sharded + acts
 }
 
+// ---------------------------------------------------------------------------
+// Sharded-execution communication model
+//
+// Closed forms for the wire traffic of `coordinator::shard::train_sharded`,
+// exact-match tested against that module's runtime byte counters (the
+// counters iterate actual shard tensors and the actual GPipe slot table;
+// these formulas are derived independently from the model geometry, so
+// agreement is a real cross-check, not a tautology).
+
+/// Elements of the TP-sharded tensors — the four hidden linears across
+/// all layers: `depth · (4d² + 2df)` with `f = ffn_width`. Everything
+/// else (embedding, head, norm gains) is replicated, never on the wire.
+pub fn tp_sharded_param_elems(cfg: &ModelConfig) -> u64 {
+    let (d, f) = (cfg.width as u64, cfg.ffn_width() as u64);
+    cfg.depth as u64 * (4 * d * d + 2 * d * f)
+}
+
+/// Allgather wire bytes per training step at TP degree `tp` with
+/// `wire_bytes` per element (4 = master, 1 = FP8): every rank receives
+/// the other `tp-1` ranks' shards for BOTH the parameter and the
+/// momentum copy of each sharded tensor, and the `tp` shards of one
+/// tensor partition it exactly — so the sum telescopes to
+/// `(tp-1) · 2 · P_s · wire_bytes`, independent of how the shards are
+/// sliced. Zero at `tp = 1` (nothing to exchange).
+pub fn shard_allgather_bytes_per_step(cfg: &ModelConfig, tp: usize, wire_bytes: usize) -> u64 {
+    if tp <= 1 {
+        return 0;
+    }
+    (tp as u64 - 1) * 2 * tp_sharded_param_elems(cfg) * wire_bytes as u64
+}
+
+/// Reduce-scatter wire bytes per training step — same volume as the
+/// allgather (each element crosses the wire once per non-owner rank).
+pub fn shard_reduce_scatter_bytes_per_step(cfg: &ModelConfig, tp: usize, wire_bytes: usize) -> u64 {
+    shard_allgather_bytes_per_step(cfg, tp, wire_bytes)
+}
+
+/// Pipeline stage-boundary activation bytes per step: the GPipe
+/// timetable crosses a boundary `2·m·(stages-1)` times (once forward,
+/// once backward per microbatch per interior boundary), each carrying a
+/// `[batch/m, seq, width]` f32 activation — the microbatch count `m`
+/// cancels: `2 · (stages-1) · batch · seq · width · 4`.
+pub fn pipeline_activation_bytes_per_step(cfg: &ModelConfig, stages: usize) -> u64 {
+    if stages <= 1 {
+        return 0;
+    }
+    2 * (stages as u64 - 1) * (cfg.batch * cfg.seq_len * cfg.width) as u64 * 4
+}
+
+/// Total sharded-run wire bytes per step: TP collectives (both legs)
+/// plus pipeline activations. Exactly zero at `tp = 1, stages = 1`.
+pub fn shard_comm_bytes_per_step(
+    cfg: &ModelConfig,
+    tp: usize,
+    stages: usize,
+    wire_bytes: usize,
+) -> u64 {
+    shard_allgather_bytes_per_step(cfg, tp, wire_bytes)
+        + shard_reduce_scatter_bytes_per_step(cfg, tp, wire_bytes)
+        + pipeline_activation_bytes_per_step(cfg, stages)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -528,6 +590,51 @@ mod tests {
             assert!(gb < 80.0, "{}: {gb} GB", p.name);
             assert!(gb > 1.0, "{}: {gb} GB", p.name);
         }
+    }
+
+    /// The comm model's `P_s` term is pinned to the runtime block's
+    /// actual tensor enumeration: summing `elements()` over exactly the
+    /// specs `block::shard_axis` marks sharded must equal the closed
+    /// form — same pattern as the FLOPs pins above.
+    #[test]
+    fn sharded_elems_match_block_enumeration_exactly() {
+        let mut models: Vec<ModelConfig> =
+            paper_table4().iter().map(|p| crate::config::presets::paper_model(p)).collect();
+        models.push(ModelConfig::default());
+        models.push(crate::runtime::micro_config());
+        for m in &models {
+            let enumerated: u64 = block::param_specs(m)
+                .iter()
+                .enumerate()
+                .filter(|(idx, _)| block::shard_axis(block::role_of(m, *idx)).is_some())
+                .map(|(_, s)| s.elements() as u64)
+                .sum();
+            assert_eq!(enumerated, tp_sharded_param_elems(m), "{}", m.name());
+        }
+    }
+
+    #[test]
+    fn shard_comm_is_zero_without_sharding_and_scales_with_tp() {
+        let m = ModelConfig::default();
+        assert_eq!(shard_comm_bytes_per_step(&m, 1, 1, 4), 0);
+        assert_eq!(pipeline_activation_bytes_per_step(&m, 1), 0);
+        assert_eq!(shard_allgather_bytes_per_step(&m, 1, 1), 0);
+        // tp=2 master wire: (2-1) · 2 · P_s · 4 per leg
+        let ps = tp_sharded_param_elems(&m);
+        assert_eq!(shard_allgather_bytes_per_step(&m, 2, 4), 2 * ps * 4);
+        assert_eq!(
+            shard_reduce_scatter_bytes_per_step(&m, 2, 4),
+            shard_allgather_bytes_per_step(&m, 2, 4)
+        );
+        // FP8 wire is exactly 4x cheaper than the f32 master wire
+        assert_eq!(
+            shard_allgather_bytes_per_step(&m, 4, 4),
+            4 * shard_allgather_bytes_per_step(&m, 4, 1)
+        );
+        // activations: interior boundaries only, microbatch-independent
+        let a2 = pipeline_activation_bytes_per_step(&m, 2);
+        assert_eq!(a2, 2 * (m.batch * m.seq_len * m.width * 4) as u64);
+        assert_eq!(pipeline_activation_bytes_per_step(&m, 4), 3 * a2);
     }
 
     #[test]

@@ -224,6 +224,35 @@ pub(crate) fn fan_in(cfg: &ModelConfig, role: Role) -> usize {
     }
 }
 
+/// Tensor-parallel split axis of a weight (the Megatron decomposition,
+/// stored `[fan_in, fan_out]`): the attention input projection and FFN
+/// up-projection are **column**-parallel (fan_out split, each rank owns
+/// whole heads / whole FFN neurons), their mirror projections are
+/// **row**-parallel (fan_in split, ranks produce partial sums).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum ShardAxis {
+    /// Fan-out split into `blocks` independent column groups, each
+    /// divided across ranks (`w_qkv` packs q|k|v ⇒ 3 groups, so every
+    /// rank gets *its heads'* q, k and v columns).
+    Col {
+        /// Independent packed column groups in the tensor.
+        blocks: usize,
+    },
+    /// Fan-in split: each rank holds a contiguous row band.
+    Row,
+}
+
+/// Which axis (if any) tensor parallelism splits this role on. Embedding,
+/// head and norm gains are replicated — `None`.
+pub(crate) fn shard_axis(role: Role) -> Option<ShardAxis> {
+    match role {
+        Role::Qkv => Some(ShardAxis::Col { blocks: 3 }),
+        Role::FfnUp => Some(ShardAxis::Col { blocks: 1 }),
+        Role::AttnOut | Role::FfnDown => Some(ShardAxis::Row),
+        _ => None,
+    }
+}
+
 /// Reference-model parameter tensors in state order. Weights are stored
 /// `[fan_in, fan_out]` (the python `param_specs` convention); norms are
 /// gain-only RMS norms.
@@ -2159,5 +2188,36 @@ mod tests {
         let var = p[idx_qkv(0)].iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()
             / p[idx_qkv(0)].len() as f64;
         assert!((var.sqrt() - SIGMA_INIT).abs() < 0.005, "sp qkv std {}", var.sqrt());
+    }
+
+    #[test]
+    fn shard_axis_covers_exactly_the_four_hidden_linears() {
+        let cfg = ModelConfig::default();
+        let specs = param_specs(&cfg);
+        let mut sharded = 0usize;
+        for idx in 0..specs.len() {
+            let role = role_of(&cfg, idx);
+            match shard_axis(role) {
+                Some(ShardAxis::Col { blocks }) => {
+                    sharded += 1;
+                    assert!(matches!(role, Role::Qkv | Role::FfnUp));
+                    // each packed column group is a multiple of head_dim
+                    // wide, so any tp | n_heads split is head-aligned
+                    let fan_out = specs[idx].shape[1];
+                    assert_eq!(fan_out % blocks, 0);
+                    assert_eq!((fan_out / blocks) % cfg.head_dim, 0);
+                }
+                Some(ShardAxis::Row) => {
+                    sharded += 1;
+                    assert!(matches!(role, Role::AttnOut | Role::FfnDown));
+                    assert_eq!(specs[idx].shape[0], fan_in(&cfg, role));
+                }
+                None => assert!(!matches!(
+                    role,
+                    Role::Qkv | Role::AttnOut | Role::FfnUp | Role::FfnDown
+                )),
+            }
+        }
+        assert_eq!(sharded, 4 * cfg.depth);
     }
 }

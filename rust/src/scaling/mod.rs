@@ -36,6 +36,17 @@ pub enum ParamKind {
     Norm,
 }
 
+/// How a matmul weight is split across tensor-parallel ranks (the
+/// Megatron decomposition): column-parallel shards divide the fan-out,
+/// row-parallel shards divide the fan-in (contraction) dimension.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardDim {
+    /// Column-parallel: fan-out split, full contraction on every rank.
+    FanOut,
+    /// Row-parallel: fan-in split, ranks produce partial sums.
+    FanIn,
+}
+
 impl Scheme {
     /// Human-readable scheme name (the Fig 1 row label).
     pub fn name(&self) -> &'static str {
@@ -161,6 +172,53 @@ impl Scheme {
             Scheme::Ump => 1.0,
             Scheme::Sp | Scheme::SpTe => 0.0,
         }
+    }
+
+    /// The fan-in a tensor-parallel rank must plug into this scheme's
+    /// static rules for its shard of a weight split `dim`-wise over `tp`
+    /// ranks, given the rank-local contraction dim `local_fan_in`.
+    ///
+    /// Column-parallel shards keep the full contraction on every rank,
+    /// so the local fan-in *is* the effective one. Row-parallel shards
+    /// contract only `1/tp` of the input, but each partial output must
+    /// still carry the FULL-fan-in multiplier — the sharded op sums
+    /// `tp` partials and `α·Σyᵢ = Σα·yᵢ` only for the unsharded α. This
+    /// is the closed-form reason µS needs no per-shard re-derivation
+    /// (and no runtime statistics): the effective fan-in is a constant
+    /// of the shard spec, known before any data flows.
+    pub fn shard_fan_in(&self, dim: ShardDim, local_fan_in: usize, tp: usize) -> usize {
+        match dim {
+            ShardDim::FanOut => local_fan_in,
+            ShardDim::FanIn => local_fan_in * tp,
+        }
+    }
+
+    /// [`Scheme::output_mult`] evaluated from a TP rank's *local* shard
+    /// geometry. Equals the unsharded multiplier for every scheme
+    /// (tested) — the invariance the sharded trainer validates at
+    /// startup.
+    pub fn shard_output_mult(
+        &self,
+        kind: ParamKind,
+        dim: ShardDim,
+        local_fan_in: usize,
+        tp: usize,
+    ) -> f64 {
+        self.output_mult(kind, self.shard_fan_in(dim, local_fan_in, tp))
+    }
+
+    /// [`Scheme::init_std`] evaluated from a TP rank's *local* shard
+    /// geometry: a rank can initialize (or re-derive) its shard without
+    /// seeing the full tensor.
+    pub fn shard_init_std(
+        &self,
+        kind: ParamKind,
+        dim: ShardDim,
+        local_fan_in: usize,
+        tp: usize,
+        sigma_init: f64,
+    ) -> f64 {
+        self.init_std(kind, self.shard_fan_in(dim, local_fan_in, tp), sigma_init)
     }
 
     /// Fully-decoupled weight decay transfer (paper §3.2).
@@ -344,5 +402,37 @@ mod tests {
         assert!((b2 - Scheme::Mus.init_std(ParamKind::Hidden, f, 0.0)).abs() < 1e-15);
         // c2 = 1/sqrt(f): the sqrt LR rule µS uses
         assert!((c2 - theta).abs() < 1e-15);
+    }
+
+    #[test]
+    fn shard_rules_reproduce_the_unsharded_multipliers() {
+        // every scheme, both split axes: a rank deriving its multiplier
+        // from local shard geometry lands exactly on the full-tensor
+        // value — no cross-shard exchange needed to agree on scales.
+        let d = 1024usize;
+        for s in [Scheme::Sp, Scheme::Mup, Scheme::Ump, Scheme::SpTe, Scheme::Mus] {
+            for tp in [1usize, 2, 4, 8] {
+                for kind in [ParamKind::Hidden, ParamKind::Output] {
+                    let full = s.output_mult(kind, d);
+                    // column split: local fan_in == d
+                    assert_eq!(s.shard_output_mult(kind, ShardDim::FanOut, d, tp), full);
+                    // row split: local fan_in == d/tp, mult still α(d)
+                    assert_eq!(s.shard_output_mult(kind, ShardDim::FanIn, d / tp, tp), full);
+                    let fs = s.init_std(kind, d, 0.02);
+                    assert_eq!(s.shard_init_std(kind, ShardDim::FanOut, d, tp, 0.02), fs);
+                    assert_eq!(s.shard_init_std(kind, ShardDim::FanIn, d / tp, tp, 0.02), fs);
+                }
+            }
+        }
+        // the trap the helper exists to avoid: plugging the row-shard's
+        // LOCAL fan-in into the rule directly is wrong under µS…
+        let naive = Scheme::Mus.output_mult(ParamKind::Hidden, d / 4);
+        assert!(naive != Scheme::Mus.output_mult(ParamKind::Hidden, d));
+        // …while µS init_std (unit variance) happens to be fan-independent,
+        // which is exactly why sharded *init* needs no re-derivation.
+        assert_eq!(
+            Scheme::Mus.init_std(ParamKind::Hidden, d / 4, 0.02),
+            Scheme::Mus.init_std(ParamKind::Hidden, d, 0.02)
+        );
     }
 }

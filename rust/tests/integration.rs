@@ -11,8 +11,11 @@
 //!    passes on a fresh clone.
 
 use munit::config::{ModelConfig, Schedule, TrainConfig};
-use munit::coordinator::{checkpoint, ddp, sweep, trainer::Trainer};
+use munit::coordinator::collective::WireFormat;
+use munit::coordinator::pipeline::DataPipeline;
+use munit::coordinator::{checkpoint, ddp, shard, sweep, trainer::Trainer};
 use munit::data::{Batcher, CorpusSpec};
+use munit::perfmodel;
 use munit::runtime::{micro_config, Backend, ReferenceBackend};
 
 fn quick_tc(steps: usize) -> TrainConfig {
@@ -505,6 +508,271 @@ fn backend_rejects_wrong_arity_reference() {
         Err(e) => e,
     };
     assert!(err.to_string().contains("expects"));
+}
+
+// ---------------------------------------------------------------------------
+// sharded execution: tensor + pipeline parallelism over FP8 collectives
+
+/// A 4-head FP8 config so every TP degree in {1, 2, 4} is head-aligned.
+fn shard_test_cfg(variant: &str, residual: &str) -> ModelConfig {
+    ModelConfig {
+        width: 32,
+        depth: 2,
+        head_dim: 8,
+        vocab: 64,
+        seq_len: 16,
+        batch: 4,
+        variant: variant.into(),
+        precision: "fp8".into(),
+        residual: residual.into(),
+        ..ModelConfig::default()
+    }
+}
+
+/// Sequential single-worker reference: same init seed, same data stream,
+/// same LR schedule as `train_sharded` — losses plus the final state.
+fn sequential_run(
+    be: &ReferenceBackend,
+    cfg: &ModelConfig,
+    tc: &TrainConfig,
+) -> (Vec<f32>, munit::coordinator::TrainState) {
+    let trainer = Trainer::new(be, cfg).unwrap();
+    let mut session = trainer.init(tc.init_seed).unwrap();
+    let mut b = Batcher::new(micro_corpus(cfg), tc.seed, 0, 1, cfg.batch, cfg.seq_len);
+    let mut losses = Vec::new();
+    for step in 0..tc.steps {
+        let lr = tc.schedule.lr_at(tc.lr, step, tc.steps);
+        losses.push(session.step(&b.next_batch(), lr, tc.wd, tc.tau).unwrap().0);
+    }
+    (losses, session.read_back().unwrap())
+}
+
+#[test]
+fn sharded_master_wire_is_bit_identical_to_sequential_both_fp8_lanes() {
+    // The tentpole oracle: under the lossless master wire, a sharded run
+    // at ANY tensor-parallel degree, stage count, and interpreter thread
+    // budget is bit-identical to the plain sequential trainer — for both
+    // the µS-static and SP-dynamic FP8 compute lanes.
+    for (variant, residual, lr) in
+        [("mus", "fixed", 1.0 / 128.0), ("sp", "standard", 1.0 / 256.0)]
+    {
+        let cfg = shard_test_cfg(variant, residual);
+        let tc = TrainConfig { lr, ..quick_tc(3) };
+        let be = ReferenceBackend::new(&[cfg.clone()]).unwrap();
+        let (seq_losses, seq_state) = sequential_run(&be, &cfg, &tc);
+        for tp in [2usize, 4] {
+            for stages in [1usize, 2] {
+                for threads in [1usize, 2, 4] {
+                    munit::util::parallel::with_max_threads(threads, || {
+                        let be = ReferenceBackend::new(&[cfg.clone()]).unwrap();
+                        let opts = shard::ShardOpts::new(
+                            shard::ShardSpec::new(tp, stages),
+                            WireFormat::Master,
+                        );
+                        let r = shard::train_sharded(&be, &cfg, &tc, &micro_corpus(&cfg), &opts)
+                            .unwrap();
+                        let tag = format!("{variant} tp{tp} pp{stages} threads{threads}");
+                        assert_eq!(r.run.losses, seq_losses, "{tag}: losses drifted");
+                        assert_eq!(r.comm.amax_syncs, 0, "{tag}: amax exchanged");
+                        for (i, (a, b)) in
+                            seq_state.tensors.iter().zip(&r.final_state.tensors).enumerate()
+                        {
+                            assert_eq!(a, b, "{tag}: tensor {i} not bit-identical");
+                        }
+                    });
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fp8_wire_divergence_is_bounded_with_zero_amax_exchange() {
+    // Under the FP8 wire the exchanged shards really are E4M3/E5M2
+    // values, so the run measurably diverges from the master-wire run —
+    // but stays finite and bounded, and (the µS headline) needs ZERO
+    // cross-shard amax/scale synchronization to do it.
+    let cfg = shard_test_cfg("mus", "fixed");
+    let tc = TrainConfig { lr: 1.0 / 128.0, ..quick_tc(4) };
+    let be = ReferenceBackend::new(&[cfg.clone()]).unwrap();
+    let corpus = micro_corpus(&cfg);
+    let spec = shard::ShardSpec::new(2, 1);
+    let master = shard::train_sharded(
+        &be,
+        &cfg,
+        &tc,
+        &corpus,
+        &shard::ShardOpts::new(spec, WireFormat::Master),
+    )
+    .unwrap();
+    let fp8 = shard::train_sharded(
+        &be,
+        &cfg,
+        &tc,
+        &corpus,
+        &shard::ShardOpts::new(spec, WireFormat::Fp8),
+    )
+    .unwrap();
+    assert!(!fp8.run.diverged, "FP8 wire destabilized training");
+    assert!(fp8.run.losses.iter().all(|l| l.is_finite()));
+    assert!(fp8.comm.health.total > 0, "no wire casts recorded");
+    assert_eq!(fp8.comm.amax_syncs, 0, "static µS scales must need no amax exchange");
+    assert_ne!(fp8.run.losses, master.run.losses, "FP8 wire quantization was a no-op");
+    let d = (fp8.run.losses.last().unwrap() - master.run.losses.last().unwrap()).abs();
+    assert!(d < 0.5, "unbounded FP8-wire divergence: {d}");
+    // the compressed wire moves exactly 4x fewer state bytes
+    assert_eq!(fp8.comm.allgather_bytes * 4, master.comm.allgather_bytes);
+    assert_eq!(fp8.comm.reduce_scatter_bytes * 4, master.comm.reduce_scatter_bytes);
+}
+
+#[test]
+fn shard_comm_counters_match_perfmodel_closed_forms_exactly() {
+    let cfg = shard_test_cfg("mus", "fixed");
+    let tc = TrainConfig { lr: 1.0 / 128.0, ..quick_tc(2) };
+    let be = ReferenceBackend::new(&[cfg.clone()]).unwrap();
+    let corpus = micro_corpus(&cfg);
+    for wire in [WireFormat::Master, WireFormat::Fp8] {
+        for tp in [1usize, 2, 4] {
+            for stages in [1usize, 2] {
+                let opts = shard::ShardOpts::new(shard::ShardSpec::new(tp, stages), wire);
+                let r = shard::train_sharded(&be, &cfg, &tc, &corpus, &opts).unwrap();
+                let steps = r.comm.steps as u64;
+                let wb = wire.bytes_per_elem() as usize;
+                let tag = format!("{} tp{tp} pp{stages}", wire.label());
+                assert_eq!(
+                    r.comm.allgather_bytes,
+                    steps * perfmodel::shard_allgather_bytes_per_step(&cfg, tp, wb),
+                    "{tag}: allgather"
+                );
+                assert_eq!(
+                    r.comm.reduce_scatter_bytes,
+                    steps * perfmodel::shard_reduce_scatter_bytes_per_step(&cfg, tp, wb),
+                    "{tag}: reduce-scatter"
+                );
+                assert_eq!(
+                    r.comm.activation_bytes,
+                    steps * perfmodel::pipeline_activation_bytes_per_step(&cfg, stages),
+                    "{tag}: activations"
+                );
+                assert_eq!(
+                    r.comm.bytes_per_step(),
+                    perfmodel::shard_comm_bytes_per_step(&cfg, tp, stages, wb),
+                    "{tag}: total"
+                );
+                if tp == 1 && stages == 1 {
+                    assert_eq!(r.comm.total_bytes(), 0, "unsharded run moved bytes");
+                }
+            }
+        }
+    }
+    // activation volume is microbatch-count independent (the closed form
+    // has no m): 2 vs 4 microbatches at the same geometry, same bytes
+    let mut a_bytes = Vec::new();
+    for mb in [2usize, 4] {
+        let spec = shard::ShardSpec::new(2, 2).with_microbatches(mb);
+        let opts = shard::ShardOpts::new(spec, WireFormat::Master);
+        let r = shard::train_sharded(&be, &cfg, &tc, &corpus, &opts).unwrap();
+        a_bytes.push(r.comm.activation_bytes);
+    }
+    assert_eq!(a_bytes[0], a_bytes[1], "activation bytes depend on microbatch count");
+}
+
+#[test]
+fn sharded_checkpoint_resume_is_bit_identical_and_rejects_wrong_spec() {
+    for wire in [WireFormat::Master, WireFormat::Fp8] {
+        let cfg = shard_test_cfg("mus", "fixed");
+        let tc6 = TrainConfig { lr: 1.0 / 128.0, ..quick_tc(6) };
+        let be = ReferenceBackend::new(&[cfg.clone()]).unwrap();
+        let corpus = micro_corpus(&cfg);
+        let spec = shard::ShardSpec::new(2, 2);
+
+        // uninterrupted: 6 steps straight through
+        let straight = shard::train_sharded(
+            &be,
+            &cfg,
+            &tc6,
+            &corpus,
+            &shard::ShardOpts::new(spec, wire),
+        )
+        .unwrap();
+
+        // interrupted: save the sharded state at step 3, resume from
+        // disk, finish — losses and final state must match bitwise
+        // (under the FP8 wire too: owners hold wire-precision shards and
+        // re-quantization is idempotent)
+        let path = std::env::temp_dir().join(format!("munit_shard_ckpt_{}.bin", wire.label()));
+        let tc3 = TrainConfig { steps: 3, ..tc6.clone() };
+        let mut save_opts = shard::ShardOpts::new(spec, wire);
+        save_opts.save_at = Some((3, path.clone()));
+        let first = shard::train_sharded(&be, &cfg, &tc3, &corpus, &save_opts).unwrap();
+        let mut resume_opts = shard::ShardOpts::new(spec, wire);
+        resume_opts.resume_from = Some(path.clone());
+        let resumed = shard::train_sharded(&be, &cfg, &tc6, &corpus, &resume_opts).unwrap();
+
+        let mut all = first.run.losses.clone();
+        all.extend(&resumed.run.losses);
+        assert_eq!(all, straight.run.losses, "{}: losses diverged on resume", wire.label());
+        for (i, (a, b)) in
+            straight.final_state.tensors.iter().zip(&resumed.final_state.tensors).enumerate()
+        {
+            assert_eq!(a, b, "{}: tensor {i} not bit-identical after resume", wire.label());
+        }
+
+        // a different ShardSpec must be rejected with a contextual error
+        let err = match shard::load_checkpoint(&path, &cfg, &shard::ShardSpec::new(4, 1)) {
+            Ok(_) => panic!("wrong-spec resume was accepted"),
+            Err(e) => e,
+        };
+        let msg = format!("{err:#}");
+        assert!(msg.contains("cannot resume under"), "unhelpful error: {msg}");
+        assert!(msg.contains("tp=2") && msg.contains("tp=4"), "error lacks geometry: {msg}");
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+#[test]
+fn ddp_nan_in_one_worker_halts_all_in_lockstep() {
+    // Divergence contract: a non-finite loss in ONE worker stops the
+    // whole fleet with diverged=true BEFORE the allreduce, so the
+    // healthy worker never averages in the poisoned state and every
+    // session has stepped the same number of times.
+    let be = reference_backend();
+    let cfg = micro_config();
+    let tc = quick_tc(4);
+    let corpus = micro_corpus(&cfg);
+    let trainer = Trainer::new(&be, &cfg).unwrap();
+    let mut sessions = vec![trainer.init(0).unwrap(), trainer.init(0).unwrap()];
+    let mut poisoned = sessions[1].read_back().unwrap();
+    let shape = poisoned.tensors[0].shape().to_vec();
+    let elems: usize = shape.iter().product();
+    poisoned.tensors[0] =
+        munit::runtime::tensor_f32(&vec![f32::NAN; elems], &shape).unwrap();
+    sessions[1].load_state(&poisoned).unwrap();
+    let pipelines: Vec<DataPipeline> = (0..sessions.len())
+        .map(|w| {
+            DataPipeline::spawn(
+                corpus.clone(),
+                tc.seed,
+                w,
+                sessions.len(),
+                cfg.batch,
+                cfg.seq_len,
+                2,
+                Some(tc.steps),
+            )
+        })
+        .collect();
+    let r = ddp::run_lockstep(&mut sessions, &pipelines, &tc).unwrap();
+    assert!(r.diverged, "poisoned worker did not stop the run");
+    assert_eq!(r.steps_done, 1, "run did not halt at the first poisoned step");
+    assert!(r.losses[0].is_nan(), "averaged loss should carry the NaN");
+    let healthy = sessions[0].read_back().unwrap();
+    for (i, t) in healthy.tensors.iter().enumerate() {
+        assert!(
+            t.as_f32().unwrap().iter().all(|v| v.is_finite()),
+            "poison leaked into healthy worker tensor {i}"
+        );
+    }
 }
 
 // ---------------------------------------------------------------------------
