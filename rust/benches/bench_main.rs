@@ -163,6 +163,25 @@ fn main() {
         });
     }
 
+    // static-analysis layer: the full symbolic µS verification at the
+    // smoke geometry (what `munit verify-numerics` and CI pay per run),
+    // and one linter pass over the largest hot file
+    run("hot:static_verify_smoke_mus", &mut || {
+        std::hint::black_box(
+            munit::analysis::static_numerics::verify(
+                &munit::analysis::static_numerics::VerifySpec::smoke(),
+                "mus",
+            )
+            .unwrap(),
+        );
+    });
+    let lint_src = std::fs::read_to_string("rust/src/runtime/infer.rs").ok();
+    if let Some(src) = &lint_src {
+        run("hot:lint_one_hot_file", &mut || {
+            std::hint::black_box(munit::analysis::lint::lint_source("runtime/infer.rs", src));
+        });
+    }
+
     // ---- per-figure/table ------------------------------------------------
     run("paper:fig1_table3_scheme_matrix", &mut || {
         std::hint::black_box(comparison_matrix());

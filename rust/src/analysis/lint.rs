@@ -1,0 +1,677 @@
+//! Determinism-contract linter: a zero-dependency token-level scan of
+//! the Rust tree for patterns that break the repo's bit-determinism and
+//! numerics-telemetry contracts.
+//!
+//! The runtime's guarantees (bit-identical steps at any thread count,
+//! every FP8 cast visible to telemetry, no panics on the serve path)
+//! are invariants of *code shape*, not behavior a unit test can pin —
+//! a `HashMap` iteration or an f32 running sum is deterministic on the
+//! machine that runs the test and silently order-dependent on the next.
+//! This linter encodes each contract as a source-level rule:
+//!
+//! 1. **f32-accumulator** — no `let mut x = 0f32; … x += …` running
+//!    sums outside the blessed gemm/collective folds (those implement
+//!    fixed-shape pairwise/chunked reductions on purpose). Scalar f32
+//!    accumulation is order-sensitive; use f64 or a blessed fold.
+//! 2. **hashmap-iteration** — no iteration over `HashMap` contents in
+//!    runtime/coordinator/fp8/telemetry/scaling/data: `HashMap` order
+//!    is seeded per-process, so any iteration feeding numerics or
+//!    reports is nondeterministic. Key lookups are fine; iterate sorted
+//!    structures instead.
+//! 3. **hot-path-unwrap** — no `.unwrap()`/`.expect(` in the step and
+//!    decode hot files: a malformed request must surface as a
+//!    contextual [`crate::util::error::Error`], not a panic that kills
+//!    a serve loop.
+//! 4. **unpaired-cast** — every read of a `Plan` quantization slot
+//!    (`plan.qkv`, `plan.grad`, …) at a quantize site must have an
+//!    `observe_cast` call within the preceding 10 lines, so no FP8
+//!    cast can be added without CastHealth telemetry.
+//! 5. **kernel-entropy** — no time or randomness sources inside kernel
+//!    files (gemm/block/kvcache/fp8): kernels must be pure functions
+//!    of their inputs or replay and the decode-vs-forward bit-identity
+//!    tests lose their meaning.
+//!
+//! The scan works on a *code view* of each file: comments, string
+//! contents, char literals and everything from the first
+//! `#[cfg(test)]` on are blanked (tests may unwrap freely). Rules are
+//! path-scoped, so the linter can state *where* each contract applies.
+//! Surfaced as `munit lint`; negative fixtures under
+//! `tests/lint_fixtures/` prove every rule fires.
+
+use std::path::Path;
+
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+
+/// One contract breach found by the scan.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    /// Rule name (matches a [`RULES`] entry).
+    pub rule: &'static str,
+    /// File label, relative to the scanned root with `/` separators.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// The offending source line, trimmed.
+    pub excerpt: String,
+}
+
+impl Violation {
+    /// JSON payload for `REPORT_lint.json`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("rule", Json::str(self.rule)),
+            ("file", Json::str(&self.file)),
+            ("line", Json::num(self.line as f64)),
+            ("excerpt", Json::str(&self.excerpt)),
+        ])
+    }
+}
+
+/// Name and one-line statement of one linted contract.
+#[derive(Debug, Clone, Copy)]
+pub struct Rule {
+    /// Stable rule name used in reports and fixtures.
+    pub name: &'static str,
+    /// What the contract forbids and why.
+    pub description: &'static str,
+}
+
+/// Every contract the linter enforces.
+pub const RULES: [Rule; 5] = [
+    Rule {
+        name: "f32-accumulator",
+        description: "f32 running-sum accumulators outside blessed gemm/collective folds \
+                      are summation-order-sensitive; use f64 or a fixed-shape fold",
+    },
+    Rule {
+        name: "hashmap-iteration",
+        description: "HashMap iteration order is seeded per-process; numerics/report paths \
+                      must iterate sorted structures",
+    },
+    Rule {
+        name: "hot-path-unwrap",
+        description: "step/decode hot paths must return contextual errors, not panic",
+    },
+    Rule {
+        name: "unpaired-cast",
+        description: "every Plan quantization-slot read at a quantize site needs an \
+                      observe_cast within the preceding 10 lines (CastHealth contract)",
+    },
+    Rule {
+        name: "kernel-entropy",
+        description: "kernel files must not read time or randomness; kernels are pure \
+                      functions of their inputs",
+    },
+];
+
+/// Files whose f32 folds are the *implementation* of deterministic
+/// reduction (fixed-shape pairwise/chunked sums) and are exempt from
+/// rule 1.
+const R1_BLESSED: [&str; 2] = ["runtime/gemm.rs", "coordinator/collective.rs"];
+
+/// Directories where rule 2 (no HashMap iteration) applies — the
+/// numerics, telemetry and report paths.
+const R2_SCOPE: [&str; 6] =
+    ["runtime/", "coordinator/", "fp8/", "telemetry/", "scaling/", "data/"];
+
+/// The step/decode hot files rule 3 keeps panic-free.
+const R3_HOT: [&str; 6] = [
+    "runtime/block.rs",
+    "runtime/session.rs",
+    "runtime/infer.rs",
+    "runtime/gemm.rs",
+    "runtime/kvcache.rs",
+    "coordinator/serve.rs",
+];
+
+/// Kernel files rule 5 keeps entropy-free.
+const R5_KERNEL: [&str; 4] =
+    ["runtime/gemm.rs", "runtime/block.rs", "runtime/kvcache.rs", "fp8/mod.rs"];
+
+/// How many preceding lines rule 4 searches for the paired
+/// `observe_cast`.
+const R4_WINDOW: usize = 10;
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Last char of `s`, or a space for an empty prefix (treated as a
+/// non-ident boundary).
+fn last_char(s: &str) -> char {
+    s.chars().next_back().unwrap_or(' ')
+}
+
+/// Leading identifier of `s` (empty if it does not start with one).
+fn ident_prefix(s: &str) -> String {
+    s.chars().take_while(|&c| is_ident(c)).collect()
+}
+
+/// Blank out comments, string contents, and char literals (preserving
+/// line structure), and drop everything from the first `#[cfg(test)]`
+/// on. The rules then scan pure code tokens: a banned pattern inside a
+/// doc comment, a format string — or this linter's own pattern tables —
+/// never fires.
+pub fn code_view(src: &str) -> String {
+    let cs: Vec<char> = src.chars().collect();
+    let mut out = String::with_capacity(cs.len());
+    let mut i = 0;
+    let blank = |c: char| if c == '\n' { '\n' } else { ' ' };
+    while i < cs.len() {
+        let c = cs[i];
+        let next = cs.get(i + 1).copied();
+        // line comment
+        if c == '/' && next == Some('/') {
+            while i < cs.len() && cs[i] != '\n' {
+                out.push(' ');
+                i += 1;
+            }
+            continue;
+        }
+        // block comment (nested)
+        if c == '/' && next == Some('*') {
+            let mut depth = 1usize;
+            out.push_str("  ");
+            i += 2;
+            while i < cs.len() && depth > 0 {
+                if cs[i] == '/' && cs.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    out.push_str("  ");
+                    i += 2;
+                } else if cs[i] == '*' && cs.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    out.push_str("  ");
+                    i += 2;
+                } else {
+                    out.push(blank(cs[i]));
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // raw (and byte-raw) strings: r"…", r#"…"#, br#"…"#
+        let prev_ident = i > 0 && is_ident(cs[i - 1]);
+        if (c == 'r' || c == 'b') && !prev_ident {
+            let mut j = i + 1;
+            if c == 'b' && cs.get(j) == Some(&'r') {
+                j += 1;
+            }
+            if c == 'r' || j > i + 1 {
+                let mut hashes = 0usize;
+                while cs.get(j + hashes) == Some(&'#') {
+                    hashes += 1;
+                }
+                if cs.get(j + hashes) == Some(&'"') {
+                    // blank the prefix + opening quote
+                    for _ in i..=(j + hashes) {
+                        out.push(' ');
+                    }
+                    i = j + hashes + 1;
+                    // scan for `"` followed by `hashes` #'s
+                    'raw: while i < cs.len() {
+                        if cs[i] == '"' {
+                            let mut k = 0usize;
+                            while k < hashes && cs.get(i + 1 + k) == Some(&'#') {
+                                k += 1;
+                            }
+                            if k == hashes {
+                                for _ in 0..=hashes {
+                                    out.push(' ');
+                                }
+                                i += 1 + hashes;
+                                break 'raw;
+                            }
+                        }
+                        out.push(blank(cs[i]));
+                        i += 1;
+                    }
+                    continue;
+                }
+            }
+        }
+        // normal (and byte) string literal
+        if c == '"' {
+            out.push(' ');
+            i += 1;
+            while i < cs.len() {
+                if cs[i] == '\\' {
+                    out.push(' ');
+                    if i + 1 < cs.len() {
+                        out.push(blank(cs[i + 1]));
+                    }
+                    i += 2;
+                    continue;
+                }
+                if cs[i] == '"' {
+                    out.push(' ');
+                    i += 1;
+                    break;
+                }
+                out.push(blank(cs[i]));
+                i += 1;
+            }
+            continue;
+        }
+        // char literal vs lifetime
+        if c == '\'' {
+            let is_char = next == Some('\\')
+                || (next.is_some_and(|n| n != '\'') && cs.get(i + 2) == Some(&'\''));
+            if is_char {
+                out.push(' ');
+                i += 1;
+                while i < cs.len() {
+                    if cs[i] == '\\' {
+                        out.push(' ');
+                        if i + 1 < cs.len() {
+                            out.push(blank(cs[i + 1]));
+                        }
+                        i += 2;
+                        continue;
+                    }
+                    if cs[i] == '\'' {
+                        out.push(' ');
+                        i += 1;
+                        break;
+                    }
+                    out.push(blank(cs[i]));
+                    i += 1;
+                }
+                continue;
+            }
+            // lifetime marker: keep scanning as code
+        }
+        out.push(c);
+        i += 1;
+    }
+    if let Some(p) = out.find("#[cfg(test)]") {
+        out.truncate(p);
+    }
+    out
+}
+
+fn push(
+    out: &mut Vec<Violation>,
+    rule: &'static str,
+    file: &str,
+    line: usize,
+    src_lines: &[&str],
+) {
+    let full = src_lines.get(line - 1).map_or("", |l| l.trim());
+    let excerpt: String = full.chars().take(120).collect();
+    out.push(Violation { rule, file: file.to_string(), line, excerpt });
+}
+
+/// Rule 1: `let mut x` with an explicit-f32 zero init, later `x +=`.
+/// Tracked names reset at each `fn` so unrelated functions don't
+/// cross-talk; the violation anchors at the `+=` line.
+fn rule_f32_accumulator(file: &str, view: &[&str], src: &[&str], out: &mut Vec<Violation>) {
+    if R1_BLESSED.contains(&file) {
+        return;
+    }
+    let mut tracked: Vec<String> = Vec::new();
+    for (n, line) in view.iter().enumerate() {
+        let t = line.trim_start();
+        if t.starts_with("fn ") || t.contains(") fn ") || t.starts_with("pub fn ") {
+            tracked.clear();
+        }
+        if let Some(p) = line.find("let mut ") {
+            let rest = &line[p + 8..];
+            let name = ident_prefix(rest);
+            if !name.is_empty() {
+                let after = &rest[name.len()..];
+                let zeros = ["= 0f32", "= 0.0f32", "= 0_f32", "= 0.0_f32"];
+                let explicit = zeros.iter().any(|z| after.contains(z));
+                let annotated =
+                    after.contains(": f32") && (after.contains("= 0.0") || after.contains("= 0;"));
+                if explicit || annotated {
+                    tracked.push(name);
+                }
+            }
+        }
+        for name in &tracked {
+            let pat = format!("{name} +=");
+            let mut start = 0usize;
+            while let Some(p) = line[start..].find(&pat) {
+                let abs = start + p;
+                if !is_ident(last_char(&line[..abs])) {
+                    push(out, "f32-accumulator", file, n + 1, src);
+                    break;
+                }
+                start = abs + pat.len();
+            }
+        }
+    }
+}
+
+/// Rule 2: iteration over an ident bound to (or declared as) a HashMap.
+fn rule_hashmap_iteration(file: &str, view: &[&str], src: &[&str], out: &mut Vec<Violation>) {
+    if !R2_SCOPE.iter().any(|d| file.starts_with(d)) {
+        return;
+    }
+    let mut maps: Vec<String> = Vec::new();
+    for line in view.iter() {
+        if !line.contains("HashMap") {
+            continue;
+        }
+        if let Some(p) = line.find("let ") {
+            let rest = line[p + 4..].trim_start().trim_start_matches("mut ").trim_start();
+            let name = ident_prefix(rest);
+            if !name.is_empty() && !maps.contains(&name) {
+                maps.push(name);
+            }
+        } else if let Some(h) = line.find("HashMap<") {
+            // annotation form `name: [&[mut ]]HashMap<…>` (param, field,
+            // or binding type)
+            let mut before = line[..h].trim_end();
+            before = before.strip_suffix("mut").unwrap_or(before).trim_end();
+            before = before.strip_suffix('&').unwrap_or(before).trim_end();
+            if let Some(b) = before.strip_suffix(':') {
+                let name: String = b
+                    .trim_end()
+                    .chars()
+                    .rev()
+                    .take_while(|&c| is_ident(c))
+                    .collect::<String>()
+                    .chars()
+                    .rev()
+                    .collect();
+                if !name.is_empty() && !maps.contains(&name) {
+                    maps.push(name);
+                }
+            }
+        }
+    }
+    if maps.is_empty() {
+        return;
+    }
+    for (n, line) in view.iter().enumerate() {
+        for name in &maps {
+            let methods = [
+                ".iter()",
+                ".iter_mut()",
+                ".keys()",
+                ".values()",
+                ".drain(",
+                ".into_iter()",
+                ".retain(",
+            ];
+            let method_hit = methods.iter().any(|m| {
+                let pat = format!("{name}{m}");
+                line.match_indices(&pat).any(|(p, _)| !is_ident(last_char(&line[..p])))
+            });
+            let loop_hit = (line.trim_start().starts_with("for ") || line.contains(" for "))
+                && [format!("in &{name}"), format!("in &mut {name}"), format!("in {name} ")]
+                    .iter()
+                    .any(|pat| {
+                        line.match_indices(pat.as_str()).any(|(p, _)| {
+                            line[p + pat.len()..].chars().next().is_none_or(|c| !is_ident(c))
+                        })
+                    });
+            if method_hit || loop_hit {
+                push(out, "hashmap-iteration", file, n + 1, src);
+                break;
+            }
+        }
+    }
+}
+
+/// Rule 3: `.unwrap()` / `.expect(` in the hot files.
+fn rule_hot_unwrap(file: &str, view: &[&str], src: &[&str], out: &mut Vec<Violation>) {
+    if !R3_HOT.contains(&file) {
+        return;
+    }
+    for (n, line) in view.iter().enumerate() {
+        if line.contains(".unwrap()") || line.contains(".expect(") {
+            push(out, "hot-path-unwrap", file, n + 1, src);
+        }
+    }
+}
+
+/// Rule 4: a `Plan` quantization-slot read with no `observe_cast` in
+/// the preceding [`R4_WINDOW`] lines (lines that themselves call
+/// `observe_cast` are the pairing, not a violation).
+fn rule_unpaired_cast(file: &str, view: &[&str], src: &[&str], out: &mut Vec<Violation>) {
+    if !file.starts_with("runtime/") {
+        return;
+    }
+    let slots = ["plan.qkv", "plan.attn_out", "plan.ffn_up", "plan.ffn_down", "plan.grad"];
+    for (n, line) in view.iter().enumerate() {
+        if line.contains("observe_cast") {
+            continue;
+        }
+        let mut hit = false;
+        for pat in slots {
+            let mut start = 0usize;
+            while let Some(p) = line[start..].find(pat) {
+                let abs = start + p;
+                let end = abs + pat.len();
+                let before_ok = !is_ident(last_char(&line[..abs]));
+                let after_ok = line[end..].chars().next().is_none_or(|c| !is_ident(c));
+                if before_ok && after_ok {
+                    hit = true;
+                    break;
+                }
+                start = end;
+            }
+            if hit {
+                break;
+            }
+        }
+        if !hit {
+            continue;
+        }
+        let lo = n.saturating_sub(R4_WINDOW);
+        if !view[lo..n].iter().any(|l| l.contains("observe_cast")) {
+            push(out, "unpaired-cast", file, n + 1, src);
+        }
+    }
+}
+
+/// Rule 5: time/entropy sources in kernel files.
+fn rule_kernel_entropy(file: &str, view: &[&str], src: &[&str], out: &mut Vec<Violation>) {
+    if !R5_KERNEL.contains(&file) {
+        return;
+    }
+    let banned = [
+        "Instant::now",
+        "SystemTime",
+        "std::time",
+        "thread_rng",
+        "rand::",
+        "getrandom",
+        "RandomState",
+    ];
+    for (n, line) in view.iter().enumerate() {
+        if banned.iter().any(|b| line.contains(b)) {
+            push(out, "kernel-entropy", file, n + 1, src);
+        }
+    }
+}
+
+/// Lint one file's source under its tree-relative label (e.g.
+/// `"runtime/infer.rs"` — the label decides which path-scoped rules
+/// apply). Returns every violation, in line order per rule.
+pub fn lint_source(file: &str, source: &str) -> Vec<Violation> {
+    let view_owned = code_view(source);
+    let view: Vec<&str> = view_owned.lines().collect();
+    let src: Vec<&str> = source.lines().collect();
+    let mut out = Vec::new();
+    rule_f32_accumulator(file, &view, &src, &mut out);
+    rule_hashmap_iteration(file, &view, &src, &mut out);
+    rule_hot_unwrap(file, &view, &src, &mut out);
+    rule_unpaired_cast(file, &view, &src, &mut out);
+    rule_kernel_entropy(file, &view, &src, &mut out);
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}
+
+/// Recursively lint every `.rs` file under `root` (sorted walk, labels
+/// relative to `root` with `/` separators). Returns
+/// `(files_scanned, violations)`.
+pub fn lint_tree(root: &Path) -> Result<(usize, Vec<Violation>)> {
+    let mut files = Vec::new();
+    collect_rs(root, root, &mut files)?;
+    files.sort();
+    let mut violations = Vec::new();
+    for rel in &files {
+        let src = std::fs::read_to_string(root.join(rel))
+            .with_context(|| format!("reading {rel} under {}", root.display()))?;
+        violations.extend(lint_source(rel, &src));
+    }
+    Ok((files.len(), violations))
+}
+
+fn collect_rs(root: &Path, dir: &Path, out: &mut Vec<String>) -> Result<()> {
+    let mut entries: Vec<_> = std::fs::read_dir(dir)
+        .with_context(|| format!("listing {}", dir.display()))?
+        .collect::<std::io::Result<Vec<_>>>()
+        .with_context(|| format!("walking {}", dir.display()))?;
+    entries.sort_by_key(|e| e.path());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            collect_rs(root, &p, out)?;
+        } else if p.extension().and_then(|x| x.to_str()) == Some("rs") {
+            let rel = p
+                .strip_prefix(root)
+                .unwrap_or(&p)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy().into_owned())
+                .collect::<Vec<_>>()
+                .join("/");
+            out.push(rel);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn code_view_blanks_comments_strings_and_tests() {
+        let src = concat!(
+            "let a = 1; // x.unwrap()\n",
+            "let s = \"y.unwrap()\"; /* z.unwrap() */\n",
+            "let c = 'u'; let r = r#\"w.unwrap()\"#;\n",
+            "#[cfg(test)]\n",
+            "mod t { fn f() { x.unwrap(); } }\n"
+        );
+        let v = code_view(src);
+        assert!(!v.contains("unwrap"), "{v}");
+        assert!(v.contains("let a = 1;"));
+        assert!(v.lines().count() >= 3);
+    }
+
+    #[test]
+    fn code_view_keeps_lifetimes_and_nested_comments() {
+        let src = "fn f<'a>(x: &'a str) {}\n/* outer /* inner */ still comment */ let k = 9;\n";
+        let v = code_view(src);
+        assert!(v.contains("fn f<'a>(x: &'a str)"));
+        assert!(v.contains("let k = 9;"));
+        assert!(!v.contains("inner"));
+    }
+
+    #[test]
+    fn f32_accumulator_fires_and_f64_does_not() {
+        let bad = concat!(
+            "fn s(xs: &[f32]) -> f32 {\n",
+            "    let mut acc = 0f32;\n",
+            "    for x in xs { acc += x; }\n",
+            "    acc\n}\n"
+        );
+        let v = lint_source("telemetry/mod.rs", bad);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "f32-accumulator");
+        assert_eq!(v[0].line, 3);
+        let good = bad.replace("0f32", "0f64");
+        assert!(lint_source("telemetry/mod.rs", &good).is_empty());
+        // blessed fold files may accumulate
+        assert!(lint_source("runtime/gemm.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn hashmap_iteration_fires_only_in_scope() {
+        let bad = concat!(
+            "use std::collections::HashMap;\n",
+            "fn f(m: &HashMap<u64, f32>) -> f32 {\n",
+            "    m.values().sum()\n}\n"
+        );
+        let v = lint_source("runtime/infer.rs", bad);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "hashmap-iteration");
+        assert!(lint_source("analysis/mod.rs", bad).is_empty());
+        // keyed lookup is fine
+        let good = concat!(
+            "use std::collections::HashMap;\n",
+            "fn f(m: &HashMap<u64, f32>) -> f32 {\n",
+            "    m.get(&3).copied().unwrap_or(0.0)\n}\n"
+        );
+        assert!(lint_source("telemetry/mod.rs", good).is_empty());
+    }
+
+    #[test]
+    fn hot_unwrap_fires_in_hot_files_not_elsewhere_or_tests() {
+        let bad = "fn f(x: Option<u8>) -> u8 { x.unwrap() }\n";
+        let v = lint_source("runtime/session.rs", bad);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "hot-path-unwrap");
+        assert!(lint_source("eval/mod.rs", bad).is_empty());
+        let test_only = format!("#[cfg(test)]\nmod t {{ {bad} }}\n");
+        assert!(lint_source("runtime/session.rs", &test_only).is_empty());
+    }
+
+    #[test]
+    fn unpaired_cast_fires_without_observe_cast_nearby() {
+        let bad = "fn f(prep: &P) {\n    op_linear(x, prep.plan.qkv, w);\n}\n";
+        let v = lint_source("runtime/infer.rs", bad);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "unpaired-cast");
+        let good = concat!(
+            "fn f(prep: &P) {\n",
+            "    observe_cast(\"qkv\", l, x, prep.plan.qkv);\n",
+            "    op_linear(x, prep.plan.qkv, w);\n}\n"
+        );
+        assert!(lint_source("runtime/infer.rs", good).is_empty());
+        // token boundary: accessor names that merely share the prefix
+        let accessor = "fn f(plan: &Plan) -> QuantMode { plan.grad_mode() }\n";
+        assert!(lint_source("runtime/block.rs", accessor).is_empty());
+    }
+
+    #[test]
+    fn kernel_entropy_fires_only_in_kernel_files() {
+        let bad = "fn f() -> u64 { let t = std::time::Instant::now(); 0 }\n";
+        let v = lint_source("runtime/gemm.rs", bad);
+        assert!(!v.is_empty());
+        assert!(v.iter().all(|x| x.rule == "kernel-entropy"));
+        assert!(lint_source("coordinator/ddp.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn violation_json_has_all_fields() {
+        let v = lint_source("runtime/session.rs", "fn f(x: Option<u8>) -> u8 { x.unwrap() }\n");
+        let j = Json::parse(&v[0].to_json().to_string()).unwrap();
+        assert_eq!(j.str_or("rule", ""), "hot-path-unwrap");
+        assert_eq!(j.str_or("file", ""), "runtime/session.rs");
+        assert_eq!(j.usize_or("line", 0), 1);
+        assert!(!j.str_or("excerpt", "").is_empty());
+    }
+
+    #[test]
+    fn the_rule_table_matches_the_implementation() {
+        let names: Vec<_> = RULES.iter().map(|r| r.name).collect();
+        assert_eq!(
+            names,
+            [
+                "f32-accumulator",
+                "hashmap-iteration",
+                "hot-path-unwrap",
+                "unpaired-cast",
+                "kernel-entropy"
+            ]
+        );
+        assert!(RULES.iter().all(|r| !r.description.is_empty()));
+    }
+}

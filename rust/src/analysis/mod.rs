@@ -6,9 +6,22 @@
 //! FP8 substrate; the *observed-in-training* curves come from probe
 //! artifacts (see `python/compile/model.py::probe_fn`) and are only
 //! post-processed here.
+//!
+//! Static analysis lives alongside the Monte Carlo: [`static_numerics`]
+//! proves the µS FP8 band/width-flatness claims symbolically over the
+//! runtime's own op graph (`munit verify-numerics`), and [`lint`]
+//! enforces the repo's determinism contracts at the source level
+//! (`munit lint`).
 
 /// Exact-GELU / SiLU / ReLU reference implementations (f32).
 pub mod activations;
+
+/// Determinism-contract linter (`munit lint`).
+pub mod lint;
+
+/// Symbolic RMS/variance propagation over the op graph
+/// (`munit verify-numerics`).
+pub mod static_numerics;
 
 /// log10 exponent of the first probe-histogram bin edge (must match
 /// `python/compile/configs.py::HIST_LO_EXP`).

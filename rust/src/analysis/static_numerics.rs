@@ -1,0 +1,1349 @@
+//! Static numerics verifier: symbolic RMS/variance propagation over the
+//! shared op graph.
+//!
+//! µS's core claim (PAPER.md §2–3) is that a *first-principles* analysis
+//! of every transformer op suffices to keep each FP8 operand inside the
+//! representable band with **static** scales — no measured amax, no
+//! dynamic rescaling. This module turns that analysis into an executable
+//! abstract interpreter: it walks the op enumeration the runtime itself
+//! exports ([`crate::runtime::block`]'s `op_graph`, one node per
+//! telemetry observation site, in execution order) and propagates the
+//! *predicted* RMS of every activation and activation-gradient tensor
+//! as a closed-form function of `(width, depth, seq, vocab, scheme)` —
+//! consuming the same [`crate::scaling::Scheme`] rules
+//! (`init_std` / `output_mult` / `grad_rms_width_exponent` /
+//! `shard_output_mult`) the trainer consumes, so the rules being checked
+//! are the rules being run.
+//!
+//! What it proves, before a single training step executes:
+//!
+//! - **unit band (µS):** every forward tensor's predicted RMS is O(1)
+//!   (the head's `1/fan_in` multiplier puts logits on `1/√d` *by
+//!   design*, so they are excluded);
+//! - **width flatness (µS):** predictions are flat across ≥ 3 widths —
+//!   forward directly, backward after compensating by the scheme's
+//!   `(w/w₀)^β` gradient power law;
+//! - **FP8 band fit (µS):** every operand the static plan quantizes
+//!   (E4M3 weights/activations, E5M2 gradients) sits inside the format's
+//!   representable band with a logged log2 margin on both sides;
+//! - **shard invariance:** per-rank [`crate::scaling::ShardDim`]
+//!   geometry reproduces the full-tensor multipliers at tp ∈ {2,4,8},
+//!   and the runtime's own `Prepared` plan + `validate_scales` agree
+//!   with the rule library (a defaulted scheme cannot slip through);
+//! - **drift (SP):** the √d / d activation growth `munit coordcheck`
+//!   measures is *predicted* (log2-slope ≈ 0.5 on qkv, ≈ 1.0 on
+//!   ffn-down).
+//!
+//! [`cross_check`] closes the loop against reality: it compares the
+//! per-`(op, layer)` predictions with a live `step_traced` telemetry
+//! capture at documented log2 tolerances. [`Mutation`] self-tests prove
+//! the verifier is not vacuous — each deliberately corrupted scheme
+//! variant must be flagged. The derivation behind every propagation
+//! rule is docs/NUMERICS.md §Static verification; the CLI surface is
+//! `munit verify-numerics` → `REPORT_static_numerics.json`.
+
+use crate::analysis::{activations::erf, attention_sigma2_theory};
+use crate::config::ModelConfig;
+use crate::coordinator::shard::{validate_scales, ShardSpec};
+use crate::runtime::block::{self, OpKind, QuantMode, Role};
+use crate::scaling::{ParamKind, Scheme, ShardDim};
+use crate::telemetry::TelemetryReport;
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+use crate::util::table;
+use crate::{bail, err};
+
+/// O(1) band every µS forward tensor's predicted RMS must sit in
+/// (tighter than telemetry's empirical `transfer::ACT_BAND` — the
+/// symbolic predictions carry no sampling noise).
+pub const UNIT_BAND: (f64, f64) = (0.3, 1.5);
+
+/// Max across-width ratio of µS forward predictions (theory says
+/// exactly 1; the slack absorbs activation-moment quadrature error).
+pub const FWD_FLAT_TOL: f64 = 1.05;
+
+/// Max across-width ratio of µS gradient predictions after `(w/w₀)^β`
+/// compensation (β from [`Scheme::grad_rms_width_exponent`]).
+pub const GRAD_FLAT_TOL: f64 = 1.25;
+
+/// Extra log2 headroom demanded between a predicted RMS and the
+/// format's `max_finite`: an RMS-1 Gaussian tensor has essentially no
+/// mass beyond `8·rms`, so 3 octaves above the RMS must still fit.
+pub const TAIL_LOG2: f64 = 3.0;
+
+/// Sentinel `err_log2` for a cross-check row whose measured value is
+/// missing or zero (kept finite so reports stay valid JSON).
+pub const MISSING_ERR_LOG2: f64 = 99.0;
+
+// ---------------------------------------------------------------------------
+// Spec + mutations
+
+/// Geometry the verifier sweeps: the model family is fixed except for
+/// `width` (head_dim constant, so heads scale with width — the same
+/// µP-style family `coordcheck` measures).
+///
+/// The default is the smoke geometry on purpose: the verifier itself
+/// discovered that at-init E5M2 *gradient* RMS under µS scales as `1/d`
+/// and exits the subnormal band near d ≈ 256 at standard depth — see
+/// docs/NUMERICS.md §Static verification for the finding and why
+/// training still works (gradients grow after the first steps).
+#[derive(Debug, Clone)]
+pub struct VerifySpec {
+    /// Widths to verify, ascending; `widths[0]` doubles as µS's d_base.
+    pub widths: Vec<usize>,
+    /// Transformer blocks.
+    pub depth: usize,
+    /// Per-head dimension (fixed across widths).
+    pub head_dim: usize,
+    /// Vocabulary size.
+    pub vocab: usize,
+    /// Sequence length.
+    pub seq_len: usize,
+    /// Sequences per batch (enters the `d_logits` closed form).
+    pub batch: usize,
+    /// Fixed-residual coefficient of the µS lane.
+    pub tau: f64,
+}
+
+impl VerifySpec {
+    /// The smoke geometry — kept field-for-field in sync with
+    /// `transfer::HarnessConfig::smoke()` (tested) so static predictions
+    /// and live coordcheck measurements describe the same models.
+    pub fn smoke() -> VerifySpec {
+        VerifySpec {
+            widths: vec![16, 32, 64],
+            depth: 2,
+            head_dim: 8,
+            vocab: 128,
+            seq_len: 32,
+            batch: 2,
+            tau: 0.4,
+        }
+    }
+
+    /// The verified model at one width. `variant` is `"mus"`
+    /// (static-FP8, fixed residuals, Res-Post norms) or `"sp"` (BF16,
+    /// standard residuals, Pre norms).
+    pub fn model(&self, variant: &str, width: usize) -> Result<ModelConfig> {
+        let (precision, residual) = match variant {
+            "mus" => ("fp8", "fixed"),
+            "sp" => ("bf16", "standard"),
+            other => bail!("unknown verifier variant '{other}' (mus | sp)"),
+        };
+        let d_base = if variant == "mus" {
+            self.widths.first().copied().unwrap_or(width)
+        } else {
+            width
+        };
+        let cfg = ModelConfig {
+            width,
+            depth: self.depth,
+            head_dim: self.head_dim,
+            vocab: self.vocab,
+            seq_len: self.seq_len,
+            batch: self.batch,
+            ffn_ratio: 4,
+            d_base,
+            variant: variant.into(),
+            precision: precision.into(),
+            residual: residual.into(),
+            activation: "gelu".into(),
+        };
+        cfg.validate().map_err(Error::msg)?;
+        Ok(cfg)
+    }
+}
+
+/// A deliberately corrupted scaling rule, used by the self-tests that
+/// prove the verifier is not vacuous: `verify_with` under any mutation
+/// (on the µS lane) must fail at least one check.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mutation {
+    /// The correct rules (the default).
+    None,
+    /// ffn-down output multiplier 1.0 instead of `1/√fan_in` — the
+    /// classic un-scaled wide-linear bug (flagged by the plan
+    /// comparison *and* the unit band: resid inputs grow with √f).
+    WrongFfnDownMult,
+    /// Hidden init std `σ = 0.02` (SP's value) instead of unit variance
+    /// (flagged by the unit band: qkv RMS collapses to ~0.02).
+    WrongInitStd,
+    /// Residual coefficients (1,1) instead of `(√(1−τ), √τ)` (flagged
+    /// by the plan comparison and the unit band: stream RMS compounds
+    /// past 1.5 within two blocks).
+    DroppedResidualCoeff,
+    /// Gradient width exponent `1−β` instead of β (flagged by the
+    /// compensated gradient-flatness check: a 4× span over a 4× width
+    /// range where the law predicts flat).
+    WrongGradExponent,
+}
+
+/// All corrupted variants, for "every mutation is flagged" sweeps.
+pub const MUTATIONS: [Mutation; 4] = [
+    Mutation::WrongFfnDownMult,
+    Mutation::WrongInitStd,
+    Mutation::DroppedResidualCoeff,
+    Mutation::WrongGradExponent,
+];
+
+impl Mutation {
+    /// Stable snake_case label used in reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mutation::None => "none",
+            Mutation::WrongFfnDownMult => "wrong_ffn_down_mult",
+            Mutation::WrongInitStd => "wrong_init_std",
+            Mutation::DroppedResidualCoeff => "dropped_residual_coeff",
+            Mutation::WrongGradExponent => "wrong_grad_exponent",
+        }
+    }
+}
+
+/// The rule set the interpreter propagates with: the real
+/// [`Scheme`] rules, optionally overridden by one [`Mutation`].
+struct Rules {
+    scheme: Scheme,
+    mutation: Mutation,
+}
+
+impl Rules {
+    fn init_std(&self, kind: ParamKind, fan_in: usize) -> f64 {
+        if self.mutation == Mutation::WrongInitStd && kind == ParamKind::Hidden {
+            return block::SIGMA_INIT;
+        }
+        self.scheme.init_std(kind, fan_in, block::SIGMA_INIT)
+    }
+
+    /// Output multiplier of one linear's role (`d` = model width,
+    /// `f` = ffn width — the two fan-ins the tower uses).
+    fn alpha(&self, role: Role, d: usize, f: usize) -> f64 {
+        if self.mutation == Mutation::WrongFfnDownMult && role == Role::FfnDown {
+            return 1.0;
+        }
+        match role {
+            Role::Qkv | Role::AttnOut | Role::FfnUp => {
+                self.scheme.output_mult(ParamKind::Hidden, d)
+            }
+            Role::FfnDown => self.scheme.output_mult(ParamKind::Hidden, f),
+            Role::Head => self.scheme.output_mult(ParamKind::Output, d),
+            _ => 1.0,
+        }
+    }
+
+    fn residual(
+        &self,
+        cfg: &ModelConfig,
+        tau: f64,
+        layer: usize,
+        branch: usize,
+    ) -> Result<(f64, f64)> {
+        if self.mutation == Mutation::DroppedResidualCoeff {
+            return Ok((1.0, 1.0));
+        }
+        let (a, b) = block::residual_coeffs(cfg, tau as f32, layer, branch)?;
+        Ok((a as f64, b as f64))
+    }
+
+    fn grad_exponent(&self) -> f64 {
+        let beta = self.scheme.grad_rms_width_exponent();
+        if self.mutation == Mutation::WrongGradExponent {
+            return 1.0 - beta;
+        }
+        beta
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Activation moments (f64 mirrors of `block::Act`, integrated under a
+// Gaussian input — trapezoid over z ∈ [−10, 10], N = 2000)
+
+fn gelu(z: f64) -> f64 {
+    const K: f64 = 0.797_884_56; // sqrt(2/pi), the runtime's constant
+    let u = K * (z + 0.044715 * z * z * z);
+    0.5 * z * (1.0 + u.tanh())
+}
+
+fn gelu_deriv(z: f64) -> f64 {
+    const K: f64 = 0.797_884_56;
+    let u = K * (z + 0.044715 * z * z * z);
+    let t = u.tanh();
+    0.5 * (1.0 + t) + 0.5 * z * (1.0 - t * t) * K * (1.0 + 3.0 * 0.044715 * z * z)
+}
+
+fn silu(z: f64) -> f64 {
+    z / (1.0 + (-z).exp())
+}
+
+fn silu_deriv(z: f64) -> f64 {
+    let s = 1.0 / (1.0 + (-z).exp());
+    s * (1.0 + z * (1.0 - s))
+}
+
+fn relu(z: f64) -> f64 {
+    z.max(0.0)
+}
+
+fn relu_deriv(z: f64) -> f64 {
+    if z > 0.0 {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+/// `(rms of act(z), rms of act'(z))` for `z ~ N(0, r²)` — the factor a
+/// nonlinearity applies to a Gaussian stream's forward RMS and to the
+/// chain-rule gradient passing back through it.
+fn act_moments(name: &str, r: f64) -> Result<(f64, f64)> {
+    if r <= 0.0 {
+        return Ok((0.0, 0.0));
+    }
+    let (f, fd): (fn(f64) -> f64, fn(f64) -> f64) = match name {
+        "gelu" => (gelu, gelu_deriv),
+        "silu" => (silu, silu_deriv),
+        "relu" => (relu, relu_deriv),
+        other => return Err(err!("unknown activation '{other}' (gelu | silu | relu)")),
+    };
+    const N: usize = 2000;
+    const LIM: f64 = 10.0;
+    let h = 2.0 * LIM / N as f64;
+    let norm = 1.0 / (2.0 * std::f64::consts::PI).sqrt();
+    let mut s2 = 0.0f64;
+    let mut s2d = 0.0f64;
+    for i in 0..=N {
+        let u = -LIM + i as f64 * h;
+        let w = if i == 0 || i == N { 0.5 } else { 1.0 };
+        let phi = w * (-0.5 * u * u).exp() * norm;
+        let z = r * u;
+        s2 += f(z) * f(z) * phi;
+        s2d += fd(z) * fd(z) * phi;
+    }
+    Ok(((s2 * h).sqrt(), (s2d * h).sqrt()))
+}
+
+// ---------------------------------------------------------------------------
+// The abstract interpreter
+
+/// Predicted RMS of one `(op, layer)` telemetry site.
+#[derive(Debug, Clone)]
+pub struct OpPrediction {
+    /// `observe_rms` op name (shared vocabulary with telemetry).
+    pub op: String,
+    /// Block index (0 for global sites).
+    pub layer: usize,
+    /// Predicted root-mean-square of the tensor at this site.
+    pub rms: f64,
+}
+
+/// Band-fit prediction for one FP8-quantized operand.
+#[derive(Debug, Clone)]
+pub struct QuantPrediction {
+    /// `observe_cast` site name (`qkv`, `w_qkv`, `d_ffn_up`, …).
+    pub op: String,
+    /// Block index.
+    pub layer: usize,
+    /// Target format name (`e4m3` / `e5m2`).
+    pub format: String,
+    /// Predicted RMS of the operand entering the cast.
+    pub rms: f64,
+    /// `log2(rms / min_subnormal)` — > 0 means a typical element stays
+    /// representable (the hard gate).
+    pub margin_lo_log2: f64,
+    /// `log2(max_finite / rms)` — gated at > [`TAIL_LOG2`] so the
+    /// distribution tail cannot saturate.
+    pub margin_hi_log2: f64,
+    /// `log2(rms / min_normal)` — informational: negative means typical
+    /// elements land in the (coarser) subnormal range.
+    pub margin_normal_log2: f64,
+    /// Predicted flush-to-zero fraction of a Gaussian tensor at this
+    /// RMS: `erf((min_subnormal/2) / (√2·rms))` (informational).
+    pub underflow_frac: f64,
+}
+
+/// Every prediction for one model (one width of the family).
+#[derive(Debug, Clone)]
+pub struct WidthPrediction {
+    /// Model width.
+    pub width: usize,
+    /// Per-site RMS predictions, in op-graph (execution) order.
+    pub ops: Vec<OpPrediction>,
+    /// Band-fit predictions for every statically quantized operand.
+    pub quants: Vec<QuantPrediction>,
+}
+
+/// Forward quantities the backward sweep of one layer needs.
+struct LayerState {
+    r_in: f64,
+    r_mid: f64,
+    r_zo: f64,
+    r_zdown: f64,
+    r_actd: f64,
+    r_out: f64,
+}
+
+/// Predict every op-site RMS for one model under the *correct* rules.
+/// `tau` is the fixed-residual coefficient (ignored by SP's standard
+/// residuals).
+pub fn predict(cfg: &ModelConfig, tau: f64) -> Result<WidthPrediction> {
+    predict_with(cfg, tau, &Rules { scheme: cfg.scheme(), mutation: Mutation::None })
+}
+
+fn predict_with(cfg: &ModelConfig, tau: f64, rules: &Rules) -> Result<WidthPrediction> {
+    cfg.validate().map_err(Error::msg)?;
+    let (d, f, v, s) = (cfg.width, cfg.ffn_width(), cfg.vocab, cfg.seq_len);
+    let (df, ff) = (d as f64, f as f64);
+    let plan = block::plan_for(cfg);
+    let graph = block::op_graph(cfg);
+    let res_post = block::placement_for(cfg) == block::NormPlacement::ResPost;
+    // mean over causal positions k = 1..s of the attention output
+    // variance e/k − (e−1)/k² (paper Eq. 6, pooled like telemetry pools)
+    let sig2m = (1..=s).map(attention_sigma2_theory).sum::<f64>() / s as f64;
+    let sw_hd = rules.init_std(ParamKind::Hidden, d);
+    let sw_hf = rules.init_std(ParamKind::Hidden, f);
+    let sw_out = rules.init_std(ParamKind::Output, d);
+
+    let mut ops: Vec<OpPrediction> = Vec::with_capacity(graph.len());
+    let mut quants: Vec<QuantPrediction> = Vec::new();
+    let mut layers: Vec<LayerState> = Vec::with_capacity(cfg.depth);
+
+    // forward state (updated in op-graph order)
+    let mut r_x = 0.0f64; // residual stream
+    let mut r_qkv = 0.0f64;
+    let mut r_mix = 0.0f64;
+    let mut r_mid = 0.0f64;
+    let mut r_up = 0.0f64;
+    let mut r_act = 0.0f64;
+    let mut r_actd = 0.0f64;
+    let mut r_zo = 0.0f64;
+    let mut r_zdown = 0.0f64;
+    // backward state
+    let mut dxn = 0.0f64; // grad on a block's output residual stream
+    let mut dxmid = 0.0f64;
+    let mut dz_down = 0.0f64;
+    let mut dz_up = 0.0f64;
+    let mut dz_o = 0.0f64;
+    let mut dz_qkv = 0.0f64;
+
+    for node in &graph {
+        let l = node.layer;
+        // (output rms, quantized-input rms, quantized-weight rms)
+        let (rms, cast_rms, weight_rms) = match node.kind {
+            OpKind::Embed => {
+                r_x = rules.init_std(ParamKind::Input, d);
+                (r_x, None, None)
+            }
+            OpKind::Norm => (1.0, None, None),
+            OpKind::Rope => (r_qkv, None, None),
+            OpKind::Attention => {
+                r_mix = r_qkv * sig2m.sqrt();
+                (r_mix, None, None)
+            }
+            OpKind::Activation => {
+                (r_act, r_actd) = act_moments(&cfg.activation, r_up)?;
+                (r_act, None, None)
+            }
+            OpKind::Linear(Role::Qkv) => {
+                let input = if res_post { r_x } else { 1.0 };
+                r_qkv = rules.alpha(Role::Qkv, d, f) * sw_hd * df.sqrt() * input;
+                (r_qkv, Some(input), Some(sw_hd))
+            }
+            OpKind::Linear(Role::AttnOut) => {
+                r_zo = rules.alpha(Role::AttnOut, d, f) * sw_hd * df.sqrt() * r_mix;
+                (r_zo, Some(r_mix), Some(sw_hd))
+            }
+            OpKind::Linear(Role::FfnUp) => {
+                let input = if res_post { r_mid } else { 1.0 };
+                r_up = rules.alpha(Role::FfnUp, d, f) * sw_hd * df.sqrt() * input;
+                (r_up, Some(input), Some(sw_hd))
+            }
+            OpKind::Linear(Role::FfnDown) => {
+                r_zdown = rules.alpha(Role::FfnDown, d, f) * sw_hf * ff.sqrt() * r_act;
+                (r_zdown, Some(r_act), Some(sw_hf))
+            }
+            OpKind::Linear(other) => bail!("op graph emitted unexpected linear {other:?}"),
+            OpKind::Residual(0) => {
+                let (a, b) = rules.residual(cfg, tau, l, 0)?;
+                // Res-Post adds the *normed* branch (RMS 1); Pre adds the
+                // raw linear output. Independent streams sum in variance.
+                let branch = if res_post { 1.0 } else { r_zo };
+                r_mid = ((a * r_x).powi(2) + (b * branch).powi(2)).sqrt();
+                (r_mid, None, None)
+            }
+            OpKind::Residual(_) => {
+                let (a, b) = rules.residual(cfg, tau, l, 1)?;
+                let branch = if res_post { 1.0 } else { r_zdown };
+                let r_out = ((a * r_mid).powi(2) + (b * branch).powi(2)).sqrt();
+                layers.push(LayerState { r_in: r_x, r_mid, r_zo, r_zdown, r_actd, r_out });
+                r_x = r_out;
+                (r_out, None, None)
+            }
+            OpKind::Head => {
+                // final_norm puts RMS 1 into the head
+                (rules.alpha(Role::Head, d, f) * sw_out * df.sqrt(), None, None)
+            }
+            OpKind::GradLogits => {
+                // dL/dlogits = (softmax − onehot)/scored on scored rows,
+                // 0 on each sequence's last row; near-uniform softmax at
+                // init gives mean-square (1 − 1/v)/v per scored element.
+                let rows = (cfg.batch * s) as f64;
+                let scored = (cfg.batch * (s - 1)) as f64;
+                let vv = v as f64;
+                (((1.0 - 1.0 / vv) / (scored * rows * vv)).sqrt(), None, None)
+            }
+            OpKind::GradHead => {
+                let rms_dl = ops
+                    .last()
+                    .map(|o| o.rms)
+                    .ok_or_else(|| err!("op graph emitted d_final before d_logits"))?;
+                let dy = rules.alpha(Role::Head, d, f) * sw_out * (v as f64).sqrt() * rms_dl;
+                let r_last = layers.last().map(|ls| ls.r_out).unwrap_or(1.0);
+                dxn = dy / r_last; // final rmsnorm backward divides by its input RMS
+                (dy, None, None)
+            }
+            OpKind::GradLinear(Role::FfnDown) => {
+                let ls = &layers[l];
+                let (_, b2) = rules.residual(cfg, tau, l, 1)?;
+                // Res-Post: the branch grad passes back through the norm
+                // (divide by the norm *input* RMS, the ffn-down output)
+                dz_down = if res_post { b2 * dxn / ls.r_zdown } else { b2 * dxn };
+                (dz_down, Some(dz_down), None)
+            }
+            OpKind::GradLinear(Role::FfnUp) => {
+                let ls = &layers[l];
+                // dgrad through w_down (fan-out d), then the activation
+                // derivative gates the chain rule
+                let d_a = rules.alpha(Role::FfnDown, d, f) * sw_hf * df.sqrt() * dz_down;
+                dz_up = d_a * ls.r_actd;
+                (dz_up, Some(dz_up), None)
+            }
+            OpKind::GradLinear(Role::AttnOut) => {
+                let ls = &layers[l];
+                let (a2, _) = rules.residual(cfg, tau, l, 1)?;
+                let (_, b1) = rules.residual(cfg, tau, l, 0)?;
+                // grad reaching the mid-stream: skip path + ffn path
+                let t_d = rules.alpha(Role::FfnUp, d, f) * sw_hd * ff.sqrt() * dz_up;
+                dxmid = if res_post {
+                    ((a2 * dxn).powi(2) + t_d.powi(2)).sqrt()
+                } else {
+                    ((a2 * dxn).powi(2) + (t_d / ls.r_mid).powi(2)).sqrt()
+                };
+                dz_o = if res_post { b1 * dxmid / ls.r_zo } else { b1 * dxmid };
+                (dz_o, Some(dz_o), None)
+            }
+            OpKind::GradLinear(Role::Qkv) => {
+                // dgrad through w_o, spread back over heads by the same
+                // softmax mixing factor the forward applied
+                let d_merge = rules.alpha(Role::AttnOut, d, f) * sw_hd * df.sqrt() * dz_o;
+                dz_qkv = d_merge * sig2m.sqrt();
+                (dz_qkv, Some(dz_qkv), None)
+            }
+            OpKind::GradLinear(other) => {
+                bail!("op graph emitted unexpected grad linear {other:?}")
+            }
+            OpKind::GradResidual => {
+                let ls = &layers[l];
+                let (a1, _) = rules.residual(cfg, tau, l, 0)?;
+                // qkv dgrad contracts the packed 3d fan-out
+                let t_d2 = rules.alpha(Role::Qkv, d, f) * sw_hd * (3.0 * df).sqrt() * dz_qkv;
+                dxn = if res_post {
+                    ((a1 * dxmid).powi(2) + t_d2.powi(2)).sqrt()
+                } else {
+                    ((a1 * dxmid).powi(2) + (t_d2 / ls.r_in).powi(2)).sqrt()
+                };
+                (dxn, None, None)
+            }
+        };
+        ops.push(OpPrediction { op: node.name.to_string(), layer: l, rms });
+        if let Some(QuantMode::StaticFp8(fmt)) = block::node_mode(node, &plan) {
+            for (site, site_rms) in [(node.cast, cast_rms), (node.weight_cast, weight_rms)] {
+                let (Some(name), Some(r)) = (site, site_rms) else { continue };
+                let (lo, hi) = fmt.rms_margins(r);
+                quants.push(QuantPrediction {
+                    op: name.to_string(),
+                    layer: l,
+                    format: fmt.name.to_string(),
+                    rms: r,
+                    margin_lo_log2: lo,
+                    margin_hi_log2: hi,
+                    margin_normal_log2: (r / fmt.min_normal()).log2(),
+                    underflow_frac: erf(fmt.min_subnormal() / 2.0 / (r * 2.0f64.sqrt())),
+                });
+            }
+        }
+    }
+    Ok(WidthPrediction { width: d, ops, quants })
+}
+
+// ---------------------------------------------------------------------------
+// Checks
+
+/// One named gate of a [`Verification`].
+#[derive(Debug, Clone)]
+pub struct Check {
+    /// Stable check name (`plan`, `unit_band`, `fwd_width_flat`, …).
+    pub name: &'static str,
+    /// Did the gate hold?
+    pub pass: bool,
+    /// Human-readable margin / first offenders.
+    pub detail: String,
+}
+
+/// Result of verifying one variant across the spec's widths.
+#[derive(Debug, Clone)]
+pub struct Verification {
+    /// `"mus"` or `"sp"`.
+    pub variant: String,
+    /// Which [`Mutation`] (by name) the rules carried (`"none"` = real).
+    pub mutation: &'static str,
+    /// Per-width predictions, ascending width.
+    pub widths: Vec<WidthPrediction>,
+    /// Every gate, with pass/fail and detail.
+    pub checks: Vec<Check>,
+    /// All checks passed.
+    pub pass: bool,
+}
+
+fn fail_check(name: &'static str, fails: Vec<String>, ok_detail: String) -> Check {
+    if fails.is_empty() {
+        return Check { name, pass: true, detail: ok_detail };
+    }
+    let shown = fails.iter().take(3).cloned().collect::<Vec<_>>().join("; ");
+    let more = fails.len().saturating_sub(3);
+    let detail =
+        if more > 0 { format!("{shown} (+{more} more)") } else { shown };
+    Check { name, pass: false, detail }
+}
+
+/// The runtime's own plan (`block::Prepared`) and shard validation must
+/// agree with the rule set being verified — this is the gate that stops
+/// a defaulted or drifted scheme from slipping through, and the one a
+/// wrong output multiplier trips immediately.
+fn check_plan(cfgs: &[ModelConfig], tau: f64, rules: &Rules) -> Check {
+    let mut fails = Vec::new();
+    for cfg in cfgs {
+        let (d, f) = (cfg.width, cfg.ffn_width());
+        let prep = match block::Prepared::new(cfg, tau as f32) {
+            Ok(p) => p,
+            Err(e) => {
+                fails.push(format!("w{}: plan build failed: {e:#}", d));
+                continue;
+            }
+        };
+        let alphas = [
+            ("alpha_qkv", prep.alpha_qkv as f64, rules.alpha(Role::Qkv, d, f)),
+            ("alpha_attn_out", prep.alpha_attn_out as f64, rules.alpha(Role::AttnOut, d, f)),
+            ("alpha_ffn_up", prep.alpha_ffn_up as f64, rules.alpha(Role::FfnUp, d, f)),
+            ("alpha_ffn_down", prep.alpha_ffn_down as f64, rules.alpha(Role::FfnDown, d, f)),
+            ("alpha_head", prep.alpha_head as f64, rules.alpha(Role::Head, d, f)),
+        ];
+        for (name, got, want) in alphas {
+            if (got - want).abs() > 1e-6 * want.abs().max(1.0) {
+                fails.push(format!("w{d}: {name} runtime {got:.4e} vs rules {want:.4e}"));
+            }
+        }
+        for (l, co) in prep.coeffs.iter().enumerate() {
+            for branch in 0..2 {
+                match rules.residual(cfg, tau, l, branch) {
+                    Err(e) => fails.push(format!("w{d} l{l}: {e:#}")),
+                    Ok((a, b)) => {
+                        let (ga, gb) = co[branch];
+                        if (ga as f64 - a).abs() > 1e-6 || (gb as f64 - b).abs() > 1e-6 {
+                            fails.push(format!(
+                                "w{d} l{l} b{branch}: got ({ga:.4},{gb:.4}) want ({a:.4},{b:.4})"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        for tp in [1usize, 2] {
+            let spec = ShardSpec::new(tp, 1);
+            if let Err(e) = spec.validate(cfg).and_then(|_| validate_scales(cfg, &spec)) {
+                fails.push(format!("w{d} tp{tp}: {e:#}"));
+            }
+        }
+    }
+    fail_check("plan", fails, "runtime Prepared/validate_scales agree with the rule set".into())
+}
+
+/// Per-rank shard geometry must reproduce the full-tensor multipliers —
+/// the closed-form reason µS needs no cross-rank scale exchange.
+fn check_shard_invariance(cfgs: &[ModelConfig], rules: &Rules) -> Check {
+    let mut fails = Vec::new();
+    for cfg in cfgs {
+        let scheme = rules.scheme;
+        for fan in [cfg.width, cfg.ffn_width()] {
+            for kind in [ParamKind::Hidden, ParamKind::Output] {
+                let full_mult = scheme.output_mult(kind, fan);
+                let full_std = scheme.init_std(kind, fan, block::SIGMA_INIT);
+                for tp in [2usize, 4, 8] {
+                    if fan % tp != 0 {
+                        continue;
+                    }
+                    let cases = [
+                        (ShardDim::FanOut, fan),
+                        (ShardDim::FanIn, fan / tp),
+                    ];
+                    for (dim, local) in cases {
+                        if scheme.shard_output_mult(kind, dim, local, tp) != full_mult
+                            || scheme.shard_init_std(kind, dim, local, tp, block::SIGMA_INIT)
+                                != full_std
+                        {
+                            fails.push(format!(
+                                "w{} {kind:?} {dim:?} tp{tp}: sharded rule != full-tensor rule",
+                                cfg.width
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    fail_check(
+        "shard_invariance",
+        fails,
+        "per-rank ShardDim geometry reproduces full-tensor multipliers at tp 2/4/8".into(),
+    )
+}
+
+fn check_unit_band(preds: &[WidthPrediction]) -> Check {
+    let mut fails = Vec::new();
+    for wp in preds {
+        for op in &wp.ops {
+            if op.op.starts_with("d_") || op.op == "logits" {
+                continue;
+            }
+            if op.rms < UNIT_BAND.0 || op.rms > UNIT_BAND.1 {
+                fails.push(format!("w{} {}[{}] rms {:.4}", wp.width, op.op, op.layer, op.rms));
+            }
+        }
+    }
+    fail_check(
+        "unit_band",
+        fails,
+        format!("every forward op predicted in [{}, {}]", UNIT_BAND.0, UNIT_BAND.1),
+    )
+}
+
+/// Across-width flatness of one op family: forward ops raw (`beta` = 0),
+/// gradient ops after multiplying by `(w/w₀)^beta`.
+fn check_flat(
+    preds: &[WidthPrediction],
+    grads: bool,
+    beta: f64,
+    tol: f64,
+    name: &'static str,
+) -> Check {
+    let w0 = preds[0].width as f64;
+    let mut worst = 1.0f64;
+    let mut worst_site = String::from("-");
+    for (i, op) in preds[0].ops.iter().enumerate() {
+        if op.op.starts_with("d_") != grads || op.op == "logits" || op.op == "d_logits" {
+            continue;
+        }
+        let mut lo = f64::INFINITY;
+        let mut hi = 0.0f64;
+        for wp in preds {
+            let comp = if grads { (wp.width as f64 / w0).powf(beta) } else { 1.0 };
+            let r = wp.ops[i].rms * comp;
+            lo = lo.min(r);
+            hi = hi.max(r);
+        }
+        let ratio = hi / lo;
+        if ratio > worst {
+            worst = ratio;
+            worst_site = format!("{}[{}]", op.op, op.layer);
+        }
+    }
+    Check {
+        name,
+        pass: worst <= tol,
+        detail: format!(
+            "worst across-width ratio {worst:.4} at {worst_site} (tol {tol}, beta {beta})"
+        ),
+    }
+}
+
+fn check_fp8_band(preds: &[WidthPrediction]) -> Check {
+    let mut fails = Vec::new();
+    let mut min_lo = f64::INFINITY;
+    let mut min_hi = f64::INFINITY;
+    let mut n = 0usize;
+    for wp in preds {
+        for q in &wp.quants {
+            n += 1;
+            min_lo = min_lo.min(q.margin_lo_log2);
+            min_hi = min_hi.min(q.margin_hi_log2);
+            if q.margin_lo_log2 <= 0.0 || q.margin_hi_log2 <= TAIL_LOG2 {
+                fails.push(format!(
+                    "w{} {}[{}] {} rms {:.3e} margins ({:.2}, {:.2})",
+                    wp.width, q.op, q.layer, q.format, q.rms, q.margin_lo_log2, q.margin_hi_log2
+                ));
+            }
+        }
+    }
+    if n == 0 {
+        return Check {
+            name: "fp8_band",
+            pass: false,
+            detail: "no statically quantized sites (not an FP8 plan?)".into(),
+        };
+    }
+    fail_check(
+        "fp8_band",
+        fails,
+        format!("{n} quant sites in band; worst margins lo {min_lo:.2}, hi {min_hi:.2} log2"),
+    )
+}
+
+fn fit_slope(preds: &[WidthPrediction], op: &str, layer: usize) -> Option<f64> {
+    let mut xs = Vec::with_capacity(preds.len());
+    let mut ys = Vec::with_capacity(preds.len());
+    for wp in preds {
+        let r = wp.ops.iter().find(|o| o.op == op && o.layer == layer)?.rms;
+        xs.push((wp.width as f64).log2());
+        ys.push(r.log2());
+    }
+    let n = xs.len() as f64;
+    let sx: f64 = xs.iter().sum();
+    let sy: f64 = ys.iter().sum();
+    let sxy: f64 = xs.iter().zip(&ys).map(|(a, b)| a * b).sum();
+    let sxx: f64 = xs.iter().map(|a| a * a).sum();
+    let den = n * sxx - sx * sx;
+    if den == 0.0 {
+        return None;
+    }
+    Some((n * sxy - sx * sy) / den)
+}
+
+/// SP has no static multipliers, so its activations must *drift*: the
+/// verifier predicts the same √d (qkv) and d (ffn-down, two stacked
+/// √fan_in factors) log-slopes the coordcheck harness measures.
+fn check_sp_drift(preds: &[WidthPrediction]) -> Check {
+    let mut fails = Vec::new();
+    let mut detail = Vec::new();
+    for (op, lo, hi) in [("qkv", 0.35, 0.65), ("ffn_down", 0.8, 1.2)] {
+        match fit_slope(preds, op, 0) {
+            None => fails.push(format!("{op}[0]: missing prediction")),
+            Some(s) => {
+                detail.push(format!("{op} slope {s:.3}"));
+                if s < lo || s > hi {
+                    fails.push(format!("{op}[0] slope {s:.3} outside [{lo}, {hi}]"));
+                }
+            }
+        }
+    }
+    fail_check("sp_drift", fails, format!("predicted drift: {}", detail.join(", ")))
+}
+
+/// Verify one variant across the spec's widths under the correct rules.
+pub fn verify(spec: &VerifySpec, variant: &str) -> Result<Verification> {
+    verify_with(spec, variant, Mutation::None)
+}
+
+/// Verify under a (possibly corrupted) rule set — the mutation
+/// self-test entrypoint. With [`Mutation::None`] this is [`verify`].
+pub fn verify_with(spec: &VerifySpec, variant: &str, mutation: Mutation) -> Result<Verification> {
+    if spec.widths.len() < 3 {
+        bail!("static verification needs >= 3 widths, got {:?}", spec.widths);
+    }
+    let cfgs = spec
+        .widths
+        .iter()
+        .map(|&w| spec.model(variant, w))
+        .collect::<Result<Vec<_>>>()?;
+    let rules = Rules { scheme: cfgs[0].scheme(), mutation };
+    let widths = cfgs
+        .iter()
+        .map(|cfg| predict_with(cfg, spec.tau, &rules))
+        .collect::<Result<Vec<_>>>()?;
+    let mut checks = vec![
+        check_plan(&cfgs, spec.tau, &rules),
+        check_shard_invariance(&cfgs, &rules),
+    ];
+    if variant == "mus" {
+        checks.push(check_unit_band(&widths));
+        checks.push(check_flat(&widths, false, 0.0, FWD_FLAT_TOL, "fwd_width_flat"));
+        let gexp = rules.grad_exponent();
+        checks.push(check_flat(&widths, true, gexp, GRAD_FLAT_TOL, "grad_width_flat"));
+        checks.push(check_fp8_band(&widths));
+    } else {
+        checks.push(check_sp_drift(&widths));
+    }
+    let pass = checks.iter().all(|c| c.pass);
+    Ok(Verification {
+        variant: variant.to_string(),
+        mutation: mutation.name(),
+        widths,
+        checks,
+        pass,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Cross-check against live telemetry
+
+/// One `(op, layer)` comparison of prediction vs traced measurement.
+#[derive(Debug, Clone)]
+pub struct CrossCheckRow {
+    /// Telemetry op name.
+    pub op: String,
+    /// Block index.
+    pub layer: usize,
+    /// Predicted RMS.
+    pub predicted: f64,
+    /// Measured RMS from the traced step (0 if the site is missing).
+    pub measured: f64,
+    /// `|log2(predicted / measured)|` ([`MISSING_ERR_LOG2`] if absent).
+    pub err_log2: f64,
+    /// Allowed log2 error for this op class.
+    pub tol_log2: f64,
+    /// `err_log2 <= tol_log2` and the site was measured.
+    pub pass: bool,
+}
+
+/// Prediction-vs-measurement comparison for one width.
+#[derive(Debug, Clone)]
+pub struct CrossCheck {
+    /// Model width.
+    pub width: usize,
+    /// One row per predicted op site.
+    pub rows: Vec<CrossCheckRow>,
+    /// All rows passed.
+    pub pass: bool,
+}
+
+/// Documented log2 tolerance per op class (docs/NUMERICS.md §Static
+/// verification): exact closed forms get 1 octave (CLT + FP8 rounding
+/// noise); the attention-mixing approximation gets 1.5; gradients stack
+/// more approximations (2.0), and the qkv/residual gradient sites also
+/// carry the head-merge spread approximation (2.5).
+pub fn tol_log2_for(op: &str) -> f64 {
+    match op {
+        "attn_mix" | "attn_out" => 1.5,
+        "d_qkv" | "d_resid" => 2.5,
+        _ if op.starts_with("d_") => 2.0,
+        _ => 1.0,
+    }
+}
+
+/// Compare one width's predictions against a live `step_traced`
+/// capture. Every predicted site must be measured and agree within
+/// [`tol_log2_for`] octaves.
+pub fn cross_check(pred: &WidthPrediction, report: &TelemetryReport) -> CrossCheck {
+    let mut rows = Vec::with_capacity(pred.ops.len());
+    let mut pass = true;
+    for op in &pred.ops {
+        let tol = tol_log2_for(&op.op);
+        let (measured, err, ok) = match report.op_layer_rms(&op.op, op.layer) {
+            Some(m) if m > 0.0 && op.rms > 0.0 => {
+                let e = (op.rms / m).log2().abs();
+                (m, e, e <= tol)
+            }
+            Some(m) => (m, MISSING_ERR_LOG2, false),
+            None => (0.0, MISSING_ERR_LOG2, false),
+        };
+        pass &= ok;
+        rows.push(CrossCheckRow {
+            op: op.op.clone(),
+            layer: op.layer,
+            predicted: op.rms,
+            measured,
+            err_log2: err,
+            tol_log2: tol,
+            pass: ok,
+        });
+    }
+    CrossCheck { width: pred.width, rows, pass }
+}
+
+// ---------------------------------------------------------------------------
+// Reports
+
+fn width_json(wp: &WidthPrediction) -> Json {
+    Json::obj(vec![
+        ("width", Json::num(wp.width as f64)),
+        (
+            "ops",
+            Json::Arr(
+                wp.ops
+                    .iter()
+                    .map(|o| {
+                        Json::obj(vec![
+                            ("op", Json::str(&o.op)),
+                            ("layer", Json::num(o.layer as f64)),
+                            ("rms", Json::num(o.rms)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "quants",
+            Json::Arr(
+                wp.quants
+                    .iter()
+                    .map(|q| {
+                        Json::obj(vec![
+                            ("op", Json::str(&q.op)),
+                            ("layer", Json::num(q.layer as f64)),
+                            ("format", Json::str(&q.format)),
+                            ("rms", Json::num(q.rms)),
+                            ("margin_lo_log2", Json::num(q.margin_lo_log2)),
+                            ("margin_hi_log2", Json::num(q.margin_hi_log2)),
+                            ("margin_normal_log2", Json::num(q.margin_normal_log2)),
+                            ("underflow_frac", Json::num(q.underflow_frac)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+impl Verification {
+    /// JSON payload (one entry of `REPORT_static_numerics.json`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("variant", Json::str(&self.variant)),
+            ("mutation", Json::str(self.mutation)),
+            ("pass", Json::Bool(self.pass)),
+            (
+                "checks",
+                Json::Arr(
+                    self.checks
+                        .iter()
+                        .map(|c| {
+                            Json::obj(vec![
+                                ("name", Json::str(c.name)),
+                                ("pass", Json::Bool(c.pass)),
+                                ("detail", Json::str(&c.detail)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("widths", Json::Arr(self.widths.iter().map(width_json).collect())),
+        ])
+    }
+
+    /// Aligned text rendering: the checks, then per-op predictions at
+    /// every width, then the quantized-site margins at the widest model.
+    pub fn table(&self) -> String {
+        let mut out = format!(
+            "static numerics — {} ({}): {}\n",
+            self.variant,
+            self.mutation,
+            if self.pass { "PASS" } else { "FAIL" }
+        );
+        let rows: Vec<Vec<String>> = self
+            .checks
+            .iter()
+            .map(|c| {
+                vec![
+                    c.name.to_string(),
+                    if c.pass { "pass".into() } else { "FAIL".into() },
+                    c.detail.clone(),
+                ]
+            })
+            .collect();
+        out.push_str(&table::render(&["check", "result", "detail"], &rows));
+        if let Some(first) = self.widths.first() {
+            let mut header = vec!["op".to_string(), "layer".to_string()];
+            header.extend(self.widths.iter().map(|w| format!("rms@w{}", w.width)));
+            let header_refs: Vec<&str> = header.iter().map(String::as_str).collect();
+            let rows: Vec<Vec<String>> = first
+                .ops
+                .iter()
+                .enumerate()
+                .map(|(i, o)| {
+                    let mut row = vec![o.op.clone(), o.layer.to_string()];
+                    row.extend(self.widths.iter().map(|wp| format!("{:.4e}", wp.ops[i].rms)));
+                    row
+                })
+                .collect();
+            out.push('\n');
+            out.push_str(&table::render(&header_refs, &rows));
+        }
+        if let Some(last) = self.widths.last() {
+            if !last.quants.is_empty() {
+                let rows: Vec<Vec<String>> = last
+                    .quants
+                    .iter()
+                    .map(|q| {
+                        vec![
+                            q.op.clone(),
+                            q.layer.to_string(),
+                            q.format.clone(),
+                            format!("{:.4e}", q.rms),
+                            format!("{:.2}", q.margin_lo_log2),
+                            format!("{:.2}", q.margin_hi_log2),
+                            format!("{:.2e}", q.underflow_frac),
+                        ]
+                    })
+                    .collect();
+                out.push('\n');
+                let w = last.width;
+                out.push_str(&format!("quantized operands at w{w} (margins in log2):\n"));
+                out.push_str(&table::render(
+                    &["site", "layer", "fmt", "rms", "m_lo", "m_hi", "underflow"],
+                    &rows,
+                ));
+            }
+        }
+        out
+    }
+}
+
+impl CrossCheck {
+    /// JSON payload for the cross-check section of the report.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("width", Json::num(self.width as f64)),
+            ("pass", Json::Bool(self.pass)),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("op", Json::str(&r.op)),
+                                ("layer", Json::num(r.layer as f64)),
+                                ("predicted", Json::num(r.predicted)),
+                                ("measured", Json::num(r.measured)),
+                                ("err_log2", Json::num(r.err_log2)),
+                                ("tol_log2", Json::num(r.tol_log2)),
+                                ("pass", Json::Bool(r.pass)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Aligned text rendering of the per-site comparison.
+    pub fn table(&self) -> String {
+        let rows: Vec<Vec<String>> = self
+            .rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.op.clone(),
+                    r.layer.to_string(),
+                    format!("{:.4e}", r.predicted),
+                    format!("{:.4e}", r.measured),
+                    format!("{:.2}", r.err_log2),
+                    format!("{:.2}", r.tol_log2),
+                    if r.pass { "pass".into() } else { "FAIL".into() },
+                ]
+            })
+            .collect();
+        format!(
+            "cross-check vs traced step at w{} ({}):\n{}",
+            self.width,
+            if self.pass { "PASS" } else { "FAIL" },
+            table::render(&["op", "layer", "predicted", "measured", "err", "tol", "result"], &rows)
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::trainer::Trainer;
+    use crate::coordinator::transfer::HarnessConfig;
+    use crate::data::{Batcher, CorpusSpec};
+    use crate::runtime::ReferenceBackend;
+    use std::collections::BTreeSet;
+
+    #[test]
+    fn verify_spec_mirrors_the_coordcheck_smoke_geometry() {
+        let vs = VerifySpec::smoke();
+        let hc = HarnessConfig::smoke();
+        assert_eq!(vs.widths, hc.widths);
+        assert_eq!(vs.depth, hc.depth);
+        assert_eq!(vs.head_dim, hc.head_dim);
+        assert_eq!(vs.vocab, hc.vocab);
+        assert_eq!(vs.seq_len, hc.seq_len);
+        assert_eq!(vs.batch, hc.batch);
+        assert_eq!(vs.tau, hc.tau);
+    }
+
+    #[test]
+    fn mus_smoke_passes_every_static_gate() {
+        let v = verify(&VerifySpec::smoke(), "mus").unwrap();
+        for c in &v.checks {
+            assert!(c.pass, "{}: {}", c.name, c.detail);
+        }
+        assert!(v.pass);
+        let names: Vec<_> = v.checks.iter().map(|c| c.name).collect();
+        let want_names = [
+            "plan",
+            "shard_invariance",
+            "unit_band",
+            "fwd_width_flat",
+            "grad_width_flat",
+            "fp8_band",
+        ];
+        for want in want_names {
+            assert!(names.contains(&want), "missing check {want}");
+        }
+    }
+
+    #[test]
+    fn sp_smoke_predicts_the_measured_drift_slopes() {
+        let v = verify(&VerifySpec::smoke(), "sp").unwrap();
+        assert!(v.pass, "{:?}", v.checks);
+        let drift = v.checks.iter().find(|c| c.name == "sp_drift").unwrap();
+        assert!(drift.pass, "{}", drift.detail);
+    }
+
+    #[test]
+    fn mus_predictions_match_the_closed_forms() {
+        let spec = VerifySpec::smoke();
+        let cfg = spec.model("mus", 16).unwrap();
+        let p = predict(&cfg, spec.tau).unwrap();
+        let rms = |op: &str, l: usize| {
+            p.ops.iter().find(|o| o.op == op && o.layer == l).unwrap().rms
+        };
+        // alpha · sigma_w · sqrt(d) · 1 = (1/4)·1·4 = 1 on a unit stream
+        assert!((rms("qkv", 0) - 1.0).abs() < 1e-9);
+        // softmax mixing: sqrt(mean_k e/k − (e−1)/k²) at s=32
+        assert!((rms("attn_mix", 0) - 0.508).abs() < 2e-3, "{}", rms("attn_mix", 0));
+        // gelu on a unit Gaussian
+        assert!((rms("ffn_act", 0) - 0.652).abs() < 2e-3, "{}", rms("ffn_act", 0));
+        // head multiplier 1/d puts logits on 1/sqrt(d)
+        assert!((rms("logits", 0) - 0.25).abs() < 1e-9);
+        // d_logits closed form at v=128, batch=2, s=32
+        let (v, rows, scored) = (128f64, 64f64, 62f64);
+        let want = ((1.0 - 1.0 / v) / (scored * rows * v)).sqrt();
+        assert!((rms("d_logits", 0) - want).abs() < 1e-12);
+        // fixed residuals keep the stream at exactly 1
+        assert!((rms("resid2", 1) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mus_grads_follow_the_one_over_d_law_exactly() {
+        let spec = VerifySpec::smoke();
+        let mut per_w = Vec::new();
+        for &w in &spec.widths {
+            let cfg = spec.model("mus", w).unwrap();
+            per_w.push(predict(&cfg, spec.tau).unwrap());
+        }
+        for (i, op) in per_w[0].ops.iter().enumerate() {
+            if !op.op.starts_with("d_") || op.op == "d_logits" {
+                continue;
+            }
+            for wp in &per_w[1..] {
+                let scale = per_w[0].width as f64 / wp.width as f64;
+                let ratio = wp.ops[i].rms / (per_w[0].ops[i].rms * scale);
+                assert!(
+                    (ratio - 1.0).abs() < 0.15,
+                    "{}[{}] w{}: compensated ratio {ratio}",
+                    op.op,
+                    op.layer,
+                    wp.width
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn every_mutation_is_flagged_with_the_expected_check() {
+        let spec = VerifySpec::smoke();
+        let expected: &[(Mutation, &str)] = &[
+            (Mutation::WrongFfnDownMult, "plan"),
+            (Mutation::WrongFfnDownMult, "unit_band"),
+            (Mutation::WrongInitStd, "unit_band"),
+            (Mutation::DroppedResidualCoeff, "plan"),
+            (Mutation::DroppedResidualCoeff, "unit_band"),
+            (Mutation::WrongGradExponent, "grad_width_flat"),
+        ];
+        for m in MUTATIONS {
+            let v = verify_with(&spec, "mus", m).unwrap();
+            assert!(!v.pass, "mutation {} slipped through the verifier", m.name());
+            for (mm, check) in expected.iter().filter(|(mm, _)| *mm == m) {
+                let c = v.checks.iter().find(|c| c.name == *check).unwrap();
+                assert!(!c.pass, "{} should trip {check}: {}", mm.name(), c.detail);
+            }
+        }
+    }
+
+    #[test]
+    fn quant_sites_cover_both_formats_with_positive_margins() {
+        let v = verify(&VerifySpec::smoke(), "mus").unwrap();
+        for wp in &v.widths {
+            // 4 linears x (input + weight) forward + 4 grads, per layer
+            assert_eq!(wp.quants.len(), 12 * VerifySpec::smoke().depth);
+            let fmts: BTreeSet<&str> = wp.quants.iter().map(|q| q.format.as_str()).collect();
+            assert!(fmts.contains("e4m3") && fmts.contains("e5m2"), "{fmts:?}");
+            for q in &wp.quants {
+                assert!(q.margin_lo_log2 > 0.0, "{}[{}] lo {}", q.op, q.layer, q.margin_lo_log2);
+                let hi = q.margin_hi_log2;
+                assert!(hi > TAIL_LOG2, "{}[{}] hi {}", q.op, q.layer, hi);
+                assert!(q.underflow_frac < 0.05, "{}[{}] uf {}", q.op, q.layer, q.underflow_frac);
+            }
+        }
+    }
+
+    /// The acceptance loop-closer: predictions match a real traced step
+    /// at documented tolerances, and the op-graph coverage is exact in
+    /// both directions (no runtime site the verifier misses, no
+    /// predicted site the runtime lacks).
+    #[test]
+    fn predictions_match_a_live_traced_step() {
+        let be = ReferenceBackend::new(&[]).unwrap();
+        let spec = VerifySpec::smoke();
+        let cfg = spec.model("mus", spec.widths[1]).unwrap();
+        let pred = predict(&cfg, spec.tau).unwrap();
+        let trainer = Trainer::new(&be, &cfg).unwrap();
+        let mut session = trainer.init(0).unwrap();
+        let corpus = CorpusSpec { vocab: cfg.vocab, ..CorpusSpec::default() };
+        let mut batcher = Batcher::new(corpus, 0, 0, 1, cfg.batch, cfg.seq_len);
+        let tokens = batcher.next_batch();
+        let (loss, _, report) = session.step_traced(&tokens, 1.0 / 64.0, 0.0, spec.tau).unwrap();
+        assert!(loss.is_finite());
+        let predicted: BTreeSet<(String, usize)> =
+            pred.ops.iter().map(|o| (o.op.clone(), o.layer)).collect();
+        let traced: BTreeSet<(String, usize)> =
+            report.ops.iter().map(|r| (r.op.clone(), r.layer)).collect();
+        assert_eq!(predicted, traced, "op-graph coverage drifted from the runtime");
+        let cc = cross_check(&pred, &report);
+        for row in &cc.rows {
+            assert!(
+                row.pass,
+                "{}[{}]: predicted {:.4e} measured {:.4e} err {:.2} > tol {:.2}",
+                row.op, row.layer, row.predicted, row.measured, row.err_log2, row.tol_log2
+            );
+        }
+        assert!(cc.pass);
+    }
+
+    #[test]
+    fn report_json_round_trips() {
+        let v = verify(&VerifySpec::smoke(), "mus").unwrap();
+        let j = Json::parse(&v.to_json().to_string()).unwrap();
+        assert_eq!(j.str_or("variant", ""), "mus");
+        assert_eq!(j.get("pass").unwrap().as_bool(), Some(true));
+        let widths = j.get("widths").unwrap().as_arr().unwrap();
+        assert_eq!(widths.len(), 3);
+        let q0 = &widths[0].get("quants").unwrap().as_arr().unwrap()[0];
+        assert!(q0.f64_or("margin_lo_log2", -1.0) > 0.0);
+        assert!(!v.table().is_empty());
+    }
+
+    #[test]
+    fn act_moments_match_known_values() {
+        // gelu on a unit Gaussian: rms 0.6521, deriv rms 0.6751
+        let (a, ad) = act_moments("gelu", 1.0).unwrap();
+        assert!((a - 0.6521).abs() < 1e-3, "{a}");
+        assert!((ad - 0.6751).abs() < 1e-3, "{ad}");
+        // relu keeps half the mass: rms 1/sqrt(2), deriv rms 1/sqrt(2)
+        let (r, rd) = act_moments("relu", 1.0).unwrap();
+        assert!((r - 0.5f64.sqrt()).abs() < 1e-6, "{r}");
+        assert!((rd - 0.5f64.sqrt()).abs() < 1e-6, "{rd}");
+        assert!(act_moments("nope", 1.0).is_err());
+    }
+}

@@ -64,17 +64,18 @@ pub fn run_lockstep(
     for step in 0..tc.steps {
         let lr = tc.schedule.lr_at(tc.lr, step, tc.steps);
         let mut local = Vec::with_capacity(n_workers);
-        let mut gnorm_sum = 0f32;
+        // f64 running sum: worker order must not perturb the mean
+        let mut gnorm_sum = 0f64;
         for (w, session) in sessions.iter_mut().enumerate() {
             let tokens =
                 pipelines[w].next().ok_or_else(|| err!("worker {w} data pipeline ended early"))?;
             let (loss, gnorm) = session.step(&tokens, lr, tc.wd, tc.tau)?;
             local.push(loss);
-            gnorm_sum += gnorm;
+            gnorm_sum += gnorm as f64;
         }
         let loss = local.iter().sum::<f32>() / n_workers as f32;
         losses.push(loss);
-        gnorms.push(gnorm_sum / n_workers as f32);
+        gnorms.push((gnorm_sum / n_workers as f64) as f32);
         let any_bad = local.iter().any(|l| !l.is_finite() || *l as f64 > tc.max_loss);
         if any_bad || !loss.is_finite() || loss as f64 > tc.max_loss {
             diverged = true;

@@ -18,8 +18,8 @@
 
 use std::time::{Duration, Instant};
 
-use crate::bail;
 use crate::config::ModelConfig;
+use crate::{bail, err};
 use crate::runtime::{sample_greedy, sample_topk, InferSession, SeqId};
 use crate::util::error::Result;
 use crate::util::rng::Rng;
@@ -283,8 +283,14 @@ pub fn serve(
 
         // ---- one batched decode over every live sequence ---------------
         if !live.is_empty() {
-            let items: Vec<(SeqId, i32)> =
-                live.iter().map(|l| (l.seq, *l.tokens.last().expect("seeded"))).collect();
+            let mut items: Vec<(SeqId, i32)> = Vec::with_capacity(live.len());
+            for l in live.iter() {
+                let tok = l
+                    .tokens
+                    .last()
+                    .ok_or_else(|| err!("live sequence {:?} has an empty token buffer", l.seq))?;
+                items.push((l.seq, *tok));
+            }
             let outs = infer.decode_batch(&items)?;
             decode_tokens += outs.len() as u64;
             occupancy_sum += live.len() as u64;

@@ -25,6 +25,13 @@
 //!                              telemetry sink → REPORT_coordcheck.json
 //!   transfer                   loss-vs-LR curves per width (µS best-LR
 //!                              width-stability) → REPORT_transfer.json
+//!   verify-numerics            static verifier: symbolic RMS propagation
+//!                              over the op graph (FP8 band margins,
+//!                              width-flatness, shard invariance, mutation
+//!                              self-tests, live cross-check)
+//!                              → REPORT_static_numerics.json
+//!   lint                       determinism-contract linter over rust/src
+//!                              → REPORT_lint.json
 //!
 //! Flags: --artifacts DIR (default ./artifacts), --results DIR (default
 //! ./results), --backend auto|reference|pjrt (default auto), --fast
@@ -144,6 +151,8 @@ const COMMANDS: &[Cmd] = &[
     Cmd { name: "bench-step", run: cmd_bench_step },
     Cmd { name: "coordcheck", run: cmd_coordcheck },
     Cmd { name: "transfer", run: cmd_transfer },
+    Cmd { name: "verify-numerics", run: cmd_verify_numerics },
+    Cmd { name: "lint", run: cmd_lint },
 ];
 
 /// Space-separated command list for help/error text — derived from
@@ -456,6 +465,167 @@ fn cmd_transfer(cli: &Cli) -> Result<()> {
     std::fs::write("REPORT_transfer.json", format!("{json}\n"))
         .context("writing REPORT_transfer.json")?;
     eprintln!("wrote REPORT_transfer.json");
+    Ok(())
+}
+
+/// `munit verify-numerics`: static symbolic-RMS verification of the
+/// scaling scheme (tentpole of the static-analysis layer). Runs the µS
+/// and SP verifiers, the mutation self-tests, and a live per-width
+/// cross-check of predictions against one traced training step; the
+/// REPORT is written before failing so CI can inspect partial results.
+fn cmd_verify_numerics(cli: &Cli) -> Result<()> {
+    use munit::analysis::static_numerics as sn;
+    use munit::util::json::Json;
+
+    let mut spec = sn::VerifySpec::smoke();
+    if let Some(ws) = cli.args.get("widths") {
+        let mut widths = ws
+            .split(',')
+            .map(|w| w.trim().parse::<usize>().map_err(|e| munit::err!("bad width '{w}': {e}")))
+            .collect::<Result<Vec<_>>>()?;
+        // ascending unique: widths[0] is µS's d_base, flatness fits are
+        // signed smallest→largest (same contract as coordcheck/transfer)
+        widths.sort_unstable();
+        widths.dedup();
+        spec.widths = widths;
+    }
+
+    let mus = sn::verify(&spec, "mus")?;
+    let sp = sn::verify(&spec, "sp")?;
+
+    // self-tests: every deliberately corrupted rule set must trip a gate,
+    // otherwise the verifier is vacuous
+    let mut text = mus.table();
+    text.push('\n');
+    text.push_str(&sp.table());
+    text.push_str("\nmutation self-tests (each corrupted rule set must be flagged):\n");
+    let mut mutations: Vec<(&'static str, bool, String)> = Vec::new();
+    for m in sn::MUTATIONS {
+        let v = sn::verify_with(&spec, "mus", m)?;
+        let flagged = !v.pass;
+        let fired: Vec<&str> = v.checks.iter().filter(|c| !c.pass).map(|c| c.name).collect();
+        text.push_str(&format!(
+            "  {:<24} {} ({})\n",
+            m.name(),
+            if flagged { "flagged" } else { "MISSED" },
+            if fired.is_empty() { "no check fired".into() } else { fired.join(", ") },
+        ));
+        mutations.push((m.name(), flagged, fired.join(",")));
+    }
+
+    // live cross-check: one traced µS step per width vs the predictions
+    let backend = cli.backend()?;
+    let mut crosses = Vec::new();
+    text.push('\n');
+    for &w in &spec.widths {
+        let cfg = spec.model("mus", w)?;
+        let pred = sn::predict(&cfg, spec.tau)?;
+        let trainer = Trainer::new(backend.as_ref(), &cfg)?;
+        let mut session = trainer.init(0)?;
+        let mut batcher = Batcher::new(corpus_for(&cfg), 0, 0, 1, cfg.batch, cfg.seq_len);
+        let tokens = batcher.next_batch();
+        let (_, _, report) = session.step_traced(&tokens, 1.0 / 64.0, 0.0, spec.tau)?;
+        let cc = sn::cross_check(&pred, &report);
+        text.push_str(&cc.table());
+        text.push('\n');
+        crosses.push(cc);
+    }
+
+    let pass = mus.pass
+        && sp.pass
+        && crosses.iter().all(|c| c.pass)
+        && mutations.iter().all(|(_, flagged, _)| *flagged);
+    text.push_str(&format!("static numerics: {}\n", if pass { "PASS" } else { "FAIL" }));
+
+    println!("{text}");
+    save_report(&cli.results, "static_numerics.txt", &text)?;
+    let json = Json::obj(vec![
+        ("kind", Json::str("static_numerics")),
+        (
+            "spec",
+            Json::obj(vec![
+                ("widths", Json::Arr(spec.widths.iter().map(|&w| Json::num(w as f64)).collect())),
+                ("depth", Json::num(spec.depth as f64)),
+                ("head_dim", Json::num(spec.head_dim as f64)),
+                ("vocab", Json::num(spec.vocab as f64)),
+                ("seq_len", Json::num(spec.seq_len as f64)),
+                ("batch", Json::num(spec.batch as f64)),
+                ("tau", Json::num(spec.tau)),
+            ]),
+        ),
+        ("mus", mus.to_json()),
+        ("sp", sp.to_json()),
+        ("cross_check", Json::Arr(crosses.iter().map(|c| c.to_json()).collect())),
+        (
+            "mutations",
+            Json::Arr(
+                mutations
+                    .iter()
+                    .map(|(name, flagged, fired)| {
+                        Json::obj(vec![
+                            ("mutation", Json::str(name)),
+                            ("flagged", Json::Bool(*flagged)),
+                            ("failed_checks", Json::str(fired)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("pass", Json::Bool(pass)),
+    ]);
+    std::fs::write("REPORT_static_numerics.json", format!("{json}\n"))
+        .context("writing REPORT_static_numerics.json")?;
+    eprintln!("wrote REPORT_static_numerics.json");
+    if !pass {
+        return Err(munit::err!("static numerics verification failed (see report above)"));
+    }
+    Ok(())
+}
+
+/// `munit lint`: determinism-contract scan of the Rust tree. Any
+/// violation fails the command (the REPORT is written first).
+fn cmd_lint(cli: &Cli) -> Result<()> {
+    use munit::analysis::lint;
+    use munit::util::json::Json;
+
+    let root = if Path::new("rust/src").is_dir() {
+        Path::new("rust/src")
+    } else {
+        Path::new("src")
+    };
+    let (files, violations) = lint::lint_tree(root)?;
+    let mut text = format!(
+        "determinism-contract lint: {} files under {} — {} violation(s)\n",
+        files,
+        root.display(),
+        violations.len()
+    );
+    for v in &violations {
+        text.push_str(&format!("  {:<18} {}:{}  {}\n", v.rule, v.file, v.line, v.excerpt));
+    }
+    if !violations.is_empty() {
+        text.push_str("\nrules:\n");
+        for r in &lint::RULES {
+            text.push_str(&format!("  {:<18} {}\n", r.name, r.description));
+        }
+    }
+    println!("{text}");
+    save_report(&cli.results, "lint.txt", &text)?;
+    let json = Json::obj(vec![
+        ("kind", Json::str("lint")),
+        ("files", Json::num(files as f64)),
+        ("violations", Json::Arr(violations.iter().map(|v| v.to_json()).collect())),
+        ("pass", Json::Bool(violations.is_empty())),
+    ]);
+    std::fs::write("REPORT_lint.json", format!("{json}\n"))
+        .context("writing REPORT_lint.json")?;
+    eprintln!("wrote REPORT_lint.json");
+    if !violations.is_empty() {
+        return Err(munit::err!(
+            "{} determinism-contract violation(s)",
+            violations.len()
+        ));
+    }
     Ok(())
 }
 

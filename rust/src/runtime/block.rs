@@ -95,7 +95,7 @@ fn observe_rms(op: &'static str, layer: usize, xs: &[f32]) {
 /// itself is not perturbed; an all-zero dynamic tensor records nothing
 /// because no cast runs). BF16 round-trips are not FP8 casts and record
 /// nothing.
-fn observe_cast(op: &'static str, layer: usize, xs: &[f32], mode: QuantMode) {
+pub(crate) fn observe_cast(op: &'static str, layer: usize, xs: &[f32], mode: QuantMode) {
     if !telemetry::enabled() || xs.is_empty() {
         return;
     }
@@ -439,6 +439,157 @@ pub(crate) fn plan_for(cfg: &ModelConfig) -> Plan {
         _ => (QuantMode::Bf16, QuantMode::Bf16),
     };
     Plan { qkv: hidden, attn_out: hidden, ffn_up: hidden, ffn_down: hidden, grad }
+}
+
+// ---------------------------------------------------------------------------
+// Op-graph enumeration
+//
+// The symbolic counterpart of `forward_tower`/`train_grads`: one node per
+// telemetry observation site, in execution order. `analysis::
+// static_numerics` walks this enumeration to propagate predicted RMS
+// through the pipeline, and its coverage tests compare the node set
+// against a live traced step — an op added to the runtime without a
+// matching node here (or vice versa) fails `cargo test`.
+
+/// Semantic kind of one [`OpNode`] site.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum OpKind {
+    /// Embedding-row gather (`embed`).
+    Embed,
+    /// RMS-norm (+ gain) output (`post_norm1`/`post_norm2`/`final_norm`).
+    Norm,
+    /// A hidden linear's output, tagged with its [`Role`].
+    Linear(Role),
+    /// Rotary-embedded qkv heads (`post_rope`).
+    Rope,
+    /// Merged causal-attention mix (`attn_mix`).
+    Attention,
+    /// FFN activation output (`ffn_act`).
+    Activation,
+    /// Residual combine `x' = a·x + b·branch` (0 = attn, 1 = ffn branch).
+    Residual(usize),
+    /// Pre-softmax logits (`logits`).
+    Head,
+    /// Loss gradient w.r.t. the logits (`d_logits`).
+    GradLogits,
+    /// Gradient entering the tower back through the head (`d_final`).
+    GradHead,
+    /// Activation gradient feeding a hidden linear's backward GEMMs —
+    /// the tensor `plan.grad` quantizes — tagged with the linear's role.
+    GradLinear(Role),
+    /// Residual-stream gradient after a block's combine (`d_resid`).
+    GradResidual,
+}
+
+/// One symbolic op site of the forward/backward pipeline: the
+/// `(op, layer)` key `observe_rms` records it under, its kind, and —
+/// when an operand is quantized at this site — the paired
+/// `observe_cast` name(s).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct OpNode {
+    /// `observe_rms` op name.
+    pub name: &'static str,
+    /// Block index (0 for the global embed/final_norm/logits/grad sites).
+    pub layer: usize,
+    /// What the op does, for the verifier's propagation rule.
+    pub kind: OpKind,
+    /// `observe_cast` name of the quantized input activation/gradient.
+    pub cast: Option<&'static str>,
+    /// `observe_cast` name of the quantized weight (forward linears).
+    pub weight_cast: Option<&'static str>,
+}
+
+impl OpNode {
+    const fn plain(name: &'static str, layer: usize, kind: OpKind) -> OpNode {
+        OpNode { name, layer, kind, cast: None, weight_cast: None }
+    }
+    const fn linear(
+        name: &'static str,
+        layer: usize,
+        role: Role,
+        weight_cast: &'static str,
+    ) -> OpNode {
+        OpNode { name, layer, kind: OpKind::Linear(role), cast: Some(name), weight_cast: Some(weight_cast) }
+    }
+    const fn grad_linear(name: &'static str, layer: usize, role: Role) -> OpNode {
+        OpNode { name, layer, kind: OpKind::GradLinear(role), cast: Some(name), weight_cast: None }
+    }
+}
+
+impl Plan {
+    /// The forward quantization mode of one hidden linear's slot (the
+    /// named accessor keeps op-graph consumers off the raw fields — the
+    /// lint contract pairs field reads with `observe_cast` call sites).
+    pub(crate) fn slot(&self, role: Role) -> Option<QuantMode> {
+        match role {
+            Role::Qkv => Some(self.qkv),
+            Role::AttnOut => Some(self.attn_out),
+            Role::FfnUp => Some(self.ffn_up),
+            Role::FfnDown => Some(self.ffn_down),
+            _ => None,
+        }
+    }
+
+    /// The backward (activation-gradient) quantization mode.
+    pub(crate) fn grad_mode(&self) -> QuantMode {
+        self.grad
+    }
+}
+
+/// The quantization mode governing a node's cast sites under `plan`:
+/// forward linears carry their own slot, grad sites share the plan's
+/// gradient mode, everything else is unquantized.
+pub(crate) fn node_mode(node: &OpNode, plan: &Plan) -> Option<QuantMode> {
+    match node.kind {
+        OpKind::Linear(role) => plan.slot(role),
+        OpKind::GradLinear(_) => Some(plan.grad_mode()),
+        _ => None,
+    }
+}
+
+/// Enumerate every op site of one training step, in execution order.
+/// Res-Post (µS) records each branch norm *after* its linear and each
+/// residual stream un-normed into the next branch; Pre (SP) records the
+/// norm first — the node order mirrors `forward_tower` exactly.
+pub(crate) fn op_graph(cfg: &ModelConfig) -> Vec<OpNode> {
+    use OpKind::*;
+    let res_post = placement_for(cfg) == NormPlacement::ResPost;
+    let mut g = vec![OpNode::plain("embed", 0, Embed)];
+    for l in 0..cfg.depth {
+        if !res_post {
+            g.push(OpNode::plain("post_norm1", l, Norm));
+        }
+        g.push(OpNode::linear("qkv", l, Role::Qkv, "w_qkv"));
+        g.push(OpNode::plain("post_rope", l, Rope));
+        g.push(OpNode::plain("attn_mix", l, Attention));
+        g.push(OpNode::linear("attn_out", l, Role::AttnOut, "w_attn_out"));
+        if res_post {
+            g.push(OpNode::plain("post_norm1", l, Norm));
+        }
+        g.push(OpNode::plain("resid1", l, Residual(0)));
+        if !res_post {
+            g.push(OpNode::plain("post_norm2", l, Norm));
+        }
+        g.push(OpNode::linear("ffn_up", l, Role::FfnUp, "w_ffn_up"));
+        g.push(OpNode::plain("ffn_act", l, Activation));
+        g.push(OpNode::linear("ffn_down", l, Role::FfnDown, "w_ffn_down"));
+        if res_post {
+            g.push(OpNode::plain("post_norm2", l, Norm));
+        }
+        g.push(OpNode::plain("resid2", l, Residual(1)));
+    }
+    g.push(OpNode::plain("final_norm", 0, Norm));
+    g.push(OpNode::plain("logits", 0, Head));
+    g.push(OpNode::plain("d_logits", 0, GradLogits));
+    g.push(OpNode::plain("d_final", 0, GradHead));
+    for l in (0..cfg.depth).rev() {
+        g.push(OpNode::grad_linear("d_ffn_down", l, Role::FfnDown));
+        g.push(OpNode::grad_linear("d_ffn_up", l, Role::FfnUp));
+        g.push(OpNode::grad_linear("d_attn_out", l, Role::AttnOut));
+        g.push(OpNode::grad_linear("d_qkv", l, Role::Qkv));
+        g.push(OpNode::plain("d_resid", l, GradResidual));
+    }
+    g
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -2219,5 +2370,61 @@ mod tests {
             }
         }
         assert_eq!(sharded, 4 * cfg.depth);
+    }
+
+    #[test]
+    fn op_graph_enumerates_every_site_once_in_order() {
+        for variant in ["mus", "sp"] {
+            let mut cfg = ModelConfig::default();
+            cfg.variant = variant.into();
+            let g = op_graph(&cfg);
+            // 12 forward sites + 5 backward sites per layer, plus the 5
+            // global sites (embed, final_norm, logits, d_logits, d_final)
+            assert_eq!(g.len(), 5 + 17 * cfg.depth, "{variant}");
+            let mut seen = std::collections::BTreeSet::new();
+            for n in &g {
+                assert!(seen.insert((n.name, n.layer)), "duplicate node {:?}", (n.name, n.layer));
+            }
+            // Pre norms the branch input (norm precedes the linear);
+            // Res-Post norms the branch output (linear precedes the norm)
+            let pos = |name: &str| g.iter().position(|n| n.name == name && n.layer == 0).unwrap();
+            if variant == "mus" {
+                assert!(pos("qkv") < pos("post_norm1"));
+            } else {
+                assert!(pos("post_norm1") < pos("qkv"));
+            }
+        }
+    }
+
+    #[test]
+    fn op_graph_cast_sites_carry_the_plan_modes() {
+        let cfg = ModelConfig::default(); // mus + fp8
+        let plan = plan_for(&cfg);
+        let g = op_graph(&cfg);
+        let mut fwd_casts = 0;
+        let mut grad_casts = 0;
+        for n in &g {
+            match node_mode(n, &plan) {
+                Some(QuantMode::StaticFp8(f)) => {
+                    if matches!(n.kind, OpKind::Linear(_)) {
+                        assert_eq!(f.name, "e4m3", "{}", n.name);
+                        assert!(n.cast.is_some() && n.weight_cast.is_some());
+                        fwd_casts += 1;
+                    } else {
+                        assert_eq!(f.name, "e5m2", "{}", n.name);
+                        assert!(n.cast.is_some() && n.weight_cast.is_none());
+                        grad_casts += 1;
+                    }
+                }
+                Some(_) => panic!("µS plan must be static: {}", n.name),
+                None => assert!(
+                    !matches!(n.kind, OpKind::Linear(_) | OpKind::GradLinear(_)),
+                    "{} is a linear but carries no mode",
+                    n.name
+                ),
+            }
+        }
+        assert_eq!(fwd_casts, 4 * cfg.depth);
+        assert_eq!(grad_casts, 4 * cfg.depth);
     }
 }

@@ -313,7 +313,7 @@ impl InferSession {
     /// Single-sequence decode convenience over [`InferSession::decode_batch`].
     pub fn decode_step(&mut self, id: SeqId, token: i32) -> Result<Vec<f32>> {
         let mut out = self.decode_batch(&[(id, token)])?;
-        Ok(out.pop().expect("one item in, one logits row out"))
+        out.pop().ok_or_else(|| err!("decode batch for {id:?} returned no logits row"))
     }
 
     /// One incremental decode step for a batch of live sequences: feed
@@ -353,7 +353,8 @@ impl InferSession {
         dws.ensure(cfg, rows, cap);
         for (r, (id, tok)) in items.iter().enumerate() {
             dws.toks[r] = *tok;
-            dws.pos[r] = seqs[&id.0].len();
+            dws.pos[r] =
+                seqs.get(&id.0).ok_or_else(|| err!("unknown sequence {id:?}"))?.len();
         }
         let pos = &dws.pos[..rows];
         let attn_scale = 1.0 / (dh as f32).sqrt();
@@ -377,6 +378,7 @@ impl InferSession {
                     dws.xq[..rows * d].copy_from_slice(&dws.x[..rows * d]);
                 }
             }
+            block::observe_cast("qkv", l, &dws.xq[..rows * d], prep.plan.qkv);
             block::op_linear(
                 &mut dws.xq[..rows * d],
                 prep.plan.qkv,
@@ -404,7 +406,8 @@ impl InferSession {
 
             // append this position's K/V, then attend over len+1 entries
             for (r, (id, _)) in items.iter().enumerate() {
-                let seq = seqs.get_mut(&id.0).expect("validated above");
+                let seq =
+                    seqs.get_mut(&id.0).ok_or_else(|| err!("sequence {id:?} vanished mid-decode"))?;
                 for hh in 0..h {
                     let chain = pool.chain_of(h, l, hh);
                     let o = (r * h + hh) * dh;
@@ -425,7 +428,8 @@ impl InferSession {
             let mut vp_flat: Vec<&[u16]> = Vec::with_capacity(2 * rows * h);
             dws.page_bounds.clear();
             for (r, (id, _)) in items.iter().enumerate() {
-                let seq = &seqs[&id.0];
+                let seq =
+                    seqs.get(&id.0).ok_or_else(|| err!("sequence {id:?} vanished mid-decode"))?;
                 for hh in 0..h {
                     let start = kp_flat.len();
                     let chain = pool.chain_of(h, l, hh);
@@ -466,6 +470,7 @@ impl InferSession {
             drop(kp_flat);
             drop(vp_flat);
             block::merge_heads(&dws.o_heads[..rows * d], cfg, 1, &mut dws.xq[..rows * d]);
+            block::observe_cast("attn_out", l, &dws.xq[..rows * d], prep.plan.attn_out);
             block::op_linear(
                 &mut dws.xq[..rows * d],
                 prep.plan.attn_out,
@@ -517,6 +522,7 @@ impl InferSession {
                     dws.xq[..rows * d].copy_from_slice(&dws.xmid[..rows * d]);
                 }
             }
+            block::observe_cast("ffn_up", l, &dws.xq[..rows * d], prep.plan.ffn_up);
             block::op_linear(
                 &mut dws.xq[..rows * d],
                 prep.plan.ffn_up,
@@ -528,6 +534,7 @@ impl InferSession {
                 prep.alpha_ffn_up,
             );
             block::apply_act(&dws.z_up[..rows * f], prep.act, &mut dws.xq_down[..rows * f]);
+            block::observe_cast("ffn_down", l, &dws.xq_down[..rows * f], prep.plan.ffn_down);
             block::op_linear(
                 &mut dws.xq_down[..rows * f],
                 prep.plan.ffn_down,
@@ -587,7 +594,9 @@ impl InferSession {
         );
 
         for (id, _) in items {
-            seqs.get_mut(&id.0).expect("validated above").advance();
+            seqs.get_mut(&id.0)
+                .ok_or_else(|| err!("sequence {id:?} vanished mid-decode"))?
+                .advance();
         }
         stats.decode_steps += 1;
         stats.decode_tokens += rows as u64;

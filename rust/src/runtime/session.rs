@@ -13,7 +13,7 @@ use std::time::Instant;
 use super::backend::{Backend, ExecStats, TensorHandle};
 use super::tensor::Tensor;
 use crate::config::ModelConfig;
-use crate::util::error::{Context, Result};
+use crate::util::error::{Context, Error, Result};
 use crate::{bail, err};
 
 /// Host-side snapshot of the training state: `params ++ momenta`, all f32
@@ -214,7 +214,8 @@ impl<'b> Session<'b> {
         inputs.extend(self.state.iter().cloned());
         inputs.push(tok_h.clone());
         for slot in &self.scalar_cache {
-            let (_, h) = slot.as_ref().expect("scalar cache filled above");
+            let (_, h) =
+                slot.as_ref().ok_or_else(|| err!("scalar cache slot empty after fill pass"))?;
             inputs.push(h.clone());
         }
         let result = self.backend.execute(&self.train_name, &inputs);
@@ -254,7 +255,10 @@ impl<'b> Session<'b> {
                 for h in &outs {
                     self.backend.free(h);
                 }
-                return Err(l.err().or_else(|| g.err()).expect("one result errored"));
+                return Err(l
+                    .err()
+                    .or_else(|| g.err())
+                    .unwrap_or_else(|| Error::msg("loss/gnorm readback failed without error")));
             }
         };
         let t3 = Instant::now();

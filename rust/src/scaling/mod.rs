@@ -7,6 +7,13 @@
 //! must sweep. The trainer and sweep engine consult this module; it is the
 //! single source of truth mirrored by `python/compile/configs.py` (tested
 //! for agreement via the manifest).
+//!
+//! The same rules are *proved* self-consistent before training:
+//! [`crate::analysis::static_numerics`] propagates them symbolically over
+//! the op graph (`munit verify-numerics`) to show every µS FP8 operand
+//! lands in-band and width-flat, and that sharded
+//! [`Scheme::shard_output_mult`]/[`Scheme::shard_init_std`] geometry
+//! reproduces the full-tensor multipliers.
 
 /// Which parametrization scheme a model is trained under.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]

@@ -232,6 +232,24 @@ impl TelemetryReport {
         }
     }
 
+    /// Pooled RMS for one `(op, layer)` site, or `None` if it was never
+    /// recorded. Unlike [`TelemetryReport::op_rms`] this does not pool
+    /// across layers, so the static verifier can compare its per-layer
+    /// predictions against exactly the site that produced them.
+    pub fn op_layer_rms(&self, op: &str, layer: usize) -> Option<f64> {
+        let mut sum_sq = 0f64;
+        let mut elems = 0u64;
+        for r in self.ops.iter().filter(|r| r.op == op && r.layer == layer) {
+            sum_sq += r.sum_sq;
+            elems += r.elems;
+        }
+        if elems == 0 {
+            None
+        } else {
+            Some((sum_sq / elems as f64).sqrt())
+        }
+    }
+
     /// Distinct op names with RMS records, in sorted order.
     pub fn op_names(&self) -> Vec<String> {
         let mut names: Vec<String> = self.ops.iter().map(|r| r.op.clone()).collect();
@@ -406,5 +424,18 @@ mod tests {
         let op0 = &parsed.get("ops").unwrap().as_arr().unwrap()[0];
         assert_eq!(op0.str_or("op", ""), "x");
         assert!((op0.f64_or("rms", 0.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn op_layer_rms_is_per_site() {
+        let ((), report) = capture(|| {
+            record_rms("x", 0, &[1.0, 1.0]);
+            record_rms("x", 1, &[2.0]);
+        });
+        assert!((report.op_layer_rms("x", 0).unwrap() - 1.0).abs() < 1e-12);
+        assert!((report.op_layer_rms("x", 1).unwrap() - 2.0).abs() < 1e-12);
+        assert!(report.op_layer_rms("x", 2).is_none());
+        // pooled op_rms mixes both layers: sqrt((1+1+4)/3)
+        assert!((report.op_rms("x").unwrap() - (2f64).sqrt()).abs() < 1e-12);
     }
 }

@@ -1,0 +1,11 @@
+//! Lint fixture (never compiled): an f32 running sum outside the
+//! blessed gemm/collective folds. Expected: `f32-accumulator` fires on
+//! the `+=` line.
+
+pub fn mean(xs: &[f32]) -> f32 {
+    let mut acc = 0f32;
+    for &x in xs {
+        acc += x;
+    }
+    acc / xs.len().max(1) as f32
+}

@@ -1,0 +1,15 @@
+//! Lint fixture (never compiled): iterating a HashMap inside a numerics
+//! path — iteration order is not deterministic. Expected:
+//! `hashmap-iteration` fires on the `.iter()` loop.
+
+use std::collections::HashMap;
+
+pub fn occupancy() -> usize {
+    let mut seqs: HashMap<u64, usize> = HashMap::new();
+    seqs.insert(1, 4);
+    let mut total = 0usize;
+    for (_id, len) in seqs.iter() {
+        total += len;
+    }
+    total
+}

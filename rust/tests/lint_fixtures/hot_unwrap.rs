@@ -1,0 +1,11 @@
+//! Lint fixture (never compiled): panicking Option/Result handling in a
+//! step/decode hot file. Expected: `hot-path-unwrap` fires on both the
+//! `.unwrap()` and the `.expect(` lines.
+
+pub fn last_token(tokens: &[i32]) -> i32 {
+    *tokens.last().unwrap()
+}
+
+pub fn first_token(tokens: &[i32]) -> i32 {
+    *tokens.first().expect("empty token buffer")
+}

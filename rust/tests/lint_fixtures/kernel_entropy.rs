@@ -1,0 +1,9 @@
+//! Lint fixture (never compiled): wall-clock reads inside a kernel
+//! file — kernels must be pure functions of their inputs. Expected:
+//! `kernel-entropy` fires on the timing line.
+
+pub fn timed_matmul(a: &[f32], b: &[f32]) -> u128 {
+    let t0 = std::time::Instant::now();
+    let _ = (a.len(), b.len());
+    t0.elapsed().as_nanos()
+}

@@ -1,0 +1,9 @@
+//! Lint fixture (never compiled): a quantization-slot read with no
+//! CastHealth pairing in the preceding window. Expected:
+//! `unpaired-cast` fires on the `plan.qkv` line. (This mention of
+//! observe_cast lives in a comment, which the code view blanks — it
+//! must NOT count as the pairing.)
+
+pub fn forward_qkv(x: &[f32], prep: &Prepared) -> Vec<f32> {
+    op_linear(x, prep.plan.qkv)
+}

@@ -1,0 +1,120 @@
+//! Integration gates for the static-analysis layer (`munit lint` /
+//! `munit verify-numerics`): every lint rule must fire on its negative
+//! fixture, the real tree must be clean, the verifier's mutation
+//! self-tests must flag every corrupted rule set, and the hardened
+//! decode path must return contextual errors instead of panicking.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+use munit::analysis::lint;
+use munit::analysis::static_numerics as sn;
+use munit::coordinator::trainer::Trainer;
+use munit::runtime::{InferSession, ReferenceBackend};
+
+fn fixture_path(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/lint_fixtures").join(name)
+}
+
+fn fixture(name: &str) -> String {
+    let path = fixture_path(name);
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("reading {}: {e}", path.display()))
+}
+
+/// Every rule in [`lint::RULES`] has a negative fixture that trips it
+/// when linted under an in-scope file label.
+#[test]
+fn every_lint_rule_fires_on_its_fixture() {
+    let cases = [
+        ("f32-accumulator", "telemetry/mod.rs", "f32_accum.rs"),
+        ("hashmap-iteration", "runtime/infer.rs", "hashmap_iter.rs"),
+        ("hot-path-unwrap", "runtime/infer.rs", "hot_unwrap.rs"),
+        ("unpaired-cast", "runtime/infer.rs", "unpaired_cast.rs"),
+        ("kernel-entropy", "runtime/gemm.rs", "kernel_entropy.rs"),
+    ];
+    let mut covered = BTreeSet::new();
+    for (rule, label, file) in cases {
+        let fired: BTreeSet<&'static str> =
+            lint::lint_source(label, &fixture(file)).into_iter().map(|v| v.rule).collect();
+        assert!(fired.contains(rule), "{file} under {label}: expected {rule}, fired {fired:?}");
+        covered.insert(rule);
+    }
+    let all: BTreeSet<&'static str> = lint::RULES.iter().map(|r| r.name).collect();
+    assert_eq!(covered, all, "fixture set must exercise every registered rule");
+}
+
+/// The path-scoped rules stay silent when the same sources carry an
+/// out-of-scope label — scope is part of the contract, not decoration.
+#[test]
+fn fixtures_are_clean_outside_their_rule_scope() {
+    assert!(
+        lint::lint_source("repro/mod.rs", &fixture("hashmap_iter.rs")).is_empty(),
+        "hashmap iteration is allowed outside the numerics paths"
+    );
+    assert!(
+        lint::lint_source("util/mod.rs", &fixture("hot_unwrap.rs")).is_empty(),
+        "unwrap is allowed outside the hot files"
+    );
+    assert!(
+        lint::lint_source("util/mod.rs", &fixture("kernel_entropy.rs")).is_empty(),
+        "timing is allowed outside kernel files"
+    );
+    assert!(
+        lint::lint_source("runtime/gemm.rs", &fixture("f32_accum.rs")).is_empty(),
+        "gemm's f32 folds are blessed"
+    );
+}
+
+/// The actual source tree satisfies its own determinism contract —
+/// this is the same scan `munit lint` runs in CI.
+#[test]
+fn the_real_tree_is_lint_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src");
+    let (files, violations) = lint::lint_tree(&root).expect("lint_tree");
+    assert!(files > 20, "unexpectedly few files scanned: {files}");
+    assert!(
+        violations.is_empty(),
+        "determinism-contract violations:\n{}",
+        violations
+            .iter()
+            .map(|v| format!("  {} {}:{}  {}", v.rule, v.file, v.line, v.excerpt))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+/// The verifier passes on the real rules and flags every mutation —
+/// exercised through the same public API the CLI uses.
+#[test]
+fn verifier_passes_real_rules_and_flags_every_mutation() {
+    let spec = sn::VerifySpec::smoke();
+    assert!(sn::verify(&spec, "mus").expect("verify mus").pass);
+    assert!(sn::verify(&spec, "sp").expect("verify sp").pass);
+    for m in sn::MUTATIONS {
+        let v = sn::verify_with(&spec, "mus", m).expect("verify_with");
+        assert!(!v.pass, "mutation {} was not flagged", m.name());
+        assert!(v.checks.iter().any(|c| !c.pass), "mutation {} fired no check", m.name());
+    }
+}
+
+/// Regression for the hot-path hardening: unknown/freed sequence ids in
+/// the decode path must come back as contextual errors, never panics.
+#[test]
+fn decode_path_errors_are_contextual_not_panics() {
+    let spec = sn::VerifySpec::smoke();
+    let cfg = spec.model("mus", spec.widths[0]).expect("model");
+    let backend = ReferenceBackend::new(&[]).expect("backend");
+    let trainer = Trainer::new(&backend, &cfg).expect("trainer");
+    let session = trainer.init(0).expect("init");
+    let params = session.params_host().expect("params");
+    let mut infer = InferSession::new(&cfg, &params, spec.tau as f32).expect("infer session");
+
+    let id = infer.add_sequence();
+    infer.free_sequence(id).expect("first free succeeds");
+    let err = infer.free_sequence(id).expect_err("double free must fail");
+    assert!(format!("{err:#}").contains("unknown sequence"), "uncontextual error: {err:#}");
+    let err = infer.decode_step(id, 1).expect_err("decode on freed id must fail");
+    assert!(format!("{err:#}").contains("unknown sequence"), "uncontextual error: {err:#}");
+    let err = infer.prefill(id, &[1, 2, 3]).expect_err("prefill on freed id must fail");
+    assert!(format!("{err:#}").contains("unknown sequence"), "uncontextual error: {err:#}");
+}
