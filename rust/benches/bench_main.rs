@@ -23,13 +23,16 @@ use munit::analysis::{
     activation_underflow, activations::Activation, attention_sigma_iid, AttentionKind,
     InputDist,
 };
+use munit::config::presets::paper_table4;
 use munit::config::ModelConfig;
 use munit::coordinator::collective::WireFormat;
 use munit::coordinator::shard;
 use munit::coordinator::trainer::Trainer;
 use munit::data::{Batcher, CorpusSpec};
 use munit::fp8::E4M3;
-use munit::perfmodel::{fig8, shard_comm_bytes_per_step, Hw};
+use munit::perfmodel::{
+    decode_step_time, fig8, shard_comm_bytes_per_step, step_time, Hw, MeasuredKernel, Mode,
+};
 use munit::repro::proxy_tc;
 use munit::runtime::{open_backend, tensor_f32, Backend, InferSession};
 use munit::scaling::{comparison_matrix, recommended_tau};
@@ -91,7 +94,8 @@ fn main() {
         std::hint::black_box(tensor_f32(&buf[..512 * 64], &[512, 64]).unwrap());
     });
 
-    // the batched interpreter's GEMM kernel (deterministic 8-lane dot)
+    // the batched interpreter's GEMM kernel (deterministic 8-lane dot),
+    // on the runtime-dispatched kernel path (AVX2 where the host has it)
     let mut ga = vec![0f32; 256 * 256];
     let mut gb = vec![0f32; 256 * 256];
     let mut gc = vec![0f32; 256 * 256];
@@ -99,6 +103,22 @@ fn main() {
     rng.fill_normal(&mut gb, 1.0);
     run("hot:gemm_bt_256cubed", &mut || {
         munit::runtime::gemm::matmul_bt(&ga, &gb, &mut gc, 256, 256, 256, 1.0);
+        std::hint::black_box(&gc);
+    });
+    // the same GEMM forced onto the portable (no-intrinsics) kernels:
+    // the ratio to the row above is the realized SIMD speedup. Both
+    // paths are bit-identical by contract, so only the clock differs.
+    munit::runtime::gemm::force_portable_kernels(true);
+    run("hot:gemm_bt_256cubed_portable", &mut || {
+        munit::runtime::gemm::matmul_bt(&ga, &gb, &mut gc, 256, 256, 256, 1.0);
+        std::hint::black_box(&gc);
+    });
+    munit::runtime::gemm::force_portable_kernels(false);
+    // fused cast-into-GEMM entry point: FP8 quantization runs inside the
+    // per-panel pack loop instead of as a separate pass over A
+    let pack = |p: &mut [f32]| fast.quantize_slice(p);
+    run("hot:gemm_bt_quant_fused_256cubed", &mut || {
+        munit::runtime::gemm::matmul_bt_quant(&mut ga, &gb, &mut gc, 256, 256, 256, 1.0, pack);
         std::hint::black_box(&gc);
     });
 
@@ -313,8 +333,43 @@ fn main() {
     }
 
     if !step_rows.is_empty() {
+        // Microbench the kernels the interpreter actually dispatched
+        // (always, independent of the bench filter, so every
+        // BENCH_step.json carries them) and feed the rates through the
+        // perfmodel measured-throughput hook: the `measured` block holds
+        // the raw GFLOP/s / GB/s on both kernel paths, and the roofline
+        // block holds `step_time`/`decode_step_time` predictions from
+        // the calibrated Hw — recomputable from the `measured` fields
+        // exactly (the calibration is bit-exact by construction; see
+        // `perfmodel::MeasuredKernel`).
+        let (mk, portable_gflops, path) = measure_kernels();
+        let hw = mk.calibrate(&Hw::default());
+        let p1 = &paper_table4()[0];
+        let st = step_time(&hw, p1, Mode::Fp8Mus);
+        let dt = decode_step_time(&hw, p1, Mode::Fp8Mus, 1024, 8);
         let doc = Json::obj(vec![
             ("backend", Json::str(&backend.platform())),
+            (
+                "measured",
+                Json::obj(vec![
+                    ("kernel_path", Json::str(path)),
+                    ("gemm_gflops", Json::num(mk.gemm_gflops)),
+                    ("portable_gemm_gflops", Json::num(portable_gflops)),
+                    (
+                        "simd_speedup",
+                        Json::num(mk.gemm_gflops / portable_gflops.max(1e-12)),
+                    ),
+                    ("stream_gbps", Json::num(mk.stream_gbps)),
+                ]),
+            ),
+            (
+                "roofline_local_1b",
+                Json::obj(vec![
+                    ("step_s_fp8_mus", Json::num(st.total())),
+                    ("gemm_s_fp8_mus", Json::num(st.gemm)),
+                    ("decode_step_s_fp8_mus_b8_ctx1024", Json::num(dt.total())),
+                ]),
+            ),
             ("configs", Json::Arr(step_rows)),
         ]);
         match std::fs::write("BENCH_step.json", format!("{doc}\n")) {
@@ -492,6 +547,43 @@ fn main() {
     }
 
     print_report(&results);
+}
+
+/// Microbench the dispatched and forced-portable GEMM kernels plus the
+/// streaming reduction, for BENCH_step.json's `measured` block. Returns
+/// the [`MeasuredKernel`] rates (dispatched path), the portable-path
+/// GEMM GFLOP/s, and the dispatched path's name.
+fn measure_kernels() -> (MeasuredKernel, f64, &'static str) {
+    let mut rng = Rng::new(7);
+    let mut a = vec![0f32; 256 * 256];
+    let mut b = vec![0f32; 256 * 256];
+    let mut c = vec![0f32; 256 * 256];
+    rng.fill_normal(&mut a, 1.0);
+    rng.fill_normal(&mut b, 1.0);
+    let path = munit::runtime::gemm::kernel_path().name();
+    let gemm_flops = 2.0 * 256f64 * 256.0 * 256.0;
+    eprintln!("measuring kernel rates (path={path})…");
+    let auto = quick("measure:gemm_dispatched", || {
+        munit::runtime::gemm::matmul_bt(&a, &b, &mut c, 256, 256, 256, 1.0);
+        std::hint::black_box(&c);
+    });
+    munit::runtime::gemm::force_portable_kernels(true);
+    let portable = quick("measure:gemm_portable", || {
+        munit::runtime::gemm::matmul_bt(&a, &b, &mut c, 256, 256, 256, 1.0);
+        std::hint::black_box(&c);
+    });
+    munit::runtime::gemm::force_portable_kernels(false);
+    let mut s = vec![0f32; 1 << 20];
+    rng.fill_normal(&mut s, 1.0);
+    let stream = quick("measure:sum_sq_stream", || {
+        std::hint::black_box(munit::runtime::gemm::sum_sq(&s));
+    });
+    let mk = MeasuredKernel {
+        gemm_gflops: gemm_flops / auto.mean.as_secs_f64().max(1e-12) / 1e9,
+        stream_gbps: (s.len() * 4) as f64 / stream.mean.as_secs_f64().max(1e-12) / 1e9,
+    };
+    let portable_gflops = gemm_flops / portable.mean.as_secs_f64().max(1e-12) / 1e9;
+    (mk, portable_gflops, path)
 }
 
 fn print_report(results: &[BenchResult]) {

@@ -30,6 +30,15 @@
 //!    files (gemm/block/kvcache/fp8): kernels must be pure functions
 //!    of their inputs or replay and the decode-vs-forward bit-identity
 //!    tests lose their meaning.
+//! 6. **stray-intrinsic** — `core::arch` SIMD intrinsics are allowed
+//!    only in the blessed `runtime/gemm/kernels.rs`: the one file whose
+//!    unsafe blocks are reviewed against the scalar reference kernels.
+//!    An intrinsic anywhere else bypasses that review and the
+//!    scalar-twin pairing below.
+//! 7. **missing-scalar-twin** — every `#[target_feature]` fn `x_avx2` /
+//!    `x_fma` must have a scalar twin `x_scalar` in the same file, so
+//!    the bit-equality suite always has a reference to diff the SIMD
+//!    path against (and non-x86 builds have a fallback).
 //!
 //! The scan works on a *code view* of each file: comments, string
 //! contents, char literals and everything from the first
@@ -78,7 +87,7 @@ pub struct Rule {
 }
 
 /// Every contract the linter enforces.
-pub const RULES: [Rule; 5] = [
+pub const RULES: [Rule; 7] = [
     Rule {
         name: "f32-accumulator",
         description: "f32 running-sum accumulators outside blessed gemm/collective folds \
@@ -103,12 +112,24 @@ pub const RULES: [Rule; 5] = [
         description: "kernel files must not read time or randomness; kernels are pure \
                       functions of their inputs",
     },
+    Rule {
+        name: "stray-intrinsic",
+        description: "core::arch SIMD intrinsics are allowed only in the blessed \
+                      runtime/gemm kernel file, where they are reviewed against the \
+                      scalar reference kernels",
+    },
+    Rule {
+        name: "missing-scalar-twin",
+        description: "every #[target_feature] fn needs a *_scalar twin in the same file \
+                      (the bit-equality reference and the non-x86 fallback)",
+    },
 ];
 
 /// Files whose f32 folds are the *implementation* of deterministic
 /// reduction (fixed-shape pairwise/chunked sums) and are exempt from
 /// rule 1.
-const R1_BLESSED: [&str; 2] = ["runtime/gemm.rs", "coordinator/collective.rs"];
+const R1_BLESSED: [&str; 3] =
+    ["runtime/gemm/mod.rs", "runtime/gemm/kernels.rs", "coordinator/collective.rs"];
 
 /// Directories where rule 2 (no HashMap iteration) applies — the
 /// numerics, telemetry and report paths.
@@ -116,22 +137,34 @@ const R2_SCOPE: [&str; 6] =
     ["runtime/", "coordinator/", "fp8/", "telemetry/", "scaling/", "data/"];
 
 /// The step/decode hot files rule 3 keeps panic-free.
-const R3_HOT: [&str; 6] = [
+const R3_HOT: [&str; 8] = [
     "runtime/block.rs",
     "runtime/session.rs",
     "runtime/infer.rs",
-    "runtime/gemm.rs",
+    "runtime/gemm/mod.rs",
+    "runtime/gemm/kernels.rs",
+    "runtime/gemm/dispatch.rs",
     "runtime/kvcache.rs",
     "coordinator/serve.rs",
 ];
 
 /// Kernel files rule 5 keeps entropy-free.
-const R5_KERNEL: [&str; 4] =
-    ["runtime/gemm.rs", "runtime/block.rs", "runtime/kvcache.rs", "fp8/mod.rs"];
+const R5_KERNEL: [&str; 6] = [
+    "runtime/gemm/mod.rs",
+    "runtime/gemm/kernels.rs",
+    "runtime/gemm/dispatch.rs",
+    "runtime/block.rs",
+    "runtime/kvcache.rs",
+    "fp8/mod.rs",
+];
 
 /// How many preceding lines rule 4 searches for the paired
 /// `observe_cast`.
 const R4_WINDOW: usize = 10;
+
+/// The ONE file where `core::arch` intrinsics (and the `unsafe` blocks
+/// that call them) are allowed — rule 6.
+const R6_SIMD_BLESSED: [&str; 1] = ["runtime/gemm/kernels.rs"];
 
 fn is_ident(c: char) -> bool {
     c.is_ascii_alphanumeric() || c == '_'
@@ -489,6 +522,57 @@ fn rule_kernel_entropy(file: &str, view: &[&str], src: &[&str], out: &mut Vec<Vi
     }
 }
 
+/// Rule 6: SIMD intrinsic tokens outside the blessed kernel file. Token
+/// prefixes, not full names — `_mm256_fmadd_ps`, `_mm_add_ss`, and the
+/// `core::arch` import path all count, so a stray intrinsic cannot hide
+/// behind an alias.
+fn rule_stray_intrinsic(file: &str, view: &[&str], src: &[&str], out: &mut Vec<Violation>) {
+    if R6_SIMD_BLESSED.contains(&file) {
+        return;
+    }
+    let banned = ["core::arch", "_mm256_", "_mm512_", "_mm_"];
+    for (n, line) in view.iter().enumerate() {
+        if banned.iter().any(|b| line.contains(b)) {
+            push(out, "stray-intrinsic", file, n + 1, src);
+        }
+    }
+}
+
+/// Rule 7: a `#[target_feature]` fn `x_avx2` / `x_fma` (or any other
+/// suffix) whose stem has no `fn x_scalar` in the same file. The twin is
+/// what the bit-equality tests diff the SIMD path against and what
+/// non-x86 builds run.
+fn rule_missing_scalar_twin(file: &str, view: &[&str], src: &[&str], out: &mut Vec<Violation>) {
+    for (n, line) in view.iter().enumerate() {
+        if !line.contains("#[target_feature") {
+            continue;
+        }
+        // the fn item follows the attribute (possibly after more
+        // attributes / doc lines, which the view blanks)
+        let Some((fn_line, name)) = view[n..].iter().take(8).enumerate().find_map(|(k, l)| {
+            l.find("fn ").map(|p| (n + k, ident_prefix(l[p + 3..].trim_start())))
+        }) else {
+            continue;
+        };
+        if name.is_empty() || name.ends_with("_scalar") {
+            continue;
+        }
+        let stem = name
+            .strip_suffix("_avx2")
+            .or_else(|| name.strip_suffix("_fma"))
+            .or_else(|| name.strip_suffix("_avx512"))
+            .unwrap_or(&name);
+        let twin = format!("fn {stem}_scalar");
+        let paired = view.iter().any(|l| {
+            l.match_indices(&twin)
+                .any(|(p, _)| l[p + twin.len()..].chars().next().is_none_or(|c| !is_ident(c)))
+        });
+        if !paired {
+            push(out, "missing-scalar-twin", file, fn_line + 1, src);
+        }
+    }
+}
+
 /// Lint one file's source under its tree-relative label (e.g.
 /// `"runtime/infer.rs"` — the label decides which path-scoped rules
 /// apply). Returns every violation, in line order per rule.
@@ -502,6 +586,8 @@ pub fn lint_source(file: &str, source: &str) -> Vec<Violation> {
     rule_hot_unwrap(file, &view, &src, &mut out);
     rule_unpaired_cast(file, &view, &src, &mut out);
     rule_kernel_entropy(file, &view, &src, &mut out);
+    rule_stray_intrinsic(file, &view, &src, &mut out);
+    rule_missing_scalar_twin(file, &view, &src, &mut out);
     out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
     out
 }
@@ -589,7 +675,8 @@ mod tests {
         let good = bad.replace("0f32", "0f64");
         assert!(lint_source("telemetry/mod.rs", &good).is_empty());
         // blessed fold files may accumulate
-        assert!(lint_source("runtime/gemm.rs", bad).is_empty());
+        assert!(lint_source("runtime/gemm/mod.rs", bad).is_empty());
+        assert!(lint_source("runtime/gemm/kernels.rs", bad).is_empty());
     }
 
     #[test]
@@ -643,10 +730,51 @@ mod tests {
     #[test]
     fn kernel_entropy_fires_only_in_kernel_files() {
         let bad = "fn f() -> u64 { let t = std::time::Instant::now(); 0 }\n";
-        let v = lint_source("runtime/gemm.rs", bad);
+        let v = lint_source("runtime/gemm/kernels.rs", bad);
         assert!(!v.is_empty());
         assert!(v.iter().all(|x| x.rule == "kernel-entropy"));
         assert!(lint_source("coordinator/ddp.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn stray_intrinsic_fires_outside_the_blessed_kernel_file() {
+        let bad = concat!(
+            "fn f(a: &[f32]) -> f32 {\n",
+            "    unsafe { core::arch::x86_64::_mm256_setzero_ps() };\n",
+            "    0.0\n}\n"
+        );
+        let v = lint_source("runtime/infer.rs", bad);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "stray-intrinsic");
+        assert_eq!(v[0].line, 2);
+        // the blessed kernel file may use intrinsics
+        assert!(lint_source("runtime/gemm/kernels.rs", bad)
+            .iter()
+            .all(|x| x.rule != "stray-intrinsic"));
+        // mention in a comment or string never fires
+        let doc = "// _mm256_add_ps is fast\nlet s = \"core::arch\";\n";
+        assert!(lint_source("runtime/block.rs", doc).is_empty());
+    }
+
+    #[test]
+    fn missing_scalar_twin_fires_without_the_twin() {
+        let bad = concat!(
+            "#[target_feature(enable = \"avx2\")]\n",
+            "unsafe fn sum8_avx2(a: &[f32]) -> f32 { 0.0 }\n"
+        );
+        let v = lint_source("runtime/gemm/kernels.rs", bad);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "missing-scalar-twin");
+        assert_eq!(v[0].line, 2);
+        let good = format!("{bad}fn sum8_scalar(a: &[f32]) -> f32 {{ 0.0 }}\n");
+        assert!(lint_source("runtime/gemm/kernels.rs", &good).is_empty());
+        // _fma variants share the _scalar twin of their stem
+        let fma = concat!(
+            "#[target_feature(enable = \"avx2,fma\")]\n",
+            "unsafe fn dot_fma(a: &[f32]) -> f32 { 0.0 }\n",
+            "fn dot_scalar(a: &[f32]) -> f32 { 0.0 }\n"
+        );
+        assert!(lint_source("runtime/gemm/kernels.rs", fma).is_empty());
     }
 
     #[test]
@@ -669,7 +797,9 @@ mod tests {
                 "hashmap-iteration",
                 "hot-path-unwrap",
                 "unpaired-cast",
-                "kernel-entropy"
+                "kernel-entropy",
+                "stray-intrinsic",
+                "missing-scalar-twin"
             ]
         );
         assert!(RULES.iter().all(|r| !r.description.is_empty()));

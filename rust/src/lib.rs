@@ -15,10 +15,13 @@
 //!     attention → attn-out → residual → RMS-norm → ffn-up → act →
 //!     ffn-down → residual per block, full backward, per-op FP8 plan on
 //!     the four hidden linears; activations run as `[batch·seq, d]`
-//!     matrices through the cache-blocked, bit-deterministic GEMM and
-//!     attention kernels of [`runtime::gemm`], with µS/SP numerics
-//!     emulated via [`fp8`] and its bit-twiddling `FastCast`; scaling
-//!     rules consumed from [`scaling`]; no artifacts needed) and the PJRT
+//!     matrices through the cache-blocked, bit-deterministic,
+//!     SIMD-dispatched GEMM and attention kernels of [`runtime::gemm`] —
+//!     runtime AVX2 detection with a bit-identical portable fallback,
+//!     and FP8 quantization fused into the GEMM pack step
+//!     (`gemm::matmul_bt_quant`; see `docs/KERNELS.md`) — with µS/SP
+//!     numerics emulated via [`fp8`] and its bit-twiddling `FastCast`;
+//!     scaling rules consumed from [`scaling`]; no artifacts needed) and the PJRT
 //!     CPU path over AOT HLO-text artifacts (feature `pjrt`, `xla` crate).
 //!     [`runtime::Session`] owns the *device-resident* `2·n_params` train
 //!     state between steps: per-step host traffic is tokens in, loss/gnorm

@@ -59,7 +59,8 @@
 //! which is what keeps the instrument honest.
 
 use super::gemm::{
-    add_matmul_at_b, attn_backward_causal, attn_forward_causal, matmul_bt, transpose,
+    add_matmul_at_b, attn_backward_causal, attn_forward_causal, matmul_bt, matmul_bt_quant,
+    quant_transpose,
 };
 use super::manifest::{Dtype, TensorSpec};
 use crate::config::ModelConfig;
@@ -786,11 +787,39 @@ pub(crate) struct QuantParams {
     pub head_t: Vec<f32>,
 }
 
+/// Quantize + transpose one weight matrix in a single fused pass
+/// (`gemm::quant_transpose` casts each element once, writing the `[rows,
+/// cols]` quantized copy and its transpose from the same register).
+/// Elementwise per mode, so the result is bit-identical to the old
+/// quantize-then-transpose two-pass.
 fn quant_t(w: &[f32], rows: usize, cols: usize, mode: QuantMode) -> (Vec<f32>, Vec<f32>) {
-    let mut q = w.to_vec();
-    quantize_slice(&mut q, mode);
-    let mut t = vec![0f32; q.len()];
-    transpose(&q, rows, cols, &mut t);
+    let mut q = vec![0f32; w.len()];
+    let mut t = vec![0f32; w.len()];
+    match mode {
+        QuantMode::Bf16 => {
+            let fc = BF16.fast_caster();
+            quant_transpose(w, rows, cols, &mut q, &mut t, |x| fc.quantize(x));
+        }
+        QuantMode::StaticFp8(f) => {
+            let fc = f.fast_caster();
+            quant_transpose(w, rows, cols, &mut q, &mut t, |x| fc.quantize(x));
+        }
+        QuantMode::DynamicFp8(f) => {
+            let fc = f.fast_caster();
+            // same amax reduction + scale policy as `quantize_slice`
+            let amax = super::gemm::abs_max(w);
+            match te_dynamic_scale(fc.max_finite(), amax) {
+                DynScale::Skip => quant_transpose(w, rows, cols, &mut q, &mut t, |x| x),
+                DynScale::Raw => quant_transpose(w, rows, cols, &mut q, &mut t, |x| fc.cast(x)),
+                DynScale::Scale(scale) => {
+                    let inv = 1.0 / scale;
+                    quant_transpose(w, rows, cols, &mut q, &mut t, move |x| {
+                        fc.quantize(x * scale) * inv
+                    });
+                }
+            }
+        }
+    }
     (q, t)
 }
 
@@ -1001,8 +1030,18 @@ pub(crate) fn op_rmsnorm(
 }
 
 /// Quantized linear: quantize the input activations in place per the
-/// op's [`QuantMode`], then `out = alpha · xq @ Wᵀ` (`w_t` is the
-/// pre-transposed `[dout, din]` quantized weight).
+/// op's [`QuantMode`] — fused into the GEMM's A-panel pack step
+/// (`gemm::matmul_bt_quant`), so the activations get one read+write
+/// sweep instead of a full-tensor quantize pass followed by the GEMM —
+/// then `out = alpha · xq @ Wᵀ` (`w_t` is the pre-transposed
+/// `[dout, din]` quantized weight). On return `xq` holds the quantized
+/// operand (saved for the weight-gradient GEMM), exactly as the unfused
+/// pipeline left it: every pack closure is elementwise, so fused and
+/// unfused results are bit-identical (tested on the exhaustive fp8
+/// grid). Dynamic TE-style scaling needs the whole-tensor amax before
+/// any element casts, so it keeps a read-only amax pre-pass (the same
+/// `gemm::abs_max` reduction `quantize_slice` uses) and fuses only the
+/// elementwise scale-cast-rescale sweep.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn op_linear(
     xq: &mut [f32],
@@ -1014,8 +1053,35 @@ pub(crate) fn op_linear(
     din: usize,
     alpha: f32,
 ) {
-    quantize_slice(xq, mode);
-    matmul_bt(xq, w_t, out, rows, dout, din, alpha);
+    match mode {
+        QuantMode::Bf16 => {
+            let fc = BF16.fast_caster();
+            matmul_bt_quant(xq, w_t, out, rows, dout, din, alpha, |p| fc.quantize_slice(p));
+        }
+        QuantMode::StaticFp8(f) => {
+            let fc = f.fast_caster();
+            matmul_bt_quant(xq, w_t, out, rows, dout, din, alpha, |p| fc.quantize_slice(p));
+        }
+        QuantMode::DynamicFp8(f) => {
+            let fc = f.fast_caster();
+            let amax = super::gemm::abs_max(xq);
+            match te_dynamic_scale(fc.max_finite(), amax) {
+                // all-zero tensor: TE skips the cast, plain GEMM
+                DynScale::Skip => matmul_bt(xq, w_t, out, rows, dout, din, alpha),
+                DynScale::Raw => {
+                    matmul_bt_quant(xq, w_t, out, rows, dout, din, alpha, |p| fc.cast_slice(p));
+                }
+                DynScale::Scale(scale) => {
+                    let inv = 1.0 / scale;
+                    matmul_bt_quant(xq, w_t, out, rows, dout, din, alpha, move |p| {
+                        for x in p.iter_mut() {
+                            *x = fc.quantize(*x * scale) * inv;
+                        }
+                    });
+                }
+            }
+        }
+    }
 }
 
 /// RoPE rotation of one head vector's rotary pairs at one table row:
@@ -1761,7 +1827,19 @@ pub(crate) fn train_grads(
         }
         observe_rms("d_ffn_down", l, &dz_down);
         observe_cast("d_ffn_down", l, &dz_down, prep.plan.grad);
-        quantize_slice(&mut dz_down, prep.plan.grad);
+        // fused dgrad: quantizes dz in place inside the GEMM pack step;
+        // the wgrad below consumes the packed gradient — same operand,
+        // same order of effects on dz as the old quantize-then-two-GEMMs.
+        op_linear(
+            &mut dz_down,
+            prep.plan.grad,
+            &qp.ffn_down[l],
+            &mut d_a,
+            rows,
+            f,
+            d,
+            prep.alpha_ffn_down,
+        );
         add_matmul_at_b(
             &ws.xq_down[l],
             &dz_down,
@@ -1771,14 +1849,21 @@ pub(crate) fn train_grads(
             d,
             prep.alpha_ffn_down,
         );
-        matmul_bt(&dz_down, &qp.ffn_down[l], &mut d_a, rows, f, d, prep.alpha_ffn_down);
 
         act_backward(&d_a, &ws.z_up[l], prep.act, &mut dz_up);
         observe_rms("d_ffn_up", l, &dz_up);
         observe_cast("d_ffn_up", l, &dz_up, prep.plan.grad);
-        quantize_slice(&mut dz_up, prep.plan.grad);
+        op_linear(
+            &mut dz_up,
+            prep.plan.grad,
+            &qp.ffn_up[l],
+            &mut t_d,
+            rows,
+            d,
+            f,
+            prep.alpha_ffn_up,
+        );
         add_matmul_at_b(&ws.xq_up[l], &dz_up, &mut grads[idx_up(l)], rows, d, f, prep.alpha_ffn_up);
-        matmul_bt(&dz_up, &qp.ffn_up[l], &mut t_d, rows, d, f, prep.alpha_ffn_up);
 
         match prep.placement {
             NormPlacement::Pre => {
@@ -1820,9 +1905,17 @@ pub(crate) fn train_grads(
         }
         observe_rms("d_attn_out", l, &dz_o);
         observe_cast("d_attn_out", l, &dz_o, prep.plan.grad);
-        quantize_slice(&mut dz_o, prep.plan.grad);
+        op_linear(
+            &mut dz_o,
+            prep.plan.grad,
+            &qp.attn_out[l],
+            &mut d_merge,
+            rows,
+            d,
+            d,
+            prep.alpha_attn_out,
+        );
         add_matmul_at_b(&ws.xq_o[l], &dz_o, &mut grads[idx_o(l)], rows, d, d, prep.alpha_attn_out);
-        matmul_bt(&dz_o, &qp.attn_out[l], &mut d_merge, rows, d, d, prep.alpha_attn_out);
 
         split_heads_plain(&d_merge, cfg, s, &mut do_heads);
         attention_all_heads_bwd(
@@ -1838,7 +1931,16 @@ pub(crate) fn train_grads(
         merge_heads_rope_bwd(&dqkv_heads, cfg, s, &prep.rope_cos, &prep.rope_sin, &mut dz_qkv);
         observe_rms("d_qkv", l, &dz_qkv);
         observe_cast("d_qkv", l, &dz_qkv, prep.plan.grad);
-        quantize_slice(&mut dz_qkv, prep.plan.grad);
+        op_linear(
+            &mut dz_qkv,
+            prep.plan.grad,
+            &qp.qkv[l],
+            &mut t_d,
+            rows,
+            d,
+            3 * d,
+            prep.alpha_qkv,
+        );
         add_matmul_at_b(
             &ws.xq_attn[l],
             &dz_qkv,
@@ -1848,7 +1950,6 @@ pub(crate) fn train_grads(
             3 * d,
             prep.alpha_qkv,
         );
-        matmul_bt(&dz_qkv, &qp.qkv[l], &mut t_d, rows, d, 3 * d, prep.alpha_qkv);
 
         match prep.placement {
             NormPlacement::Pre => {

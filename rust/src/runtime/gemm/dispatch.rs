@@ -1,0 +1,141 @@
+//! Runtime kernel dispatch: CPU-feature detection, the opt-in `Fast`
+//! (FMA) mode, and the bench/test hook that forces the portable path.
+//!
+//! The resolved path is a pure function of (detected features, mode,
+//! portable override) — no entropy sources, no time, and the decision is
+//! made **once per kernel entry point call** and copied into the worker
+//! closure, so every thread of one GEMM call runs the same path. The
+//! first kernel invocation of a process emits a single
+//! `kernel dispatch: path=... mode=...` line on stderr (asserted by the
+//! CI `kernels` leg) so logs always record which path produced a run.
+
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+use std::sync::Once;
+
+/// Arithmetic mode of the GEMM microkernels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelMode {
+    /// Default: mul+add (two roundings), bit-identical to the scalar
+    /// reference kernels on every path.
+    Deterministic,
+    /// Opt-in: fused multiply-add (one rounding) where the CPU has FMA.
+    /// Faster, *not* bit-identical — divergence is measured and bounded
+    /// by the kernel tests and documented in `docs/KERNELS.md`.
+    Fast,
+}
+
+/// The instruction path a kernel entry point resolved to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelPath {
+    /// Portable unrolled scalar kernels (also the non-x86_64 path).
+    Portable,
+    /// AVX2 mul+add kernels — bit-identical to [`KernelPath::Portable`].
+    Avx2,
+    /// AVX2+FMA kernels (only in [`KernelMode::Fast`]).
+    Avx2Fma,
+}
+
+impl KernelPath {
+    /// Stable lowercase name, used in logs and BENCH JSON.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelPath::Portable => "portable",
+            KernelPath::Avx2 => "avx2",
+            KernelPath::Avx2Fma => "avx2_fma",
+        }
+    }
+}
+
+/// 0 = Deterministic, 1 = Fast.
+static MODE: AtomicU8 = AtomicU8::new(0);
+/// Bench/test hook: when true, resolve to the portable path even if the
+/// CPU has AVX2 (how CI measures the AVX2-vs-portable speedup in one run).
+static FORCE_PORTABLE: AtomicBool = AtomicBool::new(false);
+static LOG_ONCE: Once = Once::new();
+
+/// Select the kernel arithmetic mode process-wide. The default
+/// ([`KernelMode::Deterministic`]) is part of the repo's bit-determinism
+/// contract; [`KernelMode::Fast`] is an explicit opt-in for throughput
+/// experiments. Takes effect on the next kernel entry-point call.
+pub fn set_kernel_mode(mode: KernelMode) {
+    MODE.store(mode as u8, Ordering::Relaxed);
+}
+
+/// The currently selected kernel arithmetic mode.
+pub fn kernel_mode() -> KernelMode {
+    if MODE.load(Ordering::Relaxed) == 1 {
+        KernelMode::Fast
+    } else {
+        KernelMode::Deterministic
+    }
+}
+
+/// Bench/test hook: force the portable kernels regardless of detected CPU
+/// features (`true`), or restore feature-based dispatch (`false`).
+pub fn force_portable_kernels(force: bool) {
+    FORCE_PORTABLE.store(force, Ordering::Relaxed);
+}
+
+/// CPU feature probe, evaluated once per call (the detection macro itself
+/// caches internally; this stays out of the per-element hot loop because
+/// entry points resolve the path once per GEMM call).
+#[cfg(target_arch = "x86_64")]
+fn features() -> (bool, bool) {
+    (is_x86_feature_detected!("avx2"), is_x86_feature_detected!("fma"))
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn features() -> (bool, bool) {
+    (false, false)
+}
+
+/// Resolve the path the next kernel call will take: portable if forced or
+/// if AVX2 is absent; AVX2+FMA only when `Fast` mode is selected *and*
+/// the CPU has FMA; AVX2 (mul+add, bit-exact) otherwise.
+pub fn kernel_path() -> KernelPath {
+    if FORCE_PORTABLE.load(Ordering::Relaxed) {
+        return KernelPath::Portable;
+    }
+    let (avx2, fma) = features();
+    if !avx2 {
+        return KernelPath::Portable;
+    }
+    if fma && kernel_mode() == KernelMode::Fast {
+        return KernelPath::Avx2Fma;
+    }
+    KernelPath::Avx2
+}
+
+/// Emit the one-time dispatch log line (first kernel call of the
+/// process). Subsequent calls are free.
+pub(super) fn log_once(path: KernelPath) {
+    LOG_ONCE.call_once(|| {
+        let mode = match kernel_mode() {
+            KernelMode::Deterministic => "deterministic",
+            KernelMode::Fast => "fast",
+        };
+        eprintln!("kernel dispatch: path={} mode={}", path.name(), mode);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forced_portable_overrides_detection_and_restores() {
+        force_portable_kernels(true);
+        assert_eq!(kernel_path(), KernelPath::Portable);
+        force_portable_kernels(false);
+        // whatever the CPU is, the resolved path must be a valid variant
+        let p = kernel_path();
+        assert!(matches!(p, KernelPath::Portable | KernelPath::Avx2 | KernelPath::Avx2Fma));
+    }
+
+    #[test]
+    fn path_names_are_stable() {
+        assert_eq!(KernelPath::Portable.name(), "portable");
+        assert_eq!(KernelPath::Avx2.name(), "avx2");
+        assert_eq!(KernelPath::Avx2Fma.name(), "avx2_fma");
+    }
+}

@@ -1,0 +1,403 @@
+//! Inner microkernels: portable scalar twins and their AVX2/FMA variants.
+//!
+//! This is the single file in the tree where `core::arch` intrinsics are
+//! allowed (enforced by the `stray-intrinsic` lint). Every
+//! `#[target_feature]` function here has a portable twin named
+//! `*_scalar` in this file (enforced by the `missing-scalar-twin` lint),
+//! and the default AVX2 variants are **bit-identical** to their twins:
+//!
+//!  - the 8-lane accumulator of [`dot_scalar`] is exactly one 256-bit
+//!    register, so `acc = add(acc, mul(va, vb))` performs the same
+//!    `lanes[l] += a[l] * b[l]` updates in the same order;
+//!  - the fixed fold tree `((l0+l4)+(l1+l5)) + ((l2+l6)+(l3+l7))` maps
+//!    onto `extractf128` / `shuffle` / `movehl` lane sums with matching
+//!    operand order (see [`hsum_scalar`] / `hsum_avx2`);
+//!  - tails (`len % 8`) use the same sequential scalar loop.
+//!
+//! The `*_fma` variants contract `mul`+`add` into a single fused
+//! multiply-add (one rounding instead of two). They are **not**
+//! bit-identical to the twins and only run in the opt-in `Fast` kernel
+//! mode (see `super::dispatch`); their divergence is measured and bounded
+//! by the `fast_fma_mode_divergence_is_small_and_bounded` test.
+
+/// Column-block width shared by the panel kernels: keeps the active rows
+/// of `B` resident in L1/L2 while a row panel streams past.
+pub(super) const COL_BLOCK: usize = 64;
+
+/// Row-register blocking of the panel kernels: rows of `A` processed per
+/// pass over a column of `B`, so each loaded `B` vector is reused
+/// `MR` times from registers.
+pub(super) const MR: usize = 4;
+
+/// Fixed fold tree over the eight dot-product lanes:
+/// `((l0+l4)+(l1+l5)) + ((l2+l6)+(l3+l7))`. One 256-bit register wide —
+/// the AVX2 horizontal sum reproduces this order exactly.
+#[inline]
+pub(super) fn hsum_scalar(l: [f32; 8]) -> f32 {
+    ((l[0] + l[4]) + (l[1] + l[5])) + ((l[2] + l[6]) + (l[3] + l[7]))
+}
+
+/// Fixed-order dot product: eight accumulator lanes over stride-8 blocks,
+/// folded by [`hsum_scalar`], then the scalar tail. The lane partition is
+/// a function of `a.len()` only.
+#[inline]
+pub(super) fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut lanes = [0f32; 8];
+    let n8 = a.len() / 8 * 8;
+    let (a8, a_tail) = a.split_at(n8);
+    let (b8, b_tail) = b.split_at(n8);
+    for (ab, bb) in a8.chunks_exact(8).zip(b8.chunks_exact(8)) {
+        for l in 0..8 {
+            lanes[l] += ab[l] * bb[l];
+        }
+    }
+    let mut tail = 0f32;
+    for (x, y) in a_tail.iter().zip(b_tail) {
+        tail += x * y;
+    }
+    hsum_scalar(lanes) + tail
+}
+
+/// Four simultaneous [`dot_scalar`] products against one shared `b` row —
+/// the portable register tile. Each output is the plain dot of its row,
+/// so blocking changes nothing bitwise.
+#[inline]
+pub(super) fn dot4_scalar(a0: &[f32], a1: &[f32], a2: &[f32], a3: &[f32], b: &[f32]) -> [f32; 4] {
+    [dot_scalar(a0, b), dot_scalar(a1, b), dot_scalar(a2, b), dot_scalar(a3, b)]
+}
+
+/// `c[j] += s * b[j]` over the row — the rank-1 update inner loop of the
+/// weight-gradient GEMM. Elementwise, so any vectorization of it is
+/// bit-identical.
+#[inline]
+pub(super) fn axpy_scalar(c_row: &mut [f32], b_row: &[f32], s: f32) {
+    for (cv, bv) in c_row.iter_mut().zip(b_row) {
+        *cv += s * bv;
+    }
+}
+
+/// Portable row-panel kernel for `C = s · A @ Bᵀ`: `a_panel` is
+/// `[rows, k]`, `c_chunk` is `[rows, n]`, `b` is `[n, k]`. Column-blocked
+/// and 4-row register-tiled; every element is still `s * dot(a_i, b_j)`
+/// in the fixed lane order, so the tiling is bit-neutral.
+pub(super) fn panel_bt_scalar(
+    a_panel: &[f32],
+    b: &[f32],
+    c_chunk: &mut [f32],
+    n: usize,
+    k: usize,
+    scale: f32,
+) {
+    let rows = c_chunk.len() / n;
+    for j0 in (0..n).step_by(COL_BLOCK) {
+        let j1 = (j0 + COL_BLOCK).min(n);
+        let mut i = 0usize;
+        while i + MR <= rows {
+            for j in j0..j1 {
+                let br = &b[j * k..(j + 1) * k];
+                let d = dot4_scalar(
+                    &a_panel[i * k..(i + 1) * k],
+                    &a_panel[(i + 1) * k..(i + 2) * k],
+                    &a_panel[(i + 2) * k..(i + 3) * k],
+                    &a_panel[(i + 3) * k..(i + 4) * k],
+                    br,
+                );
+                for (r, dv) in d.iter().enumerate() {
+                    c_chunk[(i + r) * n + j] = scale * dv;
+                }
+            }
+            i += MR;
+        }
+        for ii in i..rows {
+            let a_row = &a_panel[ii * k..(ii + 1) * k];
+            for j in j0..j1 {
+                c_chunk[ii * n + j] = scale * dot_scalar(a_row, &b[j * k..(j + 1) * k]);
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+pub(super) mod x86 {
+    //! AVX2 / FMA variants. All functions here require the caller to have
+    //! verified the matching CPU features (see `super::super::dispatch`).
+    use super::{COL_BLOCK, MR};
+    use core::arch::x86_64::*;
+
+    /// Horizontal sum of one 256-bit accumulator in the exact order of
+    /// [`hsum_scalar`]: `extractf128` splits the lanes into `(l0..l3)` and
+    /// `(l4..l7)`, the `add` forms `l_i + l_{i+4}`, the `0b1011_0001`
+    /// shuffle pairs neighbors for `(l0+l4)+(l1+l5)` and
+    /// `(l2+l6)+(l3+l7)`, and `movehl`+`add_ss` performs the final outer
+    /// add — the same tree, same operand order, bit for bit.
+    ///
+    /// # Safety
+    /// Requires AVX2 at runtime.
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum_avx2(acc: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(acc);
+        let hi = _mm256_extractf128_ps(acc, 1);
+        let s = _mm_add_ps(lo, hi);
+        let t = _mm_shuffle_ps(s, s, 0b1011_0001);
+        let u = _mm_add_ps(s, t);
+        let v = _mm_movehl_ps(u, u);
+        _mm_cvtss_f32(_mm_add_ss(u, v))
+    }
+
+    /// AVX2 twin of [`dot_scalar`], bit-identical by construction:
+    /// mul+add (two roundings, no contraction), one-register lane
+    /// accumulator, [`hsum_avx2`] fold, sequential scalar tail.
+    ///
+    /// # Safety
+    /// Requires AVX2 at runtime. `a.len() == b.len()`.
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n8 = a.len() / 8 * 8;
+        let mut acc = _mm256_setzero_ps();
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut i = 0usize;
+        while i < n8 {
+            let va = _mm256_loadu_ps(pa.add(i));
+            let vb = _mm256_loadu_ps(pb.add(i));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+            i += 8;
+        }
+        let mut tail = 0f32;
+        for j in n8..a.len() {
+            tail += a[j] * b[j];
+        }
+        hsum_avx2(acc) + tail
+    }
+
+    /// FMA variant of [`dot_scalar`]: contracts mul+add into `fmadd` (one
+    /// rounding per lane update). Faster, **not** bit-identical — only
+    /// reachable in the opt-in `Fast` kernel mode.
+    ///
+    /// # Safety
+    /// Requires AVX2 and FMA at runtime. `a.len() == b.len()`.
+    #[target_feature(enable = "avx2,fma")]
+    pub(crate) unsafe fn dot_fma(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n8 = a.len() / 8 * 8;
+        let mut acc = _mm256_setzero_ps();
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut i = 0usize;
+        while i < n8 {
+            let va = _mm256_loadu_ps(pa.add(i));
+            let vb = _mm256_loadu_ps(pb.add(i));
+            acc = _mm256_fmadd_ps(va, vb, acc);
+            i += 8;
+        }
+        let mut tail = 0f32;
+        for j in n8..a.len() {
+            tail = a[j].mul_add(b[j], tail);
+        }
+        hsum_avx2(acc) + tail
+    }
+
+    /// AVX2 twin of [`dot4_scalar`]: four row accumulators share each
+    /// loaded `B` vector (the 4-row × 8-wide register tile). Per-row
+    /// arithmetic is exactly [`dot_avx2`], so the tile is bit-neutral.
+    ///
+    /// # Safety
+    /// Requires AVX2 at runtime. All `a*` rows and `b` have equal length.
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot4_avx2(a0: &[f32], a1: &[f32], a2: &[f32], a3: &[f32], b: &[f32]) -> [f32; 4] {
+        let len = b.len();
+        let n8 = len / 8 * 8;
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut acc2 = _mm256_setzero_ps();
+        let mut acc3 = _mm256_setzero_ps();
+        let (p0, p1, p2, p3, pb) = (a0.as_ptr(), a1.as_ptr(), a2.as_ptr(), a3.as_ptr(), b.as_ptr());
+        let mut i = 0usize;
+        while i < n8 {
+            let vb = _mm256_loadu_ps(pb.add(i));
+            acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(_mm256_loadu_ps(p0.add(i)), vb));
+            acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(_mm256_loadu_ps(p1.add(i)), vb));
+            acc2 = _mm256_add_ps(acc2, _mm256_mul_ps(_mm256_loadu_ps(p2.add(i)), vb));
+            acc3 = _mm256_add_ps(acc3, _mm256_mul_ps(_mm256_loadu_ps(p3.add(i)), vb));
+            i += 8;
+        }
+        let mut out = [hsum_avx2(acc0), hsum_avx2(acc1), hsum_avx2(acc2), hsum_avx2(acc3)];
+        for j in n8..len {
+            out[0] += a0[j] * b[j];
+            out[1] += a1[j] * b[j];
+            out[2] += a2[j] * b[j];
+            out[3] += a3[j] * b[j];
+        }
+        out
+    }
+
+    /// FMA variant of [`dot4_scalar`] (Fast mode only).
+    ///
+    /// # Safety
+    /// Requires AVX2 and FMA at runtime. All rows and `b` equal length.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn dot4_fma(a0: &[f32], a1: &[f32], a2: &[f32], a3: &[f32], b: &[f32]) -> [f32; 4] {
+        let len = b.len();
+        let n8 = len / 8 * 8;
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut acc2 = _mm256_setzero_ps();
+        let mut acc3 = _mm256_setzero_ps();
+        let (p0, p1, p2, p3, pb) = (a0.as_ptr(), a1.as_ptr(), a2.as_ptr(), a3.as_ptr(), b.as_ptr());
+        let mut i = 0usize;
+        while i < n8 {
+            let vb = _mm256_loadu_ps(pb.add(i));
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(p0.add(i)), vb, acc0);
+            acc1 = _mm256_fmadd_ps(_mm256_loadu_ps(p1.add(i)), vb, acc1);
+            acc2 = _mm256_fmadd_ps(_mm256_loadu_ps(p2.add(i)), vb, acc2);
+            acc3 = _mm256_fmadd_ps(_mm256_loadu_ps(p3.add(i)), vb, acc3);
+            i += 8;
+        }
+        let mut out = [hsum_avx2(acc0), hsum_avx2(acc1), hsum_avx2(acc2), hsum_avx2(acc3)];
+        for j in n8..len {
+            out[0] = a0[j].mul_add(b[j], out[0]);
+            out[1] = a1[j].mul_add(b[j], out[1]);
+            out[2] = a2[j].mul_add(b[j], out[2]);
+            out[3] = a3[j].mul_add(b[j], out[3]);
+        }
+        out
+    }
+
+    /// AVX2 twin of [`axpy_scalar`]: `c[j] += s * b[j]`, elementwise and
+    /// in ascending `j`, so identical bits per element.
+    ///
+    /// # Safety
+    /// Requires AVX2 at runtime. `c_row.len() == b_row.len()`.
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn axpy_avx2(c_row: &mut [f32], b_row: &[f32], s: f32) {
+        debug_assert_eq!(c_row.len(), b_row.len());
+        let len = c_row.len();
+        let n8 = len / 8 * 8;
+        let vs = _mm256_set1_ps(s);
+        let pc = c_row.as_mut_ptr();
+        let pb = b_row.as_ptr();
+        let mut j = 0usize;
+        while j < n8 {
+            let vc = _mm256_loadu_ps(pc.add(j));
+            let vb = _mm256_loadu_ps(pb.add(j));
+            _mm256_storeu_ps(pc.add(j), _mm256_add_ps(vc, _mm256_mul_ps(vs, vb)));
+            j += 8;
+        }
+        for jj in n8..len {
+            c_row[jj] += s * b_row[jj];
+        }
+    }
+
+    /// FMA variant of [`axpy_scalar`] (Fast mode only).
+    ///
+    /// # Safety
+    /// Requires AVX2 and FMA at runtime. `c_row.len() == b_row.len()`.
+    #[target_feature(enable = "avx2,fma")]
+    pub(crate) unsafe fn axpy_fma(c_row: &mut [f32], b_row: &[f32], s: f32) {
+        debug_assert_eq!(c_row.len(), b_row.len());
+        let len = c_row.len();
+        let n8 = len / 8 * 8;
+        let vs = _mm256_set1_ps(s);
+        let pc = c_row.as_mut_ptr();
+        let pb = b_row.as_ptr();
+        let mut j = 0usize;
+        while j < n8 {
+            let vc = _mm256_loadu_ps(pc.add(j));
+            let vb = _mm256_loadu_ps(pb.add(j));
+            _mm256_storeu_ps(pc.add(j), _mm256_fmadd_ps(vs, vb, vc));
+            j += 8;
+        }
+        for jj in n8..len {
+            c_row[jj] = s.mul_add(b_row[jj], c_row[jj]);
+        }
+    }
+
+    /// AVX2 twin of [`panel_bt_scalar`]: same column blocks, same 4-row
+    /// register tile, per-element arithmetic delegated to
+    /// [`dot4_avx2`] / [`dot_avx2`] — bit-identical to the portable panel.
+    ///
+    /// # Safety
+    /// Requires AVX2 at runtime. Shapes as in [`panel_bt_scalar`].
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn panel_bt_avx2(
+        a_panel: &[f32],
+        b: &[f32],
+        c_chunk: &mut [f32],
+        n: usize,
+        k: usize,
+        scale: f32,
+    ) {
+        let rows = c_chunk.len() / n;
+        for j0 in (0..n).step_by(COL_BLOCK) {
+            let j1 = (j0 + COL_BLOCK).min(n);
+            let mut i = 0usize;
+            while i + MR <= rows {
+                for j in j0..j1 {
+                    let br = &b[j * k..(j + 1) * k];
+                    let d = dot4_avx2(
+                        &a_panel[i * k..(i + 1) * k],
+                        &a_panel[(i + 1) * k..(i + 2) * k],
+                        &a_panel[(i + 2) * k..(i + 3) * k],
+                        &a_panel[(i + 3) * k..(i + 4) * k],
+                        br,
+                    );
+                    for (r, dv) in d.iter().enumerate() {
+                        c_chunk[(i + r) * n + j] = scale * dv;
+                    }
+                }
+                i += MR;
+            }
+            for ii in i..rows {
+                let a_row = &a_panel[ii * k..(ii + 1) * k];
+                for j in j0..j1 {
+                    c_chunk[ii * n + j] = scale * dot_avx2(a_row, &b[j * k..(j + 1) * k]);
+                }
+            }
+        }
+    }
+
+    /// FMA variant of [`panel_bt_scalar`] (Fast mode only).
+    ///
+    /// # Safety
+    /// Requires AVX2 and FMA at runtime. Shapes as in
+    /// [`panel_bt_scalar`].
+    #[target_feature(enable = "avx2,fma")]
+    pub(crate) unsafe fn panel_bt_fma(
+        a_panel: &[f32],
+        b: &[f32],
+        c_chunk: &mut [f32],
+        n: usize,
+        k: usize,
+        scale: f32,
+    ) {
+        let rows = c_chunk.len() / n;
+        for j0 in (0..n).step_by(COL_BLOCK) {
+            let j1 = (j0 + COL_BLOCK).min(n);
+            let mut i = 0usize;
+            while i + MR <= rows {
+                for j in j0..j1 {
+                    let br = &b[j * k..(j + 1) * k];
+                    let d = dot4_fma(
+                        &a_panel[i * k..(i + 1) * k],
+                        &a_panel[(i + 1) * k..(i + 2) * k],
+                        &a_panel[(i + 2) * k..(i + 3) * k],
+                        &a_panel[(i + 3) * k..(i + 4) * k],
+                        br,
+                    );
+                    for (r, dv) in d.iter().enumerate() {
+                        c_chunk[(i + r) * n + j] = scale * dv;
+                    }
+                }
+                i += MR;
+            }
+            for ii in i..rows {
+                let a_row = &a_panel[ii * k..(ii + 1) * k];
+                for j in j0..j1 {
+                    c_chunk[ii * n + j] = scale * dot_fma(a_row, &b[j * k..(j + 1) * k]);
+                }
+            }
+        }
+    }
+}

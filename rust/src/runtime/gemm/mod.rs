@@ -1,5 +1,6 @@
 //! Cache-blocked, bit-deterministic f32 GEMM + attention kernels for the
-//! reference interpreter's batched hot path.
+//! reference interpreter's batched hot path — SIMD-dispatched, with FP8
+//! quantization fusable into the operand pack step.
 //!
 //! Two GEMM shapes cover every dense product the interpreter needs:
 //!
@@ -9,6 +10,29 @@
 //!    products all fit this after a one-time weight transpose);
 //!  - [`add_matmul_at_b`]: `C += s · Aᵀ @ B`, accumulated as rank-1
 //!    updates in ascending row order (the weight-gradient products).
+//!
+//! The layer is split into three files:
+//!
+//!  - `kernels.rs` — the inner microkernels: portable unrolled scalar
+//!    twins (`*_scalar`) and their AVX2 / FMA variants, 4-row × 8-wide
+//!    register tiles, the only file where `core::arch` intrinsics are
+//!    allowed (lint-enforced);
+//!  - `dispatch.rs` — runtime CPU-feature detection, the default
+//!    [`KernelMode::Deterministic`] vs opt-in [`KernelMode::Fast`] (FMA)
+//!    mode, and the one-time `kernel dispatch: path=...` stderr line;
+//!  - this module — shape checks, parallel chunking, and the fused
+//!    cast-into-GEMM entry points [`matmul_bt_quant`] /
+//!    [`quant_transpose`] that run the caller's FP8 rounding closure over
+//!    each operand panel exactly once, inside the pack step, instead of
+//!    materializing a quantized tensor in a separate pass.
+//!
+//! Packing, in this layer, is layout-light: `B` is stored transposed
+//! (row `j` holds logical column `j`), which *is* the packed layout — row
+//! `j` streams contiguously through the register tile with unit stride,
+//! so the per-call B "pack" is the identity and costs nothing. `A` is
+//! consumed in row panels of [`ROW_CHUNK_BT`] rows; the fused entry
+//! points apply the quantization closure to each panel right before the
+//! panel's GEMM, while it is hot in cache.
 //!
 //! [`attn_forward_causal`] / [`attn_backward_causal`] are the per-head
 //! causal softmax-attention kernels of the op-level transformer block
@@ -27,40 +51,97 @@
 //! is fixed by the kernel (eight stride-8 lanes folded in a fixed tree,
 //! then the tail), and chunk boundaries never depend on the thread count —
 //! so results are bit-identical across any number of worker threads. The
-//! fixed-lane layout is also what lets the compiler vectorize the inner
-//! loops without reassociating floating-point math.
+//! eight-lane fold tree is exactly one 256-bit register, so the AVX2 path
+//! reproduces the scalar reduction order bit for bit (mul+add, no FP
+//! contraction) — SIMD changes the speed, never the bits, on the default
+//! path. See `docs/KERNELS.md` for the full equivalence argument.
+
+mod dispatch;
+mod kernels;
+
+pub use dispatch::{
+    force_portable_kernels, kernel_mode, kernel_path, set_kernel_mode, KernelMode, KernelPath,
+};
 
 use crate::util::parallel;
 
-/// Fixed-order dot product: eight accumulator lanes over stride-8 blocks,
-/// folded as `((l0+l4)+(l1+l5)) + ((l2+l6)+(l3+l7))`, then the scalar
-/// tail. The lane partition is a function of `a.len()` only.
+/// Rows of `A`/`C` per parallel chunk of [`matmul_bt`] and the fused
+/// [`matmul_bt_quant`] (which packs `A` in panels of this many rows).
+const ROW_CHUNK_BT: usize = 16;
+/// Rows of `C` per parallel chunk of [`add_matmul_at_b`].
+const ROW_CHUNK_ATB: usize = 8;
+
+/// Fixed-order dot product on the resolved kernel path. All paths share
+/// the lane partition and fold tree of the scalar kernel; only the
+/// `Fast` (FMA) path may differ bitwise.
 #[inline]
 fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut lanes = [0f32; 8];
-    let n8 = a.len() / 8 * 8;
-    let (a8, a_tail) = a.split_at(n8);
-    let (b8, b_tail) = b.split_at(n8);
-    for (ab, bb) in a8.chunks_exact(8).zip(b8.chunks_exact(8)) {
-        for l in 0..8 {
-            lanes[l] += ab[l] * bb[l];
+    #[cfg(target_arch = "x86_64")]
+    {
+        match dispatch::kernel_path() {
+            // SAFETY: kernel_path() returns these only when the CPU
+            // reports the matching features at runtime.
+            KernelPath::Avx2 => return unsafe { kernels::x86::dot_avx2(a, b) },
+            KernelPath::Avx2Fma => return unsafe { kernels::x86::dot_fma(a, b) },
+            KernelPath::Portable => {}
         }
     }
-    let mut tail = 0f32;
-    for (x, y) in a_tail.iter().zip(b_tail) {
-        tail += x * y;
+    kernels::dot_scalar(a, b)
+}
+
+/// Run the `C = s · A @ Bᵀ` row-panel kernel for one chunk on `path`.
+#[cfg_attr(not(target_arch = "x86_64"), allow(unused_variables))]
+#[inline]
+fn run_panel_bt(
+    path: KernelPath,
+    a_panel: &[f32],
+    b: &[f32],
+    c_chunk: &mut [f32],
+    n: usize,
+    k: usize,
+    scale: f32,
+) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        match path {
+            // SAFETY: `path` came from kernel_path(), which verified the
+            // CPU features at runtime.
+            KernelPath::Avx2 => {
+                return unsafe { kernels::x86::panel_bt_avx2(a_panel, b, c_chunk, n, k, scale) };
+            }
+            KernelPath::Avx2Fma => {
+                return unsafe { kernels::x86::panel_bt_fma(a_panel, b, c_chunk, n, k, scale) };
+            }
+            KernelPath::Portable => {}
+        }
     }
-    ((lanes[0] + lanes[4]) + (lanes[1] + lanes[5]))
-        + ((lanes[2] + lanes[6]) + (lanes[3] + lanes[7]))
-        + tail
+    kernels::panel_bt_scalar(a_panel, b, c_chunk, n, k, scale)
+}
+
+/// `c_row[j] += s * b_row[j]` on `path` — elementwise, so every path is
+/// bit-identical except opt-in FMA.
+#[cfg_attr(not(target_arch = "x86_64"), allow(unused_variables))]
+#[inline]
+fn run_axpy(path: KernelPath, c_row: &mut [f32], b_row: &[f32], s: f32) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        match path {
+            // SAFETY: `path` came from kernel_path(), which verified the
+            // CPU features at runtime.
+            KernelPath::Avx2 => return unsafe { kernels::x86::axpy_avx2(c_row, b_row, s) },
+            KernelPath::Avx2Fma => return unsafe { kernels::x86::axpy_fma(c_row, b_row, s) },
+            KernelPath::Portable => {}
+        }
+    }
+    kernels::axpy_scalar(c_row, b_row, s)
 }
 
 /// `C[i,j] = scale * Σ_k A[i,k] · B[j,k]` — i.e. `C = scale · A @ Bᵀ`
 /// with `B` stored transposed (row `j` of `b` holds logical column `j`).
 /// `a` is `[m,k]`, `b` is `[n,k]`, `c` is `[m,n]`, all row-major.
 /// Overwrites `c`. Parallel over row chunks of `c`; column blocks keep the
-/// active `b` rows hot in cache.
+/// active `b` rows hot in cache. The kernel path (AVX2 / portable) is
+/// resolved once per call and shared by every worker thread.
 pub fn matmul_bt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, k: usize, scale: f32) {
     assert_eq!(a.len(), m * k, "matmul_bt: A is not [m,k]");
     assert_eq!(b.len(), n * k, "matmul_bt: B is not [n,k]");
@@ -68,22 +149,68 @@ pub fn matmul_bt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, k: usi
     if m == 0 || n == 0 {
         return;
     }
-    const ROW_CHUNK: usize = 16;
-    const COL_BLOCK: usize = 64;
+    let path = dispatch::kernel_path();
+    dispatch::log_once(path);
     let threads = parallel::threads_for(2 * (m as u64) * (n as u64) * (k as u64));
-    parallel::par_chunks_mut(c, ROW_CHUNK * n, threads, |ci, c_chunk| {
-        let i0 = ci * ROW_CHUNK;
+    parallel::par_chunks_mut(c, ROW_CHUNK_BT * n, threads, |ci, c_chunk| {
+        let i0 = ci * ROW_CHUNK_BT;
         let rows = c_chunk.len() / n;
-        for j0 in (0..n).step_by(COL_BLOCK) {
-            let j1 = (j0 + COL_BLOCK).min(n);
-            for i in 0..rows {
-                let a_row = &a[(i0 + i) * k..(i0 + i + 1) * k];
-                let c_row = &mut c_chunk[i * n..(i + 1) * n];
-                for j in j0..j1 {
-                    c_row[j] = scale * dot(a_row, &b[j * k..(j + 1) * k]);
-                }
-            }
+        run_panel_bt(path, &a[i0 * k..(i0 + rows) * k], b, c_chunk, n, k, scale);
+    });
+}
+
+/// Fused cast-into-GEMM: quantize `a` in place, panel by panel, then
+/// `C = scale · A @ Bᵀ` — one pass over the activations instead of a
+/// separate full-tensor quantize sweep followed by the GEMM.
+///
+/// `pack` is applied to each [`ROW_CHUNK_BT`]-row panel of `a` exactly
+/// once, immediately before that panel's GEMM, while the panel is hot in
+/// cache. It must be **elementwise** (each output element a function of
+/// the input element alone — the `fp8::FastCast` rounding closures are),
+/// which makes the fused result bit-identical to quantize-then-GEMM
+/// regardless of panel boundaries. On return, `a` holds the fully packed
+/// (quantized) operand — callers save it for the backward pass.
+///
+/// Degenerate shapes keep both postconditions: `n == 0` still packs all
+/// of `a` (the saved operand feeds the weight-gradient GEMM even when
+/// there is no output to compute), and `k == 0` fills `c` exactly like
+/// [`matmul_bt`].
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_bt_quant<P>(
+    a: &mut [f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    scale: f32,
+    pack: P,
+) where
+    P: Fn(&mut [f32]) + Sync,
+{
+    assert_eq!(a.len(), m * k, "matmul_bt_quant: A is not [m,k]");
+    assert_eq!(b.len(), n * k, "matmul_bt_quant: B is not [n,k]");
+    assert_eq!(c.len(), m * n, "matmul_bt_quant: C is not [m,n]");
+    if m == 0 || n == 0 || k == 0 {
+        // Nothing to fuse: pack whatever `a` holds (the packed operand is
+        // a postcondition even without output rows), then defer to the
+        // plain GEMM for the `k == 0` fill semantics.
+        if !a.is_empty() {
+            let threads = parallel::threads_for(a.len() as u64 * 8);
+            parallel::par_chunks_mut(a, ROW_CHUNK_BT * k.max(1), threads, |_, panel| pack(panel));
         }
+        matmul_bt(a, b, c, m, n, k, scale);
+        return;
+    }
+    let path = dispatch::kernel_path();
+    dispatch::log_once(path);
+    let threads = parallel::threads_for(2 * (m as u64) * (n as u64) * (k as u64));
+    // C chunk i covers the same rows as A panel i, so pack-then-multiply
+    // stays a single pass per panel; chunk counts agree by construction
+    // (both are ceil(m / ROW_CHUNK_BT)).
+    parallel::par_join2(c, a, ROW_CHUNK_BT * n, ROW_CHUNK_BT * k, threads, |_, c_chunk, a_panel| {
+        pack(a_panel);
+        run_panel_bt(path, a_panel, b, c_chunk, n, k, scale);
     });
 }
 
@@ -93,7 +220,8 @@ pub fn matmul_bt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, k: usi
 /// output element's addition sequence is fixed regardless of threading).
 /// Rows of `a` whose entry is exactly 0 are skipped — the added term would
 /// be `0 * B[r,j]`, and the interpreter's quantized gradients are often
-/// sparse enough for this to matter.
+/// sparse enough for this to matter. The row update is elementwise, so
+/// the SIMD path is bit-identical per element.
 pub fn add_matmul_at_b(
     a: &[f32],
     b: &[f32],
@@ -109,10 +237,11 @@ pub fn add_matmul_at_b(
     if p == 0 || n == 0 || r == 0 {
         return;
     }
-    const ROW_CHUNK: usize = 8;
+    let path = dispatch::kernel_path();
+    dispatch::log_once(path);
     let threads = parallel::threads_for(2 * (r as u64) * (p as u64) * (n as u64));
-    parallel::par_chunks_mut(c, ROW_CHUNK * n, threads, |ci, c_chunk| {
-        let i0 = ci * ROW_CHUNK;
+    parallel::par_chunks_mut(c, ROW_CHUNK_ATB * n, threads, |ci, c_chunk| {
+        let i0 = ci * ROW_CHUNK_ATB;
         let rows = c_chunk.len() / n;
         for rr in 0..r {
             let a_row = &a[rr * p..(rr + 1) * p];
@@ -122,10 +251,7 @@ pub fn add_matmul_at_b(
                 if s == 0.0 {
                     continue;
                 }
-                let c_row = &mut c_chunk[i * n..(i + 1) * n];
-                for (cv, bv) in c_row.iter_mut().zip(b_row) {
-                    *cv += s * bv;
-                }
+                run_axpy(path, &mut c_chunk[i * n..(i + 1) * n], b_row, s);
             }
         }
     });
@@ -436,6 +562,42 @@ pub fn transpose(src: &[f32], rows: usize, cols: usize, dst: &mut [f32]) {
     }
 }
 
+/// Fused cast-and-transpose for the weight path: one blocked pass over
+/// `src` (`[rows, cols]` row-major) applies the elementwise `map`
+/// (typically an `fp8::FastCast` rounding) and writes both the quantized
+/// matrix `q` (`[rows, cols]`) and its transpose `t` (`[cols, rows]`) —
+/// replacing the quantize sweep + separate [`transpose`] pass the weight
+/// prep used to make. Because `map` is elementwise, the result is
+/// bit-identical to quantize-then-transpose.
+pub fn quant_transpose<Q>(
+    src: &[f32],
+    rows: usize,
+    cols: usize,
+    q: &mut [f32],
+    t: &mut [f32],
+    map: Q,
+) where
+    Q: Fn(f32) -> f32,
+{
+    assert_eq!(src.len(), rows * cols, "quant_transpose: src is not [rows,cols]");
+    assert_eq!(q.len(), rows * cols, "quant_transpose: q is not [rows,cols]");
+    assert_eq!(t.len(), rows * cols, "quant_transpose: t is not [cols,rows]");
+    const TB: usize = 32;
+    for r0 in (0..rows).step_by(TB) {
+        let r1 = (r0 + TB).min(rows);
+        for c0 in (0..cols).step_by(TB) {
+            let c1 = (c0 + TB).min(cols);
+            for rr in r0..r1 {
+                for cc in c0..c1 {
+                    let v = map(src[rr * cols + cc]);
+                    q[rr * cols + cc] = v;
+                    t[cc * rows + rr] = v;
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -454,6 +616,60 @@ mod tests {
             }
         }
         c
+    }
+
+    /// The pre-SIMD scalar kernel, verbatim: eight stride-8 lanes, the
+    /// fixed fold tree, then the sequential tail. The reference every
+    /// dispatch path must reproduce bit for bit.
+    fn legacy_dot(a: &[f32], b: &[f32]) -> f32 {
+        let mut lanes = [0f32; 8];
+        let n8 = a.len() / 8 * 8;
+        let (a8, a_tail) = a.split_at(n8);
+        let (b8, b_tail) = b.split_at(n8);
+        for (ab, bb) in a8.chunks_exact(8).zip(b8.chunks_exact(8)) {
+            for l in 0..8 {
+                lanes[l] += ab[l] * bb[l];
+            }
+        }
+        let mut tail = 0f32;
+        for (x, y) in a_tail.iter().zip(b_tail) {
+            tail += x * y;
+        }
+        ((lanes[0] + lanes[4]) + (lanes[1] + lanes[5]))
+            + ((lanes[2] + lanes[6]) + (lanes[3] + lanes[7]))
+            + tail
+    }
+
+    fn legacy_matmul_bt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, s: f32) -> Vec<f32> {
+        let mut c = vec![0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                c[i * n + j] = s * legacy_dot(&a[i * k..(i + 1) * k], &b[j * k..(j + 1) * k]);
+            }
+        }
+        c
+    }
+
+    fn legacy_add_matmul_at_b(
+        a: &[f32],
+        b: &[f32],
+        c: &mut [f32],
+        r: usize,
+        p: usize,
+        n: usize,
+        s: f32,
+    ) {
+        for rr in 0..r {
+            for i in 0..p {
+                let sv = s * a[rr * p + i];
+                if sv == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    c[i * n + j] += sv * b[rr * n + j];
+                }
+            }
+        }
     }
 
     #[test]
@@ -517,6 +733,195 @@ mod tests {
         }
     }
 
+    /// Randomized-shape sweep (tails with `k % 8 != 0`, rows/cols off the
+    /// register tile, empty dims): the portable path, the auto-dispatched
+    /// path (AVX2 where the CPU has it), and the verbatim legacy scalar
+    /// kernel must agree bit for bit, for both GEMM shapes.
+    #[test]
+    fn simd_and_portable_paths_bit_identical_on_randomized_shapes() {
+        let mut rng = Rng::new(77);
+        let mut shapes: Vec<(usize, usize, usize)> = vec![
+            (1, 1, 1),
+            (3, 5, 7),
+            (4, 8, 8),
+            (5, 9, 16),
+            (16, 64, 32),
+            (17, 65, 33),
+            (31, 2, 9),
+            (2, 1, 250),
+            (7, 3, 0),
+            (0, 5, 5),
+            (5, 0, 5),
+        ];
+        for round in 0..24 {
+            let m = 1 + (rng.next_u64() % 33) as usize;
+            let n = 1 + (rng.next_u64() % 67) as usize;
+            let k = (rng.next_u64() % 100) as usize + usize::from(round % 3 == 0);
+            shapes.push((m, n, k));
+        }
+        for &(m, n, k) in &shapes {
+            let mut a = vec![0f32; m * k];
+            let mut b = vec![0f32; n * k];
+            rng.fill_normal(&mut a, 1.0);
+            rng.fill_normal(&mut b, 1.0);
+            let want = legacy_matmul_bt(&a, &b, m, n, k, 0.75);
+            let mut c_port = vec![0f32; m * n];
+            force_portable_kernels(true);
+            matmul_bt(&a, &b, &mut c_port, m, n, k, 0.75);
+            force_portable_kernels(false);
+            let mut c_auto = vec![0f32; m * n];
+            matmul_bt(&a, &b, &mut c_auto, m, n, k, 0.75);
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&c_port), bits(&want), "portable != legacy at {m}x{n}x{k}");
+            assert_eq!(bits(&c_auto), bits(&want), "auto path != legacy at {m}x{n}x{k}");
+
+            // Aᵀ @ B accumulation: A is [r=m, p=k], the right operand must
+            // be [r=m, n] — fresh buffer, C accumulates into [k, n].
+            let mut b2 = vec![0f32; m * n];
+            rng.fill_normal(&mut b2, 1.0);
+            let mut c1 = vec![0.5f32; k * n];
+            let mut c2 = c1.clone();
+            let mut c3 = c1.clone();
+            legacy_add_matmul_at_b(&a, &b2, &mut c1, m, k, n, 0.3);
+            force_portable_kernels(true);
+            add_matmul_at_b(&a, &b2, &mut c2, m, k, n, 0.3);
+            force_portable_kernels(false);
+            add_matmul_at_b(&a, &b2, &mut c3, m, k, n, 0.3);
+            assert_eq!(bits(&c1), bits(&c2), "atb portable != legacy at {m}x{n}x{k}");
+            assert_eq!(bits(&c1), bits(&c3), "atb auto != legacy at {m}x{n}x{k}");
+        }
+    }
+
+    /// Fused pack+GEMM vs quantize-then-GEMM on the exhaustive FP8 grid:
+    /// every finite E4M3/E5M2 code point (and off-grid neighbors that
+    /// exercise rounding) flows through both pipelines; the packed
+    /// operand and the output must be bit-identical on every path.
+    #[test]
+    fn fused_cast_gemm_bit_equal_on_exhaustive_fp8_grid() {
+        for fmt in [crate::fp8::E4M3, crate::fp8::E5M2] {
+            let fc = fmt.fast_caster();
+            let mut vals: Vec<f32> = (0u16..256)
+                .map(|bits| fmt.decode(bits))
+                .filter(|v| v.is_finite())
+                .collect();
+            // off-grid neighbors: exercise round-to-nearest-even both ways
+            for i in 0..vals.len() {
+                let v = vals[i];
+                vals.push(v * 1.0137);
+                vals.push(v * 0.9871);
+            }
+            let k = 24usize; // not a multiple of 8: tail in every row
+            let m = vals.len().div_ceil(k);
+            vals.resize(m * k, 0.0);
+            let n = 19usize;
+            let mut rng = Rng::new(5);
+            let mut b = vec![0f32; n * k];
+            rng.fill_normal(&mut b, 1.0);
+            for portable in [true, false] {
+                force_portable_kernels(portable);
+                // reference: full-tensor quantize sweep, then GEMM
+                let mut a_ref = vals.clone();
+                fc.quantize_slice(&mut a_ref);
+                let mut c_ref = vec![0f32; m * n];
+                matmul_bt(&a_ref, &b, &mut c_ref, m, n, k, 1.0);
+                // fused: quantize per panel inside the GEMM pass
+                let mut a_fused = vals.clone();
+                let mut c_fused = vec![0f32; m * n];
+                matmul_bt_quant(&mut a_fused, &b, &mut c_fused, m, n, k, 1.0, |p| {
+                    fc.quantize_slice(p)
+                });
+                force_portable_kernels(false);
+                let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&a_ref), bits(&a_fused), "{fmt:?} packed operand diverged");
+                assert_eq!(bits(&c_ref), bits(&c_fused), "{fmt:?} fused output diverged");
+            }
+        }
+    }
+
+    /// `n == 0` (no output columns) must still pack all of A — the saved
+    /// quantized operand feeds the weight-gradient GEMM — and `k == 0`
+    /// must fill C exactly like the plain GEMM.
+    #[test]
+    fn matmul_bt_quant_packs_a_even_with_no_output() {
+        let fc = crate::fp8::E4M3.fast_caster();
+        let (m, k) = (21usize, 13usize);
+        let mut rng = Rng::new(6);
+        let mut a = vec![0f32; m * k];
+        rng.fill_normal(&mut a, 1.0);
+        let mut a_ref = a.clone();
+        fc.quantize_slice(&mut a_ref);
+        let mut c: Vec<f32> = Vec::new();
+        matmul_bt_quant(&mut a, &[], &mut c, m, 0, k, 1.0, |p| fc.quantize_slice(p));
+        assert_eq!(
+            a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            a_ref.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        // k == 0: C is filled with scale * (empty dot) like matmul_bt
+        let n = 4usize;
+        let mut c0 = vec![7f32; m * n];
+        let mut c1 = vec![7f32; m * n];
+        matmul_bt(&[], &[], &mut c0, m, n, 0, 2.0);
+        let mut a_empty: Vec<f32> = Vec::new();
+        matmul_bt_quant(&mut a_empty, &[], &mut c1, m, n, 0, 2.0, |p| fc.quantize_slice(p));
+        assert_eq!(
+            c0.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            c1.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    /// Fused cast-and-transpose vs quantize-then-transpose, bitwise.
+    #[test]
+    fn quant_transpose_matches_quantize_then_transpose_bitwise() {
+        let fc = crate::fp8::E5M2.fast_caster();
+        let (r, c) = (37usize, 53usize);
+        let mut rng = Rng::new(8);
+        let mut src = vec![0f32; r * c];
+        rng.fill_normal(&mut src, 1.0);
+        let mut q_ref = src.clone();
+        fc.quantize_slice(&mut q_ref);
+        let mut t_ref = vec![0f32; r * c];
+        transpose(&q_ref, r, c, &mut t_ref);
+        let mut q = vec![0f32; r * c];
+        let mut t = vec![0f32; r * c];
+        quant_transpose(&src, r, c, &mut q, &mut t, |x| fc.quantize(x));
+        assert_eq!(
+            q.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            q_ref.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(
+            t.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            t_ref.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    /// The opt-in FMA kernels are *not* bit-identical (they contract
+    /// mul+add into one rounding) but must stay within a tight relative
+    /// bound of the reference. Measured divergence is ~1e-7 relative for
+    /// unit-normal operands; the asserted bound (1e-5 + a small absolute
+    /// floor) is documented in docs/KERNELS.md.
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn fast_fma_mode_divergence_is_small_and_bounded() {
+        if !is_x86_feature_detected!("avx2") || !is_x86_feature_detected!("fma") {
+            return; // nothing to measure on this CPU
+        }
+        let mut rng = Rng::new(99);
+        for k in [8usize, 63, 256, 1000] {
+            let mut a = vec![0f32; k];
+            let mut b = vec![0f32; k];
+            rng.fill_normal(&mut a, 1.0);
+            rng.fill_normal(&mut b, 1.0);
+            let want = legacy_dot(&a, &b);
+            // SAFETY: features checked above.
+            let got = unsafe { kernels::x86::dot_fma(&a, &b) };
+            let tol = 1e-5f32 * want.abs().max(1.0);
+            assert!(
+                (got - want).abs() <= tol,
+                "k={k}: fma {got} vs scalar {want} beyond bound {tol}"
+            );
+        }
+    }
+
     #[test]
     fn kernels_are_bit_identical_across_thread_counts() {
         let mut rng = Rng::new(3);
@@ -540,10 +945,20 @@ mod tests {
                 c
             })
         };
-        let (bt1, atb1) = (run_bt(1), run_atb(1));
-        for threads in [2usize, 5] {
+        let fc = crate::fp8::E4M3.fast_caster();
+        let run_fused = |threads: usize| {
+            with_max_threads(threads, || {
+                let mut aq = a.clone();
+                let mut c = vec![0f32; m * n];
+                matmul_bt_quant(&mut aq, &b, &mut c, m, n, k, 1.0, |p| fc.quantize_slice(p));
+                (aq, c)
+            })
+        };
+        let (bt1, atb1, fused1) = (run_bt(1), run_atb(1), run_fused(1));
+        for threads in [2usize, 4, 5] {
             assert_eq!(bt1, run_bt(threads), "matmul_bt drifted at {threads} threads");
             assert_eq!(atb1, run_atb(threads), "add_matmul_at_b drifted at {threads} threads");
+            assert_eq!(fused1, run_fused(threads), "matmul_bt_quant drifted at {threads} threads");
         }
     }
 

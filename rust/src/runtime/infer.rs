@@ -38,7 +38,7 @@ use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
 use super::block::{self, NormPlacement, Prepared, QuantMode, QuantParams};
-use super::gemm::{attn_decode_cached, matmul_bt};
+use super::gemm::{attn_decode_cached, matmul_bt_quant};
 use super::kvcache::{KvPool, SeqKv};
 use super::tensor::Tensor;
 use crate::config::ModelConfig;
@@ -582,15 +582,19 @@ impl InferSession {
             &mut dws.r[..rows],
             &mut dws.y[..rows * d],
         );
-        block::quantize_slice(&mut dws.y[..rows * d], QuantMode::Bf16);
-        matmul_bt(
-            &dws.y[..rows * d],
+        // BF16 rounding fused into the head GEMM's pack step — one sweep
+        // over `y` instead of quantize-then-matmul (bit-identical: the
+        // BF16 round is elementwise)
+        let bf16 = crate::fp8::BF16.fast_caster();
+        matmul_bt_quant(
+            &mut dws.y[..rows * d],
             &qp.head_t,
             &mut dws.logits[..rows * v],
             rows,
             v,
             d,
             prep.alpha_head,
+            |p| bf16.quantize_slice(p),
         );
 
         for (id, _) in items {

@@ -113,7 +113,13 @@ where
 /// Like [`par_chunks_mut`] over two parallel buffers: chunk `i` of `a`
 /// (length `a_chunk`) is processed together with chunk `i` of `b` (length
 /// `b_chunk`). Use when one row-parallel pass must write two outputs
-/// (e.g. d-logits and the per-row loss).
+/// (e.g. d-logits and the per-row loss), or when a pass pairs an output
+/// chunk with the *input* panel that produces it — the fused
+/// pack+GEMM entry point (`runtime::gemm::matmul_bt_quant`) pairs each
+/// C row-chunk with its A row-panel so the quantization sweep and the
+/// matmul share one traversal. Chunk boundaries stay a function of the
+/// buffer lengths alone, so the pairing inherits the bit-determinism
+/// contract unchanged.
 pub fn par_join2<A, B, F>(
     a: &mut [A],
     b: &mut [B],

@@ -312,6 +312,55 @@ fn trainer_is_bit_identical_across_interpreter_thread_counts() {
 }
 
 #[test]
+fn fp8_lanes_bit_identical_across_thread_counts_through_simd_kernels() {
+    // Trainer-level determinism through the SIMD-dispatched fused
+    // cast-GEMM kernels, for BOTH FP8 lanes: µS static (E4M3/E5M2
+    // quantization fused into the GEMM pack step) and SP dynamic
+    // (TE-style amax pre-pass + fused scale-cast-rescale). Full losses,
+    // not just the last step, must match bitwise at 1/2/4 interpreter
+    // threads — and the auto-dispatched path (AVX2 where present) must
+    // match the forced-portable kernels bitwise, which is the
+    // kernel-level bit-identity contract observed end to end.
+    for (variant, residual, lr) in
+        [("mus", "fixed", 1.0 / 128.0), ("sp", "standard", 1.0 / 256.0)]
+    {
+        let cfg = ModelConfig {
+            variant: variant.into(),
+            precision: "fp8".into(),
+            residual: residual.into(),
+            ..micro_config()
+        };
+        let corpus = micro_corpus(&cfg);
+        let run = |threads: usize, portable: bool| {
+            munit::runtime::gemm::force_portable_kernels(portable);
+            let losses = munit::util::parallel::with_max_threads(threads, || {
+                let be = ReferenceBackend::new(&[cfg.clone()]).unwrap();
+                let trainer = Trainer::new(&be, &cfg).unwrap();
+                let tc = TrainConfig { lr, ..quick_tc(3) };
+                let mut b = Batcher::new(corpus.clone(), 11, 0, 1, cfg.batch, cfg.seq_len);
+                trainer.run(&tc, &mut b).unwrap().losses
+            });
+            munit::runtime::gemm::force_portable_kernels(false);
+            losses
+        };
+        let base = run(1, false);
+        assert!(base.iter().all(|l| l.is_finite()), "{variant}+fp8 non-finite: {base:?}");
+        for threads in [2usize, 4] {
+            assert_eq!(
+                base,
+                run(threads, false),
+                "{variant}+fp8 drifted at {threads} interpreter threads"
+            );
+        }
+        assert_eq!(
+            base,
+            run(1, true),
+            "{variant}+fp8: auto kernel path is not bit-identical to portable"
+        );
+    }
+}
+
+#[test]
 fn fp8_precision_lanes_train_reference() {
     // Always-run step coverage for both FP8 lanes over the full trainer
     // path: µS static (E4M3/E5M2) and SP dynamic (TE-style) scaling.

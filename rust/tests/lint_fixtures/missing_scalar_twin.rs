@@ -1,0 +1,9 @@
+//! Lint fixture (never compiled): a `#[target_feature]` kernel with no
+//! `*_scalar` twin in the file — the bit-equality suite would have no
+//! reference to diff it against, and non-x86 builds no fallback.
+//! Expected: `missing-scalar-twin` fires on the `fn sum8_avx2` line.
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn sum8_avx2(a: &[f32]) -> f32 {
+    a.len() as f32
+}

@@ -1,0 +1,11 @@
+//! Lint fixture (never compiled): a SIMD intrinsic called outside the
+//! blessed `runtime/gemm/kernels.rs` — intrinsics anywhere else bypass
+//! the scalar-twin review. Expected: `stray-intrinsic` fires on the
+//! `_mm256_` line (and the `core::arch` import line).
+
+use core::arch::x86_64::_mm256_setzero_ps;
+
+pub fn sneaky_simd_sum(a: &[f32]) -> f32 {
+    let _acc = unsafe { _mm256_setzero_ps() };
+    a.len() as f32
+}

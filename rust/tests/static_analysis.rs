@@ -30,7 +30,9 @@ fn every_lint_rule_fires_on_its_fixture() {
         ("hashmap-iteration", "runtime/infer.rs", "hashmap_iter.rs"),
         ("hot-path-unwrap", "runtime/infer.rs", "hot_unwrap.rs"),
         ("unpaired-cast", "runtime/infer.rs", "unpaired_cast.rs"),
-        ("kernel-entropy", "runtime/gemm.rs", "kernel_entropy.rs"),
+        ("kernel-entropy", "runtime/gemm/kernels.rs", "kernel_entropy.rs"),
+        ("stray-intrinsic", "runtime/infer.rs", "stray_intrinsic.rs"),
+        ("missing-scalar-twin", "runtime/gemm/kernels.rs", "missing_scalar_twin.rs"),
     ];
     let mut covered = BTreeSet::new();
     for (rule, label, file) in cases {
@@ -60,8 +62,12 @@ fn fixtures_are_clean_outside_their_rule_scope() {
         "timing is allowed outside kernel files"
     );
     assert!(
-        lint::lint_source("runtime/gemm.rs", &fixture("f32_accum.rs")).is_empty(),
+        lint::lint_source("runtime/gemm/mod.rs", &fixture("f32_accum.rs")).is_empty(),
         "gemm's f32 folds are blessed"
+    );
+    assert!(
+        lint::lint_source("runtime/gemm/kernels.rs", &fixture("stray_intrinsic.rs")).is_empty(),
+        "intrinsics are allowed in the blessed kernel file"
     );
 }
 
