@@ -108,16 +108,23 @@ fn main() {
     // the same GEMM forced onto the portable (no-intrinsics) kernels:
     // the ratio to the row above is the realized SIMD speedup. Both
     // paths are bit-identical by contract, so only the clock differs.
-    munit::runtime::gemm::force_portable_kernels(true);
-    run("hot:gemm_bt_256cubed_portable", &mut || {
-        munit::runtime::gemm::matmul_bt(&ga, &gb, &mut gc, 256, 256, 256, 1.0);
-        std::hint::black_box(&gc);
-    });
-    munit::runtime::gemm::force_portable_kernels(false);
+    {
+        let guard = munit::runtime::gemm::kernel_path_lock();
+        guard.force_portable(true);
+        run("hot:gemm_bt_256cubed_portable", &mut || {
+            munit::runtime::gemm::matmul_bt(&ga, &gb, &mut gc, 256, 256, 256, 1.0);
+            std::hint::black_box(&gc);
+        });
+    }
     // fused cast-into-GEMM entry point: FP8 quantization runs inside the
-    // per-panel pack loop instead of as a separate pass over A
+    // per-panel pack loop instead of as a separate pass over A. Restore
+    // the unquantized operand every iteration — quantization is
+    // idempotent, so reusing the mutated buffer would time the
+    // already-on-grid fast path instead of a fresh activation cast.
     let pack = |p: &mut [f32]| fast.quantize_slice(p);
+    let ga_src = ga.clone();
     run("hot:gemm_bt_quant_fused_256cubed", &mut || {
+        ga.copy_from_slice(&ga_src);
         munit::runtime::gemm::matmul_bt_quant(&mut ga, &gb, &mut gc, 256, 256, 256, 1.0, pack);
         std::hint::black_box(&gc);
     });
@@ -567,12 +574,14 @@ fn measure_kernels() -> (MeasuredKernel, f64, &'static str) {
         munit::runtime::gemm::matmul_bt(&a, &b, &mut c, 256, 256, 256, 1.0);
         std::hint::black_box(&c);
     });
-    munit::runtime::gemm::force_portable_kernels(true);
-    let portable = quick("measure:gemm_portable", || {
-        munit::runtime::gemm::matmul_bt(&a, &b, &mut c, 256, 256, 256, 1.0);
-        std::hint::black_box(&c);
-    });
-    munit::runtime::gemm::force_portable_kernels(false);
+    let portable = {
+        let guard = munit::runtime::gemm::kernel_path_lock();
+        guard.force_portable(true);
+        quick("measure:gemm_portable", || {
+            munit::runtime::gemm::matmul_bt(&a, &b, &mut c, 256, 256, 256, 1.0);
+            std::hint::black_box(&c);
+        })
+    };
     let mut s = vec![0f32; 1 << 20];
     rng.fill_normal(&mut s, 1.0);
     let stream = quick("measure:sum_sq_stream", || {

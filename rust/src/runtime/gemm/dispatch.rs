@@ -10,7 +10,7 @@
 //! CI `kernels` leg) so logs always record which path produced a run.
 
 use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
-use std::sync::Once;
+use std::sync::{Mutex, MutexGuard, Once, PoisonError};
 
 /// Arithmetic mode of the GEMM microkernels.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -72,8 +72,50 @@ pub fn kernel_mode() -> KernelMode {
 
 /// Bench/test hook: force the portable kernels regardless of detected CPU
 /// features (`true`), or restore feature-based dispatch (`false`).
+///
+/// The override is a **process-wide global**. Code that may run
+/// concurrently with other toggling code — any `#[test]`, since cargo's
+/// default harness runs tests on multiple threads — must not call this
+/// directly: take [`kernel_path_lock`] and toggle through the guard, so
+/// two tests can never observe each other's override. Raw calls are only
+/// appropriate in single-threaded drivers (the bench harness).
 pub fn force_portable_kernels(force: bool) {
     FORCE_PORTABLE.store(force, Ordering::Relaxed);
+}
+
+/// Serializes every scope that toggles the portable-path override (see
+/// [`force_portable_kernels`] — the flag is process-global, the test
+/// harness is concurrent).
+static FORCE_LOCK: Mutex<()> = Mutex::new(());
+
+/// Exclusive, scoped handle on the kernel-path override. Held for as long
+/// as a test or bench section needs a specific dispatch outcome; while
+/// one guard is alive every other [`kernel_path_lock`] caller blocks, and
+/// dropping the guard always restores feature-based dispatch.
+pub struct KernelPathGuard {
+    _lock: MutexGuard<'static, ()>,
+}
+
+/// Take the process-wide kernel-override lock. The scoped, concurrency-
+/// safe form of [`force_portable_kernels`]: toggle the override through
+/// [`KernelPathGuard::force_portable`] for the guard's lifetime.
+pub fn kernel_path_lock() -> KernelPathGuard {
+    let lock = FORCE_LOCK.lock().unwrap_or_else(PoisonError::into_inner);
+    KernelPathGuard { _lock: lock }
+}
+
+impl KernelPathGuard {
+    /// Force the portable kernels (`true`) or restore feature-based
+    /// dispatch (`false`) while the lock is held.
+    pub fn force_portable(&self, force: bool) {
+        force_portable_kernels(force);
+    }
+}
+
+impl Drop for KernelPathGuard {
+    fn drop(&mut self) {
+        force_portable_kernels(false);
+    }
 }
 
 /// CPU feature probe, evaluated once per call (the detection macro itself
@@ -124,9 +166,10 @@ mod tests {
 
     #[test]
     fn forced_portable_overrides_detection_and_restores() {
-        force_portable_kernels(true);
+        let guard = kernel_path_lock();
+        guard.force_portable(true);
         assert_eq!(kernel_path(), KernelPath::Portable);
-        force_portable_kernels(false);
+        guard.force_portable(false);
         // whatever the CPU is, the resolved path must be a valid variant
         let p = kernel_path();
         assert!(matches!(p, KernelPath::Portable | KernelPath::Avx2 | KernelPath::Avx2Fma));

@@ -201,7 +201,10 @@ pub(super) mod x86 {
 
     /// AVX2 twin of [`dot4_scalar`]: four row accumulators share each
     /// loaded `B` vector (the 4-row × 8-wide register tile). Per-row
-    /// arithmetic is exactly [`dot_avx2`], so the tile is bit-neutral.
+    /// arithmetic is exactly [`dot_avx2`]: each tail accumulates in its
+    /// own scalar and is added to the lane fold once at the end —
+    /// `hsum + tail`, never `(hsum + t1) + t2` — so the tile is
+    /// bit-neutral.
     ///
     /// # Safety
     /// Requires AVX2 at runtime. All `a*` rows and `b` have equal length.
@@ -223,14 +226,14 @@ pub(super) mod x86 {
             acc3 = _mm256_add_ps(acc3, _mm256_mul_ps(_mm256_loadu_ps(p3.add(i)), vb));
             i += 8;
         }
-        let mut out = [hsum_avx2(acc0), hsum_avx2(acc1), hsum_avx2(acc2), hsum_avx2(acc3)];
+        let (mut t0, mut t1, mut t2, mut t3) = (0f32, 0f32, 0f32, 0f32);
         for j in n8..len {
-            out[0] += a0[j] * b[j];
-            out[1] += a1[j] * b[j];
-            out[2] += a2[j] * b[j];
-            out[3] += a3[j] * b[j];
+            t0 += a0[j] * b[j];
+            t1 += a1[j] * b[j];
+            t2 += a2[j] * b[j];
+            t3 += a3[j] * b[j];
         }
-        out
+        [hsum_avx2(acc0) + t0, hsum_avx2(acc1) + t1, hsum_avx2(acc2) + t2, hsum_avx2(acc3) + t3]
     }
 
     /// FMA variant of [`dot4_scalar`] (Fast mode only).
@@ -255,14 +258,14 @@ pub(super) mod x86 {
             acc3 = _mm256_fmadd_ps(_mm256_loadu_ps(p3.add(i)), vb, acc3);
             i += 8;
         }
-        let mut out = [hsum_avx2(acc0), hsum_avx2(acc1), hsum_avx2(acc2), hsum_avx2(acc3)];
+        let (mut t0, mut t1, mut t2, mut t3) = (0f32, 0f32, 0f32, 0f32);
         for j in n8..len {
-            out[0] = a0[j].mul_add(b[j], out[0]);
-            out[1] = a1[j].mul_add(b[j], out[1]);
-            out[2] = a2[j].mul_add(b[j], out[2]);
-            out[3] = a3[j].mul_add(b[j], out[3]);
+            t0 = a0[j].mul_add(b[j], t0);
+            t1 = a1[j].mul_add(b[j], t1);
+            t2 = a2[j].mul_add(b[j], t2);
+            t3 = a3[j].mul_add(b[j], t3);
         }
-        out
+        [hsum_avx2(acc0) + t0, hsum_avx2(acc1) + t1, hsum_avx2(acc2) + t2, hsum_avx2(acc3) + t3]
     }
 
     /// AVX2 twin of [`axpy_scalar`]: `c[j] += s * b[j]`, elementwise and

@@ -60,7 +60,8 @@ mod dispatch;
 mod kernels;
 
 pub use dispatch::{
-    force_portable_kernels, kernel_mode, kernel_path, set_kernel_mode, KernelMode, KernelPath,
+    force_portable_kernels, kernel_mode, kernel_path, kernel_path_lock, set_kernel_mode,
+    KernelMode, KernelPath, KernelPathGuard,
 };
 
 use crate::util::parallel;
@@ -739,6 +740,7 @@ mod tests {
     /// kernel must agree bit for bit, for both GEMM shapes.
     #[test]
     fn simd_and_portable_paths_bit_identical_on_randomized_shapes() {
+        let guard = kernel_path_lock();
         let mut rng = Rng::new(77);
         let mut shapes: Vec<(usize, usize, usize)> = vec![
             (1, 1, 1),
@@ -766,9 +768,9 @@ mod tests {
             rng.fill_normal(&mut b, 1.0);
             let want = legacy_matmul_bt(&a, &b, m, n, k, 0.75);
             let mut c_port = vec![0f32; m * n];
-            force_portable_kernels(true);
+            guard.force_portable(true);
             matmul_bt(&a, &b, &mut c_port, m, n, k, 0.75);
-            force_portable_kernels(false);
+            guard.force_portable(false);
             let mut c_auto = vec![0f32; m * n];
             matmul_bt(&a, &b, &mut c_auto, m, n, k, 0.75);
             let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
@@ -783,9 +785,9 @@ mod tests {
             let mut c2 = c1.clone();
             let mut c3 = c1.clone();
             legacy_add_matmul_at_b(&a, &b2, &mut c1, m, k, n, 0.3);
-            force_portable_kernels(true);
+            guard.force_portable(true);
             add_matmul_at_b(&a, &b2, &mut c2, m, k, n, 0.3);
-            force_portable_kernels(false);
+            guard.force_portable(false);
             add_matmul_at_b(&a, &b2, &mut c3, m, k, n, 0.3);
             assert_eq!(bits(&c1), bits(&c2), "atb portable != legacy at {m}x{n}x{k}");
             assert_eq!(bits(&c1), bits(&c3), "atb auto != legacy at {m}x{n}x{k}");
@@ -798,6 +800,7 @@ mod tests {
     /// operand and the output must be bit-identical on every path.
     #[test]
     fn fused_cast_gemm_bit_equal_on_exhaustive_fp8_grid() {
+        let guard = kernel_path_lock();
         for fmt in [crate::fp8::E4M3, crate::fp8::E5M2] {
             let fc = fmt.fast_caster();
             let mut vals: Vec<f32> = (0u16..256)
@@ -818,7 +821,7 @@ mod tests {
             let mut b = vec![0f32; n * k];
             rng.fill_normal(&mut b, 1.0);
             for portable in [true, false] {
-                force_portable_kernels(portable);
+                guard.force_portable(portable);
                 // reference: full-tensor quantize sweep, then GEMM
                 let mut a_ref = vals.clone();
                 fc.quantize_slice(&mut a_ref);
@@ -830,7 +833,7 @@ mod tests {
                 matmul_bt_quant(&mut a_fused, &b, &mut c_fused, m, n, k, 1.0, |p| {
                     fc.quantize_slice(p)
                 });
-                force_portable_kernels(false);
+                guard.force_portable(false);
                 let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
                 assert_eq!(bits(&a_ref), bits(&a_fused), "{fmt:?} packed operand diverged");
                 assert_eq!(bits(&c_ref), bits(&c_fused), "{fmt:?} fused output diverged");

@@ -331,8 +331,12 @@ fn fp8_lanes_bit_identical_across_thread_counts_through_simd_kernels() {
             ..micro_config()
         };
         let corpus = micro_corpus(&cfg);
+        // the portable-path override is process-global and the test
+        // harness is concurrent: hold the kernel-path lock for the whole
+        // sweep and toggle through the guard
+        let guard = munit::runtime::gemm::kernel_path_lock();
         let run = |threads: usize, portable: bool| {
-            munit::runtime::gemm::force_portable_kernels(portable);
+            guard.force_portable(portable);
             let losses = munit::util::parallel::with_max_threads(threads, || {
                 let be = ReferenceBackend::new(&[cfg.clone()]).unwrap();
                 let trainer = Trainer::new(&be, &cfg).unwrap();
@@ -340,7 +344,7 @@ fn fp8_lanes_bit_identical_across_thread_counts_through_simd_kernels() {
                 let mut b = Batcher::new(corpus.clone(), 11, 0, 1, cfg.batch, cfg.seq_len);
                 trainer.run(&tc, &mut b).unwrap().losses
             });
-            munit::runtime::gemm::force_portable_kernels(false);
+            guard.force_portable(false);
             losses
         };
         let base = run(1, false);
