@@ -156,31 +156,39 @@ fn main() {
     });
 
     // the decode path's single-query cached-attention kernel: one query
-    // against a 256-position BF16-paged KV history
+    // against a 256-position paged KV history, on both store codecs
+    // (BF16 2 B/value vs E4M3 1 B/value — the FP8 KV cache streams half
+    // the bytes per gathered position)
     {
+        use munit::runtime::gemm::{attn_decode_cached, f32_to_bf16_bits, KvCodec};
         let (ctx, dh_d, page) = (256usize, 64usize, 32usize);
         let mut kv = vec![0f32; 2 * ctx * dh_d];
         rng.fill_normal(&mut kv, 1.0);
-        let bits: Vec<u16> = kv
-            .iter()
-            .map(|&v| munit::runtime::gemm::f32_to_bf16_bits(v))
-            .collect();
-        let (k_bits, v_bits) = bits.split_at(ctx * dh_d);
-        let k_pages: Vec<&[u16]> = k_bits.chunks(page * dh_d).collect();
-        let v_pages: Vec<&[u16]> = v_bits.chunks(page * dh_d).collect();
+        let bf16_bytes: Vec<u8> =
+            kv.iter().flat_map(|&v| f32_to_bf16_bits(v).to_le_bytes()).collect();
+        let fp8_bytes: Vec<u8> = kv.iter().map(|&v| E4M3.encode(v) as u8).collect();
+        let lut = E4M3.decode_lut8();
         let mut qd = vec![0f32; dh_d];
         rng.fill_normal(&mut qd, 1.0);
         let scale_d = 1.0 / (dh_d as f32).sqrt();
         let (mut kf, mut vf) = (vec![0f32; ctx * dh_d], vec![0f32; ctx * dh_d]);
         let mut scores_d = vec![0f32; ctx];
         let mut od = vec![0f32; dh_d];
-        run("hot:attention_decode_cached_ctx256_dh64", &mut || {
-            munit::runtime::gemm::attn_decode_cached(
-                &qd, &k_pages, &v_pages, ctx, dh_d, scale_d, &mut kf, &mut vf,
-                &mut scores_d, &mut od,
-            );
-            std::hint::black_box(&od);
-        });
+        for (tag, bytes, bpv) in
+            [("bf16", &bf16_bytes, 2usize), ("fp8", &fp8_bytes, 1usize)]
+        {
+            let (k_b, v_b) = bytes.split_at(ctx * dh_d * bpv);
+            let k_pages: Vec<&[u8]> = k_b.chunks(page * dh_d * bpv).collect();
+            let v_pages: Vec<&[u8]> = v_b.chunks(page * dh_d * bpv).collect();
+            let codec = if bpv == 2 { KvCodec::Bf16 } else { KvCodec::Fp8E4m3(&lut) };
+            run(&format!("hot:attention_decode_cached_{tag}_ctx256_dh64"), &mut || {
+                attn_decode_cached(
+                    &qd, &k_pages, &v_pages, ctx, dh_d, scale_d, codec, &mut kf, &mut vf,
+                    &mut scores_d, &mut od,
+                );
+                std::hint::black_box(&od);
+            });
+        }
     }
 
     let manifest_text = std::fs::read_to_string("artifacts/manifest.json").ok();
@@ -550,6 +558,92 @@ fn main() {
         match std::fs::write("BENCH_shard.json", format!("{doc}\n")) {
             Ok(()) => eprintln!("wrote BENCH_shard.json"),
             Err(e) => eprintln!("could not write BENCH_shard.json: {e}"),
+        }
+    }
+
+    // ---- serving-tier benches (BENCH_serve.json) -------------------------
+    // One seeded Zipf/Poisson workload (prefix reuse + mixed lengths)
+    // drained through four scheduler tiers on identically pre-trained
+    // weights. Rows carry p50/p99 queue/first-token/total latency,
+    // goodput, prefix-hit rate and KV bytes; CI gates goodput floors and
+    // asserts the tier contracts (prefix hits > 0, FP8 KV high-water
+    // exactly half of BF16, chunked p99 first-token below unchunked,
+    // zero FP8 saturation). Names contain "serve" for filtering.
+    {
+        use munit::coordinator::serve::{serve, ServeConfig};
+        use munit::coordinator::traffic::{self, TrafficConfig};
+        use munit::runtime::KvStoreMode;
+        let serve_cfg = ModelConfig::default();
+        let tc = TrafficConfig::default();
+        let workload = traffic::generate(&serve_cfg, &tc).unwrap();
+        let max_batch = 4usize;
+        let tiers: [(&str, ServeConfig, KvStoreMode); 4] = [
+            (
+                "serve:baseline",
+                ServeConfig { max_batch, ..Default::default() },
+                KvStoreMode::Bf16,
+            ),
+            (
+                "serve:prefix_cache",
+                ServeConfig { max_batch, prefix_cache: true, ..Default::default() },
+                KvStoreMode::Bf16,
+            ),
+            (
+                "serve:chunked_prefill",
+                ServeConfig { max_batch, prefill_chunk: Some(8), ..Default::default() },
+                KvStoreMode::Bf16,
+            ),
+            // identical schedule to baseline, E4M3 KV store: same slab
+            // peak, half the bytes — CI asserts the exact 2x
+            (
+                "serve:fp8_kv",
+                ServeConfig { max_batch, ..Default::default() },
+                KvStoreMode::Fp8E4m3,
+            ),
+        ];
+        let mut serve_rows: Vec<Json> = Vec::new();
+        let mut fp8_saturated = 0u64;
+        let mut params_for_serve: Option<Vec<Vec<f32>>> = None;
+        if let Ok(trainer) = Trainer::new(backend.as_ref(), &serve_cfg) {
+            if let Ok(session) = trainer.init(0) {
+                params_for_serve = session.params_host().ok();
+            }
+        }
+        for (name, sc, mode) in &tiers {
+            if !filter.is_empty() && !name.contains(&filter) {
+                continue;
+            }
+            let Some(params) = params_for_serve.as_ref() else { continue };
+            let Ok(mut infer) = InferSession::new(&serve_cfg, params, 0.4) else { continue };
+            if infer.set_kv_store_mode(*mode).is_err() {
+                continue;
+            }
+            let mut last = None;
+            eprintln!("running {name}…");
+            let r = bench(name, 1, 2, Duration::from_secs(2), || {
+                // the drain resets its own prefix/pool state; each
+                // iteration replays the identical workload
+                let report = serve(&mut infer, &workload, sc).unwrap();
+                last = Some(std::hint::black_box(traffic::assess(&report)));
+            });
+            let tr = last.unwrap();
+            if *mode == KvStoreMode::Fp8E4m3 {
+                fp8_saturated = infer.fp8_kv_health().saturated;
+            }
+            serve_rows.push(traffic::report_json(&serve_cfg.name(), name, &tr));
+            results.push(r);
+        }
+        if !serve_rows.is_empty() {
+            let doc = Json::obj(vec![
+                ("backend", Json::str(&backend.platform())),
+                ("n_requests", Json::num(tc.n_requests as f64)),
+                ("fp8_kv_saturated", Json::num(fp8_saturated as f64)),
+                ("configs", Json::Arr(serve_rows)),
+            ]);
+            match std::fs::write("BENCH_serve.json", format!("{doc}\n")) {
+                Ok(()) => eprintln!("wrote BENCH_serve.json"),
+                Err(e) => eprintln!("could not write BENCH_serve.json: {e}"),
+            }
         }
     }
 

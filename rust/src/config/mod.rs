@@ -105,17 +105,31 @@ impl ModelConfig {
         4 * self.width as u64 * ctx as u64
     }
 
-    /// KV-cache bytes appended per decoded token across all layers: one
-    /// BF16 K row and one BF16 V row of `width` values per layer.
-    pub fn kv_cache_bytes_per_token(&self) -> u64 {
-        (self.depth * 2 * self.width * 2) as u64
+    /// KV-cache bytes appended per decoded token across all layers at
+    /// `bytes_per_value` bytes per stored value: one K row and one V
+    /// row of `width` values per layer. BF16 stores 2 bytes/value; the
+    /// FP8 (E4M3) KV-cache mode stores 1, halving the cache footprint.
+    pub fn kv_cache_bytes_per_token_at(&self, bytes_per_value: usize) -> u64 {
+        (self.depth * 2 * self.width * bytes_per_value) as u64
     }
 
-    /// KV-cache bytes READ by one decode token at context length `ctx`:
-    /// every layer streams its full cached K and V (`ctx · width` BF16
-    /// values each) — the bandwidth term of the decode roofline.
+    /// BF16 specialization of [`ModelConfig::kv_cache_bytes_per_token_at`].
+    pub fn kv_cache_bytes_per_token(&self) -> u64 {
+        self.kv_cache_bytes_per_token_at(2)
+    }
+
+    /// KV-cache bytes READ by one decode token at context length `ctx`
+    /// and `bytes_per_value` bytes per stored value: every layer streams
+    /// its full cached K and V (`ctx · width` values each) — the
+    /// bandwidth term of the decode roofline.
+    pub fn kv_cache_bytes_read_per_token_at(&self, ctx: usize, bytes_per_value: usize) -> u64 {
+        self.kv_cache_bytes_per_token_at(bytes_per_value) * ctx as u64
+    }
+
+    /// BF16 specialization of
+    /// [`ModelConfig::kv_cache_bytes_read_per_token_at`].
     pub fn kv_cache_bytes_read_per_token(&self, ctx: usize) -> u64 {
-        self.kv_cache_bytes_per_token() * ctx as u64
+        self.kv_cache_bytes_read_per_token_at(ctx, 2)
     }
 
     /// The scaling scheme this config trains under: µS, SP+TE-style

@@ -24,8 +24,12 @@
 //!   checkpoints, and comm accounting against `perfmodel` closed forms.
 //! - [`serve`]: continuous-batching inference scheduler over
 //!   `runtime::InferSession` — staggered admissions, between-step
-//!   evictions, one batched decode execute per step, per-request latency
+//!   evictions, one batched decode execute per step, prefix-cache KV
+//!   sharing, chunked prefill, KV trimming, per-request latency
 //!   accounting.
+//! - [`traffic`]: seeded synthetic serving load (Zipf prompt-prefix
+//!   reuse, Poisson arrivals, mixed lengths) plus the latency/goodput
+//!   assessment behind `BENCH_serve.json` and `munit traffic`.
 //! - [`transfer`]: width-transfer measurement harness — coordinate
 //!   checks (per-op RMS across widths via the telemetry sink) and
 //!   LR-transfer sweeps; backs `munit coordcheck` / `munit transfer` and
@@ -51,6 +55,8 @@ pub mod serve;
 pub mod shard;
 /// Hyperparameter grid engine (threaded workers, optimal subsets).
 pub mod sweep;
+/// Synthetic serving traffic (Zipf prefixes, Poisson arrivals).
+pub mod traffic;
 /// Single-model training loop over device-resident sessions.
 pub mod trainer;
 /// Width-transfer measurement harness (coordinate checks + LR sweeps).

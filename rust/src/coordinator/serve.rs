@@ -9,17 +9,33 @@
 //! immediately — admissions and evictions happen *between* decode steps,
 //! never by restarting the batch.
 //!
+//! Three serving-throughput knobs layer on top (see `docs/SERVING.md`):
+//!
+//!  - **Prefix caching** ([`ServeConfig::prefix_cache`]): finished
+//!    prompts are indexed by token-chain hash; an admitted request
+//!    adopts the longest cached prefix (full KV slabs shared by
+//!    refcount, a partial tail copied) and prefills only its suffix.
+//!  - **Chunked prefill** ([`ServeConfig::prefill_chunk`]): long prompts
+//!    advance one fixed-size chunk per scheduler step, interleaved with
+//!    the decode pass, so a long admission no longer stalls every live
+//!    sequence's next token.
+//!  - **KV trimming** ([`ServeConfig::kv_trim_slabs`]): free slab
+//!    buffers are released between steps, so one long burst no longer
+//!    pins peak memory; high-water vs current bytes are reported.
+//!
 //! Because batched decode is row-local under static-FP8/BF16 plans (see
-//! `runtime::infer`), a request's generated tokens are identical whatever
-//! batch it shared — tested against isolated one-request runs. Accounting
-//! follows `ExecStats` practice: per-request admission/first-token/finish
-//! steps and wall latency, plus aggregate prefill/decode tokens-per-sec
-//! in the [`ServeReport`].
+//! `runtime::infer`) and chunked prefill is bit-identical to the whole-
+//! prompt tower, a request's generated tokens are identical whatever
+//! batch it shared and however its prompt was chunked or adopted —
+//! tested against isolated one-request runs. Accounting follows
+//! `ExecStats` practice: per-request queue/admission/first-token/finish
+//! latencies, plus aggregate prefill/decode tokens-per-sec, prefix-hit
+//! and KV-memory counters in the [`ServeReport`].
 
 use std::time::{Duration, Instant};
 
 use crate::config::ModelConfig;
-use crate::{bail, err};
+use crate::bail;
 use crate::runtime::{sample_greedy, sample_topk, InferSession, SeqId};
 use crate::util::error::Result;
 use crate::util::rng::Rng;
@@ -58,18 +74,39 @@ pub struct Request {
     pub sampling: Sampling,
 }
 
-/// Scheduler knobs.
+/// Scheduler knobs. The defaults reproduce the original scheduler
+/// exactly: whole-prompt prefill at admission, no prefix cache, no KV
+/// trimming.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
     /// Maximum live sequences per decode step.
     pub max_batch: usize,
     /// Hard cap on scheduler steps (guards non-terminating request sets).
     pub max_steps: usize,
+    /// `Some(c)` prefills at most `c` prompt positions per live request
+    /// per step, interleaved with decode; `None` prefills the whole
+    /// prompt inline at admission.
+    pub prefill_chunk: Option<usize>,
+    /// Share KV slabs between requests with a common prompt prefix.
+    pub prefix_cache: bool,
+    /// Cached prefixes held before FIFO eviction (used when
+    /// [`ServeConfig::prefix_cache`] is on).
+    pub prefix_capacity: usize,
+    /// `Some(n)` trims free KV slab buffers down to `n` after every
+    /// step; `None` keeps them pooled at the high-water mark.
+    pub kv_trim_slabs: Option<usize>,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { max_batch: 8, max_steps: 10_000 }
+        ServeConfig {
+            max_batch: 8,
+            max_steps: 10_000,
+            prefill_chunk: None,
+            prefix_cache: false,
+            prefix_capacity: 32,
+            kv_trim_slabs: None,
+        }
     }
 }
 
@@ -90,9 +127,13 @@ pub struct Completion {
     pub admitted_step: usize,
     /// Scheduler step the request finished.
     pub finished_step: usize,
+    /// Wall time from becoming visible to the scheduler to admission
+    /// (time spent queued waiting for a batch slot).
+    pub queue_latency: Duration,
     /// Wall time from admission (prefill start) to the first token.
     pub first_token_latency: Duration,
-    /// Wall time from admission to the final token.
+    /// Wall time from admission to the instant the finishing token was
+    /// sampled (not when the scheduler later evicted the sequence).
     pub total_latency: Duration,
 }
 
@@ -103,7 +144,9 @@ pub struct ServeReport {
     pub completions: Vec<Completion>,
     /// Scheduler steps taken to drain the request set.
     pub steps: usize,
-    /// Total prompt tokens prefilled.
+    /// Prompt tokens actually COMPUTED by prefill — positions adopted
+    /// from the prefix cache are excluded, so with sharing on this is
+    /// strictly below the summed prompt lengths.
     pub prefill_tokens: u64,
     /// Total tokens decoded.
     pub decode_tokens: u64,
@@ -116,6 +159,16 @@ pub struct ServeReport {
     pub prefill_tokens_per_sec: f64,
     /// Mean live sequences per decode step (batching effectiveness).
     pub mean_batch_occupancy: f64,
+    /// Prefix-cache adoptions during the drain.
+    pub prefix_hits: u64,
+    /// Prompt positions served from shared KV slabs instead of compute.
+    pub prefix_hit_tokens: u64,
+    /// Largest KV byte footprint the pool reached during (or before)
+    /// the drain.
+    pub kv_high_water_bytes: usize,
+    /// KV bytes still materialized after the drain (with
+    /// [`ServeConfig::kv_trim_slabs`] set this stays near zero).
+    pub kv_current_bytes: usize,
 }
 
 struct Live {
@@ -123,8 +176,16 @@ struct Live {
     seq: SeqId,
     rng: Rng,
     admitted_step: usize,
+    queue_latency: Duration,
     admitted_at: Instant,
-    first_token_at: Instant,
+    /// Stamped when the first token is sampled (prompt fully prefilled).
+    first_token_at: Option<Instant>,
+    /// Stamped the instant the finishing token is sampled, so the
+    /// completion's total latency excludes scheduler eviction overhead.
+    finished_at: Option<Instant>,
+    /// Prompt positions already in the KV cache (adopted + prefilled);
+    /// below `prompt.len()` the request is still prefilling.
+    prefilled: usize,
     /// Generated so far; the last entry is the token to feed next step.
     tokens: Vec<i32>,
     stopped_early: bool,
@@ -146,6 +207,20 @@ fn sample(req: &Request, live: &mut Live, logits: &[f32]) -> i32 {
 
 fn finished(req: &Request, live: &Live) -> bool {
     live.stopped_early || live.tokens.len() >= req.max_new_tokens
+}
+
+/// Push a sampled token and, the instant the request's finish condition
+/// becomes true (stop token or generation budget), stamp `finished_at` —
+/// the completion's total latency is measured to this instant, not to
+/// the scheduler's later eviction pass.
+fn push_token(req: &Request, live: &mut Live, tok: i32) {
+    live.tokens.push(tok);
+    if req.stop_token == Some(tok) {
+        live.stopped_early = true;
+    }
+    if finished(req, live) {
+        live.finished_at = Some(Instant::now());
+    }
 }
 
 /// Move every finished live sequence into `completions`, freeing its KV
@@ -174,8 +249,9 @@ fn evict_finished(
                 arrival_step: req.arrival_step,
                 admitted_step: l.admitted_step,
                 finished_step: step,
-                first_token_latency: l.first_token_at - l.admitted_at,
-                total_latency: Instant::now() - l.admitted_at,
+                queue_latency: l.queue_latency,
+                first_token_latency: l.first_token_at.unwrap_or(l.admitted_at) - l.admitted_at,
+                total_latency: l.finished_at.unwrap_or_else(Instant::now) - l.admitted_at,
             });
         } else {
             i += 1;
@@ -214,16 +290,24 @@ pub fn serve(
             );
         }
     }
+    if sc.prefill_chunk == Some(0) {
+        bail!("serve: prefill_chunk must be positive when set");
+    }
+    if sc.prefix_cache {
+        infer.enable_prefix_cache(sc.prefix_capacity);
+    }
     // admission queue: arrival order, id as the deterministic tiebreak
     let mut queue: Vec<usize> = (0..requests.len()).collect();
     queue.sort_by_key(|&i| (requests[i].arrival_step, requests[i].id));
     let mut next_admit = 0usize;
     let mut live: Vec<Live> = Vec::new();
     let mut completions: Vec<Completion> = Vec::new();
-    let (mut prefill_tokens, mut decode_tokens) = (0u64, 0u64);
+    let mut arrived_at: Vec<Option<Instant>> = vec![None; requests.len()];
+    let mut decode_tokens = 0u64;
     let mut occupancy_sum = 0u64;
     let mut decode_steps = 0usize;
-    // per-phase time baselines (the session may have served before)
+    let vocab = infer.config().vocab;
+    // per-phase baselines (the session may have served before)
     let stats0 = infer.stats().clone();
     let t0 = Instant::now();
     let mut step = 0usize;
@@ -236,6 +320,15 @@ pub fn serve(
                 requests.len(),
                 sc.max_steps
             );
+        }
+        // ---- stamp requests becoming visible this step (queue time) ----
+        for &ri in &queue[next_admit..] {
+            if requests[ri].arrival_step > step {
+                break; // queue is sorted by arrival step
+            }
+            if arrived_at[ri].is_none() {
+                arrived_at[ri] = Some(Instant::now());
+            }
         }
         // ---- evict sequences that finished last step, freeing slots ----
         evict_finished(infer, requests, &mut live, &mut completions, step)?;
@@ -250,9 +343,8 @@ pub fn serve(
             let req = &requests[ri];
             let admitted_at = Instant::now();
             let seq = infer.add_sequence();
-            let logits = infer.prefill(seq, &req.prompt)?;
-            prefill_tokens += req.prompt.len() as u64;
-            let last = &logits[(req.prompt.len() - 1) * infer.config().vocab..];
+            // longest cached prefix first: shared slabs, zero compute
+            let adopted = infer.adopt_prefix(seq, &req.prompt)?;
             let mut l = Live {
                 req: ri,
                 seq,
@@ -263,57 +355,98 @@ pub fn serve(
                     Sampling::Greedy => Rng::new(req.id),
                 },
                 admitted_step: step,
+                queue_latency: admitted_at - arrived_at[ri].unwrap_or(admitted_at),
                 admitted_at,
-                first_token_at: admitted_at,
+                first_token_at: None,
+                finished_at: None,
+                prefilled: adopted,
                 tokens: Vec::with_capacity(req.max_new_tokens),
                 stopped_early: false,
             };
-            let tok = sample(req, &mut l, last);
-            l.first_token_at = Instant::now();
-            l.tokens.push(tok);
-            if req.stop_token == Some(tok) {
-                l.stopped_early = true;
+            if sc.prefill_chunk.is_none() {
+                // whole remaining prompt inline, first token this step
+                let rest = &req.prompt[l.prefilled..];
+                let logits = if l.prefilled == 0 {
+                    infer.prefill(seq, rest)?
+                } else {
+                    infer.prefill_chunk(seq, rest)?
+                };
+                l.prefilled = req.prompt.len();
+                if sc.prefix_cache {
+                    infer.insert_prefix(seq, &req.prompt)?;
+                }
+                let tok = sample(req, &mut l, &logits[(rest.len() - 1) * vocab..]);
+                l.first_token_at = Some(Instant::now());
+                push_token(req, &mut l, tok);
             }
             live.push(l);
+        }
+
+        // ---- chunked prefill: each still-prefilling request advances
+        // at most one chunk, so long prompts interleave with decode ----
+        if let Some(chunk) = sc.prefill_chunk {
+            for l in live.iter_mut() {
+                let req = &requests[l.req];
+                if l.prefilled >= req.prompt.len() {
+                    continue;
+                }
+                let end = (l.prefilled + chunk).min(req.prompt.len());
+                let logits = infer.prefill_chunk(l.seq, &req.prompt[l.prefilled..end])?;
+                let n = end - l.prefilled;
+                l.prefilled = end;
+                if l.prefilled == req.prompt.len() {
+                    // prompt complete: index it, sample the first token
+                    if sc.prefix_cache {
+                        infer.insert_prefix(l.seq, &req.prompt)?;
+                    }
+                    let tok = sample(req, l, &logits[(n - 1) * vocab..]);
+                    l.first_token_at = Some(Instant::now());
+                    push_token(req, l, tok);
+                }
+            }
         }
 
         // ---- evict requests whose first sampled token already finished
         // them (instant stop / max_new == 1), before any decode ---------
         evict_finished(infer, requests, &mut live, &mut completions, step)?;
 
-        // ---- one batched decode over every live sequence ---------------
-        if !live.is_empty() {
-            let mut items: Vec<(SeqId, i32)> = Vec::with_capacity(live.len());
-            for l in live.iter() {
-                let tok = l
-                    .tokens
-                    .last()
-                    .ok_or_else(|| err!("live sequence {:?} has an empty token buffer", l.seq))?;
-                items.push((l.seq, *tok));
+        // ---- one batched decode over every token-bearing sequence
+        // (still-prefilling requests hold their slot but do not decode) --
+        let mut items: Vec<(SeqId, i32)> = Vec::with_capacity(live.len());
+        let mut rows: Vec<usize> = Vec::with_capacity(live.len());
+        for (i, l) in live.iter().enumerate() {
+            if let Some(&tok) = l.tokens.last() {
+                items.push((l.seq, tok));
+                rows.push(i);
             }
+        }
+        if !items.is_empty() {
             let outs = infer.decode_batch(&items)?;
             decode_tokens += outs.len() as u64;
-            occupancy_sum += live.len() as u64;
+            occupancy_sum += items.len() as u64;
             decode_steps += 1;
-            for (l, logits) in live.iter_mut().zip(&outs) {
+            for (&i, logits) in rows.iter().zip(&outs) {
+                let l = &mut live[i];
                 let req = &requests[l.req];
                 let tok = sample(req, l, logits);
-                l.tokens.push(tok);
-                if req.stop_token == Some(tok) {
-                    l.stopped_early = true;
-                }
+                push_token(req, l, tok);
             }
-        } else if next_admit >= queue.len() {
+        } else if live.is_empty() && next_admit >= queue.len() {
             // nothing live and nothing left to admit: the eviction pass
             // above has drained everything
             debug_assert_eq!(completions.len(), requests.len());
+        }
+        // ---- release free KV slab buffers between steps ----------------
+        if let Some(target) = sc.kv_trim_slabs {
+            infer.kv_trim(target);
         }
         step += 1;
     }
 
     let wall = t0.elapsed();
     completions.sort_by_key(|c| c.id);
-    let stats1 = infer.stats();
+    let stats1 = infer.stats().clone();
+    let prefill_tokens = stats1.prefill_tokens - stats0.prefill_tokens;
     let prefill_secs = (stats1.prefill_time - stats0.prefill_time).as_secs_f64().max(1e-9);
     let decode_secs = (stats1.decode_time - stats0.decode_time).as_secs_f64().max(1e-9);
     Ok(ServeReport {
@@ -324,6 +457,10 @@ pub fn serve(
         decode_tokens_per_sec: decode_tokens as f64 / decode_secs,
         prefill_tokens_per_sec: prefill_tokens as f64 / prefill_secs,
         mean_batch_occupancy: occupancy_sum as f64 / decode_steps.max(1) as f64,
+        prefix_hits: stats1.prefix_hits - stats0.prefix_hits,
+        prefix_hit_tokens: stats1.prefix_hit_tokens - stats0.prefix_hit_tokens,
+        kv_high_water_bytes: infer.kv_high_water_bytes(),
+        kv_current_bytes: infer.kv_materialized_bytes(),
         completions,
     })
 }
@@ -458,7 +595,7 @@ mod tests {
         ];
 
         let mut batched = session(&cfg, 5);
-        let sc = ServeConfig { max_batch: 3, max_steps: 5_000 };
+        let sc = ServeConfig { max_batch: 3, max_steps: 5_000, ..Default::default() };
         let report = serve(&mut batched, &requests, &sc).unwrap();
         assert_eq!(report.completions.len(), requests.len());
         assert!(batched.live_sequences() == 0, "serve must drain every sequence");
@@ -501,7 +638,7 @@ mod tests {
                 sampling: Sampling::Greedy,
             })
             .collect();
-        let sc = ServeConfig { max_batch: 3, max_steps: 100 };
+        let sc = ServeConfig { max_batch: 3, max_steps: 100, ..Default::default() };
         let report = serve(&mut sess, &requests, &sc).unwrap();
         // each request samples once at admission + 5 decode steps; all
         // three stay live for every decode step → occupancy is exactly 3
@@ -547,7 +684,7 @@ mod tests {
         r[0].prompt.clear();
         assert!(serve(&mut sess, &r, &ServeConfig::default()).is_err(), "empty prompt");
         let r = synthetic_requests(&cfg, 2, 0);
-        let sc = ServeConfig { max_batch: 1, max_steps: 1 };
+        let sc = ServeConfig { max_batch: 1, max_steps: 1, ..Default::default() };
         assert!(serve(&mut sess, &r, &sc).is_err(), "max_steps guard");
     }
 
@@ -573,5 +710,134 @@ mod tests {
             report.prefill_tokens,
             requests.iter().map(|r| r.prompt.len() as u64).sum::<u64>()
         );
+    }
+
+    /// Satellite acceptance: an overlapping-prefix request set generates
+    /// IDENTICAL tokens with the prefix cache on and off, chunked and
+    /// unchunked, and batched equals isolated in every mode. With the
+    /// cache on, every adopted position is exactly one prompt position
+    /// not computed; refcounted eviction of donors never breaks later
+    /// adopters (the drain finishes with all slabs recycled).
+    #[test]
+    fn prefix_cache_and_chunked_prefill_preserve_tokens() {
+        let cfg = ModelConfig { seq_len: 48, ..lane_cfg() };
+        let shared: Vec<i32> = (0..36).map(|i| ((i * 5 + 1) % cfg.vocab) as i32).collect();
+        let mk = |id, prompt: Vec<i32>, max_new, arrival| Request {
+            id,
+            prompt,
+            max_new_tokens: max_new,
+            arrival_step: arrival,
+            stop_token: None,
+            sampling: if id % 2 == 0 {
+                Sampling::Greedy
+            } else {
+                Sampling::TopK { k: 4, temperature: 1.0, seed: 100 + id }
+            },
+        };
+        let with_tail = |t: &[i32]| {
+            let mut p = shared.clone();
+            p.extend_from_slice(t);
+            p
+        };
+        let requests = vec![
+            mk(0, shared.clone(), 4, 0),        // donor: indexes the prefix
+            mk(1, with_tail(&[7]), 4, 1),       // full-slab share + tail copy
+            mk(2, with_tail(&[9, 11]), 3, 1),   // second adopter
+            mk(3, vec![2, 3, 4], 4, 2),         // no shared prefix
+        ];
+        let run = |sc: &ServeConfig| {
+            let mut sess = session(&cfg, 7);
+            let report = serve(&mut sess, &requests, sc).unwrap();
+            if sc.prefix_cache {
+                // the index still holds refcounts on indexed prompts;
+                // dropping it must release every slab (satellite: donor
+                // eviction mid-drain never freed shared slabs)
+                assert!(sess.prefix_entries() > 0);
+                sess.enable_prefix_cache(0);
+            }
+            assert_eq!(sess.kv_slabs_in_use(), 0, "drain must recycle all slabs");
+            report
+        };
+        let base = run(&ServeConfig { max_batch: 2, ..Default::default() });
+        let tokens =
+            |r: &ServeReport| r.completions.iter().map(|c| c.tokens.clone()).collect::<Vec<_>>();
+        // batched equals isolated for the baseline
+        for c in &base.completions {
+            let req = requests.iter().find(|r| r.id == c.id).unwrap();
+            let mut solo = session(&cfg, 7);
+            let alone =
+                generate_one(&mut solo, &req.prompt, req.max_new_tokens, None, req.sampling)
+                    .unwrap();
+            assert_eq!(c.tokens, alone, "request {} diverged from isolated run", c.id);
+        }
+        // prefix cache: same tokens, strictly fewer prompt tokens computed
+        let cached =
+            run(&ServeConfig { max_batch: 2, prefix_cache: true, ..Default::default() });
+        assert_eq!(tokens(&cached), tokens(&base), "prefix cache changed generation");
+        assert!(cached.prefix_hits >= 2, "adopters must hit, got {}", cached.prefix_hits);
+        assert!(cached.prefill_tokens < base.prefill_tokens);
+        assert_eq!(
+            base.prefill_tokens - cached.prefill_tokens,
+            cached.prefix_hit_tokens,
+            "every adopted position is exactly one position not computed"
+        );
+        // chunked prefill: same tokens, same computed prompt tokens
+        let chunked = run(&ServeConfig {
+            max_batch: 2,
+            prefill_chunk: Some(5),
+            ..Default::default()
+        });
+        assert_eq!(tokens(&chunked), tokens(&base), "chunking changed generation");
+        assert_eq!(chunked.prefill_tokens, base.prefill_tokens);
+        // both together
+        let both = run(&ServeConfig {
+            max_batch: 2,
+            prefill_chunk: Some(5),
+            prefix_cache: true,
+            ..Default::default()
+        });
+        assert_eq!(tokens(&both), tokens(&base), "chunk+cache changed generation");
+        assert_eq!(base.prefill_tokens - both.prefill_tokens, both.prefix_hit_tokens);
+    }
+
+    /// Satellite acceptance: `kv_trim_slabs` bounds resident KV bytes
+    /// between steps without touching results; the report carries the
+    /// high-water vs current split.
+    #[test]
+    fn kv_trim_bounds_resident_bytes_without_changing_tokens() {
+        let cfg = lane_cfg();
+        let requests = synthetic_requests(&cfg, 5, 42);
+        let mut keep = session(&cfg, 3);
+        let pooled = serve(&mut keep, &requests, &ServeConfig::default()).unwrap();
+        assert!(pooled.kv_high_water_bytes > 0);
+        assert!(
+            pooled.kv_current_bytes > 0,
+            "without trimming, free slabs stay materialized after the drain"
+        );
+        let mut trim = session(&cfg, 3);
+        let sc = ServeConfig { kv_trim_slabs: Some(0), ..Default::default() };
+        let trimmed = serve(&mut trim, &requests, &sc).unwrap();
+        assert_eq!(trimmed.kv_current_bytes, 0, "trim(0) releases every free buffer");
+        assert!(trimmed.kv_high_water_bytes > 0, "high-water mark survives trimming");
+        assert!(trimmed.kv_high_water_bytes >= trimmed.kv_current_bytes);
+        let toks = |r: &ServeReport| {
+            r.completions.iter().map(|c| c.tokens.clone()).collect::<Vec<_>>()
+        };
+        assert_eq!(toks(&trimmed), toks(&pooled), "trimming changed generation");
+    }
+
+    /// Satellite 1 regression: total latency is stamped when the
+    /// finishing token is sampled, so it can never exceed the wall time
+    /// of the whole drain and still bounds the first-token latency.
+    #[test]
+    fn total_latency_excludes_scheduler_overhead() {
+        let cfg = lane_cfg();
+        let mut sess = session(&cfg, 6);
+        let requests = synthetic_requests(&cfg, 4, 11);
+        let report = serve(&mut sess, &requests, &ServeConfig::default()).unwrap();
+        for c in &report.completions {
+            assert!(c.total_latency >= c.first_token_latency);
+            assert!(c.total_latency <= report.wall);
+        }
     }
 }

@@ -1,0 +1,367 @@
+//! Synthetic serving traffic: Zipf prompt-prefix reuse, Poisson
+//! arrivals, mixed lengths — the workload behind `BENCH_serve` and the
+//! CLI `traffic` subcommand.
+//!
+//! Real serving load has two structures the uniform
+//! [`synthetic_requests`](super::serve::synthetic_requests) set lacks:
+//! prompt prefixes repeat (system prompts, few-shot preambles) with a
+//! heavy-tailed popularity distribution, and arrivals cluster. The
+//! generator models both — a pool of `prefix_pool` distinct prefixes
+//! drawn by Zipf rank per request, and inter-arrival gaps drawn from an
+//! exponential via inverse-CDF over the crate's [`Rng`] — so the serve
+//! loop's prefix cache and chunked prefill face the load they were
+//! built for. Every third request is a short prefix-free prompt, so a
+//! mixed-length tail rides along.
+//!
+//! Everything is seeded and wall-clock-free: the same
+//! [`TrafficConfig`] always yields the same request set (the
+//! determinism-contract linter bans entropy sources in kernels; the
+//! generator follows the same discipline so benches replay exactly).
+//! [`assess`] folds a [`ServeReport`] into the latency/goodput summary
+//! (`p50`/`p99` over nearest-rank [`percentile`]) that the bench
+//! baselines gate on.
+
+use std::time::Duration;
+
+use crate::bail;
+use crate::config::ModelConfig;
+use crate::coordinator::serve::{Request, Sampling, ServeReport};
+use crate::util::error::Result;
+use crate::util::json::Json;
+use crate::util::rng::{Rng, Zipf};
+use crate::util::stats::percentile;
+
+/// Synthetic workload knobs. Defaults fit the reference
+/// `ModelConfig::default()` context (128 positions).
+#[derive(Debug, Clone)]
+pub struct TrafficConfig {
+    /// Requests in the workload.
+    pub n_requests: usize,
+    /// Mean arrivals per scheduler step (Poisson; higher = burstier
+    /// queues).
+    pub arrival_rate: f64,
+    /// Distinct shared prompt prefixes in the pool.
+    pub prefix_pool: usize,
+    /// Zipf skew over prefix popularity (1.0–1.5 is web-like reuse).
+    pub zipf_s: f64,
+    /// Tokens per shared prefix.
+    pub prefix_len: usize,
+    /// Longest private suffix appended after a shared prefix.
+    pub suffix_max: usize,
+    /// Largest per-request generation budget.
+    pub max_new: usize,
+    /// Workload seed (requests, lengths, arrivals all derive from it).
+    pub seed: u64,
+}
+
+impl Default for TrafficConfig {
+    fn default() -> Self {
+        TrafficConfig {
+            n_requests: 32,
+            arrival_rate: 1.5,
+            prefix_pool: 4,
+            zipf_s: 1.2,
+            prefix_len: 40,
+            suffix_max: 8,
+            max_new: 8,
+            seed: 17,
+        }
+    }
+}
+
+/// Generate the seeded request set. Fails when the longest possible
+/// request (`prefix_len + suffix_max + max_new`) exceeds the model's
+/// context capacity, rather than silently truncating the workload.
+pub fn generate(cfg: &ModelConfig, tc: &TrafficConfig) -> Result<Vec<Request>> {
+    if tc.n_requests == 0 || tc.prefix_pool == 0 || tc.max_new == 0 || tc.prefix_len == 0 {
+        bail!("traffic: n_requests, prefix_pool, prefix_len and max_new must be positive");
+    }
+    if tc.arrival_rate <= 0.0 || !tc.arrival_rate.is_finite() {
+        bail!("traffic: arrival_rate must be positive, got {}", tc.arrival_rate);
+    }
+    let longest = tc.prefix_len + tc.suffix_max + tc.max_new;
+    if longest > cfg.seq_len {
+        bail!(
+            "traffic: prefix {} + suffix {} + max_new {} exceeds context capacity {}",
+            tc.prefix_len,
+            tc.suffix_max,
+            tc.max_new,
+            cfg.seq_len
+        );
+    }
+    let mut rng = Rng::new(tc.seed ^ 0x7AFF_1C);
+    let zipf = Zipf::new(tc.prefix_pool, tc.zipf_s);
+    // the shared prefix pool: distinct by construction (first token
+    // encodes the pool index)
+    let prefixes: Vec<Vec<i32>> = (0..tc.prefix_pool)
+        .map(|p| {
+            (0..tc.prefix_len)
+                .map(|t| if t == 0 { (p % cfg.vocab) as i32 } else { rng.below(cfg.vocab) as i32 })
+                .collect()
+        })
+        .collect();
+    let mut arrival = 0.0f64;
+    let requests = (0..tc.n_requests as u64)
+        .map(|id| {
+            // Poisson process: exponential inter-arrival via inverse CDF
+            arrival += -(1.0 - rng.f64()).ln() / tc.arrival_rate;
+            let prompt = if id % 3 == 2 {
+                // mixed-length tail: short prompt; its first token
+                // (vocab−1) stays off every pool prefix's first token
+                let n = 2 + rng.below(tc.suffix_max.max(1));
+                let mut p = vec![(cfg.vocab - 1) as i32; n];
+                for v in p.iter_mut().skip(1) {
+                    *v = rng.below(cfg.vocab) as i32;
+                }
+                p
+            } else {
+                let mut p = prefixes[zipf.sample(&mut rng)].clone();
+                let n = 1 + rng.below(tc.suffix_max.max(1));
+                p.extend((0..n).map(|_| rng.below(cfg.vocab) as i32));
+                p
+            };
+            Request {
+                id,
+                prompt,
+                max_new_tokens: 1 + rng.below(tc.max_new),
+                arrival_step: arrival as usize,
+                stop_token: None,
+                sampling: if id % 2 == 0 {
+                    Sampling::Greedy
+                } else {
+                    Sampling::TopK { k: 4, temperature: 1.0, seed: tc.seed ^ (0xC0DE + id) }
+                },
+            }
+        })
+        .collect();
+    Ok(requests)
+}
+
+/// Latency/goodput summary of one drained workload — the row shape
+/// `BENCH_serve.json` gates on.
+#[derive(Debug, Clone)]
+pub struct TrafficReport {
+    /// Requests drained.
+    pub n_requests: usize,
+    /// Scheduler steps taken.
+    pub steps: usize,
+    /// Median wall time queued before admission (ms).
+    pub p50_queue_ms: f32,
+    /// 99th-percentile queue time (ms).
+    pub p99_queue_ms: f32,
+    /// Median arrival→first-token wall time (queue + prefill + first
+    /// sample, ms).
+    pub p50_first_token_ms: f32,
+    /// 99th-percentile arrival→first-token time (ms) — the latency
+    /// chunked prefill exists to bound.
+    pub p99_first_token_ms: f32,
+    /// Median arrival→finish wall time (ms).
+    pub p50_total_ms: f32,
+    /// 99th-percentile arrival→finish time (ms).
+    pub p99_total_ms: f32,
+    /// Generated tokens per second of drain wall time.
+    pub goodput_tok_per_sec: f64,
+    /// Fraction of prompt tokens served from shared KV slabs.
+    pub prefix_hit_rate: f64,
+    /// Prompt tokens actually computed (cache hits excluded).
+    pub prefill_tokens: u64,
+    /// Tokens decoded.
+    pub decode_tokens: u64,
+    /// Peak resident KV bytes.
+    pub kv_high_water_bytes: usize,
+    /// Resident KV bytes after the drain.
+    pub kv_current_bytes: usize,
+}
+
+fn ms(d: Duration) -> f32 {
+    (d.as_secs_f64() * 1e3) as f32
+}
+
+/// Fold a [`ServeReport`] into the latency/goodput summary. Latencies
+/// are measured from request arrival (the instant the scheduler first
+/// saw it), so queueing delay counts against first-token and total.
+pub fn assess(report: &ServeReport) -> TrafficReport {
+    let queue: Vec<f32> = report.completions.iter().map(|c| ms(c.queue_latency)).collect();
+    let first: Vec<f32> = report
+        .completions
+        .iter()
+        .map(|c| ms(c.queue_latency + c.first_token_latency))
+        .collect();
+    let total: Vec<f32> =
+        report.completions.iter().map(|c| ms(c.queue_latency + c.total_latency)).collect();
+    let prompt_tokens: u64 = report.completions.iter().map(|c| c.prompt_len as u64).sum();
+    let generated: u64 = report.completions.iter().map(|c| c.tokens.len() as u64).sum();
+    let pct = |xs: &[f32], p: f64| if xs.is_empty() { 0.0 } else { percentile(xs, p) };
+    TrafficReport {
+        n_requests: report.completions.len(),
+        steps: report.steps,
+        p50_queue_ms: pct(&queue, 50.0),
+        p99_queue_ms: pct(&queue, 99.0),
+        p50_first_token_ms: pct(&first, 50.0),
+        p99_first_token_ms: pct(&first, 99.0),
+        p50_total_ms: pct(&total, 50.0),
+        p99_total_ms: pct(&total, 99.0),
+        goodput_tok_per_sec: generated as f64 / report.wall.as_secs_f64().max(1e-9),
+        prefix_hit_rate: report.prefix_hit_tokens as f64 / prompt_tokens.max(1) as f64,
+        prefill_tokens: report.prefill_tokens,
+        decode_tokens: report.decode_tokens,
+        kv_high_water_bytes: report.kv_high_water_bytes,
+        kv_current_bytes: report.kv_current_bytes,
+    }
+}
+
+/// One `BENCH_serve.json` row for a labeled serving configuration.
+pub fn report_json(config: &str, label: &str, r: &TrafficReport) -> Json {
+    Json::obj(vec![
+        ("config", Json::str(config)),
+        ("bench", Json::str(label)),
+        ("n_requests", Json::num(r.n_requests as f64)),
+        ("steps", Json::num(r.steps as f64)),
+        ("p50_queue_ms", Json::num(r.p50_queue_ms as f64)),
+        ("p99_queue_ms", Json::num(r.p99_queue_ms as f64)),
+        ("p50_first_token_ms", Json::num(r.p50_first_token_ms as f64)),
+        ("p99_first_token_ms", Json::num(r.p99_first_token_ms as f64)),
+        ("p50_total_ms", Json::num(r.p50_total_ms as f64)),
+        ("p99_total_ms", Json::num(r.p99_total_ms as f64)),
+        ("goodput_tok_per_sec", Json::num(r.goodput_tok_per_sec)),
+        ("prefix_hit_rate", Json::num(r.prefix_hit_rate)),
+        ("prefill_tokens", Json::num(r.prefill_tokens as f64)),
+        ("decode_tokens", Json::num(r.decode_tokens as f64)),
+        ("kv_high_water_bytes", Json::num(r.kv_high_water_bytes as f64)),
+        ("kv_current_bytes", Json::num(r.kv_current_bytes as f64)),
+    ])
+}
+
+/// Human-readable one-workload summary (CLI `traffic`).
+pub fn summary_table(label: &str, r: &TrafficReport) -> String {
+    format!(
+        "  {label}\n    requests {:>4}  steps {:>5}  goodput {:>9.1} tok/s\n    \
+         queue p50/p99 {:>8.2}/{:>8.2} ms   first-token p50/p99 {:>8.2}/{:>8.2} ms\n    \
+         total p50/p99 {:>8.2}/{:>8.2} ms   prefix-hit {:>5.1}%  computed prefill {:>6}\n    \
+         kv high-water {:>8} B  resident {:>8} B\n",
+        r.n_requests,
+        r.steps,
+        r.goodput_tok_per_sec,
+        r.p50_queue_ms,
+        r.p99_queue_ms,
+        r.p50_first_token_ms,
+        r.p99_first_token_ms,
+        r.p50_total_ms,
+        r.p99_total_ms,
+        100.0 * r.prefix_hit_rate,
+        r.prefill_tokens,
+        r.kv_high_water_bytes,
+        r.kv_current_bytes,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::serve::{serve, ServeConfig};
+    use crate::runtime::InferSession;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            width: 16,
+            depth: 2,
+            head_dim: 8,
+            vocab: 64,
+            seq_len: 96,
+            batch: 2,
+            ..ModelConfig::default()
+        }
+    }
+
+    fn tc() -> TrafficConfig {
+        TrafficConfig {
+            n_requests: 12,
+            prefix_len: 40,
+            suffix_max: 6,
+            max_new: 4,
+            ..TrafficConfig::default()
+        }
+    }
+
+    fn session(cfg: &ModelConfig, seed: i32) -> InferSession {
+        let params = crate::runtime::block::init_params(cfg, seed);
+        InferSession::from_params(cfg, params, 0.4).unwrap()
+    }
+
+    #[test]
+    fn generator_is_seeded_and_structured() {
+        let cfg = cfg();
+        let a = generate(&cfg, &tc()).unwrap();
+        let b = generate(&cfg, &tc()).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt, "same seed must replay the same workload");
+            assert_eq!(x.arrival_step, y.arrival_step);
+            assert_eq!(x.max_new_tokens, y.max_new_tokens);
+        }
+        let c = generate(&cfg, &TrafficConfig { seed: 18, ..tc() }).unwrap();
+        assert!(
+            a.iter().zip(&c).any(|(x, y)| x.prompt != y.prompt),
+            "different seeds must differ"
+        );
+        // arrivals are nondecreasing (a Poisson process, not a shuffle)
+        for w in a.windows(2) {
+            assert!(w[1].arrival_step >= w[0].arrival_step);
+        }
+        // the Zipf pool genuinely repeats prefixes, and the mixed-length
+        // tail rides along
+        let long = a.iter().filter(|r| r.prompt.len() > tc().prefix_len).count();
+        let short = a.iter().filter(|r| r.prompt.len() <= tc().suffix_max + 2).count();
+        assert!(long >= 2 && short >= 2, "mixed lengths: {long} long, {short} short");
+        // pool prefixes are keyed by their first token: with more long
+        // requests than pool entries, some prefix must repeat
+        let mut counts = vec![0usize; cfg.vocab];
+        for r in &a {
+            if r.prompt.len() > tc().prefix_len {
+                counts[r.prompt[0] as usize] += 1;
+            }
+        }
+        let reuse = counts.iter().copied().max().unwrap_or(0);
+        assert!(reuse >= 2, "Zipf pool prefixes must repeat, got max reuse {reuse}");
+        // capacity guard rejects oversized workloads
+        assert!(generate(&cfg, &TrafficConfig { prefix_len: 96, ..tc() }).is_err());
+    }
+
+    /// Tentpole acceptance on the Zipf workload: the prefix cache
+    /// strictly reduces prompt tokens computed while generating the
+    /// exact same tokens, and the hit rate is positive.
+    #[test]
+    fn zipf_workload_prefix_cache_reduces_computed_prefill() {
+        let cfg = cfg();
+        let requests = generate(&cfg, &tc()).unwrap();
+        let toks = |r: &ServeReport| {
+            r.completions.iter().map(|c| c.tokens.clone()).collect::<Vec<_>>()
+        };
+        let mut off = session(&cfg, 8);
+        let base =
+            serve(&mut off, &requests, &ServeConfig { max_batch: 4, ..Default::default() })
+                .unwrap();
+        let mut on = session(&cfg, 8);
+        let sc = ServeConfig { max_batch: 4, prefix_cache: true, ..Default::default() };
+        let cached = serve(&mut on, &requests, &sc).unwrap();
+        assert_eq!(toks(&cached), toks(&base), "prefix cache changed generation");
+        assert!(
+            cached.prefill_tokens < base.prefill_tokens,
+            "caching must strictly reduce computed prefill: {} vs {}",
+            cached.prefill_tokens,
+            base.prefill_tokens
+        );
+        let tr = assess(&cached);
+        assert!(tr.prefix_hit_rate > 0.0, "Zipf reuse must produce hits");
+        assert_eq!(tr.prefill_tokens + cached.prefix_hit_tokens, base.prefill_tokens);
+        assert_eq!(tr.n_requests, requests.len());
+        assert!(tr.goodput_tok_per_sec > 0.0);
+        assert!(tr.p99_first_token_ms >= tr.p50_first_token_ms);
+        assert!(tr.p99_total_ms >= tr.p50_total_ms);
+        // the JSON row carries the gated fields
+        let row = report_json(&cfg.name(), "serve:prefix_cache", &tr);
+        assert!(row.get("goodput_tok_per_sec").and_then(|j| j.as_f64()).unwrap() > 0.0);
+        assert!(row.get("prefix_hit_rate").and_then(|j| j.as_f64()).unwrap() > 0.0);
+        assert!(summary_table("prefix", &tr).contains("prefix-hit"));
+    }
+}

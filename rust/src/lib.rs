@@ -30,16 +30,22 @@
 //!     The **inference layer** rides the same op pipeline:
 //!     [`runtime::InferSession`] quantizes params once (the training
 //!     casts), prefills through the training forward (bit-identical
-//!     logits), and decodes incrementally over a paged BF16 KV cache
-//!     (`runtime::kvcache` — fixed-size slabs, free-list recycling, memory
-//!     ∝ live tokens) via the shared single-query attention kernel;
-//!     greedy + seeded top-k sampling.
+//!     logits, whole-prompt or chunked), and decodes incrementally over
+//!     a paged KV cache (`runtime::kvcache` — fixed-size slabs,
+//!     free-list recycling + trim, memory ∝ live tokens; BF16 or E4M3
+//!     at the µS static scale 1.0 with cast-health witnesses;
+//!     refcounted slab sharing behind a token-verified `PrefixIndex`
+//!     with copy-on-extend) via the shared single-query attention
+//!     kernel; greedy + seeded top-k sampling. See `docs/SERVING.md`.
 //!   - [`coordinator`]: trainer (schedules, divergence guard, probes),
 //!     thread-parallel sweep engine (workers share one `Send + Sync`
 //!     backend), simulated DDP, checkpoints, continuous-batching serve
 //!     loop (`coordinator::serve`: staggered admissions, between-step
-//!     evictions, one batched decode execute per step, per-request
-//!     latency + tokens/sec accounting), metrics, data pipeline, and the
+//!     evictions, one batched decode execute per step, prefix-cache
+//!     adoption, chunked prefill interleaved with decode, KV trimming,
+//!     per-request latency + tokens/sec accounting) with its seeded
+//!     load generator (`coordinator::traffic`: Zipf prefix reuse,
+//!     Poisson arrivals → `BENCH_serve.json`), metrics, data pipeline, and the
 //!     **measurement layer**: [`coordinator::transfer`] runs the paper's
 //!     coordinate checks (per-op RMS O(1) across width for µS, drift for
 //!     SP) and LR-transfer sweeps (`munit coordcheck` / `munit transfer`

@@ -19,6 +19,12 @@
 //!   serve      --config NAME   continuous-batching serve loop over a
 //!                              synthetic request set (--requests N
 //!                              --max-batch B --steps S), latency report
+//!   traffic    --config NAME   Zipf/Poisson synthetic load through four
+//!                              serving tiers (baseline, prefix cache,
+//!                              chunked prefill, FP8 KV + both):
+//!                              p50/p99 latency, goodput, prefix-hit
+//!                              rate, KV bytes (--requests N --rate R
+//!                              --chunk C --max-batch B)
 //!   bench-step --config NAME   per-step latency + host-transfer breakdown
 //!   coordcheck                 per-op RMS coordinate check across widths
 //!                              (µS O(1) band vs SP drift) via the
@@ -148,6 +154,7 @@ const COMMANDS: &[Cmd] = &[
     Cmd { name: "e2e", run: cmd_e2e },
     Cmd { name: "generate", run: cmd_generate },
     Cmd { name: "serve", run: cmd_serve },
+    Cmd { name: "traffic", run: cmd_traffic },
     Cmd { name: "bench-step", run: cmd_bench_step },
     Cmd { name: "coordcheck", run: cmd_coordcheck },
     Cmd { name: "transfer", run: cmd_transfer },
@@ -405,6 +412,12 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     let backend = cli.backend()?;
     let cfg = cli.named_config(backend.as_ref())?;
     serve_cmd(backend.as_ref(), &cfg, &cli.args)
+}
+
+fn cmd_traffic(cli: &Cli) -> Result<()> {
+    let backend = cli.backend()?;
+    let cfg = cli.named_config(backend.as_ref())?;
+    traffic_cmd(backend.as_ref(), &cfg, &cli.args)
 }
 
 fn cmd_bench_step(cli: &Cli) -> Result<()> {
@@ -721,6 +734,80 @@ fn serve_cmd(backend: &dyn Backend, cfg: &ModelConfig, args: &Args) -> Result<()
         report.decode_tokens
     );
     print!("{}", serve::latency_table(&report));
+    Ok(())
+}
+
+/// `munit traffic`: one Zipf/Poisson workload through the four serving
+/// tiers (same request set, same pre-trained weights), summarized per
+/// tier. The CLI face of the `BENCH_serve` harness.
+fn traffic_cmd(backend: &dyn Backend, cfg: &ModelConfig, args: &Args) -> Result<()> {
+    use munit::coordinator::serve::{serve, ServeConfig};
+    use munit::coordinator::traffic::{self, TrafficConfig};
+    use munit::runtime::KvStoreMode;
+    let mut infer = infer_session_for(backend, cfg, args)?;
+    let tc = TrafficConfig {
+        n_requests: args.usize_or("requests", 32),
+        arrival_rate: args.f64_or("rate", 1.5),
+        prefix_pool: args.usize_or("prefix-pool", 4),
+        zipf_s: args.f64_or("zipf", 1.2),
+        prefix_len: args.usize_or("prefix-len", (cfg.seq_len / 3).max(1)),
+        suffix_max: args.usize_or("suffix-max", (cfg.seq_len / 16).max(2)),
+        max_new: args.usize_or("new", (cfg.seq_len / 16).max(2)),
+        seed: args.usize_or("seed", 17) as u64,
+    };
+    let requests = traffic::generate(cfg, &tc)?;
+    let max_batch = args.usize_or("max-batch", 4);
+    let chunk = args.usize_or("chunk", 8).max(1);
+    println!(
+        "{} requests (rate {:.2}/step, {} prefixes, zipf {:.2}) on {}",
+        requests.len(),
+        tc.arrival_rate,
+        tc.prefix_pool,
+        tc.zipf_s,
+        cfg.name()
+    );
+    let runs: [(&str, ServeConfig, KvStoreMode); 4] = [
+        (
+            "baseline",
+            ServeConfig { max_batch, ..Default::default() },
+            KvStoreMode::Bf16,
+        ),
+        (
+            "prefix_cache",
+            ServeConfig { max_batch, prefix_cache: true, ..Default::default() },
+            KvStoreMode::Bf16,
+        ),
+        (
+            "chunked_prefill",
+            ServeConfig { max_batch, prefill_chunk: Some(chunk), ..Default::default() },
+            KvStoreMode::Bf16,
+        ),
+        (
+            "fp8_kv_all",
+            ServeConfig {
+                max_batch,
+                prefix_cache: true,
+                prefill_chunk: Some(chunk),
+                kv_trim_slabs: Some(0),
+                ..Default::default()
+            },
+            KvStoreMode::Fp8E4m3,
+        ),
+    ];
+    for (label, sc, mode) in runs {
+        // the mode switch also resets the pool, so per-tier KV
+        // accounting (high-water, health) starts clean
+        infer.set_kv_store_mode(mode)?;
+        let report = serve(&mut infer, &requests, &sc)?;
+        print!("{}", traffic::summary_table(label, &traffic::assess(&report)));
+        if mode == KvStoreMode::Fp8E4m3 {
+            let h = infer.fp8_kv_health();
+            println!(
+                "    fp8 kv casts {} (saturated {}, underflowed-to-zero {})",
+                h.total, h.saturated, h.underflow_to_zero
+            );
+        }
+    }
     Ok(())
 }
 

@@ -266,6 +266,47 @@ pub fn decode_kv_bytes_per_token(cfg: &ModelConfig, ctx: usize) -> u64 {
     kvcache::kv_bytes_read_per_token(cfg, ctx)
 }
 
+/// [`decode_kv_bytes_per_token`] at `bytes_per_value` bytes per stored
+/// cache value (2 = BF16, 1 = the E4M3 KV-cache mode — which therefore
+/// halves the decode roofline's KV-streaming term).
+pub fn decode_kv_bytes_per_token_at(cfg: &ModelConfig, ctx: usize, bytes_per_value: usize) -> u64 {
+    kvcache::kv_bytes_read_per_token_at(cfg, ctx, bytes_per_value)
+}
+
+/// FLOPs of a prefill pass computing `new_tokens` prompt positions on
+/// top of `cached` positions already in the KV cache (prefix-cache
+/// adoption): the four hidden GEMMs per new token per layer, causal
+/// attention where new row `i` scores and mixes `cached + i + 1` keys
+/// over all heads, and the LM head per new row. At `cached = 0`,
+/// `new = s`, the attention term telescopes to the training tower's
+/// `2·d·s·(s+1)` per layer — whole-prompt, chunked, and prefix-adopted
+/// prefill all sum to this same closed form, and the runtime's op-site
+/// counter (`InferStats::prefill_flops`) is pinned to it exactly.
+pub fn prefill_flops(cfg: &ModelConfig, new_tokens: usize, cached: usize) -> u64 {
+    let l = cfg.depth as u64;
+    let (n, p) = (new_tokens as u64, cached as u64);
+    let d = cfg.width as u64;
+    let hidden = block::hidden_gemm_flops_per_token_fwd(cfg) * n * l;
+    let attn = 4 * d * (n * p + n * (n + 1) / 2) * l;
+    let head = 2 * d * cfg.vocab as u64 * n;
+    hidden + attn + head
+}
+
+/// KV-cache bytes READ by a chunked/adopted prefill of `new_tokens`
+/// rows on `cached` positions at `bytes_per_value` bytes per value: row
+/// `i` gathers `cached + i + 1` K and V rows per (layer, head). Zero
+/// for the whole-prompt tower prefill, which attends from activations
+/// rather than the cache.
+pub fn prefill_kv_bytes_read(
+    cfg: &ModelConfig,
+    new_tokens: usize,
+    cached: usize,
+    bytes_per_value: usize,
+) -> u64 {
+    let (n, p) = (new_tokens as u64, cached as u64);
+    kvcache::kv_bytes_written_per_token_at(cfg, bytes_per_value) * (n * p + n * (n + 1) / 2)
+}
+
 /// Weight bytes streamed per decode step (read once per step, amortized
 /// across the batch): the four hidden linears at their storage width
 /// (FP8 = 1 byte in the FP8 modes, BF16 = 2 otherwise), embedding / head
@@ -629,6 +670,45 @@ mod tests {
             assert_eq!(decode_weight_bytes(m, Mode::Fp8Mus), hidden + 2 * other);
             assert_eq!(decode_weight_bytes(m, Mode::Fp8Te), hidden + 2 * other);
             assert_eq!(decode_weight_bytes(m, Mode::Bf16), 2 * hidden + 2 * other);
+        }
+    }
+
+    /// The prefill closed form is consistent three ways: at zero cache
+    /// it is exactly the training tower's per-sequence count; it
+    /// telescopes under chunking (n then q rows == n+q rows); and its
+    /// KV-read companion scales linearly in bytes-per-value.
+    #[test]
+    fn prefill_flops_reduce_to_tower_and_telescope() {
+        let mut models: Vec<ModelConfig> =
+            paper_table4().iter().map(|p| crate::config::presets::paper_model(p)).collect();
+        models.push(ModelConfig::default());
+        for m in &models {
+            let (s, l) = (m.seq_len as u64, m.depth as u64);
+            assert_eq!(
+                prefill_flops(m, m.seq_len, 0),
+                m.hidden_flops_per_token_fwd() * s * l
+                    + m.attn_flops_per_seq_fwd() * l
+                    + 2 * (m.width * m.vocab) as u64 * s,
+                "{}: tower reduction",
+                m.name()
+            );
+            // chunk split point must not change the total
+            assert_eq!(
+                prefill_flops(m, 3, 5) + prefill_flops(m, 4, 8),
+                prefill_flops(m, 7, 5),
+                "{}: chunk telescope",
+                m.name()
+            );
+            assert_eq!(
+                prefill_kv_bytes_read(m, 3, 5, 2) + prefill_kv_bytes_read(m, 4, 8, 2),
+                prefill_kv_bytes_read(m, 7, 5, 2)
+            );
+            // FP8 KV halves both streaming closed forms exactly
+            assert_eq!(prefill_kv_bytes_read(m, 7, 5, 1) * 2, prefill_kv_bytes_read(m, 7, 5, 2));
+            assert_eq!(
+                decode_kv_bytes_per_token_at(m, 128, 1) * 2,
+                decode_kv_bytes_per_token_at(m, 128, 2)
+            );
         }
     }
 

@@ -368,27 +368,75 @@ pub fn f32_to_bf16_bits(v: f32) -> u16 {
     (v.to_bits() >> 16) as u16
 }
 
+/// How cached K/V page bytes decode back to f32 attention operands —
+/// the two storage modes of the paged KV cache (`runtime::kvcache`).
+#[derive(Debug, Clone, Copy)]
+pub enum KvCodec<'a> {
+    /// Two bytes per value: little-endian BF16 bits. Lossless for the
+    /// BF16-rounded operands the tower produces, so this codec preserves
+    /// the decode-equals-training-forward bit match.
+    Bf16,
+    /// One byte per value: E4M3 bits at static µS scale 1.0, decoded
+    /// through the format's 256-entry table
+    /// ([`crate::fp8::Format::decode_lut8`]) — the same oracle the encode
+    /// side is verified against. Halves cache bytes; not bit-identical
+    /// (the E4M3 grid is coarser than BF16), so callers bound the logit
+    /// divergence instead.
+    Fp8E4m3(&'a [f32; 256]),
+}
+
+impl KvCodec<'_> {
+    /// Bytes per stored cache value under this codec.
+    pub fn bytes_per_value(&self) -> usize {
+        match self {
+            KvCodec::Bf16 => 2,
+            KvCodec::Fp8E4m3(_) => 1,
+        }
+    }
+}
+
+/// Decode one run of cache bytes into f32 values under `codec`. `src`
+/// must hold exactly `dst.len() * codec.bytes_per_value()` bytes.
+pub fn decode_kv_bytes(codec: KvCodec<'_>, src: &[u8], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len() * codec.bytes_per_value());
+    match codec {
+        KvCodec::Bf16 => {
+            for (d, b) in dst.iter_mut().zip(src.chunks_exact(2)) {
+                *d = bf16_to_f32(u16::from_le_bytes([b[0], b[1]]));
+            }
+        }
+        KvCodec::Fp8E4m3(lut) => {
+            for (d, &b) in dst.iter_mut().zip(src) {
+                *d = lut[b as usize];
+            }
+        }
+    }
+}
+
 /// Single-query cached attention for one (sequence, head) pair — the
 /// decode-path kernel. `q` is `[dh]` (RoPE already applied at the query's
-/// absolute position); the K/V history comes as ordered lists of BF16
-/// pages (each `[page_rows, dh]` row-major, see `runtime::kvcache`) whose
-/// rows concatenate to the sequence's first `len` cached positions.
+/// absolute position); the K/V history comes as ordered lists of byte
+/// pages (each `[page_rows, dh]` row-major under `codec`, see
+/// `runtime::kvcache`) whose rows concatenate to the sequence's first
+/// `len` cached positions.
 ///
 /// The pages are gathered into the `kf`/`vf` f32 scratch (`[len, dh]`
-/// each) and scored by [`attn_one_query`] — the same inner kernel the
-/// full-sequence causal forward uses, in the same accumulation order, so
-/// a decode step reproduces the matching training-forward row bit for bit
-/// (the cache stores BF16-rounded operands, and BF16 → f32 is exact).
-/// Serial by design: callers parallelize over (sequence, head) pairs with
-/// fixed chunk boundaries, preserving any-thread-count bit-determinism.
+/// each) via [`decode_kv_bytes`] and scored by [`attn_one_query`] — the
+/// same inner kernel the full-sequence causal forward uses, in the same
+/// accumulation order, so under the BF16 codec a decode step reproduces
+/// the matching training-forward row bit for bit (the cache stores
+/// BF16-rounded operands, and BF16 → f32 is exact). Serial by design:
+/// callers parallelize over (sequence, head) pairs with fixed chunk
+/// boundaries, preserving any-thread-count bit-determinism.
 #[allow(clippy::too_many_arguments)]
 pub fn attn_decode_cached(
     q: &[f32],
-    k_pages: &[&[u16]],
-    v_pages: &[&[u16]],
+    k_pages: &[&[u8]],
+    v_pages: &[&[u8]],
     len: usize,
     dh: usize,
     scale: f32,
+    codec: KvCodec<'_>,
     kf: &mut [f32],
     vf: &mut [f32],
     scores: &mut [f32],
@@ -398,16 +446,13 @@ pub fn attn_decode_cached(
     assert!(kf.len() >= len * dh, "attn_decode_cached: kf scratch too small");
     assert!(vf.len() >= len * dh, "attn_decode_cached: vf scratch too small");
     assert!(scores.len() >= len, "attn_decode_cached: scores scratch too small");
+    let bpv = codec.bytes_per_value();
     let mut row = 0usize;
     for (kp, vp) in k_pages.iter().zip(v_pages) {
         debug_assert_eq!(kp.len(), vp.len());
-        let n = (kp.len() / dh).min(len - row);
-        for (dst, &b) in kf[row * dh..(row + n) * dh].iter_mut().zip(&kp[..n * dh]) {
-            *dst = bf16_to_f32(b);
-        }
-        for (dst, &b) in vf[row * dh..(row + n) * dh].iter_mut().zip(&vp[..n * dh]) {
-            *dst = bf16_to_f32(b);
-        }
+        let n = (kp.len() / (dh * bpv)).min(len - row);
+        decode_kv_bytes(codec, &kp[..n * dh * bpv], &mut kf[row * dh..(row + n) * dh]);
+        decode_kv_bytes(codec, &vp[..n * dh * bpv], &mut vf[row * dh..(row + n) * dh]);
         row += n;
         if row == len {
             break;
@@ -1095,10 +1140,13 @@ mod tests {
         let mut o = vec![0f32; s * dh];
         attn_forward_causal(&q, &k, &v, &mut probs, &mut o, s, dh, scale);
 
-        let k_bits: Vec<u16> = k.iter().map(|&x| f32_to_bf16_bits(x)).collect();
-        let v_bits: Vec<u16> = v.iter().map(|&x| f32_to_bf16_bits(x)).collect();
-        let k_pages: Vec<&[u16]> = k_bits.chunks(page_rows * dh).collect();
-        let v_pages: Vec<&[u16]> = v_bits.chunks(page_rows * dh).collect();
+        let to_bytes = |xs: &[f32]| -> Vec<u8> {
+            xs.iter().flat_map(|&x| f32_to_bf16_bits(x).to_le_bytes()).collect()
+        };
+        let k_bytes = to_bytes(&k);
+        let v_bytes = to_bytes(&v);
+        let k_pages: Vec<&[u8]> = k_bytes.chunks(page_rows * dh * 2).collect();
+        let v_pages: Vec<&[u8]> = v_bytes.chunks(page_rows * dh * 2).collect();
         let (mut kf, mut vf) = (vec![0f32; s * dh], vec![0f32; s * dh]);
         let mut scores = vec![0f32; s];
         let mut od = vec![0f32; dh];
@@ -1111,6 +1159,7 @@ mod tests {
                 len,
                 dh,
                 scale,
+                KvCodec::Bf16,
                 &mut kf,
                 &mut vf,
                 &mut scores,
@@ -1128,6 +1177,57 @@ mod tests {
             // the scores are the causal row's probabilities
             for j in 0..len {
                 assert_eq!(scores[j].to_bits(), probs[i * s + j].to_bits());
+            }
+        }
+    }
+
+    /// The FP8 codec decodes cached bytes through exactly the E4M3
+    /// oracle: attending over E4M3-rounded history equals running the
+    /// shared causal kernel on `decode(encode(x))` operands bitwise.
+    #[test]
+    fn attn_decode_cached_fp8_codec_matches_e4m3_rounded_operands() {
+        let (s, dh, page_rows) = (9usize, 4usize, 4usize);
+        let fmt = crate::fp8::E4M3;
+        let lut = fmt.decode_lut8();
+        let mut rng = Rng::new(33);
+        let mut q = vec![0f32; s * dh];
+        let mut k = vec![0f32; s * dh];
+        let mut v = vec![0f32; s * dh];
+        rng.fill_normal(&mut q, 1.0);
+        rng.fill_normal(&mut k, 1.0);
+        rng.fill_normal(&mut v, 1.0);
+        // encode the history the way the FP8 KV cache stores it
+        let k_bytes: Vec<u8> = k.iter().map(|&x| fmt.encode(x) as u8).collect();
+        let v_bytes: Vec<u8> = v.iter().map(|&x| fmt.encode(x) as u8).collect();
+        let k_pages: Vec<&[u8]> = k_bytes.chunks(page_rows * dh).collect();
+        let v_pages: Vec<&[u8]> = v_bytes.chunks(page_rows * dh).collect();
+        // reference: the shared kernel on explicitly decoded operands
+        let k_ref: Vec<f32> = k_bytes.iter().map(|&b| fmt.decode(b as u16)).collect();
+        let v_ref: Vec<f32> = v_bytes.iter().map(|&b| fmt.decode(b as u16)).collect();
+        let scale = 1.0 / (dh as f32).sqrt();
+        let (mut kf, mut vf) = (vec![0f32; s * dh], vec![0f32; s * dh]);
+        let mut scores = vec![0f32; s];
+        let (mut od, mut oref) = (vec![0f32; dh], vec![0f32; dh]);
+        let mut scores_ref = vec![0f32; s];
+        for i in [0usize, 4, s - 1] {
+            let len = i + 1;
+            let qi = &q[i * dh..(i + 1) * dh];
+            attn_decode_cached(
+                qi,
+                &k_pages,
+                &v_pages,
+                len,
+                dh,
+                scale,
+                KvCodec::Fp8E4m3(&lut),
+                &mut kf,
+                &mut vf,
+                &mut scores,
+                &mut od,
+            );
+            attn_one_query(qi, &k_ref, &v_ref, len, dh, scale, &mut scores_ref[..len], &mut oref);
+            for c in 0..dh {
+                assert_eq!(od[c].to_bits(), oref[c].to_bits(), "row {i} col {c}");
             }
         }
     }

@@ -1,57 +1,145 @@
 //! Paged per-sequence KV cache for the incremental decode path.
 //!
-//! Storage is **BF16**: the attention operands are BF16-rounded by the
-//! forward tower in every variant (see `runtime::block`), so caching
-//! their upper 16 bits is lossless — a decode step reads back exactly
-//! the f32 values a full-sequence forward would attend over, which is
-//! what makes decode logits bit-identical to the training forward under
-//! the static-FP8 and BF16 plans.
+//! Storage is byte-addressed with two codecs ([`KvStoreMode`]):
+//!
+//!  - **BF16** (default): the attention operands are BF16-rounded by the
+//!    forward tower in every variant (see `runtime::block`), so caching
+//!    their upper 16 bits is lossless — a decode step reads back exactly
+//!    the f32 values a full-sequence forward would attend over, which is
+//!    what makes decode logits bit-identical to the training forward
+//!    under the static-FP8 and BF16 plans.
+//!  - **E4M3** (`KvStoreMode::Fp8E4m3`): one byte per value at one
+//!    static per-(head, slab) scale. µS keeps K/V near unit RMS, so the
+//!    static scale is 1.0 everywhere — no amax bookkeeping, exactly like
+//!    the paper's training casts — and a per-slab
+//!    [`crate::fp8::CastHealth`] record proves it (zero saturation under
+//!    µS; asserted in tests and CI). Halves cache bytes; decode is no
+//!    longer bit-identical, so callers bound the logit divergence
+//!    instead (see `docs/SERVING.md`).
 //!
 //! Memory is **paged**: each (layer, head) chain of a sequence grows in
 //! fixed [`SLAB_TOKENS`]-position slabs drawn from a shared [`KvPool`].
 //! A slab holds that chain's K rows then V rows (`[k: T×dh][v: T×dh]`
-//! BF16 bits). Slabs are recycled through a free list when sequences are
-//! evicted — the pool is a ring of pages, so resident memory scales with
-//! *live tokens* across sequences, not with `max_seq × n_sequences`.
+//! encoded values). Slabs are **refcounted**: the prefix index
+//! ([`PrefixIndex`]) lets requests sharing a prompt prefix share whole
+//! slabs (copy-on-extend — a write into a shared slab first privatizes
+//! it), and eviction returns a slab to the free list only when its last
+//! holder drops. The pool is a ring of pages, so resident memory scales
+//! with *live tokens* across sequences, not `max_seq × n_sequences`;
+//! [`KvPool::trim`] additionally releases the backing memory of free
+//! slabs between scheduler steps so one long-prompt burst no longer pins
+//! peak memory forever (high-water vs current bytes are reported).
 //!
 //! Positions are append-only per sequence: all `depth × heads` chains of
 //! a sequence share one length counter ([`SeqKv::len`]), bumped once per
 //! decoded token by [`SeqKv::advance`] after every layer has appended.
 
 use crate::config::ModelConfig;
+use crate::fp8::{CastHealth, E4M3};
 use crate::runtime::gemm::f32_to_bf16_bits;
 
 /// Positions per slab. Small enough that a short sequence wastes little
-/// (< `2·dh·SLAB_TOKENS` BF16 values per chain), large enough that page
+/// (< `2·dh·SLAB_TOKENS` values per chain), large enough that page
 /// chains stay short at the proxy context lengths.
 pub(crate) const SLAB_TOKENS: usize = 32;
 
-/// Bytes per stored cache value (BF16).
+/// Bytes per stored cache value under the default BF16 codec.
 pub(crate) const KV_BYTES_PER_VALUE: usize = 2;
 
-/// Bytes of KV cache READ by one decode token at context length `ctx`:
-/// every layer's every head streams `ctx` K rows and `ctx` V rows of
-/// `head_dim` BF16 values — `depth · 2 · ctx · width · 2` bytes. This is
-/// the bandwidth term of the decode roofline; the perfmodel consumes it
-/// and a test pins it to the `ModelConfig` closed form.
+/// KV-cache storage codec: how K/V rows are encoded into slab bytes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvStoreMode {
+    /// Two bytes per value (BF16 bits, little-endian): lossless for the
+    /// tower's BF16-rounded operands — decode stays bit-identical to the
+    /// training forward.
+    Bf16,
+    /// One byte per value (E4M3 at static scale 1.0): half the cache
+    /// bytes, twice the effective batch per pool; per-slab
+    /// [`CastHealth`] proves the µS unit-variance contract holds.
+    Fp8E4m3,
+}
+
+impl KvStoreMode {
+    /// Bytes per stored cache value under this codec.
+    pub fn bytes_per_value(self) -> usize {
+        match self {
+            KvStoreMode::Bf16 => KV_BYTES_PER_VALUE,
+            KvStoreMode::Fp8E4m3 => 1,
+        }
+    }
+
+    /// Stable label for reports and benches.
+    pub fn label(self) -> &'static str {
+        match self {
+            KvStoreMode::Bf16 => "bf16",
+            KvStoreMode::Fp8E4m3 => "fp8_e4m3",
+        }
+    }
+}
+
+/// Bytes of KV cache READ by one decode token at context length `ctx`
+/// with `bpv` bytes per value: every layer's every head streams `ctx` K
+/// rows and `ctx` V rows of `head_dim` values — `depth·2·ctx·width·bpv`.
+/// This is the bandwidth term of the decode roofline; the perfmodel
+/// consumes it and a test pins it to the `ModelConfig` closed form.
+pub(crate) fn kv_bytes_read_per_token_at(cfg: &ModelConfig, ctx: usize, bpv: usize) -> u64 {
+    (cfg.depth * 2 * ctx * cfg.width * bpv) as u64
+}
+
+/// BF16 specialization of [`kv_bytes_read_per_token_at`].
 pub(crate) fn kv_bytes_read_per_token(cfg: &ModelConfig, ctx: usize) -> u64 {
-    (cfg.depth * 2 * ctx * cfg.width * KV_BYTES_PER_VALUE) as u64
+    kv_bytes_read_per_token_at(cfg, ctx, KV_BYTES_PER_VALUE)
 }
 
-/// Bytes of KV cache WRITTEN per decoded token (one K row + one V row
-/// per layer): `depth · 2 · width · 2`.
+/// Bytes of KV cache WRITTEN per appended token (one K row + one V row
+/// per layer) at `bpv` bytes per value: `depth·2·width·bpv`.
+pub(crate) fn kv_bytes_written_per_token_at(cfg: &ModelConfig, bpv: usize) -> u64 {
+    (cfg.depth * 2 * cfg.width * bpv) as u64
+}
+
+/// BF16 specialization of [`kv_bytes_written_per_token_at`].
 pub(crate) fn kv_bytes_written_per_token(cfg: &ModelConfig) -> u64 {
-    (cfg.depth * 2 * cfg.width * KV_BYTES_PER_VALUE) as u64
+    kv_bytes_written_per_token_at(cfg, KV_BYTES_PER_VALUE)
 }
 
-/// Shared slab pool. One pool serves every sequence of an `InferSession`;
-/// freed slabs are reused LIFO before any new allocation.
+/// FNV-1a over a token chain (little-endian token bytes) — the prefix
+/// index's chain hash. Deterministic and seedless by design: the
+/// determinism-contract linter bans randomized hash state in kernel
+/// files, and an unseeded fold keeps lookups reproducible across runs.
+pub(crate) fn prefix_hash(tokens: &[i32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Shared refcounted slab pool. One pool serves every sequence of an
+/// `InferSession`; freed slabs are reused LIFO before any new allocation.
 pub(crate) struct KvPool {
     dh: usize,
     n_chains: usize,
-    slab_len: usize,
-    slabs: Vec<Vec<u16>>,
+    /// Encoded values per slab (K half + V half).
+    slab_values: usize,
+    mode: KvStoreMode,
+    slabs: Vec<Vec<u8>>,
+    /// Holders per slab id (sequences + prefix-index entries). 0 ⇒ free.
+    refs: Vec<u32>,
+    /// Static per-slab cast scale (µS: 1.0 everywhere; see module docs).
+    scales: Vec<f32>,
+    /// Per-slab FP8 cast health of the rows encoded into it (the
+    /// per-(head, slab) proof that the static scale saturates nothing).
+    health: Vec<CastHealth>,
+    /// Materialized free slabs (buffer retained, ready for reuse).
     free: Vec<usize>,
+    /// Trimmed free slabs (buffer released; id stays valid).
+    parked: Vec<usize>,
+    bytes_written: u64,
+    high_water_bytes: usize,
+    fp8_health_total: CastHealth,
 }
 
 /// One sequence's cache: per-(layer, head) slab chains plus the shared
@@ -76,13 +164,34 @@ impl SeqKv {
 
 impl KvPool {
     pub(crate) fn new(cfg: &ModelConfig) -> KvPool {
+        KvPool::new_with_mode(cfg, KvStoreMode::Bf16)
+    }
+
+    pub(crate) fn new_with_mode(cfg: &ModelConfig, mode: KvStoreMode) -> KvPool {
         KvPool {
             dh: cfg.head_dim,
             n_chains: cfg.depth * cfg.n_heads(),
-            slab_len: 2 * SLAB_TOKENS * cfg.head_dim,
+            slab_values: 2 * SLAB_TOKENS * cfg.head_dim,
+            mode,
             slabs: Vec::new(),
+            refs: Vec::new(),
+            scales: Vec::new(),
+            health: Vec::new(),
             free: Vec::new(),
+            parked: Vec::new(),
+            bytes_written: 0,
+            high_water_bytes: 0,
+            fp8_health_total: CastHealth::default(),
         }
+    }
+
+    pub(crate) fn mode(&self) -> KvStoreMode {
+        self.mode
+    }
+
+    /// Bytes per stored cache value under the pool's codec.
+    pub(crate) fn bytes_per_value(&self) -> usize {
+        self.mode.bytes_per_value()
     }
 
     /// Fresh empty sequence (no slabs held until the first append).
@@ -90,37 +199,168 @@ impl KvPool {
         SeqKv { len: 0, chains: vec![Vec::new(); self.n_chains] }
     }
 
-    /// Return every slab of `seq` to the free list (eviction).
+    /// Drop `seq`'s hold on every slab (eviction); slabs whose last
+    /// holder this was return to the free list.
     pub(crate) fn free_seq(&mut self, seq: &mut SeqKv) {
-        for chain in &mut seq.chains {
-            self.free.extend(chain.drain(..));
+        for chain in 0..seq.chains.len() {
+            while let Some(id) = seq.chains[chain].pop() {
+                self.release(id);
+            }
         }
         seq.len = 0;
     }
 
-    /// Slabs currently held by live sequences.
+    /// Slabs currently held by live sequences or prefix-index entries.
     pub(crate) fn slabs_in_use(&self) -> usize {
-        self.slabs.len() - self.free.len()
+        self.slabs.len() - self.free.len() - self.parked.len()
     }
 
-    /// Bytes per slab (BF16 payload).
+    /// Slabs whose backing buffer is resident (in use + free-but-kept).
+    pub(crate) fn materialized_slabs(&self) -> usize {
+        self.slabs.len() - self.parked.len()
+    }
+
+    /// Resident cache bytes (in-use + free-but-materialized payloads).
+    pub(crate) fn materialized_bytes(&self) -> usize {
+        self.materialized_slabs() * self.slab_bytes()
+    }
+
+    /// Largest resident byte footprint the pool ever reached.
+    pub(crate) fn high_water_bytes(&self) -> usize {
+        self.high_water_bytes
+    }
+
+    /// Total bytes encoded into slabs by [`KvPool::append`].
+    pub(crate) fn bytes_written(&self) -> u64 {
+        self.bytes_written
+    }
+
+    /// Cumulative cast health of every FP8 KV append (empty under BF16).
+    pub(crate) fn fp8_health(&self) -> CastHealth {
+        self.fp8_health_total
+    }
+
+    /// Live slabs whose per-slab FP8 health recorded any saturation —
+    /// the per-(head, slab) witness that static scale 1.0 holds (µS: 0).
+    pub(crate) fn fp8_saturated_slabs(&self) -> usize {
+        (0..self.slabs.len())
+            .filter(|&id| self.refs[id] > 0 && self.health[id].saturated > 0)
+            .count()
+    }
+
+    /// Bytes per slab under the pool's codec.
     pub(crate) fn slab_bytes(&self) -> usize {
-        self.slab_len * KV_BYTES_PER_VALUE
+        self.slab_values * self.bytes_per_value()
+    }
+
+    /// Release the backing memory of free slabs until at most
+    /// `target_slabs` buffers stay materialized (never touches in-use
+    /// slabs, so the reachable floor is `slabs_in_use()`). Ids remain
+    /// valid — a later alloc rematerializes a parked slab zero-filled.
+    pub(crate) fn trim(&mut self, target_slabs: usize) {
+        while self.materialized_slabs() > target_slabs {
+            let Some(id) = self.free.pop() else { break };
+            self.slabs[id] = Vec::new();
+            self.parked.push(id);
+        }
+    }
+
+    fn retain(&mut self, id: usize) {
+        self.refs[id] += 1;
+    }
+
+    fn release(&mut self, id: usize) {
+        debug_assert!(self.refs[id] > 0, "release of a free slab {id}");
+        self.refs[id] -= 1;
+        if self.refs[id] == 0 {
+            self.free.push(id);
+        }
     }
 
     fn alloc(&mut self) -> usize {
-        if let Some(id) = self.free.pop() {
-            return id;
+        let id = if let Some(id) = self.free.pop() {
+            id
+        } else if let Some(id) = self.parked.pop() {
+            self.slabs[id] = vec![0u8; self.slab_bytes()];
+            id
+        } else {
+            self.slabs.push(vec![0u8; self.slab_bytes()]);
+            self.refs.push(0);
+            self.scales.push(1.0);
+            self.health.push(CastHealth::default());
+            self.slabs.len() - 1
+        };
+        self.refs[id] = 1;
+        self.scales[id] = 1.0;
+        self.health[id] = CastHealth::default();
+        self.high_water_bytes = self.high_water_bytes.max(self.materialized_bytes());
+        id
+    }
+
+    /// Copy the first `rows` positions of both halves of `src` into a
+    /// fresh slab (the partial-tail copy of prefix adoption). Returns the
+    /// new slab id; bytes beyond `rows` stay zero/stale and are never
+    /// read (page gathers clip to the sequence length).
+    fn copy_rows_into_fresh(&mut self, src: usize, rows: usize) -> usize {
+        let nid = self.alloc();
+        debug_assert_ne!(src, nid, "alloc returned a live slab");
+        let bpv = self.bytes_per_value();
+        let half = SLAB_TOKENS * self.dh * bpv;
+        let n = rows * self.dh * bpv;
+        let (src_buf, dst_buf): (&[u8], &mut Vec<u8>) = if src < nid {
+            let (l, r) = self.slabs.split_at_mut(nid);
+            (&l[src], &mut r[0])
+        } else {
+            let (l, r) = self.slabs.split_at_mut(src);
+            (&r[0], &mut l[nid])
+        };
+        dst_buf[..n].copy_from_slice(&src_buf[..n]);
+        dst_buf[half..half + n].copy_from_slice(&src_buf[half..half + n]);
+        self.scales[nid] = self.scales[src];
+        self.health[nid] = self.health[src];
+        nid
+    }
+
+    /// Full-slab copy (copy-on-extend: privatize a shared slab before a
+    /// write). Returns the new slab id.
+    fn copy_full_slab(&mut self, src: usize) -> usize {
+        self.copy_rows_into_fresh(src, SLAB_TOKENS)
+    }
+
+    /// Encode one `[dh]` f32 row into slab bytes at value offset `at`.
+    fn encode_row(&mut self, id: usize, at: usize, row: &[f32]) {
+        let bpv = self.bytes_per_value();
+        let base = at * bpv;
+        match self.mode {
+            KvStoreMode::Bf16 => {
+                let slab = &mut self.slabs[id];
+                for (j, &v) in row.iter().enumerate() {
+                    let b = f32_to_bf16_bits(v).to_le_bytes();
+                    slab[base + 2 * j] = b[0];
+                    slab[base + 2 * j + 1] = b[1];
+                }
+            }
+            KvStoreMode::Fp8E4m3 => {
+                let scale = self.scales[id];
+                let h = E4M3.cast_health(row, scale);
+                let slab = &mut self.slabs[id];
+                for (j, &v) in row.iter().enumerate() {
+                    slab[base + j] = E4M3.encode(v * scale) as u8;
+                }
+                self.health[id].merge(&h);
+                self.fp8_health_total.merge(&h);
+            }
         }
-        self.slabs.push(vec![0u16; self.slab_len]);
-        self.slabs.len() - 1
+        self.bytes_written += (row.len() * bpv) as u64;
     }
 
     /// Append one position's K and V rows (`[dh]` f32, already
     /// BF16-rounded by the tower) to chain `(layer, head)` of `seq` at
     /// slot `slot`. Prefill appends slots `0..prompt_len` per chain;
-    /// decode appends at `seq.len()`. The caller commits the position via
-    /// [`SeqKv::advance`] (or [`KvPool::commit_prefill`]) once every
+    /// decode appends at `seq.len()`. A shared target slab (refcount > 1,
+    /// i.e. also held by the prefix index or another sequence) is
+    /// privatized first — copy-on-extend. The caller commits the position
+    /// via [`SeqKv::advance`] (or [`KvPool::commit_prefill`]) once every
     /// layer has appended.
     pub(crate) fn append(
         &mut self,
@@ -137,15 +377,15 @@ impl KvPool {
             let id = self.alloc();
             seq.chains[chain].push(id);
         }
-        let slab = &mut self.slabs[seq.chains[chain][si]];
-        let k_at = off * self.dh;
-        let v_at = SLAB_TOKENS * self.dh + off * self.dh;
-        for (dst, &v) in slab[k_at..k_at + self.dh].iter_mut().zip(k_row) {
-            *dst = f32_to_bf16_bits(v);
+        let mut id = seq.chains[chain][si];
+        if self.refs[id] > 1 {
+            let nid = self.copy_full_slab(id);
+            self.release(id);
+            seq.chains[chain][si] = nid;
+            id = nid;
         }
-        for (dst, &v) in slab[v_at..v_at + self.dh].iter_mut().zip(v_row) {
-            *dst = f32_to_bf16_bits(v);
-        }
+        self.encode_row(id, off * self.dh, k_row);
+        self.encode_row(id, SLAB_TOKENS * self.dh + off * self.dh, v_row);
     }
 
     /// Commit a prefill of `n` positions (every chain already appended
@@ -168,12 +408,13 @@ impl KvPool {
         seq: &SeqKv,
         chain: usize,
         len: usize,
-        kp: &mut Vec<&'a [u16]>,
-        vp: &mut Vec<&'a [u16]>,
+        kp: &mut Vec<&'a [u8]>,
+        vp: &mut Vec<&'a [u8]>,
     ) {
         let n_slabs = len.div_ceil(SLAB_TOKENS);
-        let half = SLAB_TOKENS * self.dh;
+        let half = SLAB_TOKENS * self.dh * self.bytes_per_value();
         for &id in &seq.chains[chain][..n_slabs] {
+            debug_assert_eq!(self.scales[id], 1.0, "µS static KV scale contract");
             let slab = &self.slabs[id];
             kp.push(&slab[..half]);
             vp.push(&slab[half..]);
@@ -186,6 +427,166 @@ impl KvPool {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Prefix index
+
+/// One cached prompt prefix: its token chain, the chain hashes at every
+/// full-slab boundary, and a refcounted hold on the slabs covering it.
+struct PrefixEntry {
+    /// `hashes[i]` = [`prefix_hash`] of `tokens[..(i+1)·SLAB_TOKENS]`.
+    hashes: Vec<u64>,
+    tokens: Vec<i32>,
+    /// Per-chain slab ids covering `tokens.len()` positions.
+    chains: Vec<Vec<usize>>,
+}
+
+/// Hash-keyed prompt-prefix index over a [`KvPool`].
+///
+/// Lookup finds the longest cached prefix of a prompt: the chain hashes
+/// give the longest full-slab-aligned candidate in O(slabs), a token
+/// compare verifies it (collisions can shorten a match, never corrupt
+/// one), and a token-wise extension walks into the entry's partial tail
+/// slab. Adoption shares the full slabs by refcount and copies only the
+/// partial tail ([`KvPool::copy_rows_into_fresh`]); the match is capped
+/// at `prompt_len − 1` so the admission pass always computes at least
+/// the last position's logits itself.
+///
+/// Entries are held in insertion order and evicted FIFO at `capacity` —
+/// deterministic, no clocks, no LRU state (the linter bans wall-clock
+/// reads in kernel files).
+pub(crate) struct PrefixIndex {
+    entries: Vec<PrefixEntry>,
+    capacity: usize,
+}
+
+impl PrefixIndex {
+    pub(crate) fn new(capacity: usize) -> PrefixIndex {
+        PrefixIndex { entries: Vec::new(), capacity }
+    }
+
+    /// Cached prefixes currently held.
+    pub(crate) fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Longest cached prefix of `tokens`: `(entry, matched_tokens)` with
+    /// `matched_tokens ≥ 1`, or `None`. Capped at `tokens.len() − 1`.
+    pub(crate) fn lookup(&self, tokens: &[i32]) -> Option<(usize, usize)> {
+        let cap = tokens.len().saturating_sub(1);
+        if cap == 0 {
+            return None;
+        }
+        // prompt chain hashes at each full-slab boundary within the cap
+        let n_bounds = cap / SLAB_TOKENS;
+        let mut bounds = Vec::with_capacity(n_bounds);
+        for i in 0..n_bounds {
+            bounds.push(prefix_hash(&tokens[..(i + 1) * SLAB_TOKENS]));
+        }
+        let mut best: Option<(usize, usize)> = None;
+        for (ei, e) in self.entries.iter().enumerate() {
+            // longest boundary where the chain hashes agree
+            let mut m = 0usize;
+            for i in 0..n_bounds.min(e.hashes.len()) {
+                if e.hashes[i] == bounds[i] {
+                    m = (i + 1) * SLAB_TOKENS;
+                } else {
+                    break;
+                }
+            }
+            // verify (hash collisions shorten, never corrupt), then
+            // extend token-wise into the partial tail
+            while m > 0 && e.tokens[..m] != tokens[..m] {
+                m = (m / SLAB_TOKENS - 1) * SLAB_TOKENS;
+            }
+            let lim = cap.min(e.tokens.len());
+            while m < lim && e.tokens[m] == tokens[m] {
+                m += 1;
+            }
+            let bm = best.map(|(_, bm)| bm).unwrap_or(0);
+            if m > bm {
+                best = Some((ei, m));
+            }
+        }
+        best
+    }
+
+    /// Populate empty `seq` with the first `m` positions of `entry`:
+    /// full slabs are shared by refcount, the partial tail (if any) is
+    /// copied into a private slab. Returns the bytes copied.
+    pub(crate) fn adopt(
+        &self,
+        entry: usize,
+        m: usize,
+        pool: &mut KvPool,
+        seq: &mut SeqKv,
+    ) -> u64 {
+        debug_assert_eq!(seq.len, 0, "prefix adoption on a non-empty sequence");
+        let e = &self.entries[entry];
+        debug_assert!(m <= e.tokens.len());
+        let (full, tail) = (m / SLAB_TOKENS, m % SLAB_TOKENS);
+        let mut copied = 0u64;
+        for chain in 0..e.chains.len() {
+            for i in 0..full {
+                let id = e.chains[chain][i];
+                pool.retain(id);
+                seq.chains[chain].push(id);
+            }
+            if tail > 0 {
+                let nid = pool.copy_rows_into_fresh(e.chains[chain][full], tail);
+                copied += (2 * tail * pool.dh * pool.bytes_per_value()) as u64;
+                seq.chains[chain].push(nid);
+            }
+        }
+        seq.len = m;
+        copied
+    }
+
+    /// Index the first `tokens.len()` positions of `seq` (its prompt)
+    /// under the token chain `tokens`, taking a refcount hold on every
+    /// covering slab. Duplicate token chains are not re-inserted; at
+    /// capacity the oldest entry is evicted first (FIFO).
+    pub(crate) fn insert(&mut self, tokens: &[i32], pool: &mut KvPool, seq: &SeqKv) {
+        if self.capacity == 0 || tokens.is_empty() {
+            return;
+        }
+        debug_assert!(seq.len >= tokens.len(), "prompt not fully cached at insert");
+        if self.entries.iter().any(|e| e.tokens == tokens) {
+            return;
+        }
+        while self.entries.len() >= self.capacity {
+            let e = self.entries.remove(0);
+            for chain in &e.chains {
+                for &id in chain {
+                    pool.release(id);
+                }
+            }
+        }
+        let n_slabs = tokens.len().div_ceil(SLAB_TOKENS);
+        let mut chains = Vec::with_capacity(seq.chains.len());
+        for chain in &seq.chains {
+            for &id in &chain[..n_slabs] {
+                pool.retain(id);
+            }
+            chains.push(chain[..n_slabs].to_vec());
+        }
+        let hashes = (0..tokens.len() / SLAB_TOKENS)
+            .map(|i| prefix_hash(&tokens[..(i + 1) * SLAB_TOKENS]))
+            .collect();
+        self.entries.push(PrefixEntry { hashes, tokens: tokens.to_vec(), chains });
+    }
+
+    /// Drop every entry, releasing its slab holds.
+    pub(crate) fn clear(&mut self, pool: &mut KvPool) {
+        while let Some(e) = self.entries.pop() {
+            for chain in &e.chains {
+                for &id in chain {
+                    pool.release(id);
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -193,6 +594,24 @@ mod tests {
 
     fn cfg() -> ModelConfig {
         ModelConfig { width: 16, depth: 2, head_dim: 8, ..ModelConfig::default() }
+    }
+
+    fn read_k(pool: &KvPool, seq: &SeqKv, chain: usize, len: usize, row: usize) -> Vec<f32> {
+        let (mut kp, mut vp) = (Vec::new(), Vec::new());
+        pool.pages(seq, chain, len, &mut kp, &mut vp);
+        let bpv = pool.bytes_per_value();
+        let page = &kp[row / SLAB_TOKENS];
+        let at = (row % SLAB_TOKENS) * pool.dh * bpv;
+        let mut out = vec![0f32; pool.dh];
+        crate::runtime::gemm::decode_kv_bytes(
+            match pool.mode() {
+                KvStoreMode::Bf16 => crate::runtime::gemm::KvCodec::Bf16,
+                KvStoreMode::Fp8E4m3 => unreachable!("bf16 helper"),
+            },
+            &page[at..at + pool.dh * bpv],
+            &mut out,
+        );
+        out
     }
 
     #[test]
@@ -224,9 +643,13 @@ mod tests {
         // row SLAB_TOKENS+2 lives at offset 2 of the second page
         let (k, v) = mk((SLAB_TOKENS + 2) as f32 + chain as f32 * 64.0);
         for j in 0..dh {
-            assert_eq!(bf16_to_f32(kp[1][2 * dh + j]), k[j]);
-            assert_eq!(bf16_to_f32(vp[1][2 * dh + j]), v[j]);
+            let at = (2 * dh + j) * 2;
+            let kb = u16::from_le_bytes([kp[1][at], kp[1][at + 1]]);
+            let vb = u16::from_le_bytes([vp[1][at], vp[1][at + 1]]);
+            assert_eq!(bf16_to_f32(kb), k[j]);
+            assert_eq!(bf16_to_f32(vb), v[j]);
         }
+        assert_eq!(pool.bytes_written(), (n * cfg.depth * cfg.n_heads() * 2 * dh * 2) as u64);
     }
 
     #[test]
@@ -245,6 +668,7 @@ mod tests {
         // two slabs per chain, only for the tokens actually cached
         assert_eq!(pool.slabs_in_use(), 2 * chains);
         let peak = pool.slabs_in_use();
+        assert_eq!(pool.high_water_bytes(), peak * pool.slab_bytes());
         // eviction returns every page ...
         pool.free_seq(&mut a);
         assert_eq!(pool.slabs_in_use(), 0);
@@ -262,12 +686,209 @@ mod tests {
     }
 
     #[test]
+    fn trim_releases_free_buffers_and_alloc_rematerializes() {
+        let cfg = cfg();
+        let chains = cfg.depth * cfg.n_heads();
+        let mut pool = KvPool::new(&cfg);
+        let mut a = pool.new_seq();
+        let row = vec![1.5f32; cfg.head_dim];
+        for slot in 0..3 * SLAB_TOKENS {
+            for c in 0..chains {
+                pool.append(&mut a, c, slot, &row, &row);
+            }
+            a.advance();
+        }
+        let peak_bytes = pool.materialized_bytes();
+        pool.free_seq(&mut a);
+        // all free but still materialized — trim to one slab's worth
+        assert_eq!(pool.materialized_bytes(), peak_bytes);
+        pool.trim(1);
+        assert_eq!(pool.materialized_slabs(), 1);
+        assert_eq!(pool.materialized_bytes(), pool.slab_bytes());
+        assert_eq!(pool.high_water_bytes(), peak_bytes, "high-water survives trim");
+        // a new sequence rematerializes parked slabs zero-filled and
+        // round-trips writes as usual
+        let mut b = pool.new_seq();
+        for slot in 0..2 * SLAB_TOKENS {
+            for c in 0..chains {
+                pool.append(&mut b, c, slot, &row, &row);
+            }
+            b.advance();
+        }
+        assert_eq!(pool.slabs_in_use(), 2 * chains);
+        assert_eq!(read_k(&pool, &b, 0, b.len(), SLAB_TOKENS + 1), vec![1.5f32; cfg.head_dim]);
+        // trim cannot touch in-use slabs
+        pool.trim(0);
+        assert_eq!(pool.materialized_slabs(), pool.slabs_in_use());
+    }
+
+    #[test]
+    fn fp8_mode_halves_slab_bytes_and_tracks_health() {
+        let cfg = cfg();
+        let bf16 = KvPool::new(&cfg);
+        let mut pool = KvPool::new_with_mode(&cfg, KvStoreMode::Fp8E4m3);
+        assert_eq!(pool.slab_bytes() * 2, bf16.slab_bytes());
+        assert_eq!(KvStoreMode::Fp8E4m3.bytes_per_value(), 1);
+        let mut seq = pool.new_seq();
+        // unit-scale values: representable band of E4M3, zero saturation
+        let k: Vec<f32> = (0..cfg.head_dim).map(|j| 0.25 + j as f32 * 0.125).collect();
+        let v: Vec<f32> = k.iter().map(|x| -x).collect();
+        for c in 0..cfg.depth * cfg.n_heads() {
+            pool.append(&mut seq, c, 0, &k, &v);
+        }
+        pool.commit_prefill(&mut seq, 1);
+        let h = pool.fp8_health();
+        assert_eq!(h.total, (cfg.depth * cfg.n_heads() * 2 * cfg.head_dim) as u64);
+        assert_eq!(h.saturated, 0);
+        assert_eq!(pool.fp8_saturated_slabs(), 0);
+        // read back through the FP8 codec: exactly decode(encode(x))
+        let lut = E4M3.decode_lut8();
+        let (mut kp, mut vp) = (Vec::new(), Vec::new());
+        pool.pages(&seq, 0, 1, &mut kp, &mut vp);
+        for (j, &want) in k.iter().enumerate() {
+            let got = lut[kp[0][j] as usize];
+            assert_eq!(got, E4M3.decode(E4M3.encode(want)));
+            assert_eq!(got, want, "quarter-steps are exact in E4M3");
+        }
+        // out-of-band values do register saturation per slab
+        let big = vec![1e6f32; cfg.head_dim];
+        pool.append(&mut seq, 0, 1, &big, &big);
+        assert!(pool.fp8_health().saturated > 0);
+        assert_eq!(pool.fp8_saturated_slabs(), 1);
+    }
+
+    #[test]
+    fn prefix_index_shares_full_slabs_and_copies_tails() {
+        let cfg = cfg();
+        let chains = cfg.depth * cfg.n_heads();
+        let mut pool = KvPool::new(&cfg);
+        let mut index = PrefixIndex::new(4);
+        let dh = cfg.head_dim;
+        let prompt: Vec<i32> = (0..SLAB_TOKENS as i32 + 10).collect();
+        // donor: cache the prompt, then index it
+        let mut donor = pool.new_seq();
+        for (slot, &t) in prompt.iter().enumerate() {
+            let row: Vec<f32> = (0..dh).map(|j| t as f32 + j as f32 * 0.5).collect();
+            for c in 0..chains {
+                pool.append(&mut donor, c, slot, &row, &row);
+            }
+        }
+        pool.commit_prefill(&mut donor, prompt.len());
+        index.insert(&prompt, &mut pool, &donor);
+        let held = pool.slabs_in_use();
+
+        // a longer prompt sharing the whole indexed prefix
+        let mut longer = prompt.clone();
+        longer.extend([901, 902, 903]);
+        let (e, m) = index.lookup(&longer).unwrap();
+        assert_eq!(m, prompt.len(), "full indexed prefix matches");
+        let mut adopter = pool.new_seq();
+        let copied = index.adopt(e, m, &mut pool, &mut adopter);
+        assert_eq!(adopter.len(), prompt.len());
+        // full slab shared (same id), partial tail privately copied
+        assert_eq!(adopter.chains[0][0], donor.chains[0][0]);
+        assert_ne!(adopter.chains[0][1], donor.chains[0][1]);
+        assert_eq!(copied, (chains * 2 * 10 * dh * 2) as u64);
+        // shared rows read back identically (bitwise)
+        for row in [0usize, SLAB_TOKENS - 1, SLAB_TOKENS + 9] {
+            assert_eq!(
+                read_k(&pool, &adopter, 1, adopter.len(), row),
+                read_k(&pool, &donor, 1, donor.len(), row),
+                "row {row}"
+            );
+        }
+
+        // evicting the donor must not free slabs the index still holds
+        pool.free_seq(&mut donor);
+        assert!(pool.slabs_in_use() >= held - chains, "index holds shared slabs");
+        assert_eq!(read_k(&pool, &adopter, 0, adopter.len(), 2)[0], 2.0);
+
+        // appending past the adopted prefix never perturbs the shared
+        // slabs (copy-on-extend privatizes on write)
+        let probe = read_k(&pool, &adopter, 0, adopter.len(), 0);
+        let row = vec![7.0f32; dh];
+        for c in 0..chains {
+            pool.append(&mut adopter, c, adopter.len(), &row, &row);
+        }
+        adopter.advance();
+        assert_eq!(read_k(&pool, &adopter, 0, adopter.len(), 0), probe);
+
+        // a diverging prompt matches only up to the divergence point
+        let mut fork = prompt.clone();
+        fork[SLAB_TOKENS + 2] = -1;
+        fork.push(904);
+        let (_, m2) = index.lookup(&fork).unwrap();
+        assert_eq!(m2, SLAB_TOKENS + 2);
+        // match is capped at prompt_len − 1 (the last position is always
+        // computed so admission has logits to sample from)
+        let (_, m3) = index.lookup(&prompt).unwrap();
+        assert_eq!(m3, prompt.len() - 1);
+        assert!(index.lookup(&[999]).is_none());
+
+        // clearing the index releases its holds
+        index.clear(&mut pool);
+        pool.free_seq(&mut adopter);
+        assert_eq!(pool.slabs_in_use(), 0, "all holds released");
+    }
+
+    #[test]
+    fn prefix_index_capacity_evicts_fifo_and_releases_refs() {
+        let cfg = cfg();
+        let mut pool = KvPool::new(&cfg);
+        let mut index = PrefixIndex::new(2);
+        let dh = cfg.head_dim;
+        let row = vec![0.5f32; dh];
+        let mut prompts = Vec::new();
+        for p in 0..3i32 {
+            let prompt: Vec<i32> = (0..6).map(|t| p * 100 + t).collect();
+            let mut seq = pool.new_seq();
+            for slot in 0..prompt.len() {
+                for c in 0..cfg.depth * cfg.n_heads() {
+                    pool.append(&mut seq, c, slot, &row, &row);
+                }
+            }
+            pool.commit_prefill(&mut seq, prompt.len());
+            index.insert(&prompt, &mut pool, &seq);
+            pool.free_seq(&mut seq);
+            prompts.push(prompt);
+        }
+        assert_eq!(index.len(), 2);
+        // the oldest prompt was evicted FIFO; its slabs are free again
+        assert!(index.lookup(&prompts[0]).is_none());
+        assert!(index.lookup(&prompts[2]).is_some());
+        index.clear(&mut pool);
+        assert_eq!(pool.slabs_in_use(), 0);
+        // duplicate insert is a no-op
+        let mut seq = pool.new_seq();
+        for slot in 0..4 {
+            for c in 0..cfg.depth * cfg.n_heads() {
+                pool.append(&mut seq, c, slot, &row, &row);
+            }
+        }
+        pool.commit_prefill(&mut seq, 4);
+        index.insert(&[1, 2, 3, 4], &mut pool, &seq);
+        index.insert(&[1, 2, 3, 4], &mut pool, &seq);
+        assert_eq!(index.len(), 1);
+    }
+
+    #[test]
     fn byte_accounting_matches_config_closed_forms() {
         let cfg = ModelConfig { width: 384, depth: 6, head_dim: 64, ..ModelConfig::default() };
         for ctx in [1usize, 17, 256] {
             assert_eq!(kv_bytes_read_per_token(&cfg, ctx), cfg.kv_cache_bytes_read_per_token(ctx));
+            assert_eq!(
+                kv_bytes_read_per_token_at(&cfg, ctx, 1) * 2,
+                kv_bytes_read_per_token_at(&cfg, ctx, 2),
+                "FP8 halves the read bytes"
+            );
         }
         assert_eq!(kv_bytes_written_per_token(&cfg), cfg.kv_cache_bytes_per_token());
+        for bpv in [1usize, 2] {
+            assert_eq!(
+                kv_bytes_written_per_token_at(&cfg, bpv),
+                cfg.kv_cache_bytes_per_token_at(bpv)
+            );
+        }
         let pool = KvPool::new(&cfg);
         assert_eq!(pool.slab_bytes(), 2 * SLAB_TOKENS * cfg.head_dim * KV_BYTES_PER_VALUE);
     }

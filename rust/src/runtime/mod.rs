@@ -14,8 +14,10 @@
 //!    causal attention + FFN); runs everywhere, no artifacts required.
 //!  - [`InferSession`] — the session layer's inference counterpart:
 //!    parameters quantized once (the same static casts training uses),
-//!    prefill through the training forward, incremental decode over a
-//!    paged BF16 KV cache (`runtime::kvcache`), greedy / seeded top-k
+//!    prefill through the training forward (whole-prompt or chunked),
+//!    incremental decode over a paged, refcounted KV cache
+//!    (`runtime::kvcache`) with prompt-prefix sharing and a BF16 or
+//!    static-scale E4M3 store ([`KvStoreMode`]), greedy / seeded top-k
 //!    sampling. Decode logits are bit-identical to the training forward
 //!    under static-FP8/BF16 plans — the paper's training-inference match.
 //!  - `PjrtBackend` (feature `pjrt`) — AOT HLO-text artifacts on the PJRT
@@ -39,6 +41,7 @@ mod tensor;
 
 pub use backend::{Backend, ExecStats, TensorHandle};
 pub use infer::{sample_greedy, sample_topk, InferSession, InferStats, SeqId};
+pub use kvcache::KvStoreMode;
 pub use manifest::{ArtifactMeta, Dtype, Manifest, TensorSpec};
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
