@@ -26,15 +26,16 @@ use munit::analysis::{
 use munit::config::presets::paper_table4;
 use munit::config::ModelConfig;
 use munit::coordinator::collective::WireFormat;
-use munit::coordinator::shard;
 use munit::coordinator::trainer::Trainer;
+use munit::coordinator::{checkpoint, shard};
 use munit::data::{Batcher, CorpusSpec};
 use munit::fp8::E4M3;
 use munit::perfmodel::{
-    decode_step_time, fig8, shard_comm_bytes_per_step, step_time, Hw, MeasuredKernel, Mode,
+    self, decode_step_time, fig8, shard_comm_bytes_per_step, step_time, Hw, MeasuredKernel,
+    Mode,
 };
 use munit::repro::proxy_tc;
-use munit::runtime::{open_backend, tensor_f32, Backend, InferSession};
+use munit::runtime::{open_backend, tensor_f32, Backend, InferSession, StatePrecision};
 use munit::scaling::{comparison_matrix, recommended_tau};
 use munit::util::bench::{bench, header, quick, BenchResult};
 use munit::util::json::Json;
@@ -343,11 +344,94 @@ fn main() {
                 "host_transfer_bytes_per_step",
                 Json::num((s.transfer_bytes / calls as u64) as f64),
             ),
+            ("state_bytes_per_param", Json::num(s.state_bytes_per_param)),
         ]));
         results.push(r);
     }
 
-    if !step_rows.is_empty() {
+    // ---- state-precision lanes (BENCH_step.json `state_precision`) -------
+    // The proxy config trained under each `StatePrecision` lane. Every row
+    // carries the live counters next to the perfmodel closed forms: the
+    // session's state gauge (8 vs 3 B/param), real v1/v2 checkpoint file
+    // sizes, and a tp=2 FP8-wire sharded run's comm bytes (the FP8-state
+    // lane ships momenta as native scaled-E4M3 with zero amax syncs). CI
+    // gates the exact matches plus the checkpoint + momentum-wire
+    // halvings, so the state-residency contract is tracked across PRs.
+    let mut state_rows: Vec<Json> = Vec::new();
+    for sp in [StatePrecision::F32, StatePrecision::Fp8] {
+        let cfg = ModelConfig::default();
+        let name = format!("state:train_step_{}_w{}d{}", sp.label(), cfg.width, cfg.depth);
+        if !filter.is_empty() && !name.contains(&filter) {
+            continue;
+        }
+        let Ok(trainer) = Trainer::with_state_precision(backend.as_ref(), &cfg, sp) else {
+            continue;
+        };
+        let Ok(mut session) = trainer.init(0) else { continue };
+        let mut b = Batcher::new(spec.clone(), 0, 0, 1, cfg.batch, cfg.seq_len);
+        let tokens = b.next_batch();
+        session.step(&tokens, 1e-3, 1e-4, 0.4).unwrap();
+        eprintln!("running {name}…");
+        let r = bench(&name, 1, 3, Duration::from_secs(2), || {
+            let tokens = b.next_batch();
+            std::hint::black_box(session.step(&tokens, 1e-3, 1e-4, 0.4).unwrap());
+        });
+        results.push(r);
+        let live = session.stats().clone();
+        let state_model = perfmodel::state_bytes(&cfg, sp);
+        // real checkpoint files in both codecs, against the byte forms
+        let state = session.read_back().unwrap();
+        let meta = backend.resolve("train_step", &cfg).unwrap();
+        let specs = &meta.inputs[..state.tensors.len()];
+        let dir = std::env::temp_dir();
+        let p1 = dir.join(format!("munit_bench_{}.ckpt1", sp.label()));
+        let p2 = dir.join(format!("munit_bench_{}.ckpt2", sp.label()));
+        checkpoint::save(&p1, &state, specs).unwrap();
+        checkpoint::save_v2(&p2, &state, specs, sp).unwrap();
+        let v1_file = std::fs::metadata(&p1).map(|m| m.len()).unwrap_or(0);
+        let v2_file = std::fs::metadata(&p2).map(|m| m.len()).unwrap_or(0);
+        let _ = std::fs::remove_file(&p1);
+        let _ = std::fs::remove_file(&p2);
+        let (v1_model, v2_model) =
+            (perfmodel::checkpoint_v1_bytes(&cfg), perfmodel::checkpoint_v2_bytes(&cfg, sp));
+        // tp=2 FP8-wire sharded run: measured comm vs the closed form
+        let (tp, stages) = (2usize, 1usize);
+        let wire = WireFormat::Fp8;
+        let stc = proxy_tc(3, 1.0 / 64.0, 2.0 / 16384.0, recommended_tau(cfg.depth), 0);
+        let sspec = shard::ShardSpec::new(tp, stages);
+        let opts = shard::ShardOpts::new(sspec, wire).with_state_precision(sp);
+        let sr = shard::train_sharded(backend.as_ref(), &cfg, &stc, &spec, &opts).unwrap();
+        let comm_measured = sr.comm.bytes_per_step();
+        let mom_fp8 = perfmodel::momentum_wire_bytes_per_step(&cfg, tp, wire, sp);
+        let mom_master =
+            perfmodel::momentum_wire_bytes_per_step(&cfg, tp, WireFormat::Master, sp);
+        let comm_model = perfmodel::param_wire_bytes_per_step(&cfg, tp, wire)
+            + mom_fp8
+            + perfmodel::pipeline_activation_bytes_per_step(&cfg, stages);
+        let exact = live.state_bytes == state_model
+            && v1_file == v1_model
+            && v2_file == v2_model
+            && comm_measured == comm_model;
+        state_rows.push(Json::obj(vec![
+            ("config", Json::str(&cfg.name())),
+            ("lane", Json::str(sp.label())),
+            ("state_bytes", Json::num(live.state_bytes as f64)),
+            ("state_bytes_model", Json::num(state_model as f64)),
+            ("state_bytes_per_param", Json::num(live.state_bytes_per_param)),
+            ("ckpt_v1_bytes", Json::num(v1_file as f64)),
+            ("ckpt_v1_model", Json::num(v1_model as f64)),
+            ("ckpt_v2_bytes", Json::num(v2_file as f64)),
+            ("ckpt_v2_model", Json::num(v2_model as f64)),
+            ("comm_bytes_per_step", Json::num(comm_measured as f64)),
+            ("model_bytes_per_step", Json::num(comm_model as f64)),
+            ("momentum_wire_fp8_model", Json::num(mom_fp8 as f64)),
+            ("momentum_wire_master_model", Json::num(mom_master as f64)),
+            ("amax_syncs", Json::num(sr.comm.amax_syncs as f64)),
+            ("exact_match", Json::num(if exact { 1.0 } else { 0.0 })),
+        ]));
+    }
+
+    if !step_rows.is_empty() || !state_rows.is_empty() {
         // Microbench the kernels the interpreter actually dispatched
         // (always, independent of the bench filter, so every
         // BENCH_step.json carries them) and feed the rates through the
@@ -386,6 +470,7 @@ fn main() {
                 ]),
             ),
             ("configs", Json::Arr(step_rows)),
+            ("state_precision", Json::Arr(state_rows)),
         ]);
         match std::fs::write("BENCH_step.json", format!("{doc}\n")) {
             Ok(()) => eprintln!("wrote BENCH_step.json"),

@@ -17,6 +17,26 @@
 //! magic "MUSSHRD1" | u32 tp | u32 stages | u32 step | u32 n_ranks |
 //!     n_ranks x { u32 n_tensors | tensors... }
 //! ```
+//!
+//! **Version 2** stores state in its *native* [`StatePrecision`] instead
+//! of always-f32 payloads: under FP8 state, masters serialize as BF16
+//! bit patterns (2 B/elem) and momenta as E4M3 bytes with one i32
+//! power-of-two scale exponent per tensor (1 B/elem + 4 B) — about half
+//! the v1 file. Because a session's FP8 state is already *on-grid*
+//! (values lie exactly on the BF16 / scaled-E4M3 grids), the v2
+//! round-trip is bit-exact. A per-tensor codec byte keeps the format
+//! self-describing; [`load`] / [`load_sharded`] dispatch on the magic, so
+//! v1 files remain loadable forever:
+//!
+//! ```text
+//! magic "MUSCKPT2" | u8 precision | u32 n_tensors | n_tensors x {
+//!     u32 name_len | name bytes | u32 ndim | u64 dims... |
+//!     u8 codec | payload }
+//! codec 0 = f32 raw | 1 = bf16 u16 bits | 2 = i32 scale_exp + e4m3 u8
+//!
+//! magic "MUSSHRD2" | u8 precision | u32 tp | u32 stages | u32 step |
+//!     u32 n_ranks | n_ranks x v2 state block
+//! ```
 
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
@@ -24,11 +44,19 @@ use std::path::Path;
 
 use crate::bail;
 use crate::coordinator::trainer::TrainState;
+use crate::runtime::state::{self, StatePrecision};
 use crate::runtime::{Tensor, TensorSpec};
 use crate::util::error::{Context, Result};
 
 const MAGIC: &[u8; 8] = b"MUSCKPT1";
 const SHARD_MAGIC: &[u8; 8] = b"MUSSHRD1";
+const MAGIC2: &[u8; 8] = b"MUSCKPT2";
+const SHARD_MAGIC2: &[u8; 8] = b"MUSSHRD2";
+
+/// Per-tensor payload encodings of the v2 format.
+const CODEC_F32: u8 = 0;
+const CODEC_BF16: u8 = 1;
+const CODEC_E4M3: u8 = 2;
 
 /// Write one state block (`u32 n_tensors` + named tensors) to `w`.
 /// `specs` supplies names/shapes (params then momenta, as in the train
@@ -95,6 +123,155 @@ fn read_state(r: &mut impl Read, specs: &[TensorSpec]) -> Result<TrainState> {
     Ok(TrainState { n_params: n / 2, tensors })
 }
 
+/// The v2 codec byte for tensor `idx` of a state under `precision`
+/// (params then momenta, as in the train artifact's input list).
+fn codec_for(precision: StatePrecision, idx: usize, n_params: usize) -> u8 {
+    match precision {
+        StatePrecision::F32 => CODEC_F32,
+        StatePrecision::Fp8 if idx < n_params => CODEC_BF16,
+        StatePrecision::Fp8 => CODEC_E4M3,
+    }
+}
+
+/// Write one v2 state block (`u32 n_tensors` + named tensors with a
+/// per-tensor codec byte) to `w`. Momentum scale exponents are
+/// re-derived from each tensor's amax at encode time — on-grid data
+/// (what sessions hold) reproduces the live scale, so no side channel
+/// is needed.
+fn write_state_v2(
+    w: &mut impl Write,
+    state: &TrainState,
+    specs: &[TensorSpec],
+    precision: StatePrecision,
+) -> Result<()> {
+    if specs.len() != state.tensors.len() {
+        bail!("{} specs for {} tensors", specs.len(), state.tensors.len());
+    }
+    w.write_all(&(specs.len() as u32).to_le_bytes())?;
+    for (idx, (spec, tensor)) in specs.iter().zip(&state.tensors).enumerate() {
+        let data = tensor.as_f32().with_context(|| format!("tensor {}", spec.name))?;
+        if data.len() != spec.elements() {
+            bail!("tensor {}: {} elements, spec says {}", spec.name, data.len(), spec.elements());
+        }
+        w.write_all(&(spec.name.len() as u32).to_le_bytes())?;
+        w.write_all(spec.name.as_bytes())?;
+        w.write_all(&(spec.shape.len() as u32).to_le_bytes())?;
+        for &d in &spec.shape {
+            w.write_all(&(d as u64).to_le_bytes())?;
+        }
+        let codec = codec_for(precision, idx, state.n_params);
+        w.write_all(&[codec])?;
+        match codec {
+            CODEC_BF16 => {
+                let mut bytes = Vec::with_capacity(data.len() * 2);
+                for &x in data {
+                    bytes.extend_from_slice(&state::encode_master(x).to_le_bytes());
+                }
+                w.write_all(&bytes)?;
+            }
+            CODEC_E4M3 => {
+                let (scale_exp, bytes) = state::encode_momentum(data);
+                w.write_all(&scale_exp.to_le_bytes())?;
+                w.write_all(&bytes)?;
+            }
+            _ => {
+                // bulk f32 write (same layout as v1)
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+                };
+                w.write_all(bytes)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Read one v2 state block from `r`, validating names/shapes against
+/// `specs` and decoding each tensor's codec back to f32 host tensors.
+fn read_state_v2(r: &mut impl Read, specs: &[TensorSpec]) -> Result<TrainState> {
+    let n = read_u32(r)? as usize;
+    if n != specs.len() {
+        bail!("checkpoint has {n} tensors, expected {}", specs.len());
+    }
+    let mut tensors = Vec::with_capacity(n);
+    for spec in specs {
+        let name_len = read_u32(r)? as usize;
+        if name_len > 4096 {
+            bail!("tensor name length {name_len} is implausible (corrupt header?)");
+        }
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)
+            .with_context(|| format!("reading name of tensor '{}' (truncated?)", spec.name))?;
+        let name = String::from_utf8(name)?;
+        if name != spec.name {
+            bail!("tensor order mismatch: got {name}, expected {}", spec.name);
+        }
+        let ndim = read_u32(r)? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            let mut b = [0u8; 8];
+            r.read_exact(&mut b)
+                .with_context(|| format!("reading shape of tensor '{name}' (truncated?)"))?;
+            shape.push(u64::from_le_bytes(b) as usize);
+        }
+        if shape != spec.shape {
+            bail!("tensor {name}: shape {shape:?}, expected {:?}", spec.shape);
+        }
+        let count: usize = shape.iter().product();
+        let mut codec = [0u8; 1];
+        r.read_exact(&mut codec)
+            .with_context(|| format!("reading codec byte of tensor '{name}' (truncated?)"))?;
+        let data = match codec[0] {
+            CODEC_F32 => {
+                let mut data = vec![0f32; count];
+                let bytes: &mut [u8] = unsafe {
+                    std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, count * 4)
+                };
+                r.read_exact(bytes)
+                    .with_context(|| format!("reading f32 payload of tensor '{name}'"))?;
+                data
+            }
+            CODEC_BF16 => {
+                let mut bytes = vec![0u8; count * 2];
+                r.read_exact(&mut bytes)
+                    .with_context(|| format!("reading bf16 payload of tensor '{name}'"))?;
+                bytes
+                    .chunks_exact(2)
+                    .map(|c| state::decode_master(u16::from_le_bytes([c[0], c[1]])))
+                    .collect()
+            }
+            CODEC_E4M3 => {
+                let mut b = [0u8; 4];
+                r.read_exact(&mut b)
+                    .with_context(|| format!("reading e4m3 scale of tensor '{name}'"))?;
+                let scale_exp = i32::from_le_bytes(b);
+                if !(-126..=120).contains(&scale_exp) {
+                    bail!("tensor {name}: e4m3 scale exp {scale_exp} out of range [-126, 120]");
+                }
+                let mut bytes = vec![0u8; count];
+                r.read_exact(&mut bytes)
+                    .with_context(|| format!("reading e4m3 payload of tensor '{name}'"))?;
+                state::decode_momentum(scale_exp, &bytes)
+            }
+            c => bail!("tensor {name}: unknown v2 codec byte {c}"),
+        };
+        tensors.push(Tensor::f32(data, &shape)?);
+    }
+    Ok(TrainState { n_params: n / 2, tensors })
+}
+
+/// Read + validate a v2 precision byte (0 = f32, 1 = fp8).
+fn read_precision(r: &mut impl Read, path: &Path) -> Result<StatePrecision> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b)
+        .with_context(|| format!("reading precision byte of {} (truncated?)", path.display()))?;
+    match b[0] {
+        0 => Ok(StatePrecision::F32),
+        1 => Ok(StatePrecision::Fp8),
+        p => bail!("{}: unknown state-precision byte {p} (file corrupt?)", path.display()),
+    }
+}
+
 /// Serialize a state. `specs` supplies names/shapes (params then momentum,
 /// as in the train artifact's input list).
 pub fn save(path: &Path, state: &TrainState, specs: &[TensorSpec]) -> Result<()> {
@@ -106,16 +283,44 @@ pub fn save(path: &Path, state: &TrainState, specs: &[TensorSpec]) -> Result<()>
     Ok(())
 }
 
-/// Load a checkpoint, validating names/shapes against `specs`.
+/// Serialize a state in the v2 format, storing tensors in their native
+/// `precision` (f32 raw, or BF16 masters + scaled-E4M3 momenta — about
+/// half the v1 size). Bit-exact round-trip when the state is on-grid,
+/// i.e. produced by a session running under the same policy.
+pub fn save_v2(
+    path: &Path,
+    state: &TrainState,
+    specs: &[TensorSpec],
+    precision: StatePrecision,
+) -> Result<()> {
+    let f = File::create(path).with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC2)?;
+    w.write_all(&[precision as u8])?;
+    write_state_v2(&mut w, state, specs, precision)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a checkpoint, validating names/shapes against `specs`. Both the
+/// v1 (`MUSCKPT1`, always-f32) and v2 (`MUSCKPT2`, native-precision)
+/// formats load through this one entry point — the magic selects the
+/// decoder, and v2 payloads are decoded back to f32 host tensors.
 pub fn load(path: &Path, specs: &[TensorSpec]) -> Result<TrainState> {
     let f = File::open(path).with_context(|| format!("opening {}", path.display()))?;
     let mut r = BufReader::new(f);
     let mut magic = [0u8; 8];
-    r.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        bail!("{} is not a µS checkpoint", path.display());
+    r.read_exact(&mut magic)
+        .with_context(|| format!("reading magic of {} (truncated?)", path.display()))?;
+    if &magic == MAGIC {
+        return read_state(&mut r, specs);
     }
-    read_state(&mut r, specs)
+    if &magic == MAGIC2 {
+        let _precision = read_precision(&mut r, path)?;
+        return read_state_v2(&mut r, specs)
+            .with_context(|| format!("loading v2 checkpoint {}", path.display()));
+    }
+    bail!("{} is not a µS checkpoint", path.display());
 }
 
 /// Serialize a sharded run: one state block per TP rank plus the shard
@@ -145,6 +350,35 @@ pub fn save_sharded(
     Ok(())
 }
 
+/// [`save_sharded`] in the v2 format: rank blocks store their tensors in
+/// native `precision` (see [`save_v2`]), roughly halving the file under
+/// FP8 state.
+pub fn save_sharded_v2(
+    path: &Path,
+    shards: &[TrainState],
+    specs_per_rank: &[Vec<TensorSpec>],
+    tp: u32,
+    stages: u32,
+    step: u32,
+    precision: StatePrecision,
+) -> Result<()> {
+    if shards.len() != specs_per_rank.len() || shards.len() != tp as usize {
+        bail!("{} shard states / {} spec sets for tp={tp}", shards.len(), specs_per_rank.len());
+    }
+    let f = File::create(path).with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(SHARD_MAGIC2)?;
+    w.write_all(&[precision as u8])?;
+    for v in [tp, stages, step, shards.len() as u32] {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    for (state, specs) in shards.iter().zip(specs_per_rank) {
+        write_state_v2(&mut w, state, specs, precision)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
 /// Load a sharded checkpoint, rejecting a geometry mismatch: the file's
 /// `(tp, stages)` must equal the requested ones — resuming under a
 /// different `ShardSpec` requires an explicit repartition via a full
@@ -159,9 +393,14 @@ pub fn load_sharded(
     let f = File::open(path).with_context(|| format!("opening {}", path.display()))?;
     let mut r = BufReader::new(f);
     let mut magic = [0u8; 8];
-    r.read_exact(&mut magic)?;
-    if &magic != SHARD_MAGIC {
+    r.read_exact(&mut magic)
+        .with_context(|| format!("reading magic of {} (truncated?)", path.display()))?;
+    let v2 = &magic == SHARD_MAGIC2;
+    if !v2 && &magic != SHARD_MAGIC {
         bail!("{} is not a sharded µS checkpoint", path.display());
+    }
+    if v2 {
+        let _precision = read_precision(&mut r, path)?;
     }
     let (file_tp, file_stages) = (read_u32(&mut r)?, read_u32(&mut r)?);
     let (step, n_ranks) = (read_u32(&mut r)?, read_u32(&mut r)?);
@@ -177,7 +416,7 @@ pub fn load_sharded(
     }
     let mut shards = Vec::with_capacity(n_ranks as usize);
     for specs in specs_per_rank {
-        shards.push(read_state(&mut r, specs)?);
+        shards.push(if v2 { read_state_v2(&mut r, specs)? } else { read_state(&mut r, specs)? });
     }
     Ok((shards, step))
 }
@@ -186,4 +425,134 @@ fn read_u32(r: &mut impl Read) -> Result<u32> {
     let mut b = [0u8; 4];
     r.read_exact(&mut b)?;
     Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Dtype;
+    use crate::util::rng::Rng;
+
+    fn spec(name: &str, shape: &[usize]) -> TensorSpec {
+        TensorSpec { name: name.to_string(), shape: shape.to_vec(), dtype: Dtype::F32 }
+    }
+
+    /// A 2-tensor (1 param + 1 momentum) on-grid state: masters on the
+    /// BF16 grid, momenta on the scaled-E4M3 grid — what a session
+    /// running under FP8 state actually holds.
+    fn on_grid_state(count: usize, seed: u64) -> (TrainState, Vec<TensorSpec>) {
+        let mut rng = Rng::new(seed);
+        let mut w = vec![0f32; count];
+        let mut m = vec![0f32; count];
+        rng.fill_normal(&mut w, 1.0);
+        rng.fill_normal(&mut m, 0.02);
+        state::snap_master(&mut w);
+        state::snap_momentum(&mut m);
+        let specs = vec![spec("w", &[count]), spec("m_w", &[count])];
+        let tensors = vec![
+            Tensor::f32(w, &[count]).unwrap(),
+            Tensor::f32(m, &[count]).unwrap(),
+        ];
+        (TrainState { n_params: 1, tensors }, specs)
+    }
+
+    fn bits_of(state: &TrainState) -> Vec<Vec<u32>> {
+        state
+            .tensors
+            .iter()
+            .map(|t| t.as_f32().unwrap().iter().map(|x| x.to_bits()).collect())
+            .collect()
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("munit_ckpt_v2_{name}.bin"))
+    }
+
+    #[test]
+    fn v2_roundtrips_bit_exact_for_both_precisions() {
+        for (precision, tag) in [(StatePrecision::F32, "f32"), (StatePrecision::Fp8, "fp8")] {
+            let (state, specs) = on_grid_state(33, 7);
+            let path = tmp(&format!("rt_{tag}"));
+            save_v2(&path, &state, &specs, precision).unwrap();
+            let loaded = load(&path, &specs).unwrap();
+            assert_eq!(loaded.n_params, 1);
+            assert_eq!(bits_of(&loaded), bits_of(&state), "{tag} round-trip not bit-exact");
+            std::fs::remove_file(&path).ok();
+        }
+    }
+
+    #[test]
+    fn v2_fp8_file_is_less_than_half_the_v1_size() {
+        let (state, specs) = on_grid_state(4096, 11);
+        let (p1, p2) = (tmp("size_v1"), tmp("size_v2"));
+        save(&p1, &state, &specs).unwrap();
+        save_v2(&p2, &state, &specs, StatePrecision::Fp8).unwrap();
+        let (s1, s2) = (
+            std::fs::metadata(&p1).unwrap().len(),
+            std::fs::metadata(&p2).unwrap().len(),
+        );
+        // payload ratio is (2+1)/(4+4) = 0.375; headers are O(1)
+        assert!(2 * s2 <= s1, "v2 ({s2} B) is not half of v1 ({s1} B)");
+        std::fs::remove_file(&p1).ok();
+        std::fs::remove_file(&p2).ok();
+    }
+
+    #[test]
+    fn v1_files_still_load_through_the_same_entry_point() {
+        let (state, specs) = on_grid_state(17, 13);
+        let path = tmp("v1_compat");
+        save(&path, &state, &specs).unwrap();
+        let loaded = load(&path, &specs).unwrap();
+        assert_eq!(bits_of(&loaded), bits_of(&state));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v2_rejects_corruption_with_contextual_errors() {
+        let count = 8usize;
+        let (state, specs) = on_grid_state(count, 17);
+        let path = tmp("corrupt");
+        save_v2(&path, &state, &specs, StatePrecision::Fp8).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        // v2 layout: magic(8) precision(1) n(4), then per-tensor blocks of
+        //   name_len(4) name ndim(4) dims(8*nd) codec(1) payload.
+        let codec0 = 8 + 1 + 4 + (4 + 1 + 4 + 8); // first tensor "w"
+        let block0 = 4 + 1 + 4 + 8 + 1 + 2 * count; // bf16 payload
+        let scale1 = 8 + 1 + 4 + block0 + (4 + 3 + 4 + 8) + 1; // "m_w" scale
+        let cases: [(&str, usize, u8, &str); 3] = [
+            ("precision byte", 8, 9, "unknown state-precision byte 9"),
+            ("codec byte", codec0, 7, "unknown v2 codec byte 7"),
+            ("scale exponent", scale1, 127, "out of range"),
+        ];
+        for (what, offset, value, needle) in cases {
+            let mut bad = good.clone();
+            bad[offset] = value;
+            std::fs::write(&path, &bad).unwrap();
+            let err = load(&path, &specs).unwrap_err().to_string();
+            assert!(err.contains(needle), "{what}: error '{err}' lacks '{needle}'");
+        }
+        // truncation mid-payload names the tensor being read
+        std::fs::write(&path, &good[..good.len() - 3]).unwrap();
+        let err = load(&path, &specs).unwrap_err().to_string();
+        assert!(err.contains("m_w"), "truncation error '{err}' does not name the tensor");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn sharded_v2_roundtrips_and_rejects_geometry_mismatch() {
+        let (s0, specs0) = on_grid_state(12, 19);
+        let (s1, specs1) = on_grid_state(12, 23);
+        let shards = vec![s0, s1];
+        let specs = vec![specs0, specs1];
+        let path = tmp("shard");
+        save_sharded_v2(&path, &shards, &specs, 2, 1, 5, StatePrecision::Fp8).unwrap();
+        let (loaded, step) = load_sharded(&path, &specs, 2, 1).unwrap();
+        assert_eq!(step, 5);
+        for (l, s) in loaded.iter().zip(&shards) {
+            assert_eq!(bits_of(l), bits_of(s));
+        }
+        let err = load_sharded(&path, &specs, 4, 1).unwrap_err().to_string();
+        assert!(err.contains("tp=2"), "geometry error '{err}' lacks the saved tp");
+        std::fs::remove_file(&path).ok();
+    }
 }

@@ -31,6 +31,7 @@
 
 use crate::coordinator::trainer::TrainState;
 use crate::fp8::{CastHealth, FastCast, E4M3, E5M2};
+use crate::runtime::state::{self, StatePrecision};
 use crate::runtime::{ExecStats, Tensor};
 use crate::telemetry;
 use crate::util::error::Result;
@@ -46,7 +47,11 @@ pub enum WireFormat {
     Master,
     /// FP8 wire with static scale 1.0: params cross as E4M3, momenta as
     /// E5M2 (the wider-range format — Lion momenta are grad-scale EMAs).
-    /// 1 B/elem and zero scale/amax exchange.
+    /// 1 B/elem and zero scale/amax exchange. Under FP8 *state*
+    /// ([`Collectives::with_state`]) momenta instead ship **natively**
+    /// as the scaled-E4M3 bytes the optimizer already holds — no
+    /// re-cast, 1 B/elem + 4 B of per-tensor scale metadata, and still
+    /// zero amax syncs (the scale is derived locally from the shard).
     Fp8,
 }
 
@@ -135,6 +140,7 @@ pub fn reduce_mean_state(states: &[TrainState]) -> Result<TrainState> {
 /// accounts every byte that crosses the worker boundary.
 pub struct Collectives {
     wire: WireFormat,
+    state: StatePrecision,
     param_cast: FastCast,
     mom_cast: FastCast,
     /// Aggregate transfer accounting (`transfer_bytes` = total wire
@@ -154,10 +160,18 @@ pub struct Collectives {
 }
 
 impl Collectives {
-    /// New engine with the given wire format and zeroed counters.
+    /// New engine with the given wire format, f32 state, zeroed counters.
     pub fn new(wire: WireFormat) -> Collectives {
+        Collectives::with_state(wire, StatePrecision::F32)
+    }
+
+    /// [`Collectives::new`] under an explicit [`StatePrecision`]. With
+    /// FP8 state + FP8 wire, momentum legs ship the optimizer's native
+    /// scaled-E4M3 representation instead of re-casting to E5M2.
+    pub fn with_state(wire: WireFormat, state: StatePrecision) -> Collectives {
         Collectives {
             wire,
+            state,
             param_cast: E4M3.fast_caster(),
             mom_cast: E5M2.fast_caster(),
             stats: ExecStats::default(),
@@ -174,14 +188,39 @@ impl Collectives {
         self.wire
     }
 
+    /// The state-precision policy the wire serves.
+    pub fn state_precision(&self) -> StatePrecision {
+        self.state
+    }
+
     /// Total wire bytes across all collective classes.
     pub fn total_bytes(&self) -> u64 {
         self.allgather_bytes + self.reduce_scatter_bytes + self.activation_bytes
     }
 
-    fn apply_wire(&mut self, data: &mut [f32], payload: Payload, rank: usize) {
+    /// Quantize a payload for the wire; returns the per-receiver
+    /// metadata overhead in bytes (zero except for the native scaled
+    /// momentum leg, whose i32 scale exponent rides along).
+    fn apply_wire(&mut self, data: &mut [f32], payload: Payload, rank: usize) -> u64 {
         if self.wire != WireFormat::Fp8 {
-            return;
+            return 0;
+        }
+        if payload == Payload::Momentum && self.state == StatePrecision::Fp8 {
+            // Native momentum leg: the optimizer state is already on a
+            // scaled-E4M3 grid, so the wire ships those exact bytes (the
+            // requantize below is a bit-exact no-op on on-grid data).
+            // The scale exponent is derived *locally* from the shard's
+            // amax — amax_syncs stays 0 — and crosses as 4 B of
+            // per-tensor metadata next to the 1 B/elem payload.
+            let k = state::momentum_scale(data);
+            let (scale, inv) = (state::pow2(k), state::pow2(-k));
+            let h = E4M3.cast_health(data, inv);
+            self.health.merge(&h);
+            telemetry::record_cast("wire_mom", rank, "e4m3", h);
+            for x in data.iter_mut() {
+                *x = self.param_cast.cast(*x * inv) * scale;
+            }
+            return 4;
         }
         let (fmt, caster, op, name) = match payload {
             Payload::Param => (E4M3, &self.param_cast, "wire_param", "e4m3"),
@@ -193,6 +232,7 @@ impl Collectives {
         self.health.merge(&h);
         telemetry::record_cast(op, rank, name, h);
         caster.quantize_slice(data);
+        0
     }
 
     /// Allgather leg for one rank's shard of a tensor: every one of the
@@ -204,8 +244,8 @@ impl Collectives {
             return;
         }
         let t0 = std::time::Instant::now();
-        self.apply_wire(data, payload, rank);
-        let bytes = (tp as u64 - 1) * data.len() as u64 * self.wire.bytes_per_elem();
+        let overhead = self.apply_wire(data, payload, rank);
+        let bytes = (tp as u64 - 1) * (data.len() as u64 * self.wire.bytes_per_elem() + overhead);
         self.allgather_bytes += bytes;
         self.stats.transfer_bytes += bytes;
         self.stats.transfer_time += t0.elapsed();
@@ -227,8 +267,8 @@ impl Collectives {
             return;
         }
         let t0 = std::time::Instant::now();
-        self.apply_wire(data, payload, rank);
-        let bytes = (tp as u64 - 1) * data.len() as u64 * self.wire.bytes_per_elem();
+        let overhead = self.apply_wire(data, payload, rank);
+        let bytes = (tp as u64 - 1) * (data.len() as u64 * self.wire.bytes_per_elem() + overhead);
         self.reduce_scatter_bytes += bytes;
         self.stats.transfer_bytes += bytes;
         self.stats.transfer_time += t0.elapsed();
@@ -311,6 +351,46 @@ mod tests {
         assert_eq!(orig, data);
         assert_eq!(coll.allgather_bytes, 3 * 3 * 4); // (4-1) x 3 elems x 4 B
         assert_eq!(coll.health.total, 0);
+    }
+
+    #[test]
+    fn fp8_state_momentum_leg_ships_native_e4m3_without_amax_syncs() {
+        let mut coll = Collectives::with_state(WireFormat::Fp8, StatePrecision::Fp8);
+        // on-grid momentum (what an FP8-state session holds): the native
+        // wire must pass it through bit-exactly, scale derived locally
+        let mut rng = crate::util::rng::Rng::new(11);
+        let mut data = vec![0f32; 64];
+        rng.fill_normal(&mut data, 0.02);
+        state::snap_momentum(&mut data);
+        let on_grid = data.clone();
+        coll.allgather_shard(&mut data, Payload::Momentum, 4, 0);
+        let bits = |xs: &[f32]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&on_grid), bits(&data), "native leg re-cast on-grid momentum");
+        // (tp-1) x (64 elems x 1 B + 4 B scale metadata)
+        assert_eq!(coll.allgather_bytes, 3 * (64 + 4));
+        assert_eq!(coll.amax_syncs, 0);
+        assert_eq!(coll.health.total, 64);
+        assert_eq!(coll.health.saturated, 0, "scaled grid never saturates");
+        // values far below E5M2's subnormal floor survive the scaled leg
+        let tiny = state::pow2(-30);
+        let mut small = vec![tiny; 8];
+        coll.reduce_scatter_shard(&mut small, Payload::Momentum, 2, 1);
+        assert!(small.iter().all(|&x| x > 0.0), "scaled e4m3 lost a tiny momentum");
+        assert_eq!(coll.reduce_scatter_bytes, 8 + 4);
+    }
+
+    #[test]
+    fn f32_state_momentum_leg_keeps_the_e5m2_wire_and_byte_counts() {
+        let mut coll = Collectives::with_state(WireFormat::Fp8, StatePrecision::F32);
+        let mut data = vec![0.5f32, -0.25, 1.5, 2.0];
+        coll.allgather_shard(&mut data, Payload::Momentum, 2, 0);
+        assert_eq!(coll.allgather_bytes, 4, "f32-state momentum leg must stay 1 B/elem, no scale");
+        assert_eq!(coll.amax_syncs, 0);
+        // E5M2 wire underflows below its subnormal floor — the contrast
+        // the native scaled leg exists to avoid
+        let mut tiny = vec![1e-6f32; 4];
+        coll.allgather_shard(&mut tiny, Payload::Momentum, 2, 0);
+        assert!(tiny.iter().all(|&x| x == 0.0));
     }
 
     #[test]

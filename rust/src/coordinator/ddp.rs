@@ -23,7 +23,7 @@ use crate::coordinator::pipeline::DataPipeline;
 use crate::coordinator::trainer::{RunResult, TrainState, Trainer};
 use crate::data::CorpusSpec;
 use crate::err;
-use crate::runtime::{Backend, Session};
+use crate::runtime::{Backend, Session, StatePrecision};
 use crate::util::error::Result;
 
 /// Mean of the workers' states (the "allreduce"), via the deterministic
@@ -109,7 +109,22 @@ pub fn train_ddp(
     corpus: &CorpusSpec,
     n_workers: usize,
 ) -> Result<RunResult> {
-    let trainer = Trainer::new(backend, cfg)?;
+    train_ddp_with_precision(backend, cfg, tc, corpus, n_workers, StatePrecision::F32)
+}
+
+/// [`train_ddp`] under an explicit [`StatePrecision`]. Under FP8 state the
+/// allreduce mean lands off-grid; each worker's `load_state` re-snaps it
+/// onto the E4M3/BF16 grids, so all workers hold bit-identical on-grid
+/// state after every collective.
+pub fn train_ddp_with_precision(
+    backend: &dyn Backend,
+    cfg: &ModelConfig,
+    tc: &TrainConfig,
+    corpus: &CorpusSpec,
+    n_workers: usize,
+    state_precision: StatePrecision,
+) -> Result<RunResult> {
+    let trainer = Trainer::with_state_precision(backend, cfg, state_precision)?;
     let mut sessions = Vec::with_capacity(n_workers);
     for _ in 0..n_workers {
         sessions.push(trainer.init(tc.init_seed)?);

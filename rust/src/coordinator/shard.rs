@@ -43,7 +43,7 @@ use crate::coordinator::trainer::{RunResult, TrainState};
 use crate::data::CorpusSpec;
 use crate::fp8::CastHealth;
 use crate::runtime::block::{self, ShardAxis};
-use crate::runtime::{Backend, Dtype, Session, Tensor, TensorSpec};
+use crate::runtime::{Backend, Dtype, Session, StatePrecision, Tensor, TensorSpec};
 use crate::scaling::ShardDim;
 use crate::util::error::{Context, Result};
 use crate::util::stats::Ema;
@@ -307,12 +307,22 @@ pub struct ShardOpts {
     pub save_at: Option<(usize, PathBuf)>,
     /// Resume from a sharded checkpoint (its spec must match).
     pub resume_from: Option<PathBuf>,
+    /// Optimizer/master state-storage policy of every rank's session.
+    /// Under [`StatePrecision::Fp8`] the momentum collective legs ship
+    /// the native scaled-E4M3 bytes and `save_at` writes v2 checkpoints.
+    pub state: StatePrecision,
 }
 
 impl ShardOpts {
-    /// Options with no checkpointing.
+    /// Options with no checkpointing, f32 state.
     pub fn new(spec: ShardSpec, wire: WireFormat) -> ShardOpts {
-        ShardOpts { spec, wire, save_at: None, resume_from: None }
+        ShardOpts { spec, wire, save_at: None, resume_from: None, state: StatePrecision::F32 }
+    }
+
+    /// Same options under an explicit [`StatePrecision`].
+    pub fn with_state_precision(mut self, state: StatePrecision) -> ShardOpts {
+        self.state = state;
+        self
     }
 }
 
@@ -413,11 +423,11 @@ pub fn train_sharded(
     opts.spec.validate(cfg)?;
     validate_scales(cfg, &opts.spec)?;
     let spec = opts.spec;
-    let mut coll = Collectives::new(opts.wire);
+    let mut coll = Collectives::with_state(opts.wire, opts.state);
     let slots = gpipe::schedule(spec.stages, spec.microbatches);
     let send_elems = (cfg.batch / spec.microbatches) * cfg.seq_len * cfg.width;
 
-    let mut session = Session::new(backend, cfg)?;
+    let mut session = Session::with_precision(backend, cfg, opts.state)?;
     let n_params = session.n_params_tensors();
     let sharded_idx: Vec<usize> = (0..2 * n_params)
         .filter(|&idx| block::shard_axis(block::role_of(cfg, idx % n_params)).is_some())
@@ -494,7 +504,7 @@ pub fn train_sharded(
         }
         if let Some((at, path)) = &opts.save_at {
             if step + 1 == *at {
-                save_checkpoint(path, cfg, &spec, step + 1, &shards)?;
+                save_checkpoint(path, cfg, &spec, step + 1, &shards, opts.state)?;
             }
         }
     }
@@ -518,23 +528,32 @@ pub fn train_sharded(
     })
 }
 
-/// Save the per-rank shard states (+ spec + step) as one file.
+/// Save the per-rank shard states (+ spec + step) as one file: the v1
+/// always-f32 container under f32 state, the half-size native v2
+/// container under FP8 state.
 pub fn save_checkpoint(
     path: &Path,
     cfg: &ModelConfig,
     spec: &ShardSpec,
     step: usize,
     shards: &[TrainState],
+    precision: StatePrecision,
 ) -> Result<()> {
     let specs: Vec<Vec<TensorSpec>> =
         (0..spec.tp).map(|r| shard_state_specs(cfg, spec, r)).collect();
-    checkpoint::save_sharded(path, shards, &specs, spec.tp as u32, spec.stages as u32, step as u32)
-        .with_context(|| format!("saving sharded checkpoint {}", path.display()))
+    let (tp, stages, step) = (spec.tp as u32, spec.stages as u32, step as u32);
+    match precision {
+        StatePrecision::F32 => checkpoint::save_sharded(path, shards, &specs, tp, stages, step),
+        StatePrecision::Fp8 => {
+            checkpoint::save_sharded_v2(path, shards, &specs, tp, stages, step, precision)
+        }
+    }
+    .with_context(|| format!("saving sharded checkpoint {}", path.display()))
 }
 
-/// Load a sharded checkpoint, rejecting any [`ShardSpec`] mismatch with
-/// a contextual error. Returns the per-rank states and the step count
-/// the checkpoint was taken at.
+/// Load a sharded checkpoint (v1 or v2 — the magic selects the decoder),
+/// rejecting any [`ShardSpec`] mismatch with a contextual error. Returns
+/// the per-rank states and the step count the checkpoint was taken at.
 pub fn load_checkpoint(
     path: &Path,
     cfg: &ModelConfig,

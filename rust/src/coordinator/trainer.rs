@@ -11,7 +11,7 @@ use std::time::{Duration, Instant};
 
 use crate::config::{ModelConfig, TrainConfig};
 use crate::data::Batcher;
-use crate::runtime::{Backend, Session};
+use crate::runtime::{Backend, Session, StatePrecision};
 use crate::util::error::Result;
 use crate::util::stats::Ema;
 
@@ -72,19 +72,41 @@ pub struct Trainer<'b> {
     pub cfg: ModelConfig,
     train_name: String,
     n_params: usize,
+    state_precision: StatePrecision,
 }
 
 impl<'b> Trainer<'b> {
-    /// Resolve and validate the config's artifacts on `backend`.
+    /// Resolve and validate the config's artifacts on `backend`. State is
+    /// stored at f32 (the bit-compat default); see
+    /// [`Trainer::with_state_precision`] for the FP8 state policy.
     pub fn new(backend: &'b dyn Backend, cfg: &ModelConfig) -> Result<Trainer<'b>> {
-        // Session::new performs artifact resolution + ABI validation.
-        let probe = Session::new(backend, cfg)?;
+        Trainer::with_state_precision(backend, cfg, StatePrecision::F32)
+    }
+
+    /// [`Trainer::new`] under an explicit [`StatePrecision`]: every
+    /// session this trainer builds stores optimizer + master state under
+    /// that policy (`fp8` = E4M3 momentum + BF16 masters, 3 B/param
+    /// element, reported by the session's `ExecStats` gauges).
+    pub fn with_state_precision(
+        backend: &'b dyn Backend,
+        cfg: &ModelConfig,
+        state_precision: StatePrecision,
+    ) -> Result<Trainer<'b>> {
+        // Session::with_precision performs artifact resolution + ABI
+        // validation for the policy's train-step kind.
+        let probe = Session::with_precision(backend, cfg, state_precision)?;
         Ok(Trainer {
             backend,
             cfg: cfg.clone(),
             train_name: probe.train_artifact().to_string(),
             n_params: probe.n_params_tensors(),
+            state_precision,
         })
+    }
+
+    /// The state-storage policy this trainer's sessions run under.
+    pub fn state_precision(&self) -> StatePrecision {
+        self.state_precision
     }
 
     /// The backend this trainer resolves against.
@@ -104,14 +126,14 @@ impl<'b> Trainer<'b> {
 
     /// Fresh session with state initialized on-device from `seed`.
     pub fn init(&self, seed: i32) -> Result<Session<'b>> {
-        let mut s = Session::new(self.backend, &self.cfg)?;
+        let mut s = Session::with_precision(self.backend, &self.cfg, self.state_precision)?;
         s.init(seed)?;
         Ok(s)
     }
 
     /// Fresh session loaded from a host snapshot (checkpoint resume).
     pub fn session_from(&self, state: &TrainState) -> Result<Session<'b>> {
-        let mut s = Session::new(self.backend, &self.cfg)?;
+        let mut s = Session::with_precision(self.backend, &self.cfg, self.state_precision)?;
         s.load_state(state)?;
         Ok(s)
     }

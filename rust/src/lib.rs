@@ -27,6 +27,12 @@
 //!     state between steps: per-step host traffic is tokens in, loss/gnorm
 //!     out (constant lr/wd/tau handles are cached on-device); full-state
 //!     transfers happen only at checkpoint/probe boundaries (`read_back`).
+//!     [`runtime::StatePrecision`] is the storage policy for that state —
+//!     f32 (8 B/param, bit-compat default) or FP8 (BF16 masters +
+//!     per-tensor power-of-two scaled E4M3 Lion momentum, 3 B/param,
+//!     kept on-grid so checkpoints and the collective wire round-trip
+//!     bit-exactly; `ExecStats` gauges the bytes, `perfmodel` prices
+//!     them in closed form).
 //!     The **inference layer** rides the same op pipeline:
 //!     [`runtime::InferSession`] quantizes params once (the training
 //!     casts), prefills through the training forward (bit-identical

@@ -42,8 +42,12 @@
 //! Flags: --artifacts DIR (default ./artifacts), --results DIR (default
 //! ./results), --backend auto|reference|pjrt (default auto), --fast
 //! (shrink steps/grids; coordcheck/transfer also take --widths a,b,c and
-//! --steps N). Without AOT artifacts (or without the `pjrt` feature)
-//! everything runs on the pure-Rust reference backend.
+//! --steps N). Training commands (train, train-one, ddp, shard,
+//! bench-step) take --state-precision f32|fp8: the optimizer + master
+//! state storage policy (f32 = 8 B/param bit-compat default; fp8 = BF16
+//! masters + scaled-E4M3 Lion momentum, 3 B/param). Without AOT
+//! artifacts (or without the `pjrt` feature) everything runs on the
+//! pure-Rust reference backend.
 
 #![allow(clippy::uninlined_format_args)]
 
@@ -55,7 +59,7 @@ use munit::coordinator::collective::WireFormat;
 use munit::coordinator::{ddp, metrics::MetricsLogger, shard, sweep, trainer::Trainer, transfer};
 use munit::data::Batcher;
 use munit::repro::{self, corpus_for, proxy_tc, Ctx};
-use munit::runtime::{open_backend, Backend, ReferenceBackend};
+use munit::runtime::{open_backend, Backend, ReferenceBackend, StatePrecision};
 use munit::scaling::recommended_tau;
 use munit::util::error::{Context, Result};
 
@@ -243,7 +247,8 @@ fn cmd_train(cli: &Cli) -> Result<()> {
     let cfg = cli.named_config(backend.as_ref())?;
     let name = cfg.name();
     let tc = tc_from_args(&cli.args, &cfg);
-    let trainer = Trainer::new(backend.as_ref(), &cfg)?;
+    let sp = state_precision_from_args(&cli.args)?;
+    let trainer = Trainer::with_state_precision(backend.as_ref(), &cfg, sp)?;
     let mut batcher = Batcher::new(corpus_for(&cfg), tc.seed, 0, 1, cfg.batch, cfg.seq_len);
     let mut log = MetricsLogger::create(&cli.results, &format!("train_{name}"))?;
     let log_every = tc.log_every;
@@ -258,11 +263,13 @@ fn cmd_train(cli: &Cli) -> Result<()> {
     })?;
     log.log_summary(&name, &r)?;
     println!(
-        "done: {} steps, final loss {:.4}, {:.0} tok/s{}",
+        "done: {} steps, final loss {:.4}, {:.0} tok/s{} (state {} = {} B/param)",
         r.steps_done,
         r.final_loss(10),
         r.tokens_per_sec,
-        if r.diverged { " [DIVERGED]" } else { "" }
+        if r.diverged { " [DIVERGED]" } else { "" },
+        sp.label(),
+        sp.bytes_per_param_elem()
     );
     Ok(())
 }
@@ -271,7 +278,8 @@ fn cmd_train_one(cli: &Cli) -> Result<()> {
     let backend = cli.backend()?;
     let cfg = cli.named_config(backend.as_ref())?;
     let tc = tc_from_args(&cli.args, &cfg);
-    let trainer = Trainer::new(backend.as_ref(), &cfg)?;
+    let sp = state_precision_from_args(&cli.args)?;
+    let trainer = Trainer::with_state_precision(backend.as_ref(), &cfg, sp)?;
     let mut batcher = Batcher::new(corpus_for(&cfg), tc.seed, 0, 1, cfg.batch, cfg.seq_len);
     let r = trainer.run(&tc, &mut batcher)?;
     println!("{}", munit::coordinator::metrics::summary_json(&cfg.name(), &r));
@@ -325,7 +333,9 @@ fn cmd_ddp(cli: &Cli) -> Result<()> {
     let cfg = cli.named_config(backend.as_ref())?;
     let tc = tc_from_args(&cli.args, &cfg);
     let workers = cli.args.usize_or("workers", 2);
-    let r = ddp::train_ddp(backend.as_ref(), &cfg, &tc, &corpus_for(&cfg), workers)?;
+    let sp = state_precision_from_args(&cli.args)?;
+    let corpus = corpus_for(&cfg);
+    let r = ddp::train_ddp_with_precision(backend.as_ref(), &cfg, &tc, &corpus, workers, sp)?;
     println!(
         "ddp x{}: {} steps, final loss {:.4}, {:.0} tok/s (aggregate)",
         workers,
@@ -347,23 +357,22 @@ fn cmd_shard(cli: &Cli) -> Result<()> {
     let wire_name = cli.args.get("wire").unwrap_or("master");
     let wire = WireFormat::by_name(wire_name)
         .with_context(|| format!("unknown wire '{wire_name}' (master|fp8)"))?;
-    let opts = shard::ShardOpts::new(spec, wire);
+    let sp = state_precision_from_args(&cli.args)?;
+    let opts = shard::ShardOpts::new(spec, wire).with_state_precision(sp);
     let r = shard::train_sharded(backend.as_ref(), &cfg, &tc, &corpus_for(&cfg), &opts)?;
     println!(
-        "shard {} wire={}: {} steps, final loss {:.4}, {:.0} tok/s{}",
+        "shard {} wire={} state={}: {} steps, final loss {:.4}, {:.0} tok/s{}",
         spec.describe(),
         wire.label(),
+        sp.label(),
         r.run.steps_done,
         r.run.final_loss(10),
         r.run.tokens_per_sec,
         if r.run.diverged { " (diverged)" } else { "" }
     );
-    let modeled = munit::perfmodel::shard_comm_bytes_per_step(
-        &cfg,
-        tp,
-        stages,
-        wire.bytes_per_elem() as usize,
-    );
+    let modeled = munit::perfmodel::param_wire_bytes_per_step(&cfg, tp, wire)
+        + munit::perfmodel::momentum_wire_bytes_per_step(&cfg, tp, wire, sp)
+        + munit::perfmodel::pipeline_activation_bytes_per_step(&cfg, stages);
     let measured = r.comm.bytes_per_step();
     println!(
         "  comm/step: allgather {} B, reduce-scatter {} B, activations {} B -> {} B \
@@ -423,7 +432,8 @@ fn cmd_traffic(cli: &Cli) -> Result<()> {
 fn cmd_bench_step(cli: &Cli) -> Result<()> {
     let backend = cli.backend()?;
     let cfg = cli.named_config(backend.as_ref())?;
-    bench_step(backend.as_ref(), &cfg, cli.args.usize_or("steps", 20))
+    let sp = state_precision_from_args(&cli.args)?;
+    bench_step(backend.as_ref(), &cfg, cli.args.usize_or("steps", 20), sp)
 }
 
 /// Harness shape for coordcheck/transfer: `--fast` picks the smoke
@@ -816,6 +826,13 @@ fn parse_range(s: &str) -> Result<(i32, i32)> {
     Ok((a.parse()?, b.parse()?))
 }
 
+/// Parse `--state-precision f32|fp8` (default f32, the bit-compat lane).
+fn state_precision_from_args(args: &Args) -> Result<StatePrecision> {
+    let name = args.get("state-precision").unwrap_or("f32");
+    StatePrecision::by_name(name)
+        .with_context(|| format!("unknown state precision '{name}' (f32|fp8)"))
+}
+
 fn tc_from_args(args: &Args, cfg: &ModelConfig) -> TrainConfig {
     let default_lr = if cfg.variant == "mus" { 1.0 / 64.0 } else { 1.0 / 256.0 };
     let mut tc = proxy_tc(
@@ -938,8 +955,13 @@ fn e2e(ctx: &Ctx, steps: usize) -> Result<String> {
 /// Per-step latency + host-transfer breakdown (L3 perf tooling). The
 /// transfer column is the Session's per-step accounting: tokens in,
 /// loss/gnorm out — full state never crosses the host boundary.
-fn bench_step(backend: &dyn Backend, cfg: &ModelConfig, steps: usize) -> Result<()> {
-    let trainer = Trainer::new(backend, cfg)?;
+fn bench_step(
+    backend: &dyn Backend,
+    cfg: &ModelConfig,
+    steps: usize,
+    sp: StatePrecision,
+) -> Result<()> {
+    let trainer = Trainer::with_state_precision(backend, cfg, sp)?;
     let mut session = trainer.init(0)?;
     let mut batcher = Batcher::new(corpus_for(cfg), 0, 0, 1, cfg.batch, cfg.seq_len);
     // warmup (includes any artifact compile)
@@ -968,6 +990,12 @@ fn bench_step(backend: &dyn Backend, cfg: &ModelConfig, steps: usize) -> Result<
         s.transfer_bytes / s.calls.max(1) as u64,
         gen_time / steps as u32,
         compile
+    );
+    println!(
+        "  state: {} ({} bytes = {:.1} B/param)",
+        sp.label(),
+        s.state_bytes,
+        s.state_bytes_per_param
     );
     println!(
         "  tokens/s: {:.0}",

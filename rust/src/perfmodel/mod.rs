@@ -20,7 +20,8 @@
 
 use crate::config::presets::PaperConfig;
 use crate::config::ModelConfig;
-use crate::runtime::{block, kvcache};
+use crate::coordinator::collective::WireFormat;
+use crate::runtime::{block, kvcache, StatePrecision};
 
 /// Hardware description (H100 SXM defaults).
 #[derive(Debug, Clone)]
@@ -461,6 +462,106 @@ pub fn shard_comm_bytes_per_step(
 }
 
 // ---------------------------------------------------------------------------
+// State-precision byte model
+//
+// Closed forms for what `runtime::StatePrecision` costs, derived from
+// the model geometry alone and exact-match tested against the live
+// counters: the session's `ExecStats` state gauges, real checkpoint
+// file sizes (`std::fs::metadata`), and the `Collectives` wire byte
+// counters. Per-tensor scale exponents are O(n_tensors) metadata — the
+// state gauge excludes them (they live in no per-element array), while
+// the checkpoint and wire forms count them where they become real
+// bytes on disk / on the wire.
+
+/// Total parameter elements, enumerated from the runtime block's param
+/// specs (the same list sessions and checkpoints iterate).
+pub fn total_param_elems(cfg: &ModelConfig) -> u64 {
+    block::param_specs(cfg).iter().map(|s| s.elements() as u64).sum()
+}
+
+/// Optimizer + master state bytes a session holds under `sp`: every
+/// parameter element carries a master copy and a Lion momentum copy
+/// (f32+f32 = 8 B, or BF16+E4M3 = 3 B under FP8 state). Exactly the
+/// session's `ExecStats::state_bytes` gauge.
+pub fn state_bytes(cfg: &ModelConfig, sp: StatePrecision) -> u64 {
+    total_param_elems(cfg) * sp.bytes_per_param_elem()
+}
+
+/// On-disk bytes of a v1 (`MUSCKPT1`) checkpoint: 8 B magic + 4 B count,
+/// then params and their `m_`-prefixed momenta each at
+/// `4 + name + 4 + 8·ndim` of header and 4 B/elem of payload.
+pub fn checkpoint_v1_bytes(cfg: &ModelConfig) -> u64 {
+    let mut total = 8 + 4;
+    for s in block::param_specs(cfg) {
+        let header = 4 + s.name.len() as u64 + 4 + 8 * s.shape.len() as u64;
+        let m_header = header + 2; // the "m_" prefix
+        total += header + m_header + 2 * 4 * s.elements() as u64;
+    }
+    total
+}
+
+/// On-disk bytes of a v2 (`MUSCKPT2`) checkpoint under `sp`: 9 B magic +
+/// precision + 4 B count, per-tensor headers gain a codec byte, and
+/// payloads shrink to their native width — 2 B/elem BF16 masters and
+/// `4 + 1 B/elem` scaled-E4M3 momenta under FP8 state.
+pub fn checkpoint_v2_bytes(cfg: &ModelConfig, sp: StatePrecision) -> u64 {
+    let (master_payload, momentum_payload): (u64, u64) = match sp {
+        StatePrecision::F32 => (4, 4),
+        StatePrecision::Fp8 => (2, 1),
+    };
+    let momentum_scale = if sp == StatePrecision::Fp8 { 4 } else { 0 };
+    let mut total = 8 + 1 + 4;
+    for s in block::param_specs(cfg) {
+        let header = 4 + s.name.len() as u64 + 4 + 8 * s.shape.len() as u64 + 1;
+        let elems = s.elements() as u64;
+        total += header + master_payload * elems;
+        total += header + 2 + momentum_payload * elems + momentum_scale;
+    }
+    total
+}
+
+/// TP-sharded *momentum* tensor count across all ranks: each rank owns a
+/// shard of the 4 hidden linears per layer.
+fn sharded_momentum_tensors(cfg: &ModelConfig, tp: usize) -> u64 {
+    tp as u64 * 4 * cfg.depth as u64
+}
+
+/// Parameter-half wire bytes per sharded training step (both collective
+/// legs): `2 · (tp-1) · P_s · wire_bytes` — unchanged by the state
+/// policy, since parameters always cross as static-scale E4M3 on the
+/// FP8 wire.
+pub fn param_wire_bytes_per_step(cfg: &ModelConfig, tp: usize, wire: WireFormat) -> u64 {
+    if tp <= 1 {
+        return 0;
+    }
+    2 * (tp as u64 - 1) * tp_sharded_param_elems(cfg) * wire.bytes_per_elem()
+}
+
+/// Momentum-half wire bytes per sharded training step (both legs).
+/// Under the FP8 wire this is 1 B/elem regardless of state policy —
+/// f32 state re-casts to E5M2, FP8 state ships its native scaled-E4M3
+/// bytes — but the native leg adds 4 B of locally-derived scale
+/// exponent per sharded momentum tensor per receiving rank (and still
+/// zero amax syncs). Exactly the `Collectives` counters' momentum share.
+pub fn momentum_wire_bytes_per_step(
+    cfg: &ModelConfig,
+    tp: usize,
+    wire: WireFormat,
+    sp: StatePrecision,
+) -> u64 {
+    if tp <= 1 {
+        return 0;
+    }
+    let payload = 2 * (tp as u64 - 1) * tp_sharded_param_elems(cfg) * wire.bytes_per_elem();
+    match (wire, sp) {
+        (WireFormat::Fp8, StatePrecision::Fp8) => {
+            payload + 2 * (tp as u64 - 1) * 4 * sharded_momentum_tensors(cfg, tp)
+        }
+        _ => payload,
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Measured-throughput calibration (the bench-harness roofline hook)
 //
 // Everything above prices steps against public H100 peaks. The bench
@@ -820,6 +921,104 @@ mod tests {
         let a2 = pipeline_activation_bytes_per_step(&m, 2);
         assert_eq!(a2, 2 * (m.batch * m.seq_len * m.width * 4) as u64);
         assert_eq!(pipeline_activation_bytes_per_step(&m, 4), 3 * a2);
+    }
+
+    /// The state-precision byte model's exactness contract, part 1: the
+    /// `state_bytes` closed form equals the live session gauges with
+    /// `==` — 8 B/param under f32 state, 3 B/param under FP8 state.
+    #[test]
+    fn state_byte_form_matches_live_session_gauges_exactly() {
+        let cfg = crate::runtime::micro_config();
+        let be = crate::runtime::ReferenceBackend::new(std::slice::from_ref(&cfg)).unwrap();
+        for (sp, bpp) in [(StatePrecision::F32, 8.0), (StatePrecision::Fp8, 3.0)] {
+            let mut s = crate::runtime::Session::with_precision(&be, &cfg, sp).unwrap();
+            s.init(3).unwrap();
+            assert_eq!(s.stats().state_bytes, state_bytes(&cfg, sp), "{}", sp.label());
+            assert_eq!(s.stats().state_bytes_per_param, bpp, "{}", sp.label());
+        }
+        // and the closed form itself: total elems x policy constant
+        let p = total_param_elems(&cfg);
+        assert_eq!(state_bytes(&cfg, StatePrecision::F32), 8 * p);
+        assert_eq!(state_bytes(&cfg, StatePrecision::Fp8), 3 * p);
+    }
+
+    /// Part 2: the checkpoint byte forms equal real file sizes from
+    /// `std::fs::metadata`, and v2-fp8 is less than half of v1.
+    #[test]
+    fn checkpoint_byte_forms_match_real_files_exactly() {
+        use crate::coordinator::checkpoint;
+        let cfg = crate::runtime::micro_config();
+        let be = crate::runtime::ReferenceBackend::new(std::slice::from_ref(&cfg)).unwrap();
+        let mut s =
+            crate::runtime::Session::with_precision(&be, &cfg, StatePrecision::Fp8).unwrap();
+        s.init(5).unwrap();
+        let state = s.read_back().unwrap();
+        use crate::runtime::Backend;
+        let meta = be.resolve("train_step", &cfg).unwrap();
+        let specs = meta.inputs[..state.tensors.len()].to_vec();
+        let dir = std::env::temp_dir();
+        let p1 = dir.join("munit_perfmodel_ckpt_v1.bin");
+        let p2 = dir.join("munit_perfmodel_ckpt_v2.bin");
+        checkpoint::save(&p1, &state, &specs).unwrap();
+        checkpoint::save_v2(&p2, &state, &specs, StatePrecision::Fp8).unwrap();
+        let (s1, s2) =
+            (std::fs::metadata(&p1).unwrap().len(), std::fs::metadata(&p2).unwrap().len());
+        assert_eq!(s1, checkpoint_v1_bytes(&cfg));
+        assert_eq!(s2, checkpoint_v2_bytes(&cfg, StatePrecision::Fp8));
+        assert!(2 * s2 < s1, "v2 fp8 ({s2} B) not under half of v1 ({s1} B)");
+        std::fs::remove_file(&p1).ok();
+        std::fs::remove_file(&p2).ok();
+    }
+
+    /// Part 3: the momentum wire form equals the `Collectives` byte
+    /// counters over the exact collective sequence `train_sharded`
+    /// issues for the momentum half (allgather + reduce-scatter of
+    /// every rank's sharded momenta), for all wire x state lanes.
+    #[test]
+    fn momentum_wire_form_matches_collective_counters_exactly() {
+        use crate::coordinator::collective::{Collectives, Payload};
+        use crate::coordinator::shard::{partition_state, ShardSpec};
+        let cfg = crate::runtime::micro_config();
+        let be = crate::runtime::ReferenceBackend::new(std::slice::from_ref(&cfg)).unwrap();
+        let mut s = crate::runtime::Session::new(&be, &cfg).unwrap();
+        s.init(9).unwrap();
+        let state = s.read_back().unwrap();
+        let tp = 2usize;
+        let spec = ShardSpec::new(tp, 1);
+        let n = state.n_params;
+        let lanes = [
+            (WireFormat::Master, StatePrecision::F32),
+            (WireFormat::Fp8, StatePrecision::F32),
+            (WireFormat::Fp8, StatePrecision::Fp8),
+        ];
+        for (wire, sp) in lanes {
+            let shards = partition_state(&cfg, &state, &spec).unwrap();
+            let mut coll = Collectives::with_state(wire, sp);
+            for (rank, st) in shards.iter().enumerate() {
+                for idx in n..2 * n {
+                    let t = &st.tensors[idx];
+                    if t.shape() == state.tensors[idx].shape() {
+                        continue; // replicated, never on the wire
+                    }
+                    let mut v = t.as_f32().unwrap().to_vec();
+                    coll.allgather_shard(&mut v, Payload::Momentum, tp, rank);
+                    coll.reduce_scatter_shard(&mut v, Payload::Momentum, tp, rank);
+                }
+            }
+            let modeled = momentum_wire_bytes_per_step(&cfg, tp, wire, sp);
+            assert_eq!(coll.total_bytes(), modeled, "{} wire / {} state", wire.label(), sp.label());
+            assert_eq!(coll.amax_syncs, 0);
+        }
+        // the native-momentum lane costs only the scale metadata over the
+        // plain FP8 wire, and both are exactly 4x under the master wire
+        let f32_lane = momentum_wire_bytes_per_step(&cfg, tp, WireFormat::Fp8, StatePrecision::F32);
+        let fp8_lane = momentum_wire_bytes_per_step(&cfg, tp, WireFormat::Fp8, StatePrecision::Fp8);
+        let master =
+            momentum_wire_bytes_per_step(&cfg, tp, WireFormat::Master, StatePrecision::F32);
+        assert_eq!(master, 4 * f32_lane);
+        let scale_overhead = 2 * (tp as u64 - 1) * 4 * (tp as u64 * 4 * cfg.depth as u64);
+        assert_eq!(fp8_lane - f32_lane, scale_overhead);
+        assert_eq!(momentum_wire_bytes_per_step(&cfg, 1, WireFormat::Fp8, StatePrecision::Fp8), 0);
     }
 
     #[test]

@@ -39,6 +39,16 @@ pub struct ExecStats {
     pub compile_time: Duration,
     /// Bytes moved across the host<->device boundary.
     pub transfer_bytes: u64,
+    /// Optimizer + master state bytes held under the session's
+    /// [`crate::runtime::StatePrecision`] policy (masters + momenta;
+    /// per-tensor scale exponents are O(n_tensors) metadata, counted
+    /// where they become real bytes — checkpoints and the wire). Zero
+    /// for non-session stats (per-artifact counters).
+    pub state_bytes: u64,
+    /// [`ExecStats::state_bytes`] per parameter element: 8.0 under f32
+    /// state, 3.0 under FP8 state (E4M3 momentum + BF16 masters). Zero
+    /// for non-session stats.
+    pub state_bytes_per_param: f64,
 }
 
 impl ExecStats {

@@ -8,7 +8,11 @@
 //!    workers run as in-process threads over one backend.
 //!  - [`Session`] — owns the device-resident `TrainState` between steps;
 //!    per-step host traffic is tokens + 3 scalars in and 2 scalars out,
-//!    accounted in [`ExecStats`].
+//!    accounted in [`ExecStats`]. A [`StatePrecision`] policy selects the
+//!    state storage: f32 (bit-compat default, 8 B/param element) or
+//!    FP8 state — E4M3 Lion momentum with one power-of-two scale per
+//!    tensor + BF16 masters, 3 B/param element, quantized on write
+//!    inside the fused train step (`runtime::state`).
 //!  - [`ReferenceBackend`] — pure-Rust interpreter (fp8 emulation) over
 //!    the op-level transformer block in `runtime::block` (real multi-head
 //!    causal attention + FFN); runs everywhere, no artifacts required.
@@ -37,6 +41,9 @@ mod manifest;
 mod pjrt;
 mod reference;
 mod session;
+/// Low-precision optimizer/master-state policy (`StatePrecision`) and
+/// its E4M3+scale / BF16 codecs.
+pub mod state;
 mod tensor;
 
 pub use backend::{Backend, ExecStats, TensorHandle};
@@ -47,6 +54,7 @@ pub use manifest::{ArtifactMeta, Dtype, Manifest, TensorSpec};
 pub use pjrt::PjrtBackend;
 pub use reference::{micro_config, standard_roster, ReferenceBackend};
 pub use session::{Session, TrainState};
+pub use state::StatePrecision;
 pub use tensor::{Tensor, TensorData};
 
 use std::path::Path;

@@ -55,8 +55,11 @@ use std::time::Instant;
 use super::backend::{Backend, ExecStats, HandleStore, TensorHandle};
 use super::block::{self, Prepared, ELEM_CHUNK};
 use super::manifest::{ArtifactMeta, Dtype, Manifest, TensorSpec};
+use super::state::{self, StatePrecision};
 use super::tensor::Tensor;
 use crate::config::ModelConfig;
+use crate::fp8::{BF16, E4M3};
+use crate::telemetry;
 use crate::util::error::{Error, Result};
 use crate::util::parallel;
 use crate::{bail, err};
@@ -65,6 +68,11 @@ use crate::{bail, err};
 enum Kind {
     Init,
     TrainStep,
+    /// `train_step` with quantize-on-write FP8 optimizer state: same ABI
+    /// (and the same f32-computed Lion update), but the output masters
+    /// land on the BF16 grid and the output momenta on per-tensor
+    /// E4M3×2^k grids ([`super::state`]).
+    TrainStepFp8State,
     Fwd,
 }
 
@@ -73,6 +81,7 @@ impl Kind {
         match kind {
             "init" => Ok(Kind::Init),
             "train_step" => Ok(Kind::TrainStep),
+            "train_step_fp8state" => Ok(Kind::TrainStepFp8State),
             "fwd" => Ok(Kind::Fwd),
             other => Err(err!("reference backend has no '{other}' artifacts")),
         }
@@ -82,6 +91,7 @@ impl Kind {
         match self {
             Kind::Init => "init",
             Kind::TrainStep => "train_step",
+            Kind::TrainStepFp8State => "train_step_fp8state",
             Kind::Fwd => "fwd",
         }
     }
@@ -90,6 +100,7 @@ impl Kind {
         let prefix = match self {
             Kind::Init => "init",
             Kind::TrainStep => "train",
+            Kind::TrainStepFp8State => "train8s",
             Kind::Fwd => "fwd",
         };
         format!("{}_{}", prefix, cfg.name())
@@ -114,7 +125,7 @@ impl ReferenceBackend {
         let mut registry = HashMap::new();
         for cfg in configs {
             cfg.validate().map_err(Error::msg)?;
-            for kind in [Kind::Init, Kind::TrainStep, Kind::Fwd] {
+            for kind in [Kind::Init, Kind::TrainStep, Kind::TrainStepFp8State, Kind::Fwd] {
                 let meta = meta_for(kind, cfg);
                 registry.insert(meta.name.clone(), (kind, cfg.clone()));
                 artifacts.push(meta);
@@ -178,7 +189,8 @@ impl Backend for ReferenceBackend {
         let t0 = Instant::now();
         let outs = match kind {
             Kind::Init => run_init(&cfg, &host)?,
-            Kind::TrainStep => run_train_step(&cfg, &host)?,
+            Kind::TrainStep => run_train_step(&cfg, &host, StatePrecision::F32)?,
+            Kind::TrainStepFp8State => run_train_step(&cfg, &host, StatePrecision::Fp8)?,
             Kind::Fwd => run_fwd(&cfg, &host)?,
         };
         let dt = t0.elapsed();
@@ -264,7 +276,7 @@ fn input_arity(kind: Kind, cfg: &ModelConfig) -> usize {
     let n = n_param_tensors(cfg);
     match kind {
         Kind::Init => 1,
-        Kind::TrainStep => 2 * n + 4,
+        Kind::TrainStep | Kind::TrainStepFp8State => 2 * n + 4,
         Kind::Fwd => n + 2,
     }
 }
@@ -288,7 +300,7 @@ fn meta_for(kind: Kind, cfg: &ModelConfig) -> ArtifactMeta {
             outs.extend(momenta);
             (vec![seed], outs)
         }
-        Kind::TrainStep => {
+        Kind::TrainStep | Kind::TrainStepFp8State => {
             let mut ins = params.clone();
             ins.extend(momenta.clone());
             ins.push(tokens);
@@ -363,9 +375,9 @@ fn unpack_state(cfg: &ModelConfig, inputs: &[Arc<Tensor>], with_momenta: bool) -
     let mut params = Vec::with_capacity(n);
     for (i, spec) in specs.iter().enumerate() {
         let t = &inputs[i];
-        if t.elements() != spec.elements() {
-            bail!("param tensor {} ({}) has {} elements, expected {}",
-                i, spec.name, t.elements(), spec.elements());
+        if t.shape() != spec.shape.as_slice() {
+            bail!("param tensor '{}' (input {}) has shape {:?}, expected {:?}",
+                spec.name, i, t.shape(), spec.shape);
         }
         params.push(t.to_f32_vec()?);
     }
@@ -373,9 +385,9 @@ fn unpack_state(cfg: &ModelConfig, inputs: &[Arc<Tensor>], with_momenta: bool) -
     let tok_idx = if with_momenta {
         for (i, spec) in specs.iter().enumerate() {
             let t = &inputs[n + i];
-            if t.elements() != spec.elements() {
-                bail!("momentum tensor {} (m_{}) has {} elements, expected {}",
-                    i, spec.name, t.elements(), spec.elements());
+            if t.shape() != spec.shape.as_slice() {
+                bail!("momentum tensor 'm_{}' (input {}) has shape {:?}, expected {:?}",
+                    spec.name, n + i, t.shape(), spec.shape);
             }
             momenta.push(t.to_f32_vec()?);
         }
@@ -391,7 +403,11 @@ fn unpack_state(cfg: &ModelConfig, inputs: &[Arc<Tensor>], with_momenta: bool) -
     Ok(StateView { params, momenta, tokens })
 }
 
-fn run_train_step(cfg: &ModelConfig, inputs: &[Arc<Tensor>]) -> Result<Vec<Tensor>> {
+fn run_train_step(
+    cfg: &ModelConfig,
+    inputs: &[Arc<Tensor>],
+    precision: StatePrecision,
+) -> Result<Vec<Tensor>> {
     let n = n_param_tensors(cfg);
     let mut sv = unpack_state(cfg, inputs, true)?;
     let lr = inputs[2 * n + 1].scalar()?;
@@ -433,6 +449,38 @@ fn run_train_step(cfg: &ModelConfig, inputs: &[Arc<Tensor>]) -> Result<Vec<Tenso
                 }
             },
         );
+    }
+
+    // FP8 state: quantize-on-write. The update above READS grid values
+    // (under this policy the incoming state is already on-grid — f32
+    // storage IS the dequantized form, no shadow copy) and computes in
+    // f32; here each output tensor is rounded back onto its grid: masters
+    // RNE onto BF16, momenta RNE onto E4M3×2^k with the per-tensor
+    // power-of-two scale chosen so the cast can never saturate
+    // ([`state::momentum_scale_exp`]). Cast health is recorded per tensor
+    // (read-only, pre-quantize) when a telemetry capture is active; the
+    // snap loops are element-wise with no accumulation, so the step stays
+    // bit-identical at any thread count.
+    if precision == StatePrecision::Fp8 {
+        for i in 0..n {
+            if telemetry::enabled() {
+                telemetry::record_cast(
+                    "state_master",
+                    i,
+                    "bf16",
+                    BF16.cast_health(&sv.params[i], 1.0),
+                );
+                let k = state::momentum_scale(&sv.momenta[i]);
+                telemetry::record_cast(
+                    "state_mom",
+                    i,
+                    "e4m3",
+                    E4M3.cast_health(&sv.momenta[i], state::pow2(-k)),
+                );
+            }
+            state::snap_master(&mut sv.params[i]);
+            state::snap_momentum(&mut sv.momenta[i]);
+        }
     }
 
     let specs = block::param_specs(cfg);
@@ -576,8 +624,14 @@ mod tests {
     }
 
     /// Drive `steps` train steps on a fixed learnable batch (a strict
-    /// bigram cycle); returns the per-step losses.
-    fn run_lane(cfg: &ModelConfig, steps: usize, lr: f32) -> Vec<f32> {
+    /// bigram cycle) through the given train-step artifact kind; returns
+    /// the per-step losses and the final `params ++ momenta` state.
+    fn run_lane_kind(
+        cfg: &ModelConfig,
+        steps: usize,
+        lr: f32,
+        kind: Kind,
+    ) -> (Vec<f32>, Vec<Tensor>) {
         let be = ReferenceBackend::new(&[cfg.clone()]).unwrap();
         let n = n_param_tensors(cfg);
         let mut state = init_state(&be, cfg, 1);
@@ -591,12 +645,16 @@ mod tests {
             inputs.push(Tensor::scalar_f32(lr));
             inputs.push(Tensor::scalar_f32(0.0));
             inputs.push(Tensor::scalar_f32(0.4));
-            let mut outs = be.run(&Kind::TrainStep.name_for(cfg), &inputs).unwrap();
+            let mut outs = be.run(&kind.name_for(cfg), &inputs).unwrap();
             losses.push(outs[2 * n].scalar().unwrap());
             outs.truncate(2 * n);
             state = outs;
         }
-        losses
+        (losses, state)
+    }
+
+    fn run_lane(cfg: &ModelConfig, steps: usize, lr: f32) -> Vec<f32> {
+        run_lane_kind(cfg, steps, lr, Kind::TrainStep).0
     }
 
     /// loss-decreases + bit-determinism assertions shared by the
@@ -604,38 +662,177 @@ mod tests {
     /// heads) must learn, and must produce bit-identical losses at 1, 2,
     /// and 4 worker threads. Sign descent can oscillate near the optimum,
     /// so the "decreased" check uses the tail minimum.
-    fn assert_lane_learns_deterministically(cfg: &ModelConfig, lr: f32, lane: &str) {
+    fn assert_lane_learns_deterministically(cfg: &ModelConfig, lr: f32, kind: Kind, lane: &str) {
         assert!(cfg.depth >= 2 && cfg.n_heads() >= 2, "{lane}: lane config too small");
-        let a = parallel::with_max_threads(1, || run_lane(cfg, 60, lr));
+        let a = parallel::with_max_threads(1, || run_lane_kind(cfg, 60, lr, kind).0);
         assert!(a.iter().all(|l| l.is_finite()), "{lane}: non-finite loss: {a:?}");
         let tail_min = a[50..].iter().copied().fold(f32::INFINITY, f32::min);
         assert!(tail_min < a[0] - 0.01, "{lane}: no learning: {} -> {tail_min}", a[0]);
         for threads in [2usize, 4] {
-            let b = parallel::with_max_threads(threads, || run_lane(cfg, 60, lr));
+            let b = parallel::with_max_threads(threads, || run_lane_kind(cfg, 60, lr, kind).0);
             assert_eq!(a, b, "{lane}: {threads}-thread run is not bit-identical to 1-thread");
+        }
+    }
+
+    fn mus_fp8_cfg() -> ModelConfig {
+        ModelConfig {
+            variant: "mus".into(),
+            precision: "fp8".into(),
+            residual: "fixed".into(),
+            ..micro_config()
+        }
+    }
+
+    fn sp_fp8_cfg() -> ModelConfig {
+        ModelConfig {
+            variant: "sp".into(),
+            precision: "fp8".into(),
+            residual: "standard".into(),
+            ..micro_config()
         }
     }
 
     #[test]
     fn mus_fp8_static_lane_learns_and_is_bit_deterministic() {
-        let cfg = ModelConfig {
-            variant: "mus".into(),
-            precision: "fp8".into(),
-            residual: "fixed".into(),
-            ..micro_config()
-        };
-        assert_lane_learns_deterministically(&cfg, 0.01, "mus+fp8 (static E4M3/E5M2)");
+        assert_lane_learns_deterministically(
+            &mus_fp8_cfg(),
+            0.01,
+            Kind::TrainStep,
+            "mus+fp8 (static E4M3/E5M2)",
+        );
     }
 
     #[test]
     fn sp_fp8_dynamic_lane_learns_and_is_bit_deterministic() {
-        let cfg = ModelConfig {
-            variant: "sp".into(),
-            precision: "fp8".into(),
-            residual: "standard".into(),
-            ..micro_config()
+        assert_lane_learns_deterministically(
+            &sp_fp8_cfg(),
+            1.0 / 256.0,
+            Kind::TrainStep,
+            "sp+fp8 (dynamic)",
+        );
+    }
+
+    #[test]
+    fn fp8_state_lanes_learn_and_are_bit_deterministic() {
+        assert_lane_learns_deterministically(
+            &mus_fp8_cfg(),
+            0.01,
+            Kind::TrainStepFp8State,
+            "mus+fp8, fp8 state",
+        );
+        assert_lane_learns_deterministically(
+            &sp_fp8_cfg(),
+            1.0 / 256.0,
+            Kind::TrainStepFp8State,
+            "sp+fp8, fp8 state",
+        );
+    }
+
+    /// Satellite: loss parity + parameter-direction bound between the f32
+    /// and FP8 state lanes, on BOTH FP8 compute lanes. Tolerances are the
+    /// documented ones (docs/NUMERICS.md §10): |Δ tail-min loss| ≤ 0.25
+    /// and params cosine ≥ 0.98 after 60 steps.
+    #[test]
+    fn fp8_state_tracks_f32_state_on_both_fp8_lanes() {
+        for (cfg, lr, lane) in
+            [(mus_fp8_cfg(), 0.01f32, "mus+fp8"), (sp_fp8_cfg(), 1.0 / 256.0, "sp+fp8")]
+        {
+            let n = n_param_tensors(&cfg);
+            let (l32, s32) = run_lane_kind(&cfg, 60, lr, Kind::TrainStep);
+            let (l8, s8) = run_lane_kind(&cfg, 60, lr, Kind::TrainStepFp8State);
+            let t32 = l32[50..].iter().copied().fold(f32::INFINITY, f32::min);
+            let t8 = l8[50..].iter().copied().fold(f32::INFINITY, f32::min);
+            assert!(
+                (t32 - t8).abs() <= 0.25,
+                "{lane}: fp8-state loss {t8} vs f32-state {t32} beyond tolerance"
+            );
+            let (mut dot, mut n32, mut n8) = (0f64, 0f64, 0f64);
+            for i in 0..n {
+                let a = s32[i].as_f32().unwrap();
+                let b = s8[i].as_f32().unwrap();
+                for (x, y) in a.iter().zip(b) {
+                    dot += *x as f64 * *y as f64;
+                    n32 += *x as f64 * *x as f64;
+                    n8 += *y as f64 * *y as f64;
+                }
+            }
+            let cos = dot / (n32.sqrt() * n8.sqrt()).max(1e-30);
+            assert!(cos >= 0.98, "{lane}: param cosine {cos} < 0.98");
+        }
+    }
+
+    /// The policy's no-saturation guarantee, witnessed: under a telemetry
+    /// capture every per-tensor momentum/master state cast reports health,
+    /// and the minimal power-of-two scale keeps `saturated` at exactly 0.
+    #[test]
+    fn fp8_state_casts_report_health_and_never_saturate() {
+        let cfg = mus_fp8_cfg();
+        let (_, report) =
+            telemetry::capture(|| run_lane_kind(&cfg, 3, 0.01, Kind::TrainStepFp8State));
+        let mom = report.cast_totals("state_mom").expect("momentum casts recorded");
+        assert!(mom.total > 0);
+        assert_eq!(mom.saturated, 0, "momentum cast saturated despite minimal scale");
+        assert_eq!(mom.overflow_nonfinite, 0);
+        let master = report.cast_totals("state_master").expect("master casts recorded");
+        assert!(master.total > 0);
+        assert_eq!(master.saturated, 0);
+    }
+
+    /// FP8-state outputs are on-grid: re-snapping masters (BF16) and
+    /// momenta (E4M3×2^k) is a bit-exact no-op — the invariant the
+    /// checkpoint codec and the native momentum wire lean on.
+    #[test]
+    fn fp8_state_step_outputs_are_on_grid() {
+        let cfg = mus_fp8_cfg();
+        let n = n_param_tensors(&cfg);
+        let (_, state) = run_lane_kind(&cfg, 2, 0.01, Kind::TrainStepFp8State);
+        for (i, t) in state.iter().enumerate() {
+            let mut data = t.as_f32().unwrap().to_vec();
+            if i < n {
+                state::snap_master(&mut data);
+            } else {
+                state::snap_momentum(&mut data);
+            }
+            let orig = t.as_f32().unwrap();
+            let same = data.iter().zip(orig).all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "tensor {i} not on its grid");
+        }
+    }
+
+    /// Satellite fix: shape mismatches in `unpack_state` name the tensor
+    /// from the spec — for the momentum half too, not just `m_{i}`.
+    #[test]
+    fn unpack_state_errors_name_the_tensor() {
+        let be = micro_backend();
+        let cfg = micro_config();
+        let n = n_param_tensors(&cfg);
+        let specs = block::param_specs(&cfg);
+        let state = init_state(&be, &cfg, 4);
+        let tokens: Vec<i32> = vec![0; cfg.batch * cfg.seq_len];
+        let finish = |mut inputs: Vec<Tensor>| {
+            inputs.push(Tensor::i32(tokens.clone(), &[cfg.batch, cfg.seq_len]).unwrap());
+            inputs.push(Tensor::scalar_f32(0.01));
+            inputs.push(Tensor::scalar_f32(0.0));
+            inputs.push(Tensor::scalar_f32(0.4));
+            inputs
         };
-        assert_lane_learns_deterministically(&cfg, 1.0 / 256.0, "sp+fp8 (dynamic)");
+        // momentum half: wrong shape at momentum index 1
+        let mut bad = state.clone();
+        bad[n + 1] = Tensor::zeros_f32(&[3, 5]);
+        let err = be.run(&Kind::TrainStep.name_for(&cfg), &finish(bad)).unwrap_err().to_string();
+        assert!(
+            err.contains(&format!("momentum tensor 'm_{}'", specs[1].name)),
+            "error does not name the momentum tensor: {err}"
+        );
+        assert!(err.contains("expected"), "no expected shape in: {err}");
+        // param half: wrong shape at param index 0
+        let mut bad = state.clone();
+        bad[0] = Tensor::zeros_f32(&[2, 2]);
+        let err = be.run(&Kind::TrainStep.name_for(&cfg), &finish(bad)).unwrap_err().to_string();
+        assert!(
+            err.contains(&format!("param tensor '{}'", specs[0].name)),
+            "error does not name the param tensor: {err}"
+        );
     }
 
     #[test]

@@ -11,6 +11,7 @@
 use std::time::Instant;
 
 use super::backend::{Backend, ExecStats, TensorHandle};
+use super::state::{self, StatePrecision};
 use super::tensor::Tensor;
 use crate::config::ModelConfig;
 use crate::util::error::{Context, Error, Result};
@@ -52,17 +53,42 @@ pub struct Session<'b> {
     /// schedule update), so constant hyperparameters cross the host
     /// boundary once, not every step.
     scalar_cache: [Option<(f32, TensorHandle)>; 3],
+    /// Storage policy for the optimizer + master state. Under
+    /// [`StatePrecision::Fp8`] the session resolves the
+    /// `train_step_fp8state` artifact (quantize-on-write inside the fused
+    /// update) and re-snaps incoming state onto the BF16/E4M3×2^k grids
+    /// at the `init`/`load_state` boundaries, so the on-grid invariant
+    /// holds even after off-grid host mutations (e.g. a DDP mean).
+    precision: StatePrecision,
     stats: ExecStats,
 }
 
 impl<'b> Session<'b> {
     /// Resolve the train/init artifacts for `cfg` and validate the ABI.
     /// The session starts empty: call [`Session::init`] or
-    /// [`Session::load_state`] before stepping.
+    /// [`Session::load_state`] before stepping. State is stored at
+    /// [`StatePrecision::F32`] — bit-identical to the pre-policy trainer.
     pub fn new(backend: &'b dyn Backend, cfg: &ModelConfig) -> Result<Session<'b>> {
+        Session::with_precision(backend, cfg, StatePrecision::F32)
+    }
+
+    /// [`Session::new`] under an explicit [`StatePrecision`] policy.
+    /// `Fp8` resolves the `train_step_fp8state` artifact: Lion momentum
+    /// kept on per-tensor E4M3×2^k grids, masters on the BF16 grid,
+    /// 3 B/param element of state (vs 8) — reported by the
+    /// [`Session::stats`] gauges.
+    pub fn with_precision(
+        backend: &'b dyn Backend,
+        cfg: &ModelConfig,
+        precision: StatePrecision,
+    ) -> Result<Session<'b>> {
+        let train_kind = match precision {
+            StatePrecision::F32 => "train_step",
+            StatePrecision::Fp8 => "train_step_fp8state",
+        };
         let train = backend
-            .resolve("train_step", cfg)
-            .with_context(|| format!("no train artifact for config {}", cfg.name()))?;
+            .resolve(train_kind, cfg)
+            .with_context(|| format!("no {train_kind} artifact for config {}", cfg.name()))?;
         let init = backend
             .resolve("init", cfg)
             .with_context(|| format!("no init artifact for config {}", cfg.name()))?;
@@ -83,8 +109,14 @@ impl<'b> Session<'b> {
             state: Vec::new(),
             tok_host,
             scalar_cache: [None, None, None],
+            precision,
             stats: ExecStats::default(),
         })
+    }
+
+    /// The state-storage policy this session runs under.
+    pub fn state_precision(&self) -> StatePrecision {
+        self.precision
     }
 
     /// The backend this session executes on.
@@ -117,8 +149,26 @@ impl<'b> Session<'b> {
         }
     }
 
+    /// Recompute the state-byte gauges from the live handles and the
+    /// precision policy: masters at 4 (f32) or 2 (BF16) B/elem, momenta
+    /// at 4 (f32) or 1 (E4M3) B/elem. Per-tensor scale exponents are
+    /// O(n_tensors) metadata and excluded (they are counted where they
+    /// become real bytes: checkpoint v2 payloads and the momentum wire).
+    fn refresh_state_gauges(&mut self) {
+        let elems = |hs: &[TensorHandle]| hs.iter().map(|h| h.elements() as u64).sum::<u64>();
+        let param_elems = elems(&self.state[..self.n_params]);
+        let mom_elems = elems(&self.state[self.n_params..]);
+        self.stats.state_bytes = param_elems * self.precision.master_bytes_per_elem()
+            + mom_elems * self.precision.momentum_bytes_per_elem();
+        self.stats.state_bytes_per_param =
+            self.stats.state_bytes as f64 / param_elems.max(1) as f64;
+    }
+
     /// Initialize state on-device by running the `init` artifact
-    /// (unit-variance / sigma_init inits happen in-graph).
+    /// (unit-variance / sigma_init inits happen in-graph). Under
+    /// [`StatePrecision::Fp8`] the fresh state is then snapped onto the
+    /// storage grids (one extra round trip at this boundary — never on
+    /// the step path).
     pub fn init(&mut self, seed: i32) -> Result<()> {
         let seed_t = Tensor::scalar_i32(seed);
         let h = self.backend.upload(&seed_t)?;
@@ -133,10 +183,21 @@ impl<'b> Session<'b> {
         }
         self.drop_state();
         self.state = outs;
+        if self.precision == StatePrecision::Fp8 {
+            // quantize the f32 init onto the grids via the load path
+            let snapshot = self.read_back()?;
+            self.load_state(&snapshot)?;
+        } else {
+            self.refresh_state_gauges();
+        }
         Ok(())
     }
 
-    /// Upload a host snapshot as the new device-resident state.
+    /// Upload a host snapshot as the new device-resident state. Under
+    /// [`StatePrecision::Fp8`] each tensor is first snapped onto its
+    /// storage grid (BF16 masters, E4M3×2^k momenta) — a bit-exact no-op
+    /// for state that is already on-grid (an FP8-lane checkpoint), and
+    /// the re-quantization point for off-grid host math (a DDP mean).
     pub fn load_state(&mut self, state: &TrainState) -> Result<()> {
         if state.tensors.len() != 2 * self.n_params {
             bail!(
@@ -146,11 +207,24 @@ impl<'b> Session<'b> {
             );
         }
         let mut handles = Vec::with_capacity(state.tensors.len());
-        for t in &state.tensors {
-            handles.push(self.backend.upload(t)?);
+        for (i, t) in state.tensors.iter().enumerate() {
+            let h = match self.precision {
+                StatePrecision::F32 => self.backend.upload(t)?,
+                StatePrecision::Fp8 => {
+                    let mut data = t.to_f32_vec()?;
+                    if i < self.n_params {
+                        state::snap_master(&mut data);
+                    } else {
+                        state::snap_momentum(&mut data);
+                    }
+                    self.backend.upload(&Tensor::f32(data, t.shape())?)?
+                }
+            };
+            handles.push(h);
         }
         self.drop_state();
         self.state = handles;
+        self.refresh_state_gauges();
         Ok(())
     }
 

@@ -1,0 +1,435 @@
+//! `StatePrecision`: the low-precision optimizer/master-state policy.
+//!
+//! The paper's unit-variance discipline keeps every optimizer quantity
+//! centered in the FP8 band, which is what makes low-precision *state*
+//! safe (FP8-LM's recipe: FP8-ish moments + 16-bit masters + per-tensor
+//! scales). This module is the policy's single source of truth:
+//!
+//!  - **Lion momentum → E4M3 + one per-tensor power-of-two scale.** Lion
+//!    consumes only `sign(β1·m + (1-β1)·g)`, so momentum tolerates the
+//!    ~6% E4M3 relative error; the scale exponent `k` is chosen per
+//!    tensor as the *smallest* `k` with `amax ≤ 448·2^k`
+//!    ([`momentum_scale_exp`]), so the cast **never saturates by
+//!    construction** — `CastHealth.saturated == 0` is asserted in tests
+//!    and CI, not hoped for.
+//!  - **Master weights → BF16** (quantize-on-write, no f32 shadow): the
+//!    Lion update `p - lr·sign(c) - wd·p` is computed in f32 from the
+//!    BF16 grid values and rounded back to the grid once per step.
+//!  - **f32 stays the default lane** ([`StatePrecision::F32`]), running
+//!    the exact pre-policy code path — the bit-compat anchor.
+//!
+//! Representation: quantized state is held **on-grid in f32 storage**.
+//! A momentum tensor's values all lie on the E4M3×2^k value grid, a
+//! master tensor's on the BF16 grid. Because every grid value is exactly
+//! f32-representable (for `k ≥ -126`, see [`pow2`]), the codecs here can
+//! re-derive `k` from the data's own amax at encode time and round-trip
+//! **bit-exactly** — no scale plumbing through the session/ABI, and
+//! quantize→encode→decode is idempotent (the satellite test belt proves
+//! this over the exhaustive E4M3 grid and randomized proptests).
+//!
+//! Byte accounting (the `ExecStats` gauges, `perfmodel` closed forms,
+//! checkpoint v2 and the native momentum wire all agree on these):
+//! E4M3 momentum is 1 B/elem, BF16 masters 2 B/elem → **3 B per
+//! parameter element** of total state vs 8 today. The per-tensor scale
+//! exponent is O(n_tensors) metadata (4 B/tensor); it is excluded from
+//! the per-element gauges and counted explicitly where it becomes real
+//! bytes (checkpoint payloads, wire payloads). See docs/NUMERICS.md §10.
+
+use crate::fp8::{BF16, E4M3};
+use crate::runtime::gemm;
+
+/// Storage policy for the session's optimizer + master state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StatePrecision {
+    /// f32 masters + f32 Lion momentum (8 B/param element). The default:
+    /// bit-identical to the pre-policy trainer.
+    #[default]
+    F32,
+    /// BF16 masters + E4M3 momentum with one power-of-two scale per
+    /// tensor (3 B/param element). Quantize-on-write inside the fused
+    /// train step; checkpoints and the DDP momentum wire ship the
+    /// quantized payloads natively.
+    Fp8,
+}
+
+impl StatePrecision {
+    /// Parse a CLI name: `f32` (alias `master`) or `fp8`.
+    pub fn by_name(name: &str) -> Option<StatePrecision> {
+        match name {
+            "f32" | "master" => Some(StatePrecision::F32),
+            "fp8" => Some(StatePrecision::Fp8),
+            _ => None,
+        }
+    }
+
+    /// Stable label for reports/benches.
+    pub fn label(self) -> &'static str {
+        match self {
+            StatePrecision::F32 => "f32",
+            StatePrecision::Fp8 => "fp8",
+        }
+    }
+
+    /// Bytes per master-weight element under this policy (4 or 2).
+    pub fn master_bytes_per_elem(self) -> u64 {
+        match self {
+            StatePrecision::F32 => 4,
+            StatePrecision::Fp8 => 2,
+        }
+    }
+
+    /// Bytes per Lion-momentum element under this policy (4 or 1).
+    pub fn momentum_bytes_per_elem(self) -> u64 {
+        match self {
+            StatePrecision::F32 => 4,
+            StatePrecision::Fp8 => 1,
+        }
+    }
+
+    /// Total state bytes per parameter element: master + momentum
+    /// (8 for f32, 3 for fp8). Per-tensor scale exponents are O(n_tensors)
+    /// metadata and excluded here (see the module docs).
+    pub fn bytes_per_param_elem(self) -> u64 {
+        self.master_bytes_per_elem() + self.momentum_bytes_per_elem()
+    }
+}
+
+/// Exact `2^k` as f32 for `k ∈ [-126, 127]` (normal range only — the
+/// momentum scale is clamped into it so every grid value and both scale
+/// directions stay exactly representable).
+#[inline]
+pub fn pow2(k: i32) -> f32 {
+    debug_assert!((-126..=127).contains(&k), "pow2 exponent {k} outside normal f32 range");
+    f32::from_bits(((k + 127) as u32) << 23)
+}
+
+/// Smallest `k` with `amax ≤ 448·2^k` (448 = E4M3 max finite), clamped
+/// to `[-126, 120]`; `0` for zero/non-finite amax. Computed from the f32
+/// bit pattern: with `amax = m·2^e`, `1 ≤ m < 2`, the answer is `e - 8`
+/// when `m ≤ 1.75` and `e - 7` otherwise (mantissa field `0x60_0000`
+/// is exactly `m = 1.75`). Subnormal amax is pre-scaled by an exact
+/// `2^64` so its exponent field is usable. Minimality gives the policy's
+/// no-saturation guarantee; the lower clamp keeps every grid value
+/// `c·2^k` (`|c| ≥ 2^-9`) exactly f32-representable.
+pub fn momentum_scale_exp(amax: f32) -> i32 {
+    if !amax.is_finite() || amax <= 0.0 {
+        return 0;
+    }
+    let mut bits = amax.to_bits();
+    let mut bias_adj = 0i32;
+    if bits & 0x7F80_0000 == 0 {
+        // f32-subnormal amax: multiply by 2^64 (exact: the product is
+        // normal) and correct the exponent below.
+        bits = (amax * f32::from_bits(0x5F80_0000)).to_bits();
+        bias_adj = 64;
+    }
+    let e = ((bits >> 23) & 0xFF) as i32 - 127 - bias_adj;
+    let k = if (bits & 0x7F_FFFF) <= 0x60_0000 { e - 8 } else { e - 7 };
+    k.clamp(-126, 120)
+}
+
+/// Per-tensor momentum scale exponent: [`momentum_scale_exp`] of the
+/// tensor's (deterministically reduced) absolute maximum.
+pub fn momentum_scale(xs: &[f32]) -> i32 {
+    momentum_scale_exp(gemm::abs_max(xs))
+}
+
+/// Quantize a momentum tensor onto its E4M3×2^k grid in place and return
+/// `k`. RNE, sign- and signed-zero-preserving, and saturation-free by
+/// the scale choice. Idempotent: on-grid input (any prior `k`) comes
+/// back bit-identical — the re-derived exponent `k' ≤ k` and the E4M3
+/// grid is closed under the exact `×2^(k-k')` refinement. Element-wise
+/// with no accumulation, so the result is thread-count invariant.
+pub fn snap_momentum(xs: &mut [f32]) -> i32 {
+    let k = momentum_scale(xs);
+    let fc = E4M3.fast_caster();
+    let (scale, inv) = (pow2(k), pow2(-k));
+    for x in xs.iter_mut() {
+        *x = fc.cast(*x * inv) * scale;
+    }
+    k
+}
+
+/// Quantize a master-weight tensor onto the BF16 grid in place (RNE,
+/// signed-zero-preserving; µS-scale weights sit far from the BF16 range
+/// limit, so the raw cast cannot overflow).
+pub fn snap_master(xs: &mut [f32]) {
+    BF16.fast_caster().cast_slice(xs);
+}
+
+/// Encode a momentum tensor as `(scale_exp, one E4M3 byte per element)`.
+/// The exponent is re-derived from the data, so on-grid input (what the
+/// session stores under [`StatePrecision::Fp8`]) round-trips bit-exactly
+/// through [`decode_momentum`]; off-grid input is quantized by the
+/// encoding (same values [`snap_momentum`] would produce).
+pub fn encode_momentum(xs: &[f32]) -> (i32, Vec<u8>) {
+    let k = momentum_scale(xs);
+    let inv = pow2(-k);
+    let bytes = xs.iter().map(|&x| (E4M3.encode(x * inv) & 0xFF) as u8).collect();
+    (k, bytes)
+}
+
+/// Decode an E4M3+scale momentum payload back to f32 grid values.
+/// `scale_exp` must lie in `[-126, 120]` (callers validate file input).
+pub fn decode_momentum(scale_exp: i32, bytes: &[u8]) -> Vec<f32> {
+    debug_assert!(
+        (-126..=120).contains(&scale_exp),
+        "momentum scale exponent {scale_exp} out of range"
+    );
+    let lut = E4M3.decode_lut8();
+    let scale = pow2(scale_exp);
+    bytes.iter().map(|&b| lut[b as usize] * scale).collect()
+}
+
+/// Encode one master-weight value as BF16 bits (the high 16 bits of the
+/// RNE-rounded f32). Exact for on-grid values.
+#[inline]
+pub fn encode_master(x: f32) -> u16 {
+    (BF16.fast_caster().cast(x).to_bits() >> 16) as u16
+}
+
+/// Decode BF16 bits back to the f32 grid value.
+#[inline]
+pub fn decode_master(bits: u16) -> f32 {
+    f32::from_bits((bits as u32) << 16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::parallel;
+
+    #[test]
+    fn policy_names_labels_and_byte_constants() {
+        assert_eq!(StatePrecision::by_name("f32"), Some(StatePrecision::F32));
+        assert_eq!(StatePrecision::by_name("master"), Some(StatePrecision::F32));
+        assert_eq!(StatePrecision::by_name("fp8"), Some(StatePrecision::Fp8));
+        assert_eq!(StatePrecision::by_name("e4m3"), None);
+        assert_eq!(StatePrecision::default(), StatePrecision::F32);
+        assert_eq!(StatePrecision::F32.label(), "f32");
+        assert_eq!(StatePrecision::Fp8.label(), "fp8");
+        assert_eq!(StatePrecision::F32.bytes_per_param_elem(), 8);
+        assert_eq!(StatePrecision::Fp8.bytes_per_param_elem(), 3);
+        assert_eq!(StatePrecision::Fp8.master_bytes_per_elem(), 2);
+        assert_eq!(StatePrecision::Fp8.momentum_bytes_per_elem(), 1);
+    }
+
+    #[test]
+    fn pow2_matches_exp2_over_the_normal_range() {
+        for k in -126..=127 {
+            assert_eq!(pow2(k), (k as f64).exp2() as f32, "k={k}");
+        }
+    }
+
+    #[test]
+    fn scale_exp_is_minimal_at_boundaries() {
+        // (amax, expected smallest k with amax <= 448·2^k)
+        let cases: [f32; 10] = [
+            448.0,
+            448.0 * 2.0,
+            449.0,
+            1.75,      // exactly 448·2^-8
+            1.7500001, // just above the boundary
+            1.0,
+            0.875, // exactly 448·2^-9
+            f32::MAX,
+            f32::MIN_POSITIVE, // clamps at k = -126
+            1e30,
+        ];
+        for amax in cases {
+            let k = momentum_scale_exp(amax);
+            assert!((-126..=120).contains(&k));
+            // defining property: amax fits at k…
+            assert!(amax as f64 <= 448.0 * (k as f64).exp2(), "amax={amax} k={k}");
+            // …and (unless clamped) not at k-1
+            if k > -126 {
+                assert!(
+                    amax as f64 > 448.0 * ((k - 1) as f64).exp2(),
+                    "k={k} not minimal for amax={amax}"
+                );
+            }
+        }
+        // exact table for the hand-checkable ones
+        assert_eq!(momentum_scale_exp(448.0), 0);
+        assert_eq!(momentum_scale_exp(449.0), 1);
+        assert_eq!(momentum_scale_exp(1.75), -8);
+        assert_eq!(momentum_scale_exp(1.0), -8);
+        assert_eq!(momentum_scale_exp(0.875), -9);
+    }
+
+    #[test]
+    fn scale_exp_degenerate_inputs() {
+        assert_eq!(momentum_scale_exp(0.0), 0);
+        assert_eq!(momentum_scale_exp(-1.0), 0);
+        assert_eq!(momentum_scale_exp(f32::NAN), 0);
+        assert_eq!(momentum_scale_exp(f32::INFINITY), 0);
+        // f32 subnormals clamp at the bottom of the range
+        assert_eq!(momentum_scale_exp(f32::from_bits(1)), -126); // 2^-149
+        assert_eq!(momentum_scale_exp(f32::MIN_POSITIVE / 2.0), -126);
+    }
+
+    /// The tentpole guarantee: quantize→dequantize is the identity on the
+    /// grid. Exhaustive over every E4M3 byte pattern × a spread of scale
+    /// exponents, through both the in-place snap and the byte codec.
+    #[test]
+    fn exhaustive_e4m3_grid_roundtrips_bit_exact() {
+        // k = 119 is the largest exponent whose whole grid (up to
+        // 448·2^k = 1.75·2^127) stays f32-finite; larger k values are
+        // only ever derived from amax near f32::MAX, where the produced
+        // grid points stay at or below the data.
+        let lut = E4M3.decode_lut8();
+        for k in [-126i32, -40, -9, 0, 7, 63, 119] {
+            let scale = pow2(k);
+            for b in 0u16..=255 {
+                let c = lut[b as usize];
+                if c.is_nan() {
+                    continue; // 0x7F / 0xFF are the e4m3fn NaN patterns
+                }
+                let v = c * scale;
+                // in-place snap: bit-identical (covers signed zero at b=0x80)
+                let mut xs = [v];
+                snap_momentum(&mut xs);
+                assert_eq!(
+                    xs[0].to_bits(),
+                    v.to_bits(),
+                    "snap moved grid value {v} (byte {b:#04x}, k={k})"
+                );
+                // byte codec: bit-identical, sign bit included
+                let (ke, bytes) = encode_momentum(&[v]);
+                let back = decode_momentum(ke, &bytes);
+                assert_eq!(
+                    back[0].to_bits(),
+                    v.to_bits(),
+                    "codec moved grid value {v} (byte {b:#04x}, k={k} -> ke={ke})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn snap_preserves_sign_and_never_saturates() {
+        crate::util::proptest::check("snap_sign_saturation", 200, |rng, case| {
+            // amax magnitude sweeps ~60 orders of magnitude across cases
+            let std = 10f32.powi((case as i32 % 61) - 30);
+            let mut xs = vec![0f32; 97];
+            rng.fill_normal(&mut xs, std);
+            xs[0] = 0.0;
+            xs[1] = -0.0;
+            let orig = xs.clone();
+            let k = snap_momentum(&mut xs);
+            let h = E4M3.cast_health(&orig, pow2(-k));
+            prop_assert!(h.saturated == 0, "saturated {} at k={k}", h.saturated);
+            for (o, q) in orig.iter().zip(&xs) {
+                prop_assert!(
+                    o.is_sign_negative() == q.is_sign_negative(),
+                    "sign flipped: {o} -> {q}"
+                );
+                prop_assert!(
+                    q.abs() <= 448.0 * pow2(k),
+                    "off-band value {q} at k={k}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn snap_and_codec_are_idempotent_on_random_tensors() {
+        crate::util::proptest::check("snap_idempotent", 120, |rng, case| {
+            let mut xs = vec![0f32; 64];
+            rng.fill_normal(&mut xs, 10f32.powi((case as i32 % 41) - 20));
+            snap_momentum(&mut xs);
+            let once: Vec<u32> = xs.iter().map(|x| x.to_bits()).collect();
+            let k2 = snap_momentum(&mut xs);
+            let twice: Vec<u32> = xs.iter().map(|x| x.to_bits()).collect();
+            prop_assert!(once == twice, "second snap (k={k2}) changed bits");
+            // codec round-trip of on-grid data is bit-exact
+            let (ke, bytes) = encode_momentum(&xs);
+            let back = decode_momentum(ke, &bytes);
+            let back_bits: Vec<u32> = back.iter().map(|x| x.to_bits()).collect();
+            prop_assert!(back_bits == once, "codec round-trip drifted (ke={ke})");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rne_ties_round_to_even_mantissa() {
+        // Top binade (256..448, step 32): 432 is the midpoint of
+        // 416 (mantissa 0b101) and 448 (0b110) -> even wins (448);
+        // 400 is the midpoint of 384 (0b100) and 416 (0b101) -> 384.
+        let mut xs = [448.0f32, 432.0, 400.0];
+        let k = snap_momentum(&mut xs);
+        assert_eq!(k, 0);
+        assert_eq!(xs, [448.0, 448.0, 384.0]);
+        // same ties under a shifted scale
+        let mut ys = [448.0f32 * 0.25, 432.0 * 0.25, 400.0 * 0.25];
+        let k = snap_momentum(&mut ys);
+        assert_eq!(k, -2);
+        assert_eq!(ys, [112.0, 112.0, 96.0]);
+    }
+
+    #[test]
+    fn subnormal_band_roundtrips_at_the_scale_floor() {
+        // Values whose grid sits below the f32 normal range: k clamps at
+        // -126 and the E4M3-subnormal rungs m·2^-9·2^-126 are exact f32
+        // subnormals.
+        let rung = pow2(-126) / 512.0; // 2^-135
+        let mut xs = [rung, 3.0 * rung, -7.0 * rung, 0.0];
+        let orig = xs;
+        let k = snap_momentum(&mut xs);
+        assert_eq!(k, -126);
+        for (o, q) in orig.iter().zip(&xs) {
+            assert_eq!(o.to_bits(), q.to_bits(), "subnormal rung moved: {o} -> {q}");
+        }
+        let (ke, bytes) = encode_momentum(&xs);
+        assert_eq!(ke, -126);
+        let back = decode_momentum(ke, &bytes);
+        for (o, b) in xs.iter().zip(&back) {
+            assert_eq!(o.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn codec_is_bit_identical_across_thread_counts() {
+        // The only reduction in the codec is the deterministic abs_max
+        // fold; everything else is element-wise. Still: prove it.
+        let mut rng = crate::util::rng::Rng::new(11);
+        let mut base = vec![0f32; 10_000];
+        rng.fill_normal(&mut base, 0.02f32);
+        let runs: Vec<(i32, Vec<u8>, Vec<u32>)> = [1usize, 2, 4]
+            .iter()
+            .map(|&t| {
+                parallel::with_max_threads(t, || {
+                    let mut xs = base.clone();
+                    let k = snap_momentum(&mut xs);
+                    let (ke, bytes) = encode_momentum(&xs);
+                    assert_eq!(k, ke);
+                    (k, bytes, xs.iter().map(|x| x.to_bits()).collect())
+                })
+            })
+            .collect();
+        assert_eq!(runs[0], runs[1], "2-thread codec differs from 1-thread");
+        assert_eq!(runs[0], runs[2], "4-thread codec differs from 1-thread");
+    }
+
+    #[test]
+    fn master_codec_roundtrips_the_bf16_grid() {
+        // every BF16 value is a u16 bit pattern; snap + codec must agree
+        let mut pats: Vec<u16> = (0u16..=0xFFFF).collect();
+        // exclude NaN/inf exponent patterns: exp field all-ones
+        pats.retain(|&p| ((p >> 7) & 0xFF) != 0xFF);
+        for &p in &pats {
+            let v = decode_master(p);
+            let mut xs = [v];
+            snap_master(&mut xs);
+            assert_eq!(xs[0].to_bits(), v.to_bits(), "snap moved bf16 value {v}");
+            assert_eq!(encode_master(v), p, "encode changed bits for {v}");
+        }
+        // off-grid values round (RNE) onto the grid, then stay put
+        let mut xs = [1.00390625f32]; // 1 + 2^-8: midpoint of 1.0 and 1+2^-7
+        snap_master(&mut xs);
+        assert_eq!(xs[0], 1.0); // ties to even mantissa
+        assert_eq!(decode_master(encode_master(xs[0])).to_bits(), xs[0].to_bits());
+    }
+}

@@ -16,7 +16,7 @@ use munit::coordinator::pipeline::DataPipeline;
 use munit::coordinator::{checkpoint, ddp, shard, sweep, trainer::Trainer};
 use munit::data::{Batcher, CorpusSpec};
 use munit::perfmodel;
-use munit::runtime::{micro_config, Backend, ReferenceBackend};
+use munit::runtime::{micro_config, Backend, ReferenceBackend, StatePrecision};
 
 fn quick_tc(steps: usize) -> TrainConfig {
     TrainConfig {
@@ -781,6 +781,230 @@ fn sharded_checkpoint_resume_is_bit_identical_and_rejects_wrong_spec() {
         assert!(msg.contains("tp=2") && msg.contains("tp=4"), "error lacks geometry: {msg}");
         std::fs::remove_file(&path).ok();
     }
+}
+
+#[test]
+fn state_precision_f32_lane_is_bit_identical_to_default_trainer() {
+    // the f32 lane is the bit-compat default: a Trainer built through
+    // the new state-precision constructor must train bitwise-identically
+    // to the pre-PR `Trainer::new` path, and its state gauge reads the
+    // classic 8 B/param (f32 master + f32 momentum)
+    let be = reference_backend();
+    let cfg = micro_config();
+    let corpus = micro_corpus(&cfg);
+    let t_def = Trainer::new(&be, &cfg).unwrap();
+    let t_f32 = Trainer::with_state_precision(&be, &cfg, StatePrecision::F32).unwrap();
+    let run = |t: &Trainer| {
+        let mut b = Batcher::new(corpus.clone(), 9, 0, 1, cfg.batch, cfg.seq_len);
+        let mut s = t.init(4).unwrap();
+        let mut losses = Vec::new();
+        for _ in 0..4 {
+            losses.push(s.step(&b.next_batch(), 1.0 / 256.0, 1e-4, 0.4).unwrap().0);
+        }
+        assert_eq!(s.stats().state_bytes_per_param, 8.0);
+        (losses, s.read_back().unwrap())
+    };
+    let (l_def, st_def) = run(&t_def);
+    let (l_f32, st_f32) = run(&t_f32);
+    assert_eq!(l_def, l_f32, "f32 state lane changed training");
+    for (i, (a, b)) in st_def.tensors.iter().zip(&st_f32.tensors).enumerate() {
+        assert_eq!(a, b, "tensor {i} not bit-identical on the f32 lane");
+    }
+}
+
+#[test]
+fn checkpoint_v2_roundtrips_through_sessions_both_precisions() {
+    // satellite 3: the v2 codec is bitwise-lossless for live session
+    // state under both policies (FP8-lane state is on-grid by the
+    // session's normalization contract), and a session resumed from the
+    // round-tripped state steps identically
+    let be = reference_backend();
+    let cfg = micro_config();
+    for sp in [StatePrecision::F32, StatePrecision::Fp8] {
+        let trainer = Trainer::with_state_precision(&be, &cfg, sp).unwrap();
+        let mut b = Batcher::new(micro_corpus(&cfg), 13, 0, 1, cfg.batch, cfg.seq_len);
+        let mut s = trainer.init(3).unwrap();
+        for _ in 0..2 {
+            s.step(&b.next_batch(), 1.0 / 256.0, 1e-4, 0.4).unwrap();
+        }
+        let meta = be.resolve("train_step", &cfg).unwrap();
+        let specs = &meta.inputs[..2 * trainer.n_params_tensors()];
+        let state = s.read_back().unwrap();
+        let path = std::env::temp_dir().join(format!("munit_ckpt_v2_{}.bin", sp.label()));
+        checkpoint::save_v2(&path, &state, specs, sp).unwrap();
+        let restored = checkpoint::load(&path, specs).unwrap();
+        std::fs::remove_file(&path).ok();
+        for (i, (a, b)) in state.tensors.iter().zip(&restored.tensors).enumerate() {
+            assert_eq!(a, b, "{}: tensor {i} not bit-exact through v2", sp.label());
+        }
+        let mut resumed = trainer.session_from(&restored).unwrap();
+        let tokens = b.next_batch();
+        let (l1, _) = s.step(&tokens, 1.0 / 256.0, 1e-4, 0.4).unwrap();
+        let (l2, _) = resumed.step(&tokens, 1.0 / 256.0, 1e-4, 0.4).unwrap();
+        assert_eq!(l1, l2, "{}: resumed session diverged", sp.label());
+    }
+}
+
+#[test]
+fn v1_checkpoint_loads_into_an_fp8_state_session() {
+    // satellite 3: a pre-PR (v1, full-f32) checkpoint loads into an
+    // FP8-state session through the same entry point — load_state snaps
+    // masters/momenta onto their grids, training continues
+    // deterministically, and the snapped state survives a v2 round trip
+    // bit-exactly (proof it landed on-grid)
+    let be = reference_backend();
+    let cfg = micro_config();
+    let f32_trainer = Trainer::new(&be, &cfg).unwrap();
+    let mut b = Batcher::new(micro_corpus(&cfg), 17, 0, 1, cfg.batch, cfg.seq_len);
+    let mut s = f32_trainer.init(6).unwrap();
+    for _ in 0..2 {
+        s.step(&b.next_batch(), 1.0 / 256.0, 1e-4, 0.4).unwrap();
+    }
+    let meta = be.resolve("train_step", &cfg).unwrap();
+    let specs = &meta.inputs[..2 * f32_trainer.n_params_tensors()];
+    let path = std::env::temp_dir().join("munit_ckpt_v1_to_fp8.bin");
+    checkpoint::save(&path, &s.read_back().unwrap(), specs).unwrap();
+    let restored = checkpoint::load(&path, specs).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    let fp8_trainer = Trainer::with_state_precision(&be, &cfg, StatePrecision::Fp8).unwrap();
+    let run = |state| {
+        let mut sess = fp8_trainer.session_from(state).unwrap();
+        let mut bb = Batcher::new(micro_corpus(&cfg), 19, 0, 1, cfg.batch, cfg.seq_len);
+        let mut losses = Vec::new();
+        for _ in 0..3 {
+            let (l, g) = sess.step(&bb.next_batch(), 1.0 / 256.0, 1e-4, 0.4).unwrap();
+            assert!(l.is_finite() && g.is_finite());
+            losses.push(l);
+        }
+        (losses, sess.read_back().unwrap())
+    };
+    let (l1, st1) = run(&restored);
+    let (l2, st2) = run(&restored);
+    assert_eq!(l1, l2, "v1 -> fp8-state resume not deterministic");
+    for (i, (a, b)) in st1.tensors.iter().zip(&st2.tensors).enumerate() {
+        assert_eq!(a, b, "tensor {i} differs across identical v1 -> fp8 resumes");
+    }
+    let p2 = std::env::temp_dir().join("munit_ckpt_v1_to_fp8_v2.bin");
+    checkpoint::save_v2(&p2, &st1, specs, StatePrecision::Fp8).unwrap();
+    let rt = checkpoint::load(&p2, specs).unwrap();
+    std::fs::remove_file(&p2).ok();
+    for (i, (a, b)) in st1.tensors.iter().zip(&rt.tensors).enumerate() {
+        assert_eq!(a, b, "tensor {i} off-grid after v1 load into fp8-state session");
+    }
+}
+
+#[test]
+fn fp8_state_mid_run_resume_is_bit_identical() {
+    // satellite 3: save at step 3 of 6 under Fp8 state on the µS FP8
+    // lane; the v2 checkpoint resume must be bit-identical to the
+    // uninterrupted run (the on-grid contract makes save/load lossless)
+    let cfg = ModelConfig {
+        variant: "mus".into(),
+        precision: "fp8".into(),
+        residual: "fixed".into(),
+        ..micro_config()
+    };
+    let be = ReferenceBackend::new(&[cfg.clone()]).unwrap();
+    let trainer = Trainer::with_state_precision(&be, &cfg, StatePrecision::Fp8).unwrap();
+    let corpus = micro_corpus(&cfg);
+    let (lr, wd, tau) = (1.0 / 128.0, 1e-4, 0.4);
+
+    let mut batcher = Batcher::new(corpus.clone(), 23, 0, 1, cfg.batch, cfg.seq_len);
+    let mut straight = trainer.init(2).unwrap();
+    let mut losses_straight = Vec::new();
+    for _ in 0..6 {
+        losses_straight.push(straight.step(&batcher.next_batch(), lr, wd, tau).unwrap().0);
+    }
+    let final_straight = straight.read_back().unwrap();
+
+    let mut batcher = Batcher::new(corpus.clone(), 23, 0, 1, cfg.batch, cfg.seq_len);
+    let mut first_half = trainer.init(2).unwrap();
+    let mut losses_resumed = Vec::new();
+    for _ in 0..3 {
+        losses_resumed.push(first_half.step(&batcher.next_batch(), lr, wd, tau).unwrap().0);
+    }
+    let meta = be.resolve("train_step", &cfg).unwrap();
+    let specs = &meta.inputs[..2 * trainer.n_params_tensors()];
+    let path = std::env::temp_dir().join("munit_ckpt_midrun_fp8state.bin");
+    checkpoint::save_v2(&path, &first_half.read_back().unwrap(), specs, StatePrecision::Fp8)
+        .unwrap();
+    drop(first_half);
+    let restored = checkpoint::load(&path, specs).unwrap();
+    std::fs::remove_file(&path).ok();
+    let mut resumed = trainer.session_from(&restored).unwrap();
+    for _ in 0..3 {
+        losses_resumed.push(resumed.step(&batcher.next_batch(), lr, wd, tau).unwrap().0);
+    }
+    let final_resumed = resumed.read_back().unwrap();
+    assert_eq!(losses_straight, losses_resumed, "fp8-state mid-run resume diverged");
+    for (i, (a, b)) in final_straight.tensors.iter().zip(&final_resumed.tensors).enumerate() {
+        assert_eq!(a, b, "fp8-state tensor {i} not bit-identical after resume");
+    }
+}
+
+#[test]
+fn sharded_fp8_state_resume_is_bit_identical_with_native_momentum_wire() {
+    // Fp8 state + FP8 wire at tp=2/pp=2: the mid-run MUSSHRD2 save and
+    // resume is bitwise lossless, comm bytes match the state-aware
+    // perfmodel closed forms exactly, and the native scaled-E4M3
+    // momentum leg derives its scales locally (zero amax syncs)
+    let cfg = shard_test_cfg("mus", "fixed");
+    let tc6 = TrainConfig { lr: 1.0 / 128.0, ..quick_tc(6) };
+    let be = ReferenceBackend::new(&[cfg.clone()]).unwrap();
+    let corpus = micro_corpus(&cfg);
+    let spec = shard::ShardSpec::new(2, 2);
+    let wire = WireFormat::Fp8;
+    let opts = || shard::ShardOpts::new(spec, wire).with_state_precision(StatePrecision::Fp8);
+
+    let straight = shard::train_sharded(&be, &cfg, &tc6, &corpus, &opts()).unwrap();
+    assert_eq!(straight.comm.amax_syncs, 0, "native momentum leg synced an amax");
+    let (tp, stages) = (2usize, 2usize);
+    let per_step = perfmodel::param_wire_bytes_per_step(&cfg, tp, wire)
+        + perfmodel::momentum_wire_bytes_per_step(&cfg, tp, wire, StatePrecision::Fp8)
+        + perfmodel::pipeline_activation_bytes_per_step(&cfg, stages);
+    assert_eq!(straight.comm.bytes_per_step(), per_step, "comm bytes diverge from model");
+
+    let path = std::env::temp_dir().join("munit_shard_ckpt_fp8state.bin");
+    let tc3 = TrainConfig { steps: 3, ..tc6.clone() };
+    let mut save_opts = opts();
+    save_opts.save_at = Some((3, path.clone()));
+    let first = shard::train_sharded(&be, &cfg, &tc3, &corpus, &save_opts).unwrap();
+    let mut resume_opts = opts();
+    resume_opts.resume_from = Some(path.clone());
+    let resumed = shard::train_sharded(&be, &cfg, &tc6, &corpus, &resume_opts).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    let mut all = first.run.losses.clone();
+    all.extend(&resumed.run.losses);
+    assert_eq!(all, straight.run.losses, "fp8-state sharded resume diverged");
+    for (i, (a, b)) in
+        straight.final_state.tensors.iter().zip(&resumed.final_state.tensors).enumerate()
+    {
+        assert_eq!(a, b, "fp8-state shard tensor {i} not bit-identical after resume");
+    }
+}
+
+#[test]
+fn ddp_fp8_state_single_worker_matches_plain_fp8_trainer() {
+    // the allreduce mean of one worker is the identity and the post-
+    // collective re-snap is a no-op on on-grid state, so DDP x1 under
+    // Fp8 state tracks the plain Fp8-state trainer bitwise; a 2-worker
+    // fleet trains to finite losses on the same lane
+    let be = reference_backend();
+    let cfg = micro_config();
+    let tc = quick_tc(3);
+    let corpus = micro_corpus(&cfg);
+    let sp = StatePrecision::Fp8;
+    let r_ddp = ddp::train_ddp_with_precision(&be, &cfg, &tc, &corpus, 1, sp).unwrap();
+    let trainer = Trainer::with_state_precision(&be, &cfg, sp).unwrap();
+    let mut batcher = Batcher::new(corpus.clone(), tc.seed, 0, 1, cfg.batch, cfg.seq_len);
+    let r_plain = trainer.run(&tc, &mut batcher).unwrap();
+    assert_eq!(r_ddp.losses, r_plain.losses, "ddp x1 diverged from the plain fp8-state run");
+    let r2 = ddp::train_ddp_with_precision(&be, &cfg, &tc, &corpus, 2, sp).unwrap();
+    assert_eq!(r2.steps_done, 3);
+    assert!(!r2.diverged);
+    assert!(r2.losses.iter().all(|l| l.is_finite()));
 }
 
 #[test]
